@@ -1,0 +1,109 @@
+//! Cluster-scale autoscaling demo: replay a bursty day-in-the-life
+//! workload (Gamma arrivals + periodic batch jobs) across the full policy
+//! set and print a comparative report — the kind of study an operator
+//! would run before choosing an autoscaler.
+//!
+//! Run: `cargo run --release --example autoscale_sim`
+
+use chiron::baselines::{GlobalOnly, Llumnix, LlumnixConfig, LocalOnly};
+use chiron::coordinator::{BootstrapSpec, Chiron, ChironConfig};
+use chiron::core::{ModelSpec, RequestClass, Slo};
+use chiron::metrics::PolicyRow;
+use chiron::sim::{run_sim, Policy, SimConfig};
+use chiron::util::rng::Rng;
+use chiron::workload::{ArrivalProcess, ShareGptSampler, Trace, TraceBuilder, WorkloadSpec};
+
+fn day_trace(models: usize, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut tb = TraceBuilder::new().sampler(ShareGptSampler::new());
+    for m in 0..models {
+        // Bursty interactive traffic with a lunchtime peak.
+        tb = tb.stream(WorkloadSpec {
+            class: RequestClass::Interactive,
+            slo: Slo::interactive_default(),
+            arrivals: ArrivalProcess::Phased {
+                segments: vec![(0.0, 12.0), (1200.0, 35.0), (2600.0, 15.0)],
+            },
+            count: 2500 / (m + 1),
+            model: m,
+            start: 0.0,
+        });
+        // Two batch jobs with different deadlines.
+        tb = tb.stream(WorkloadSpec {
+            class: RequestClass::Batch,
+            slo: Slo {
+                ttft: 1800.0,
+                ..Slo::batch_default()
+            },
+            arrivals: ArrivalProcess::Burst { at: 600.0 },
+            count: 3000 / (m + 1),
+            model: m,
+            start: 600.0,
+        });
+        tb = tb.stream(WorkloadSpec {
+            class: RequestClass::Batch,
+            slo: Slo {
+                ttft: 3600.0,
+                ..Slo::batch_default()
+            },
+            arrivals: ArrivalProcess::Burst { at: 1500.0 },
+            count: 4000 / (m + 1),
+            model: m,
+            start: 1500.0,
+        });
+    }
+    tb.build(&mut rng)
+}
+
+fn main() {
+    let models = vec![ModelSpec::llama8b(), ModelSpec::llama70b()];
+    let mut sim_cfg = SimConfig::new(50, models.clone());
+    sim_cfg.max_sim_time = 4.0 * 3600.0;
+
+    let mut chiron_cfg = ChironConfig::for_models(models.len());
+    for b in &mut chiron_cfg.bootstrap {
+        *b = BootstrapSpec {
+            interactive: 1,
+            mixed: 2,
+            batch: 0,
+        };
+    }
+
+    let mut policies: Vec<Box<dyn Policy>> = vec![
+        Box::new(Chiron::new(chiron_cfg.clone(), &models)),
+        Box::new(Llumnix::untuned(&models)),
+        Box::new(Llumnix::tuned(
+            &models,
+            LlumnixConfig {
+                max_batch: 256,
+                low: 0.2,
+                high: 0.7,
+                ..LlumnixConfig::untuned()
+            },
+        )),
+        Box::new(LocalOnly::new(&models, LlumnixConfig::untuned())),
+        Box::new(GlobalOnly::new(&models, chiron_cfg, 64)),
+    ];
+
+    println!("day-in-the-life workload: {} requests over ~1h (2 models)\n", day_trace(2, 3).len());
+    println!("{}", PolicyRow::header());
+    let mut rows = Vec::new();
+    for p in policies.iter_mut() {
+        let report = run_sim(sim_cfg.clone(), day_trace(2, 3), p.as_mut());
+        let row = PolicyRow::from_report(&report);
+        println!("{}", row.line());
+        rows.push(row);
+    }
+    let chiron_row = &rows[0];
+    let best_other_gpuh = rows[1..]
+        .iter()
+        .map(|r| r.gpu_hours)
+        .fold(f64::INFINITY, f64::min);
+    println!(
+        "\nchiron GPU·h {:.2} vs best baseline {:.2} ({:+.0}%), SLO {:.1}%",
+        chiron_row.gpu_hours,
+        best_other_gpuh,
+        (chiron_row.gpu_hours / best_other_gpuh - 1.0) * 100.0,
+        chiron_row.slo_attainment * 100.0
+    );
+}

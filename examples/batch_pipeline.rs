@@ -1,0 +1,87 @@
+//! Batch-pipeline scenario (the paper's motivating background workload):
+//! a document-processing job dumps a large batch queue with a deadline
+//! while an interactive service keeps running. Shows Chiron queuing the
+//! batch work, multiplexing it onto over-provisioned mixed instances, and
+//! adding batch instances only when the waiting-time estimator says the
+//! deadline is at risk (Algorithm 2).
+//!
+//! Run: `cargo run --release --example batch_pipeline`
+
+use chiron::coordinator::{BootstrapSpec, Chiron, ChironConfig};
+use chiron::core::{ModelSpec, RequestClass, Slo};
+use chiron::metrics::{PolicyRow, Summary};
+use chiron::sim::{run_sim, SimConfig};
+use chiron::util::rng::Rng;
+use chiron::workload::{ArrivalProcess, ShareGptSampler, TraceBuilder, WorkloadSpec};
+
+fn main() {
+    let models = vec![ModelSpec::llama8b()];
+    let deadline_s = 1800.0; // 30-minute batch deadline
+
+    let mut rng = Rng::new(77);
+    let trace = TraceBuilder::new()
+        .sampler(ShareGptSampler::new())
+        // Interactive service: 20 req/s throughout.
+        .stream(WorkloadSpec {
+            class: RequestClass::Interactive,
+            slo: Slo::interactive_default(),
+            arrivals: ArrivalProcess::Poisson { rate: 20.0 },
+            count: 3000,
+            model: 0,
+            start: 0.0,
+        })
+        // Document-processing job: 10k requests land at t = 60 s.
+        .stream(WorkloadSpec {
+            class: RequestClass::Batch,
+            slo: Slo {
+                ttft: deadline_s,
+                ..Slo::batch_default()
+            },
+            arrivals: ArrivalProcess::Burst { at: 60.0 },
+            count: 10_000,
+            model: 0,
+            start: 60.0,
+        })
+        .build(&mut rng);
+    println!(
+        "batch pipeline: {} interactive + {} batch requests, deadline {}s",
+        trace.count_class(RequestClass::Interactive),
+        trace.count_class(RequestClass::Batch),
+        deadline_s
+    );
+
+    let mut cfg = ChironConfig::for_models(1);
+    cfg.bootstrap[0] = BootstrapSpec {
+        interactive: 1,
+        mixed: 2,
+        batch: 0,
+    };
+    let mut policy = Chiron::new(cfg, &models);
+    let mut sim_cfg = SimConfig::new(50, models.clone());
+    sim_cfg.max_sim_time = 2.0 * 3600.0;
+    sim_cfg.timeline_every = 30;
+    let report = run_sim(sim_cfg, trace, &mut policy);
+
+    println!("\n{}", PolicyRow::header());
+    println!("{}", PolicyRow::from_report(&report).line());
+
+    println!("\ntimeline (every ~5 min): GPUs / batch instances / queued batch");
+    for p in report.timeline.iter().step_by(10) {
+        println!(
+            "  t={:>6.0}s gpus={:>2} batch_inst={:>2} queue={:>6} batch_size~{:>5.0}",
+            p.t, p.gpus_used, p.instances_batch, p.queued_batch, p.mean_max_batch
+        );
+    }
+
+    let batch_summary = Summary::of_class(&report.outcomes, RequestClass::Batch);
+    let inter_summary = Summary::of_class(&report.outcomes, RequestClass::Interactive);
+    println!(
+        "\ninteractive: {:.1}% SLO, ttft p99 {:.2}s | batch: {:.1}% SLO, ttft p99 {:.0}s (deadline {}s)",
+        inter_summary.slo_attainment * 100.0,
+        inter_summary.ttft_p99,
+        batch_summary.slo_attainment * 100.0,
+        batch_summary.ttft_p99,
+        deadline_s
+    );
+    assert!(report.unfinished == 0, "pipeline must drain");
+}

@@ -1,0 +1,92 @@
+//! Quickstart: the smallest end-to-end tour of the library.
+//!
+//! 1. Generate a mixed interactive+batch workload trace.
+//! 2. Run it through the discrete-event cluster simulator under Chiron.
+//! 3. Compare with the Llumnix-like baseline.
+//! 4. If AOT artifacts exist (`make artifacts`), serve a few requests on
+//!    the real PJRT-backed engine too.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use chiron::baselines::Llumnix;
+use chiron::coordinator::{BootstrapSpec, Chiron, ChironConfig};
+use chiron::core::ModelSpec;
+use chiron::engine::{EngineRequest, LlmEngine};
+use chiron::metrics::PolicyRow;
+use chiron::runtime::TinyLlmRuntime;
+use chiron::server::ServingFrontend;
+use chiron::sim::{run_sim, SimConfig};
+use chiron::util::rng::Rng;
+use chiron::workload::trace::{workload_a, workload_b_batch};
+use chiron::workload::TraceBuilder;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. workload -----------------------------------------------------
+    let models = vec![ModelSpec::llama8b()];
+    let mk_trace = |seed: u64| {
+        let mut rng = Rng::new(seed);
+        TraceBuilder::new()
+            .stream(workload_a(25.0, 1500, 0)) // interactive, 25 req/s
+            .stream(workload_b_batch(3000, 30.0, 0, 1800.0)) // batch burst
+            .build(&mut rng)
+    };
+    println!("trace: {} requests", mk_trace(7).len());
+
+    // --- 2. Chiron -------------------------------------------------------
+    let mut cfg = ChironConfig::for_models(1);
+    cfg.bootstrap[0] = BootstrapSpec {
+        interactive: 1,
+        mixed: 2,
+        batch: 0,
+    };
+    let mut chiron = Chiron::new(cfg, &models);
+    let mut sim_cfg = SimConfig::new(50, models.clone());
+    sim_cfg.max_sim_time = 4.0 * 3600.0;
+    let r_chiron = run_sim(sim_cfg.clone(), mk_trace(7), &mut chiron);
+
+    // --- 3. baseline -----------------------------------------------------
+    let mut llumnix = Llumnix::untuned(&models);
+    let r_llumnix = run_sim(sim_cfg, mk_trace(7), &mut llumnix);
+
+    println!("\n{}", PolicyRow::header());
+    println!("{}", PolicyRow::from_report(&r_chiron).line());
+    println!("{}", PolicyRow::from_report(&r_llumnix).line());
+    println!(
+        "\nGPU·h: chiron {:.2} vs llumnix {:.2} ({:.0}% saved)",
+        r_chiron.gpu_seconds / 3600.0,
+        r_llumnix.gpu_seconds / 3600.0,
+        (1.0 - r_chiron.gpu_seconds / r_llumnix.gpu_seconds.max(1e-9)) * 100.0
+    );
+
+    // --- 4. real engine (optional) ----------------------------------------
+    match chiron::runtime::Manifest::load("artifacts") {
+        Err(_) => println!("\n(real-engine demo skipped: run `make artifacts` first)"),
+        Ok(_) => {
+            println!("\nserving 8 requests on the real AOT model ...");
+            let front = ServingFrontend::start(
+                || Ok(LlmEngine::new(TinyLlmRuntime::load("artifacts")?, 4)),
+                None,
+            );
+            for i in 0..8u64 {
+                front.submit(EngineRequest {
+                    id: i,
+                    prompt: vec![1 + i as i32, 2, 3, 4],
+                    max_new_tokens: 8,
+                    arrival: None,
+                })?;
+            }
+            let done = front.wait_for(8, std::time::Duration::from_secs(120));
+            for o in &done {
+                println!(
+                    "  req{}: {} tokens, ttft {:.1} ms, itl {:.2} ms",
+                    o.id,
+                    o.tokens.len(),
+                    o.ttft * 1000.0,
+                    o.mean_itl * 1000.0
+                );
+            }
+            front.shutdown()?;
+        }
+    }
+    Ok(())
+}

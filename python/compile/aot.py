@@ -1,0 +1,125 @@
+"""AOT lowering: JAX functions → HLO text artifacts for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts (one per function × batch variant):
+  artifacts/prefill_b{B}.hlo.txt   (tokens[B,S], lengths[B]) -> (logits, cache)
+  artifacts/decode_b{B}.hlo.txt    (tokens[B], pos[B], cache) -> (logits, cache)
+  artifacts/manifest.json          shapes + model config for the Rust side
+
+Run via `make artifacts` (no-op when inputs are unchanged). Python never
+runs on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import DEFAULT_CONFIG, build_fns
+from compile.kernels.decode_attention import vmem_report
+
+BATCH_VARIANTS = [1, 2, 4, 8]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust side).
+
+    print_large_constants=True is essential: the baked model weights are HLO
+    constants, and the default printer elides them as `constant({...})`,
+    which would silently load as garbage on the Rust side.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_all(out_dir: str, seed: int = 0):
+    cfg = DEFAULT_CONFIG
+    prefill_fn, decode_fn = build_fns(cfg, seed)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "d_head": cfg.d_head,
+            "seed": seed,
+        },
+        "batch_variants": BATCH_VARIANTS,
+        "artifacts": {},
+    }
+
+    for b in BATCH_VARIANTS:
+        tok_p = jax.ShapeDtypeStruct((b, cfg.max_seq), jnp.int32)
+        len_p = jax.ShapeDtypeStruct((b,), jnp.int32)
+        cache = jax.ShapeDtypeStruct(
+            (cfg.n_layers, 2, b, cfg.max_seq, cfg.n_heads, cfg.d_head),
+            jnp.float32,
+        )
+        tok_d = jax.ShapeDtypeStruct((b,), jnp.int32)
+        pos_d = jax.ShapeDtypeStruct((b,), jnp.int32)
+
+        pre = jax.jit(prefill_fn).lower(tok_p, len_p)
+        dec = jax.jit(decode_fn).lower(tok_d, pos_d, cache)
+
+        pre_path = f"prefill_b{b}.hlo.txt"
+        dec_path = f"decode_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, pre_path), "w") as f:
+            f.write(to_hlo_text(pre))
+        with open(os.path.join(out_dir, dec_path), "w") as f:
+            f.write(to_hlo_text(dec))
+        manifest["artifacts"][str(b)] = {
+            "prefill": pre_path,
+            "decode": dec_path,
+            "cache_shape": list(cache.shape),
+        }
+        print(f"lowered batch={b}: {pre_path}, {dec_path}")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json")
+
+
+def report():
+    """§Perf L1 structural profile: VMEM footprint + MXU utilization
+    estimates for the decode-attention BlockSpec across batch variants."""
+    cfg = DEFAULT_CONFIG
+    print("decode_attention kernel — per-grid-step estimates")
+    print(f"{'B':>4} {'VMEM/step':>12} {'FLOPs/step':>12} {'MXU tile util':>14}")
+    for b in BATCH_VARIANTS:
+        r = vmem_report(b, cfg.max_seq, cfg.n_heads, cfg.d_head)
+        print(
+            f"{b:>4} {r['vmem_mib_per_step']:>10.3f}Mi "
+            f"{r['flops_per_step']:>12} {r['mxu_tile_utilization']:>14.4f}"
+        )
+    print(r["notes"])
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--report", action="store_true",
+                    help="print the L1 VMEM/MXU structural profile and exit")
+    args = ap.parse_args()
+    if args.report:
+        report()
+        return
+    lower_all(args.out, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""L1: batched decode attention as a Pallas kernel.
+
+The serving hot-spot: at every decode step each running request attends its
+single new query vector against its full KV context. The CUDA systems the
+paper builds on (vLLM's PagedAttention) schedule this per-threadblock over
+KV pages in HBM; the TPU-style rethink here (DESIGN.md §Hardware-Adaptation)
+stages one request's padded K/V context block into VMEM via BlockSpec, runs
+the q·Kᵀ reduction as a dense MXU-friendly matmul over the padded window,
+and replaces the page table with an explicit validity mask derived from the
+context length.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the Pallas interpreter into
+plain HLO (see /opt/xla-example/README.md). Numeric parity with the pure-jnp
+oracle (`ref.py`) is enforced by pytest + hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30  # large-negative mask value, safe in f32 and bf16
+
+
+def _decode_attention_kernel(len_ref, q_ref, k_ref, v_ref, o_ref):
+    """One grid step = one batch row.
+
+    Block shapes (leading batch dim of 1 squeezed inside):
+      len_ref: [1]        int32 valid context length for this row
+      q_ref:   [1, H, D]
+      k_ref:   [1, S, H, D]   (padded context window, resident in VMEM)
+      v_ref:   [1, S, H, D]
+      o_ref:   [1, H, D]
+    """
+    q = q_ref[0]  # [H, D]
+    k = k_ref[0]  # [S, H, D]
+    v = v_ref[0]  # [S, H, D]
+    length = len_ref[0]
+
+    d = q.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+
+    # Scores over the padded window: [H, S]. On TPU this is the MXU matmul;
+    # computing over the fixed window (not a dynamic slice) keeps the shape
+    # static for the systolic array.
+    scores = jnp.einsum("hd,shd->hs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+
+    # Validity mask replaces PagedAttention's page table: positions past the
+    # row's context length contribute nothing.
+    mask = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1) < length
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    # Numerically stable softmax in f32.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+
+    # Weighted value gather: [H, S] x [S, H, D] -> [H, D].
+    out = jnp.einsum("hs,shd->hd", p, v.astype(jnp.float32))
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def decode_attention(q, k, v, lengths):
+    """Masked batched decode attention.
+
+    Args:
+      q:       [B, H, D]  query for the current decode position.
+      k, v:    [B, S, H, D]  padded KV context.
+      lengths: [B] int32, valid context length per row (<= S).
+
+    Returns:
+      [B, H, D] attention output, dtype of q.
+    """
+    b, h, d = q.shape
+    s = k.shape[1]
+    return pl.pallas_call(
+        _decode_attention_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, h, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, h, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, s, h, d), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=True,
+    )(lengths, q, k, v)
+
+
+def vmem_report(b, s, h, d, dtype_bytes=4):
+    """Estimated per-grid-step VMEM footprint and MXU utilization for the
+    chosen BlockSpec (the §Perf L1 structural profile — interpret mode has
+    no real TPU timings, so we report the roofline-relevant quantities)."""
+    q_bytes = h * d * dtype_bytes
+    kv_bytes = 2 * s * h * d * dtype_bytes
+    scores_bytes = h * s * 4  # f32 accumulation
+    out_bytes = h * d * dtype_bytes
+    total = q_bytes + kv_bytes + scores_bytes + out_bytes
+    # MXU does [H,D]x[D,S] and [H,S]x[S,D]; utilization vs the 128x128 array:
+    mxu_m = min(h, 128) / 128.0
+    mxu_k = min(d, 128) / 128.0
+    flops = 2 * h * s * d * 2  # two einsums
+    return {
+        "grid": b,
+        "vmem_bytes_per_step": total,
+        "vmem_mib_per_step": total / (1 << 20),
+        "flops_per_step": flops,
+        "mxu_tile_utilization": mxu_m * mxu_k,
+        "notes": "K/V context staged per-row; fits VMEM (<1 MiB) for S<=128,"
+                 " H*D<=1024",
+    }

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the Pallas decode-attention kernel.
+
+This is the correctness ground truth: no Pallas, no tiling — the textbook
+masked attention computation. pytest asserts allclose between
+`decode_attention` (kernel) and `decode_attention_ref` across shapes and
+dtypes (hypothesis sweep in python/tests/test_kernel.py).
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """Reference masked batched decode attention.
+
+    Args:
+      q:       [B, H, D]
+      k, v:    [B, S, H, D]
+      lengths: [B] int32 valid context lengths (<= S).
+    Returns:
+      [B, H, D] in q.dtype.
+    """
+    d = q.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    s = k.shape[1]
+    mask = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,193 @@
+"""L2: the serving model — a small decoder-only transformer in JAX.
+
+The paper serves Llama-3.1-8B/70B on vLLM; the real-execution path here
+serves this ~1M-parameter transformer so the full stack (Rust coordinator →
+PJRT → HLO → Pallas kernel) is exercised end to end on CPU. Architecture
+follows the Llama shape at toy scale: RMSNorm → multi-head attention (the
+L1 Pallas decode-attention kernel on the decode path) → SwiGLU MLP, learned
+positional embeddings, functional KV cache threaded in/out of `decode_step`.
+
+Weights are generated deterministically (PRNGKey(0)) and baked into the HLO
+as constants by `aot.py`, so the Rust runtime loads a single self-contained
+artifact per (function, batch) variant.
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.decode_attention import decode_attention
+
+
+class ModelConfig(NamedTuple):
+    vocab: int = 256
+    d_model: int = 64
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 192
+    max_seq: int = 128
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+
+DEFAULT_CONFIG = ModelConfig()
+
+
+def init_params(cfg: ModelConfig = DEFAULT_CONFIG, seed: int = 0):
+    """Deterministic toy-scale parameters."""
+    key = jax.random.PRNGKey(seed)
+    keys = iter(jax.random.split(key, 4 + 7 * cfg.n_layers))
+
+    def mat(shape, scale=None):
+        k = next(keys)
+        scale = scale or (1.0 / (shape[0] ** 0.5))
+        return (jax.random.normal(k, shape, jnp.float32) * scale)
+
+    params = {
+        "tok_emb": mat((cfg.vocab, cfg.d_model), 0.02),
+        "pos_emb": mat((cfg.max_seq, cfg.d_model), 0.02),
+        "out_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": mat((cfg.d_model, cfg.vocab)),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append({
+            "attn_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "wq": mat((cfg.d_model, cfg.d_model)),
+            "wk": mat((cfg.d_model, cfg.d_model)),
+            "wv": mat((cfg.d_model, cfg.d_model)),
+            "wo": mat((cfg.d_model, cfg.d_model)),
+            "mlp_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "w_gate": mat((cfg.d_model, cfg.d_ff)),
+            "w_up": mat((cfg.d_model, cfg.d_ff)),
+            "w_down": mat((cfg.d_ff, cfg.d_model)),
+        })
+    return params
+
+
+def rmsnorm(x, g, eps=1e-5):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def _split_heads(x, cfg):
+    # [..., d_model] -> [..., H, Dh]
+    return x.reshape(x.shape[:-1] + (cfg.n_heads, cfg.d_head))
+
+
+def _merge_heads(x):
+    return x.reshape(x.shape[:-2] + (-1,))
+
+
+def empty_cache(cfg: ModelConfig, batch: int):
+    """KV cache: [n_layers, 2(k/v), B, S, H, Dh] f32."""
+    return jnp.zeros(
+        (cfg.n_layers, 2, batch, cfg.max_seq, cfg.n_heads, cfg.d_head),
+        jnp.float32,
+    )
+
+
+def prefill(params, cfg: ModelConfig, tokens, lengths):
+    """Process padded prompts, build the KV cache, return first-token logits.
+
+    Args:
+      tokens:  [B, S] int32, right-padded with zeros.
+      lengths: [B] int32 valid prompt lengths.
+    Returns:
+      logits [B, vocab] at each row's last valid position, cache.
+    """
+    b, s = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :s, :]
+    cache = empty_cache(cfg, b)
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    pad = jnp.arange(s)[None, :] < lengths[:, None]  # [B, S]
+    mask = causal[None, None, :, :] & pad[:, None, None, :]  # [B, 1, S, S]
+
+    for li, layer in enumerate(params["layers"]):
+        h = rmsnorm(x, layer["attn_norm"])
+        q = _split_heads(h @ layer["wq"], cfg)  # [B, S, H, Dh]
+        k = _split_heads(h @ layer["wk"], cfg)
+        v = _split_heads(h @ layer["wv"], cfg)
+        # Full prefill attention (dense, jnp — prefill is compute-bound and
+        # XLA fuses it well; the Pallas kernel owns the decode hot loop).
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (cfg.d_head ** 0.5)
+        scores = jnp.where(mask, scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+        x = x + _merge_heads(attn) @ layer["wo"]
+        h2 = rmsnorm(x, layer["mlp_norm"])
+        x = x + swiglu(h2, layer["w_gate"], layer["w_up"], layer["w_down"])
+
+        kpad = jnp.pad(k, ((0, 0), (0, cfg.max_seq - s), (0, 0), (0, 0)))
+        vpad = jnp.pad(v, ((0, 0), (0, cfg.max_seq - s), (0, 0), (0, 0)))
+        cache = cache.at[li, 0].set(kpad)
+        cache = cache.at[li, 1].set(vpad)
+
+    x = rmsnorm(x, params["out_norm"])
+    logits_all = x @ params["lm_head"]  # [B, S, vocab]
+    idx = jnp.clip(lengths - 1, 0, s - 1)
+    logits = jnp.take_along_axis(
+        logits_all, idx[:, None, None].repeat(1, axis=1), axis=1
+    )[:, 0, :]
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, positions, cache):
+    """One decode step for a batch of sequences.
+
+    Args:
+      tokens:    [B] int32 current input token per row.
+      positions: [B] int32 position of that token (0-based).
+      cache:     [L, 2, B, S, H, Dh] KV cache (functional, returned updated).
+    Returns:
+      logits [B, vocab], updated cache.
+    """
+    b = tokens.shape[0]
+    x = params["tok_emb"][tokens] + params["pos_emb"][positions]  # [B, D]
+
+    for li, layer in enumerate(params["layers"]):
+        h = rmsnorm(x, layer["attn_norm"])
+        q = _split_heads(h @ layer["wq"], cfg)  # [B, H, Dh]
+        k_new = _split_heads(h @ layer["wk"], cfg)
+        v_new = _split_heads(h @ layer["wv"], cfg)
+
+        # Scatter this step's K/V into the cache at each row's position.
+        rows = jnp.arange(b)
+        cache = cache.at[li, 0, rows, positions].set(k_new)
+        cache = cache.at[li, 1, rows, positions].set(v_new)
+
+        # L1 Pallas kernel: masked decode attention over the padded cache.
+        attn = decode_attention(q, cache[li, 0], cache[li, 1], positions + 1)
+        x = x + _merge_heads(attn) @ layer["wo"]
+        h2 = rmsnorm(x, layer["mlp_norm"])
+        x = x + swiglu(h2, layer["w_gate"], layer["w_up"], layer["w_down"])
+
+    x = rmsnorm(x, params["out_norm"])
+    return x @ params["lm_head"], cache
+
+
+def build_fns(cfg: ModelConfig = DEFAULT_CONFIG, seed: int = 0):
+    """Closure-bound (prefill, decode_step) with weights baked in."""
+    params = init_params(cfg, seed)
+
+    @jax.jit
+    def prefill_fn(tokens, lengths):
+        return prefill(params, cfg, tokens, lengths)
+
+    @jax.jit
+    def decode_fn(tokens, positions, cache):
+        return decode_step(params, cfg, tokens, positions, cache)
+
+    return prefill_fn, decode_fn
+
+
+@functools.lru_cache(maxsize=4)
+def cached_fns(seed: int = 0):
+    return build_fns(DEFAULT_CONFIG, seed)

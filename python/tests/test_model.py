@@ -1,0 +1,152 @@
+"""L2 correctness: model shapes, prefill/decode equivalence, and the
+determinism the AOT pipeline depends on."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    DEFAULT_CONFIG,
+    ModelConfig,
+    build_fns,
+    empty_cache,
+    init_params,
+)
+
+
+@pytest.fixture(scope="module")
+def fns():
+    return build_fns(DEFAULT_CONFIG, seed=0)
+
+
+def _pad(tokens_list, cfg):
+    b = len(tokens_list)
+    out = np.zeros((b, cfg.max_seq), np.int32)
+    lengths = np.zeros((b,), np.int32)
+    for i, toks in enumerate(tokens_list):
+        out[i, : len(toks)] = toks
+        lengths[i] = len(toks)
+    return jnp.asarray(out), jnp.asarray(lengths)
+
+
+def test_prefill_shapes(fns):
+    prefill, _ = fns
+    cfg = DEFAULT_CONFIG
+    tokens, lengths = _pad([[1, 2, 3], [4, 5]], cfg)
+    logits, cache = prefill(tokens, lengths)
+    assert logits.shape == (2, cfg.vocab)
+    assert cache.shape == (cfg.n_layers, 2, 2, cfg.max_seq, cfg.n_heads,
+                           cfg.d_head)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_decode_step_shapes(fns):
+    _, decode = fns
+    cfg = DEFAULT_CONFIG
+    cache = empty_cache(cfg, 4)
+    logits, cache2 = decode(
+        jnp.array([1, 2, 3, 4], jnp.int32),
+        jnp.array([0, 0, 0, 0], jnp.int32),
+        cache,
+    )
+    assert logits.shape == (4, cfg.vocab)
+    assert cache2.shape == cache.shape
+
+
+def test_decode_chain_matches_prefill(fns):
+    """Token-by-token decode from an empty cache must produce the same
+    final-position logits as one prefill pass (KV-cache correctness)."""
+    prefill, decode = fns
+    cfg = DEFAULT_CONFIG
+    prompts = [[7, 11, 13, 17], [23, 29, 31, 37]]
+    tokens, lengths = _pad(prompts, cfg)
+    ref_logits, _ = prefill(tokens, lengths)
+
+    cache = empty_cache(cfg, 2)
+    logits = None
+    for pos in range(4):
+        tok = tokens[:, pos]
+        logits, cache = decode(tok, jnp.full((2,), pos, jnp.int32), cache)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_cache_feeds_decode(fns):
+    """Prefill then decode one more token == full decode chain."""
+    prefill, decode = fns
+    cfg = DEFAULT_CONFIG
+    prompt = [3, 1, 4, 1, 5]
+    tokens, lengths = _pad([prompt], cfg)
+    _, cache = prefill(tokens, lengths)
+    nxt = jnp.array([9], jnp.int32)
+    logits_a, _ = decode(nxt, jnp.array([5], jnp.int32), cache)
+
+    cache_b = empty_cache(cfg, 1)
+    logits_b = None
+    for pos, t in enumerate(prompt + [9]):
+        logits_b, cache_b = decode(jnp.array([t], jnp.int32),
+                                   jnp.array([pos], jnp.int32), cache_b)
+    np.testing.assert_allclose(np.asarray(logits_a), np.asarray(logits_b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_batch_rows_independent(fns):
+    _, decode = fns
+    cfg = DEFAULT_CONFIG
+    cache = empty_cache(cfg, 2)
+    toks = jnp.array([5, 200], jnp.int32)
+    pos = jnp.array([0, 0], jnp.int32)
+    logits, _ = decode(toks, pos, cache)
+    # Row 0 alone must match row 0 of the batch.
+    c1 = empty_cache(cfg, 1)
+    l1, _ = decode.__wrapped__(  # unjitted path would differ; re-jit per B
+        init_params(cfg, 0), cfg, toks[:1], pos[:1], c1
+    ) if False else (None, None)
+    # Use the jitted 2-row call with swapped rows instead: outputs swap too.
+    logits_sw, _ = decode(toks[::-1], pos, cache)
+    np.testing.assert_allclose(np.asarray(logits[0]),
+                               np.asarray(logits_sw[1]), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(logits[1]),
+                               np.asarray(logits_sw[0]), rtol=1e-5, atol=1e-5)
+
+
+def test_params_deterministic():
+    a = init_params(DEFAULT_CONFIG, seed=0)
+    b = init_params(DEFAULT_CONFIG, seed=0)
+    np.testing.assert_array_equal(np.asarray(a["tok_emb"]),
+                                  np.asarray(b["tok_emb"]))
+    c = init_params(DEFAULT_CONFIG, seed=1)
+    assert not np.array_equal(np.asarray(a["tok_emb"]),
+                              np.asarray(c["tok_emb"]))
+
+
+def test_custom_config_shapes():
+    cfg = ModelConfig(vocab=32, d_model=16, n_heads=2, n_layers=1, d_ff=32,
+                      max_seq=8)
+    prefill, decode = build_fns(cfg, seed=0)
+    tokens = jnp.zeros((1, cfg.max_seq), jnp.int32)
+    logits, cache = prefill(tokens, jnp.array([3], jnp.int32))
+    assert logits.shape == (1, 32)
+    logits2, _ = decode(jnp.array([1], jnp.int32), jnp.array([3], jnp.int32),
+                        cache)
+    assert logits2.shape == (1, 32)
+
+
+def test_greedy_generation_is_deterministic(fns):
+    prefill, decode = fns
+    cfg = DEFAULT_CONFIG
+
+    def gen():
+        tokens, lengths = _pad([[1, 2, 3]], cfg)
+        logits, cache = prefill(tokens, lengths)
+        out = []
+        pos = 3
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for _ in range(10):
+            out.append(int(tok[0]))
+            logits, cache = decode(tok, jnp.array([pos], jnp.int32), cache)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            pos += 1
+        return out
+
+    assert gen() == gen()

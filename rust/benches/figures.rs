@@ -1,0 +1,26 @@
+//! End-to-end figure benches: `cargo bench --bench figures` regenerates
+//! every paper table and figure in quick mode and times each one. This is
+//! the "one bench per paper table" harness entry point; the figures
+//! themselves print the same rows/series the paper reports and save JSON
+//! under results/. Use `cargo run --release -- experiment all` for
+//! full-scale runs.
+
+use chiron::experiments::{self, common::Scale};
+
+fn main() {
+    let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let mut total = 0.0;
+    for id in experiments::ALL {
+        if let Some(f) = &filter {
+            if !id.contains(f.as_str()) {
+                continue;
+            }
+        }
+        let t0 = std::time::Instant::now();
+        experiments::run(id, Scale::Quick).expect("known id");
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        println!("[bench {id}: {dt:.2}s]\n");
+    }
+    println!("== figures bench total: {total:.1}s ==");
+}

@@ -1,0 +1,156 @@
+//! Hot-path micro/meso benchmarks (custom harness; criterion unavailable
+//! offline). Run with `cargo bench --bench hotpath [-- <filter>]`.
+//! Quick mode: CHIRON_BENCH_QUICK=1.
+//!
+//! These are the §Perf L3 profiling targets: the simulator event loop,
+//! router, waiting-time estimator, request grouping, and the local
+//! autoscaler step.
+
+use chiron::coordinator::groups::build_groups;
+use chiron::coordinator::waiting::WaitingTimeEstimator;
+use chiron::coordinator::{BootstrapSpec, Chiron, ChironConfig, LocalAutoscaler, LocalConfig};
+use chiron::core::{InstanceClass, InstanceId, ModelSpec, RequestClass, RequestId};
+use chiron::sim::policy::{ClusterView, InstanceState, InstanceView, Policy, QueueStats, QueuedReq};
+use chiron::sim::{run_sim, SimConfig};
+use chiron::util::bench::{black_box, Bencher};
+use chiron::util::rng::Rng;
+use chiron::workload::trace::{workload_a, workload_b_batch};
+use chiron::workload::{ShareGptSampler, TraceBuilder};
+
+fn instances(n: u32) -> Vec<InstanceView> {
+    (0..n)
+        .map(|i| InstanceView {
+            id: InstanceId(i),
+            class: if i % 3 == 0 {
+                InstanceClass::Interactive
+            } else if i % 3 == 1 {
+                InstanceClass::Mixed
+            } else {
+                InstanceClass::Batch
+            },
+            model: 0,
+            state: InstanceState::Running,
+            running: (i * 7) % 64,
+            running_interactive: (i * 3) % 32,
+            waiting: i % 4,
+            max_batch: 64,
+            kv_tokens: (i as u64 * 1000) % 400_000,
+            kv_capacity: 800_000,
+            last_step_time: 0.03,
+            last_decode_time: 0.03,
+            throughput_tokens: 2000.0,
+            min_itl_slo: 0.2,
+            steps: 100 + i as u64,
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let models = vec![ModelSpec::llama8b()];
+
+    // -- RNG + sampling -----------------------------------------------------
+    {
+        let mut rng = Rng::new(1);
+        b.bench_units("rng.u64 x1000", Some(1000.0), || {
+            let mut acc = 0u64;
+            for _ in 0..1000 {
+                acc ^= rng.next_u64();
+            }
+            black_box(acc);
+        });
+        let sampler = ShareGptSampler::new();
+        b.bench_units("sharegpt.sample x1000", Some(1000.0), || {
+            let mut acc = 0u32;
+            for _ in 0..1000 {
+                let (i, o) = sampler.sample(&mut rng);
+                acc = acc.wrapping_add(i + o);
+            }
+            black_box(acc);
+        });
+    }
+
+    // -- router ---------------------------------------------------------------
+    {
+        let insts = instances(50);
+        let queues = vec![QueueStats::default()];
+        let mut chiron = Chiron::new(ChironConfig::for_models(1), &models);
+        let req = QueuedReq {
+            id: RequestId(1),
+            class: RequestClass::Interactive,
+            model: 0,
+            arrival: 0.0,
+            ttft_deadline: 10.0,
+            itl_slo: 0.2,
+            input_tokens: 128,
+        };
+        b.bench_units("chiron.route interactive (50 inst)", Some(1.0), || {
+            let view = ClusterView {
+                now: 0.0,
+                instances: &insts,
+                queues: &queues,
+                models: &models,
+                gpus_total: 50,
+                gpus_used: 50,
+            };
+            black_box(chiron.route(&req, &view));
+        });
+    }
+
+    // -- local autoscaler -------------------------------------------------
+    {
+        let mut la = LocalAutoscaler::new(LocalConfig::default());
+        let insts = instances(1);
+        let mut step = 0u64;
+        b.bench_units("local_autoscaler.on_step", Some(1.0), || {
+            step += 1;
+            let mut v = insts[0].clone();
+            v.steps = step;
+            black_box(la.on_step(&v));
+        });
+    }
+
+    // -- waiting-time estimator + groups -----------------------------------
+    {
+        let mut est = WaitingTimeEstimator::new(5000.0);
+        for i in 0..1000 {
+            est.observe_completion(100 + (i % 400));
+        }
+        b.bench_units("estimator.estimate_wait", Some(1.0), || {
+            black_box(est.estimate_wait(123_456.0, 7.0));
+        });
+        let deadlines: Vec<f64> = (0..2048).map(|i| 1000.0 + (i % 7) as f64 * 600.0).collect();
+        b.bench_units("build_groups (2048 sample)", Some(2048.0), || {
+            black_box(build_groups(&deadlines, 64, 300.0, 6));
+        });
+    }
+
+    // -- end-to-end simulator throughput -----------------------------------
+    {
+        let mk = |n_inter: usize, n_batch: usize| {
+            let mut rng = Rng::new(3);
+            TraceBuilder::new()
+                .stream(workload_a(30.0, n_inter, 0))
+                .stream(workload_b_batch(n_batch, 5.0, 0, 1800.0))
+                .build(&mut rng)
+        };
+        let trace = mk(2000, 4000);
+        let total = trace.len() as f64;
+        b.bench_units("sim.run chiron 6k requests", Some(total), || {
+            let mut cfg = ChironConfig::for_models(1);
+            cfg.bootstrap[0] = BootstrapSpec {
+                interactive: 1,
+                mixed: 2,
+                batch: 0,
+            };
+            let mut policy = Chiron::new(cfg, &models);
+            let mut sim_cfg = SimConfig::new(50, models.clone());
+            sim_cfg.max_sim_time = 4.0 * 3600.0;
+            sim_cfg.timeline_every = 0;
+            let r = run_sim(sim_cfg, mk(2000, 4000), &mut policy);
+            black_box(r.outcomes.len());
+        });
+    }
+
+    b.report();
+}

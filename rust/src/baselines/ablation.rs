@@ -1,0 +1,195 @@
+//! Ablation policies for paper Figure 2 (right) and Figure 18:
+//!
+//! - **LocalOnly** ("Local"): Chiron's local batch-size autoscaler, but the
+//!   global autoscaler replaced by a Llumnix-style utilization-band policy
+//!   (and Llumnix routing — no instance classes or batch queuing).
+//! - **GlobalOnly** ("Global"): Chiron's global autoscaler, routing, and
+//!   request groups, but static batch sizes (no Algorithm 1).
+
+use crate::core::{InstanceClass, ModelSpec, RequestClass, RequestOutcome, Time};
+use crate::coordinator::chiron::{Chiron, ChironConfig};
+use crate::coordinator::local::{LocalAutoscaler, LocalConfig};
+use crate::sim::policy::{Action, ClusterView, InstanceView, Policy, QueuedReq, Route};
+
+use super::llumnix::{Llumnix, LlumnixConfig};
+
+/// Chiron local autoscaler + Llumnix global/utilization autoscaler.
+pub struct LocalOnly {
+    llumnix: Llumnix,
+    local: LocalAutoscaler,
+}
+
+impl LocalOnly {
+    pub fn new(models: &[ModelSpec], llumnix_cfg: LlumnixConfig) -> Self {
+        LocalOnly {
+            llumnix: Llumnix::tuned(models, llumnix_cfg),
+            local: LocalAutoscaler::new(LocalConfig::default()),
+        }
+    }
+}
+
+impl Policy for LocalOnly {
+    fn name(&self) -> &str {
+        "local-only"
+    }
+
+    fn route(&mut self, req: &QueuedReq, view: &ClusterView) -> Route {
+        self.llumnix.route(req, view)
+    }
+
+    fn pull_order(&self, inst: &InstanceView) -> Vec<RequestClass> {
+        self.llumnix.pull_order(inst)
+    }
+
+    fn on_step(&mut self, inst: &InstanceView, _now: Time) -> Option<u32> {
+        self.local.on_step(inst)
+    }
+
+    fn autoscale(&mut self, view: &ClusterView) -> Vec<Action> {
+        self.llumnix.autoscale(view)
+    }
+
+    fn initial_max_batch(&self, model: &ModelSpec, class: InstanceClass) -> u32 {
+        self.llumnix.initial_max_batch(model, class).min(8)
+    }
+
+    fn bootstrap(&mut self, view: &ClusterView) -> Vec<Action> {
+        self.llumnix.bootstrap(view)
+    }
+}
+
+/// Chiron global autoscaler + static batch sizes.
+pub struct GlobalOnly {
+    chiron: Chiron,
+    static_batch: u32,
+}
+
+impl GlobalOnly {
+    pub fn new(models: &[ModelSpec], cfg: ChironConfig, static_batch: u32) -> Self {
+        GlobalOnly {
+            chiron: Chiron::new(cfg, models),
+            static_batch,
+        }
+    }
+}
+
+impl Policy for GlobalOnly {
+    fn name(&self) -> &str {
+        "global-only"
+    }
+
+    fn route(&mut self, req: &QueuedReq, view: &ClusterView) -> Route {
+        self.chiron.route(req, view)
+    }
+
+    fn pull_order(&self, inst: &InstanceView) -> Vec<RequestClass> {
+        self.chiron.pull_order(inst)
+    }
+
+    fn on_step(&mut self, _inst: &InstanceView, _now: Time) -> Option<u32> {
+        None // static batch (the ablated component)
+    }
+
+    fn autoscale(&mut self, view: &ClusterView) -> Vec<Action> {
+        self.chiron.autoscale(view)
+    }
+
+    fn initial_max_batch(&self, _model: &ModelSpec, _class: InstanceClass) -> u32 {
+        self.static_batch
+    }
+
+    fn bootstrap(&mut self, view: &ClusterView) -> Vec<Action> {
+        self.chiron.bootstrap(view)
+    }
+
+    fn on_complete(&mut self, outcome: &RequestOutcome) {
+        self.chiron.on_complete(outcome);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::InstanceId;
+    use crate::sim::policy::{InstanceState, QueueStats};
+
+    fn view<'a>(m: &'a [ModelSpec], q: &'a [QueueStats]) -> ClusterView<'a> {
+        ClusterView {
+            now: 0.0,
+            instances: &[],
+            queues: q,
+            models: m,
+            gpus_total: 50,
+            gpus_used: 0,
+        }
+    }
+
+    #[test]
+    fn local_only_adapts_batch_but_uses_llumnix_scaling() {
+        let m = vec![ModelSpec::llama8b()];
+        let mut p = LocalOnly::new(&m, LlumnixConfig::untuned());
+        let v = InstanceView {
+            id: InstanceId(0),
+            class: InstanceClass::Mixed,
+            model: 0,
+            state: InstanceState::Running,
+            running: 8,
+            running_interactive: 0,
+            waiting: 0,
+            max_batch: 8,
+            kv_tokens: 0,
+            kv_capacity: 100_000,
+            last_step_time: 0.01, // far under SLO → local autoscaler grows
+            last_decode_time: 0.01,
+            throughput_tokens: 800.0,
+            min_itl_slo: 0.2,
+            steps: 8,
+        };
+        let mut grew = false;
+        for s in 1..6 {
+            let mut vv = v.clone();
+            vv.steps = s * 4;
+            if let Some(nb) = p.on_step(&vv, 0.0) {
+                grew = nb > 8;
+            }
+        }
+        assert!(grew, "LocalOnly should adapt batch size");
+    }
+
+    #[test]
+    fn global_only_keeps_batch_static() {
+        let m = vec![ModelSpec::llama8b()];
+        let mut p = GlobalOnly::new(&m, ChironConfig::for_models(1), 64);
+        let v = InstanceView {
+            id: InstanceId(0),
+            class: InstanceClass::Mixed,
+            model: 0,
+            state: InstanceState::Running,
+            running: 64,
+            running_interactive: 0,
+            waiting: 0,
+            max_batch: 64,
+            kv_tokens: 0,
+            kv_capacity: 100_000,
+            last_step_time: 0.9, // would trigger Chiron halving
+            last_decode_time: 0.9,
+            throughput_tokens: 50.0,
+            min_itl_slo: 0.2,
+            steps: 100,
+        };
+        assert_eq!(p.on_step(&v, 0.0), None);
+        assert_eq!(p.initial_max_batch(&m[0], InstanceClass::Batch), 64);
+    }
+
+    #[test]
+    fn names_are_distinct() {
+        let m = vec![ModelSpec::llama8b()];
+        let q = vec![QueueStats::default()];
+        let _ = view(&m, &q);
+        assert_eq!(LocalOnly::new(&m, LlumnixConfig::untuned()).name(), "local-only");
+        assert_eq!(
+            GlobalOnly::new(&m, ChironConfig::for_models(1), 64).name(),
+            "global-only"
+        );
+    }
+}

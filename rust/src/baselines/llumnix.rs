@@ -1,0 +1,309 @@
+//! Llumnix-like baseline autoscaler (paper §6 "Experiment Setup").
+//!
+//! Per the paper's description of the baseline: "the autoscaler in Llumnix
+//! keeps average token utilization across all instances between a
+//! configurable threshold range by adding and removing serving instances."
+//! It does not distinguish request SLO classes (everything is dispatched
+//! immediately to the least-loaded instance — no global queuing), uses a
+//! static max batch size, and scales one instance at a time.
+//!
+//! Two variants are evaluated:
+//! - **untuned**: one fixed configuration across all workloads (the
+//!   conservative interactive-safe batch limit operators deploy);
+//! - **tuned**: thresholds + batch size chosen per workload by a sweep —
+//!   `baselines::tune_llumnix` performs that sweep.
+
+use crate::core::{InstanceClass, ModelSpec, RequestClass, Time};
+use crate::sim::policy::{Action, ClusterView, InstanceView, Policy, QueuedReq, Route};
+
+/// Llumnix configuration knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct LlumnixConfig {
+    /// Static max batch size for every instance.
+    pub max_batch: u32,
+    /// Token (KV) utilization band; scale up above `high`, down below `low`.
+    pub low: f64,
+    pub high: f64,
+    /// Initial instances per model.
+    pub bootstrap: u32,
+    /// Max instances added per tick (Llumnix scales gradually).
+    pub adds_per_tick: u32,
+}
+
+impl LlumnixConfig {
+    pub fn untuned() -> Self {
+        LlumnixConfig {
+            max_batch: 64,
+            low: 0.3,
+            high: 0.8,
+            bootstrap: 3,
+            adds_per_tick: 1,
+        }
+    }
+}
+
+/// The Llumnix-like policy.
+pub struct Llumnix {
+    pub cfg: LlumnixConfig,
+    n_models: usize,
+    name: String,
+}
+
+impl Llumnix {
+    pub fn untuned(models: &[ModelSpec]) -> Self {
+        Llumnix {
+            cfg: LlumnixConfig::untuned(),
+            n_models: models.len(),
+            name: "llumnix".into(),
+        }
+    }
+
+    pub fn tuned(models: &[ModelSpec], cfg: LlumnixConfig) -> Self {
+        Llumnix {
+            cfg,
+            n_models: models.len(),
+            name: "llumnix-tuned".into(),
+        }
+    }
+
+    fn mean_kv_util(view: &ClusterView, model: usize) -> (f64, u32) {
+        let mut sum = 0.0;
+        let mut n = 0u32;
+        for i in view.instances_of(model) {
+            if i.is_running() {
+                sum += i.kv_tokens as f64 / i.kv_capacity.max(1) as f64;
+                n += 1;
+            }
+        }
+        (if n > 0 { sum / n as f64 } else { 0.0 }, n)
+    }
+
+    fn total_waiting(view: &ClusterView, model: usize) -> u32 {
+        view.instances_of(model).map(|i| i.waiting).sum()
+    }
+}
+
+impl Policy for Llumnix {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn route(&mut self, req: &QueuedReq, view: &ClusterView) -> Route {
+        // Immediate dispatch to the least-loaded instance (no SLO awareness,
+        // no queuing — the behavior Figure 1 (left) depicts).
+        let target = view
+            .instances_of(req.model)
+            .filter(|i| i.is_running())
+            .min_by_key(|i| (i.running + i.waiting, i.id.0));
+        match target {
+            Some(i) => Route::Dispatch(i.id),
+            None => Route::Queue, // nothing up yet; pulled when ready
+        }
+    }
+
+    fn pull_order(&self, _inst: &InstanceView) -> Vec<RequestClass> {
+        // FCFS across classes once capacity exists.
+        vec![RequestClass::Interactive, RequestClass::Batch]
+    }
+
+    fn on_step(&mut self, _inst: &InstanceView, _now: Time) -> Option<u32> {
+        None // static batch size
+    }
+
+    fn autoscale(&mut self, view: &ClusterView) -> Vec<Action> {
+        let mut actions = Vec::new();
+        let mut gpus_free = view.gpus_free();
+        for model in 0..self.n_models {
+            let gpi = view.models[model].gpus_per_instance;
+            let (util, n_running) = Self::mean_kv_util(view, model);
+            let waiting = Self::total_waiting(view, model);
+            let queued = view.queues[model].batch_len + view.queues[model].interactive_len;
+            let loading = view
+                .instances_of(model)
+                .filter(|i| !i.is_running())
+                .count() as u32;
+
+            // Scale up when the utilization band is exceeded or work is
+            // waiting anywhere — the paper's characterization of Llumnix:
+            // "add instances immediately upon request arrival and remove
+            // them upon request completion" (§2.3). Adds are serialized by
+            // the in-flight model load (gradual ramp, §6.2).
+            let pressure = util > self.cfg.high || queued > 0 || waiting > 0;
+            if pressure && loading == 0 {
+                for _ in 0..self.cfg.adds_per_tick {
+                    if gpus_free < gpi {
+                        break;
+                    }
+                    gpus_free -= gpi;
+                    actions.push(Action::AddInstance {
+                        model,
+                        class: InstanceClass::Mixed,
+                    });
+                }
+            } else if util < self.cfg.low && queued == 0 && waiting == 0 {
+                // Scale down: retire one idle instance (churn on completion,
+                // the hysteresis §2.3 measures).
+                if let Some(idle) = view
+                    .instances_of(model)
+                    .filter(|i| i.is_running() && i.running == 0 && i.waiting == 0)
+                    .min_by_key(|i| i.id.0)
+                {
+                    if n_running > 1 {
+                        actions.push(Action::RemoveInstance { id: idle.id });
+                    }
+                }
+            }
+        }
+        actions
+    }
+
+    fn initial_max_batch(&self, _model: &ModelSpec, _class: InstanceClass) -> u32 {
+        self.cfg.max_batch
+    }
+
+    fn bootstrap(&mut self, _view: &ClusterView) -> Vec<Action> {
+        let mut actions = Vec::new();
+        for model in 0..self.n_models {
+            for _ in 0..self.cfg.bootstrap {
+                actions.push(Action::AddInstance {
+                    model,
+                    class: InstanceClass::Mixed,
+                });
+            }
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{InstanceId, ModelSpec, RequestId};
+    use crate::sim::policy::{InstanceState, QueueStats};
+
+    fn inst(id: u32, running: u32, kv: u64, cap: u64) -> InstanceView {
+        InstanceView {
+            id: InstanceId(id),
+            class: InstanceClass::Mixed,
+            model: 0,
+            state: InstanceState::Running,
+            running,
+            running_interactive: 0,
+            waiting: 0,
+            max_batch: 64,
+            kv_tokens: kv,
+            kv_capacity: cap,
+            last_step_time: 0.05,
+            last_decode_time: 0.05,
+            throughput_tokens: 100.0,
+            min_itl_slo: 0.2,
+            steps: 4,
+        }
+    }
+
+    fn view<'a>(
+        insts: &'a [InstanceView],
+        q: &'a [QueueStats],
+        m: &'a [ModelSpec],
+    ) -> ClusterView<'a> {
+        ClusterView {
+            now: 0.0,
+            instances: insts,
+            queues: q,
+            models: m,
+            gpus_total: 50,
+            gpus_used: insts.len() as u32,
+        }
+    }
+
+    #[test]
+    fn routes_to_least_loaded() {
+        let m = vec![ModelSpec::llama8b()];
+        let mut p = Llumnix::untuned(&m);
+        let insts = vec![inst(0, 10, 0, 100), inst(1, 2, 0, 100)];
+        let q = vec![QueueStats::default()];
+        let r = p.route(
+            &QueuedReq {
+                id: RequestId(1),
+                class: RequestClass::Batch,
+                model: 0,
+                arrival: 0.0,
+                ttft_deadline: 3600.0,
+                itl_slo: 2.0,
+                input_tokens: 10,
+            },
+            &view(&insts, &q, &m),
+        );
+        assert_eq!(r, Route::Dispatch(InstanceId(1)));
+    }
+
+    #[test]
+    fn scales_up_on_high_utilization() {
+        let m = vec![ModelSpec::llama8b()];
+        let mut p = Llumnix::untuned(&m);
+        let insts = vec![inst(0, 32, 90, 100)];
+        let q = vec![QueueStats::default()];
+        let a = p.autoscale(&view(&insts, &q, &m));
+        assert_eq!(a.len(), 1);
+        assert!(matches!(a[0], Action::AddInstance { .. }));
+    }
+
+    #[test]
+    fn one_instance_per_tick() {
+        let m = vec![ModelSpec::llama8b()];
+        let mut p = Llumnix::untuned(&m);
+        // Enormous queue — Llumnix still adds only one instance per tick
+        // (the gradual warm-up §6.2 contrasts with Chiron's bulk add).
+        let insts = vec![inst(0, 64, 99, 100)];
+        let q = vec![QueueStats {
+            batch_len: 100_000,
+            ..Default::default()
+        }];
+        let a = p.autoscale(&view(&insts, &q, &m));
+        let adds = a
+            .iter()
+            .filter(|x| matches!(x, Action::AddInstance { .. }))
+            .count();
+        assert_eq!(adds, 1);
+    }
+
+    #[test]
+    fn scales_down_idle_instance_when_cold() {
+        let m = vec![ModelSpec::llama8b()];
+        let mut p = Llumnix::untuned(&m);
+        let insts = vec![inst(0, 4, 50, 100), inst(1, 0, 0, 100)];
+        let q = vec![QueueStats::default()];
+        let a = p.autoscale(&view(&insts, &q, &m));
+        assert!(a.contains(&Action::RemoveInstance { id: InstanceId(1) }));
+    }
+
+    #[test]
+    fn no_scale_down_below_one_instance() {
+        let m = vec![ModelSpec::llama8b()];
+        let mut p = Llumnix::untuned(&m);
+        let insts = vec![inst(0, 0, 0, 100)];
+        let q = vec![QueueStats::default()];
+        let a = p.autoscale(&view(&insts, &q, &m));
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn waits_for_loading_instance_before_adding_more() {
+        let m = vec![ModelSpec::llama8b()];
+        let mut p = Llumnix::untuned(&m);
+        let mut loading = inst(1, 0, 0, 100);
+        loading.state = InstanceState::Loading { ready_at: 99.0 };
+        let insts = vec![inst(0, 64, 95, 100), loading];
+        let q = vec![QueueStats::default()];
+        let a = p.autoscale(&view(&insts, &q, &m));
+        assert!(a.is_empty(), "{a:?}");
+    }
+
+    #[test]
+    fn static_batch_never_changes() {
+        let m = vec![ModelSpec::llama8b()];
+        let mut p = Llumnix::untuned(&m);
+        assert_eq!(p.on_step(&inst(0, 64, 90, 100), 1.0), None);
+        assert_eq!(p.initial_max_batch(&m[0], InstanceClass::Mixed), 64);
+    }
+}

@@ -1,0 +1,44 @@
+//! Baseline autoscalers the paper compares against, plus the ablations.
+
+pub mod ablation;
+pub mod llumnix;
+pub mod static_;
+
+pub use ablation::{GlobalOnly, LocalOnly};
+pub use llumnix::{Llumnix, LlumnixConfig};
+pub use static_::StaticPolicy;
+
+use crate::core::ModelSpec;
+use crate::sim::{run_sim, SimConfig};
+use crate::workload::Trace;
+
+/// Per-workload Llumnix tuning sweep (the paper's "Llumnix (tuned)"): try a
+/// grid of batch sizes and utilization bands, return the configuration that
+/// maximizes SLO attainment with request throughput as the tie-breaker.
+pub fn tune_llumnix(
+    cfg: &SimConfig,
+    trace: &Trace,
+    models: &[ModelSpec],
+    batch_grid: &[u32],
+) -> LlumnixConfig {
+    let mut best = LlumnixConfig::untuned();
+    let mut best_key = (f64::NEG_INFINITY, f64::NEG_INFINITY);
+    for &mb in batch_grid {
+        for &(low, high) in &[(0.2, 0.7), (0.3, 0.8), (0.5, 0.9)] {
+            let cand = LlumnixConfig {
+                max_batch: mb,
+                low,
+                high,
+                ..LlumnixConfig::untuned()
+            };
+            let mut p = Llumnix::tuned(models, cand);
+            let report = run_sim(cfg.clone(), trace.clone(), &mut p);
+            let key = (report.slo_attainment(), report.request_throughput());
+            if key > best_key {
+                best_key = key;
+                best = cand;
+            }
+        }
+    }
+    best
+}

@@ -1,0 +1,103 @@
+//! A fixed-size, fixed-batch policy: `n` mixed instances per model, no
+//! scaling at all. Used by the characterization experiments (Figures 3, 5,
+//! 6) where the cluster must be held constant, and by simulator tests.
+
+use crate::core::{InstanceClass, ModelSpec, RequestClass, Time};
+use crate::sim::policy::{Action, ClusterView, InstanceView, Policy, QueuedReq, Route};
+
+pub struct StaticPolicy {
+    pub instances_per_model: Vec<u32>,
+    pub max_batch: u32,
+    /// If false, batch requests wait in the global queue and are pulled
+    /// (models a work-conserving queue); if true they dispatch immediately.
+    pub eager_dispatch: bool,
+    name: String,
+}
+
+impl StaticPolicy {
+    pub fn new(instances_per_model: Vec<u32>, max_batch: u32) -> Self {
+        StaticPolicy {
+            instances_per_model,
+            max_batch,
+            eager_dispatch: true,
+            name: "static".into(),
+        }
+    }
+
+    pub fn queued(mut self) -> Self {
+        self.eager_dispatch = false;
+        self
+    }
+}
+
+impl Policy for StaticPolicy {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn route(&mut self, req: &QueuedReq, view: &ClusterView) -> Route {
+        if !self.eager_dispatch && req.class == RequestClass::Batch {
+            return Route::Queue;
+        }
+        match view
+            .instances_of(req.model)
+            .filter(|i| i.is_running())
+            .min_by_key(|i| (i.running + i.waiting, i.id.0))
+        {
+            Some(i) => Route::Dispatch(i.id),
+            None => Route::Queue,
+        }
+    }
+
+    fn pull_order(&self, _inst: &InstanceView) -> Vec<RequestClass> {
+        vec![RequestClass::Interactive, RequestClass::Batch]
+    }
+
+    fn on_step(&mut self, _inst: &InstanceView, _now: Time) -> Option<u32> {
+        None
+    }
+
+    fn autoscale(&mut self, _view: &ClusterView) -> Vec<Action> {
+        Vec::new()
+    }
+
+    fn initial_max_batch(&self, _model: &ModelSpec, _class: InstanceClass) -> u32 {
+        self.max_batch
+    }
+
+    fn bootstrap(&mut self, _view: &ClusterView) -> Vec<Action> {
+        let mut actions = Vec::new();
+        for (model, &n) in self.instances_per_model.iter().enumerate() {
+            for _ in 0..n {
+                actions.push(Action::AddInstance {
+                    model,
+                    class: InstanceClass::Mixed,
+                });
+            }
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::policy::QueueStats;
+
+    #[test]
+    fn bootstrap_counts() {
+        let m = vec![crate::core::ModelSpec::llama8b(), crate::core::ModelSpec::llama70b()];
+        let q = vec![QueueStats::default(), QueueStats::default()];
+        let view = ClusterView {
+            now: 0.0,
+            instances: &[],
+            queues: &q,
+            models: &m,
+            gpus_total: 50,
+            gpus_used: 0,
+        };
+        let mut p = StaticPolicy::new(vec![2, 3], 16);
+        assert_eq!(p.bootstrap(&view).len(), 5);
+        assert!(p.autoscale(&view).is_empty());
+    }
+}

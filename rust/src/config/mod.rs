@@ -1,0 +1,289 @@
+//! JSON experiment/cluster configuration for the `chiron` CLI.
+//!
+//! Example (see `configs/` for ready-made files):
+//! ```json
+//! {
+//!   "gpus": 50,
+//!   "models": ["llama8b", "llama70b"],
+//!   "serving": [{"prefix_caching": false, "speculative_decoding": false}],
+//!   "policy": {"kind": "chiron", "theta": 0.333},
+//!   "workload": {
+//!     "interactive_rate": [30.0, 5.0],
+//!     "interactive_count": [2000, 500],
+//!     "batch_count": [5000, 0],
+//!     "batch_ttft_slo": 3600.0,
+//!     "cv": 1.0
+//!   },
+//!   "seed": 42
+//! }
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::baselines::{GlobalOnly, Llumnix, LlumnixConfig, LocalOnly, StaticPolicy};
+use crate::coordinator::{BootstrapSpec, Chiron, ChironConfig};
+use crate::core::{ModelSpec, RequestClass, ServingConfig, Slo};
+use crate::sim::{Policy, SimConfig};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::{ArrivalProcess, ShareGptSampler, Trace, TraceBuilder, WorkloadSpec};
+
+/// Parsed experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub gpus: u32,
+    pub models: Vec<ModelSpec>,
+    pub serving: Vec<ServingConfig>,
+    pub policy: PolicySpec,
+    pub workload: WorkloadConfig,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub enum PolicySpec {
+    Chiron { theta: f64 },
+    Llumnix { tuned: bool, max_batch: u32 },
+    LocalOnly,
+    GlobalOnly { static_batch: u32 },
+    Static { instances: Vec<u32>, max_batch: u32 },
+}
+
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub interactive_rate: Vec<f64>,
+    pub interactive_count: Vec<usize>,
+    pub batch_count: Vec<usize>,
+    pub batch_ttft_slo: f64,
+    pub batch_at: f64,
+    pub cv: f64,
+}
+
+impl ExperimentConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let gpus = j.get("gpus").as_u64().unwrap_or(50) as u32;
+        let model_names = j
+            .get("models")
+            .as_arr()
+            .context("config: models array required")?;
+        let mut models = Vec::new();
+        for m in model_names {
+            let name = m.as_str().context("model name must be a string")?;
+            models.push(ModelSpec::by_name(name).with_context(|| format!("unknown model {name}"))?);
+        }
+        let n = models.len();
+        let mut serving = vec![ServingConfig::default(); n];
+        if let Some(arr) = j.get("serving").as_arr() {
+            for (i, s) in arr.iter().enumerate().take(n) {
+                serving[i] = ServingConfig {
+                    prefix_caching: s.get("prefix_caching").as_bool().unwrap_or(false),
+                    speculative_decoding: s
+                        .get("speculative_decoding")
+                        .as_bool()
+                        .unwrap_or(false),
+                };
+            }
+        }
+        let p = j.get("policy");
+        let policy = match p.get("kind").as_str().unwrap_or("chiron") {
+            "chiron" => PolicySpec::Chiron {
+                theta: p.get("theta").as_f64().unwrap_or(1.0 / 3.0),
+            },
+            "llumnix" => PolicySpec::Llumnix {
+                tuned: p.get("tuned").as_bool().unwrap_or(false),
+                max_batch: p.get("max_batch").as_u64().unwrap_or(64) as u32,
+            },
+            "local-only" => PolicySpec::LocalOnly,
+            "global-only" => PolicySpec::GlobalOnly {
+                static_batch: p.get("static_batch").as_u64().unwrap_or(64) as u32,
+            },
+            "static" => PolicySpec::Static {
+                instances: p
+                    .get("instances")
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(|x| x.as_u64().map(|v| v as u32)).collect())
+                    .unwrap_or_else(|| vec![1; n]),
+                max_batch: p.get("max_batch").as_u64().unwrap_or(64) as u32,
+            },
+            other => bail!("unknown policy kind {other}"),
+        };
+        let w = j.get("workload");
+        let per_model_f64 = |key: &str, default: f64| -> Vec<f64> {
+            match w.get(key).as_arr() {
+                Some(a) => (0..n)
+                    .map(|i| a.get(i).and_then(|x| x.as_f64()).unwrap_or(default))
+                    .collect(),
+                None => vec![w.get(key).as_f64().unwrap_or(default); n],
+            }
+        };
+        let per_model_usize = |key: &str, default: usize| -> Vec<usize> {
+            per_model_f64(key, default as f64)
+                .into_iter()
+                .map(|x| x as usize)
+                .collect()
+        };
+        let workload = WorkloadConfig {
+            interactive_rate: per_model_f64("interactive_rate", 10.0),
+            interactive_count: per_model_usize("interactive_count", 1000),
+            batch_count: per_model_usize("batch_count", 0),
+            batch_ttft_slo: w.get("batch_ttft_slo").as_f64().unwrap_or(3600.0),
+            batch_at: w.get("batch_at").as_f64().unwrap_or(0.0),
+            cv: w.get("cv").as_f64().unwrap_or(1.0),
+        };
+        Ok(ExperimentConfig {
+            gpus,
+            models,
+            serving,
+            policy,
+            workload,
+            seed: j.get("seed").as_u64().unwrap_or(42),
+        })
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn sim_config(&self) -> SimConfig {
+        SimConfig::new(self.gpus, self.models.clone()).with_serving(self.serving.clone())
+    }
+
+    /// Build the trace for this config.
+    pub fn trace(&self, rng: &mut Rng) -> Trace {
+        let mut tb = TraceBuilder::new().sampler(ShareGptSampler::new());
+        for m in 0..self.models.len() {
+            if self.workload.interactive_count[m] > 0 {
+                tb = tb.stream(WorkloadSpec {
+                    class: RequestClass::Interactive,
+                    slo: Slo::interactive_default(),
+                    arrivals: if (self.workload.cv - 1.0).abs() < 1e-9 {
+                        ArrivalProcess::Poisson {
+                            rate: self.workload.interactive_rate[m],
+                        }
+                    } else {
+                        ArrivalProcess::Gamma {
+                            rate: self.workload.interactive_rate[m],
+                            cv: self.workload.cv,
+                        }
+                    },
+                    count: self.workload.interactive_count[m],
+                    model: m,
+                    start: 0.0,
+                });
+            }
+            if self.workload.batch_count[m] > 0 {
+                tb = tb.stream(WorkloadSpec {
+                    class: RequestClass::Batch,
+                    slo: Slo {
+                        ttft: self.workload.batch_ttft_slo,
+                        ..Slo::batch_default()
+                    },
+                    arrivals: ArrivalProcess::Burst {
+                        at: self.workload.batch_at,
+                    },
+                    count: self.workload.batch_count[m],
+                    model: m,
+                    start: self.workload.batch_at,
+                });
+            }
+        }
+        tb.build(rng)
+    }
+
+    /// Instantiate the configured policy.
+    pub fn policy(&self) -> Box<dyn Policy> {
+        match &self.policy {
+            PolicySpec::Chiron { theta } => {
+                let mut cfg = ChironConfig::for_models(self.models.len());
+                cfg.global.theta = *theta;
+                for b in &mut cfg.bootstrap {
+                    *b = BootstrapSpec {
+                        interactive: 1,
+                        mixed: 2,
+                        batch: 0,
+                    };
+                }
+                Box::new(Chiron::new(cfg, &self.models))
+            }
+            PolicySpec::Llumnix { tuned, max_batch } => {
+                if *tuned {
+                    Box::new(Llumnix::tuned(
+                        &self.models,
+                        LlumnixConfig {
+                            max_batch: *max_batch,
+                            ..LlumnixConfig::untuned()
+                        },
+                    ))
+                } else {
+                    Box::new(Llumnix::untuned(&self.models))
+                }
+            }
+            PolicySpec::LocalOnly => {
+                Box::new(LocalOnly::new(&self.models, LlumnixConfig::untuned()))
+            }
+            PolicySpec::GlobalOnly { static_batch } => Box::new(GlobalOnly::new(
+                &self.models,
+                ChironConfig::for_models(self.models.len()),
+                *static_batch,
+            )),
+            PolicySpec::Static {
+                instances,
+                max_batch,
+            } => Box::new(StaticPolicy::new(instances.clone(), *max_batch)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "gpus": 20,
+        "models": ["llama8b"],
+        "policy": {"kind": "chiron", "theta": 0.5},
+        "workload": {"interactive_rate": 15.0, "interactive_count": 100,
+                     "batch_count": 50, "batch_ttft_slo": 600.0},
+        "seed": 7
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let cfg = ExperimentConfig::from_json(&Json::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(cfg.gpus, 20);
+        assert_eq!(cfg.models[0].name, "llama8b");
+        assert!(matches!(cfg.policy, PolicySpec::Chiron { theta } if (theta - 0.5).abs() < 1e-9));
+        assert_eq!(cfg.workload.interactive_count, vec![100]);
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn trace_and_policy_materialize() {
+        let cfg = ExperimentConfig::from_json(&Json::parse(SAMPLE).unwrap()).unwrap();
+        let mut rng = Rng::new(cfg.seed);
+        let trace = cfg.trace(&mut rng);
+        assert_eq!(trace.len(), 150);
+        let p = cfg.policy();
+        assert_eq!(p.name(), "chiron");
+        let _ = cfg.sim_config();
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let j = Json::parse(r#"{"models": ["gpt99"]}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn per_model_arrays() {
+        let j = Json::parse(
+            r#"{"models": ["llama8b", "llama70b"],
+                "workload": {"interactive_rate": [30, 5], "interactive_count": [200, 50]}}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.workload.interactive_rate, vec![30.0, 5.0]);
+        assert_eq!(cfg.workload.interactive_count, vec![200, 50]);
+    }
+}

@@ -1,0 +1,461 @@
+//! The composed Chiron policy (paper Figure 7): preferential routing over
+//! three instance classes, the local batch-size autoscaler (Algorithm 1),
+//! and the global instance autoscaler (IBP + Algorithm 2).
+
+use crate::core::{InstanceClass, ModelSpec, RequestClass, RequestOutcome, Time};
+use crate::coordinator::global::{GlobalAutoscaler, GlobalConfig};
+use crate::coordinator::local::{LocalAutoscaler, LocalConfig};
+use crate::sim::policy::{
+    Action, ClusterView, InstanceView, Policy, QueuedReq, Route,
+};
+
+/// Initial instances for one model at bootstrap.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BootstrapSpec {
+    pub interactive: u32,
+    pub mixed: u32,
+    pub batch: u32,
+}
+
+/// Full Chiron configuration.
+#[derive(Debug, Clone)]
+pub struct ChironConfig {
+    pub local: LocalConfig,
+    pub global: GlobalConfig,
+    /// Per-model initial composition.
+    pub bootstrap: Vec<BootstrapSpec>,
+    /// Initial max batch for new interactive/mixed instances.
+    pub initial_batch_interactive: u32,
+    /// Initial max batch for new batch instances (the local autoscaler
+    /// converges it upward; starting higher shortens warm-up).
+    pub initial_batch_batch: u32,
+}
+
+impl ChironConfig {
+    pub fn for_models(n_models: usize) -> Self {
+        ChironConfig {
+            local: LocalConfig::default(),
+            global: GlobalConfig::default(),
+            bootstrap: vec![
+                BootstrapSpec {
+                    interactive: 1,
+                    mixed: 2,
+                    batch: 0,
+                };
+                n_models
+            ],
+            initial_batch_interactive: 8,
+            initial_batch_batch: 64,
+        }
+    }
+}
+
+/// Chiron: the paper's hierarchical autoscaler.
+pub struct Chiron {
+    cfg: ChironConfig,
+    local: LocalAutoscaler,
+    global: GlobalAutoscaler,
+}
+
+impl Chiron {
+    pub fn new(cfg: ChironConfig, models: &[ModelSpec]) -> Self {
+        assert_eq!(cfg.bootstrap.len(), models.len());
+        Chiron {
+            local: LocalAutoscaler::new(cfg.local),
+            global: GlobalAutoscaler::new(cfg.global, models),
+            cfg,
+        }
+    }
+
+    pub fn global(&self) -> &GlobalAutoscaler {
+        &self.global
+    }
+
+    pub fn local(&self) -> &LocalAutoscaler {
+        &self.local
+    }
+
+    /// Least-loaded Running instance among those passing `pred`.
+    fn least_loaded<'a>(
+        view: &'a ClusterView,
+        model: usize,
+        pred: impl Fn(&InstanceView) -> bool,
+    ) -> Option<&'a InstanceView> {
+        view.instances_of(model)
+            .filter(|i| i.is_running() && pred(i))
+            .min_by_key(|i| (i.running + i.waiting, i.id.0))
+    }
+
+    /// Most-loaded Running instance with headroom (first-fit packing).
+    /// Interactive traffic is *packed* so the IBP "instances running
+    /// interactive" signal reflects true demand and the remaining mixed
+    /// instances stay as genuinely spare over-provisioned capacity.
+    fn pack_target<'a>(
+        view: &'a ClusterView,
+        model: usize,
+        pred: impl Fn(&InstanceView) -> bool,
+    ) -> Option<&'a InstanceView> {
+        view.instances_of(model)
+            .filter(|i| i.is_running() && pred(i))
+            .max_by_key(|i| (i.running + i.waiting, std::cmp::Reverse(i.id.0)))
+    }
+
+    /// An instance can absorb another interactive request without queuing:
+    /// free slot, KV room, and no admission backlog (waiting > 0 means the
+    /// engine is already admission-blocked — packing more work there hides
+    /// demand from the IBP signal and inflates TTFT).
+    fn absorbs(i: &InstanceView, input_tokens: u32) -> bool {
+        i.slot_headroom() > 0 && i.waiting == 0 && i.kv_headroom() >= input_tokens as u64
+    }
+
+    fn route_interactive(&self, req: &QueuedReq, view: &ClusterView) -> Route {
+        let m = req.model;
+        // 1. Pack into interactive instances with real headroom.
+        if let Some(i) = Self::pack_target(view, m, |i| {
+            i.class == InstanceClass::Interactive && Self::absorbs(i, req.input_tokens)
+        }) {
+            return Route::Dispatch(i.id);
+        }
+        // 2. Pack into mixed instances with headroom (prefer ones already
+        //    serving interactive so spare instances stay spare).
+        if let Some(i) = Self::pack_target(view, m, |i| {
+            i.class == InstanceClass::Mixed
+                && Self::absorbs(i, req.input_tokens)
+                && i.running_interactive > 0
+        }) {
+            return Route::Dispatch(i.id);
+        }
+        if let Some(i) = Self::pack_target(view, m, |i| {
+            i.class == InstanceClass::Mixed && Self::absorbs(i, req.input_tokens)
+        }) {
+            return Route::Dispatch(i.id);
+        }
+        // 3. Mixed instance holding evictable batch work (the cluster evicts
+        //    batch requests back to the global queue on dispatch).
+        if let Some(i) = view
+            .instances_of(m)
+            .filter(|i| {
+                i.is_running()
+                    && i.class == InstanceClass::Mixed
+                    && i.running > i.running_interactive
+            })
+            .max_by_key(|i| (i.running - i.running_interactive, i.id.0))
+        {
+            return Route::Dispatch(i.id);
+        }
+        // 4. Zero-queuing fallback: least-loaded interactive/mixed local
+        //    queue (TTFT degrades but nothing strands in the global queue).
+        if let Some(i) = Self::least_loaded(view, m, |i| {
+            matches!(i.class, InstanceClass::Interactive | InstanceClass::Mixed)
+        }) {
+            return Route::Dispatch(i.id);
+        }
+        // 5. Nothing exists yet — global queue; autoscaler will provision.
+        Route::Queue
+    }
+
+    fn route_batch(&self, req: &QueuedReq, view: &ClusterView) -> Route {
+        let m = req.model;
+        // 1. Batch instance with headroom.
+        if let Some(i) = Self::least_loaded(view, m, |i| {
+            i.class == InstanceClass::Batch
+                && i.slot_headroom() > 0
+                && i.kv_headroom() >= req.input_tokens as u64
+        }) {
+            return Route::Dispatch(i.id);
+        }
+        // 2. Spare capacity on mixed instances (multiplexing, §3).
+        if let Some(i) = Self::least_loaded(view, m, |i| {
+            i.class == InstanceClass::Mixed
+                && i.slot_headroom() > 0
+                && i.kv_headroom() >= req.input_tokens as u64
+        }) {
+            return Route::Dispatch(i.id);
+        }
+        // 3. Otherwise wait in the global queue (Algorithm 2 decides when
+        //    more batch instances are worth adding).
+        Route::Queue
+    }
+}
+
+impl Policy for Chiron {
+    fn name(&self) -> &str {
+        "chiron"
+    }
+
+    fn route(&mut self, req: &QueuedReq, view: &ClusterView) -> Route {
+        match req.class {
+            RequestClass::Interactive => self.route_interactive(req, view),
+            RequestClass::Batch => self.route_batch(req, view),
+        }
+    }
+
+    fn pull_order(&self, inst: &InstanceView) -> Vec<RequestClass> {
+        match inst.class {
+            InstanceClass::Interactive => vec![RequestClass::Interactive],
+            InstanceClass::Batch => vec![RequestClass::Batch],
+            InstanceClass::Mixed => {
+                vec![RequestClass::Interactive, RequestClass::Batch]
+            }
+        }
+    }
+
+    fn on_step(&mut self, inst: &InstanceView, _now: Time) -> Option<u32> {
+        self.local.on_step(inst)
+    }
+
+    fn autoscale(&mut self, view: &ClusterView) -> Vec<Action> {
+        self.global.autoscale(view)
+    }
+
+    fn initial_max_batch(&self, _model: &ModelSpec, class: InstanceClass) -> u32 {
+        match class {
+            InstanceClass::Batch => self.cfg.initial_batch_batch,
+            _ => self.cfg.initial_batch_interactive,
+        }
+    }
+
+    fn bootstrap(&mut self, _view: &ClusterView) -> Vec<Action> {
+        let mut actions = Vec::new();
+        for (model, b) in self.cfg.bootstrap.iter().enumerate() {
+            for _ in 0..b.interactive {
+                actions.push(Action::AddInstance {
+                    model,
+                    class: InstanceClass::Interactive,
+                });
+            }
+            for _ in 0..b.mixed {
+                actions.push(Action::AddInstance {
+                    model,
+                    class: InstanceClass::Mixed,
+                });
+            }
+            for _ in 0..b.batch {
+                actions.push(Action::AddInstance {
+                    model,
+                    class: InstanceClass::Batch,
+                });
+            }
+        }
+        actions
+    }
+
+    fn on_complete(&mut self, outcome: &RequestOutcome) {
+        self.global.on_complete(outcome);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{InstanceId, RequestId};
+    use crate::sim::policy::{InstanceState, QueueStats};
+
+    fn inst(id: u32, class: InstanceClass, running: u32, inter: u32, mb: u32) -> InstanceView {
+        InstanceView {
+            id: InstanceId(id),
+            class,
+            model: 0,
+            state: InstanceState::Running,
+            running,
+            running_interactive: inter,
+            waiting: 0,
+            max_batch: mb,
+            kv_tokens: 0,
+            kv_capacity: 100_000,
+            last_step_time: 0.05,
+            last_decode_time: 0.05,
+            throughput_tokens: 500.0,
+            min_itl_slo: 0.2,
+            steps: 8,
+        }
+    }
+
+    fn req(class: RequestClass) -> QueuedReq {
+        QueuedReq {
+            id: RequestId(1),
+            class,
+            model: 0,
+            arrival: 0.0,
+            ttft_deadline: match class {
+                RequestClass::Interactive => 10.0,
+                RequestClass::Batch => 3600.0,
+            },
+            itl_slo: 0.2,
+            input_tokens: 64,
+        }
+    }
+
+    fn mk(models: &[ModelSpec]) -> Chiron {
+        Chiron::new(ChironConfig::for_models(models.len()), models)
+    }
+
+    #[test]
+    fn interactive_prefers_interactive_instance() {
+        let models = vec![ModelSpec::llama8b()];
+        let mut c = mk(&models);
+        let insts = vec![
+            inst(0, InstanceClass::Mixed, 0, 0, 8),
+            inst(1, InstanceClass::Interactive, 2, 2, 8),
+        ];
+        let q = vec![QueueStats::default()];
+        let v = ClusterView {
+            now: 0.0,
+            instances: &insts,
+            queues: &q,
+            models: &models,
+            gpus_total: 50,
+            gpus_used: 2,
+        };
+        match c.route(&req(RequestClass::Interactive), &v) {
+            Route::Dispatch(id) => assert_eq!(id, InstanceId(1)),
+            r => panic!("unexpected {r:?}"),
+        }
+    }
+
+    #[test]
+    fn interactive_overflows_to_mixed_when_interactive_full() {
+        let models = vec![ModelSpec::llama8b()];
+        let mut c = mk(&models);
+        let insts = vec![
+            inst(0, InstanceClass::Interactive, 8, 8, 8), // full
+            inst(1, InstanceClass::Mixed, 1, 0, 8),
+        ];
+        let q = vec![QueueStats::default()];
+        let v = ClusterView {
+            now: 0.0,
+            instances: &insts,
+            queues: &q,
+            models: &models,
+            gpus_total: 50,
+            gpus_used: 2,
+        };
+        match c.route(&req(RequestClass::Interactive), &v) {
+            Route::Dispatch(id) => assert_eq!(id, InstanceId(1)),
+            r => panic!("unexpected {r:?}"),
+        }
+    }
+
+    #[test]
+    fn interactive_evicts_from_busiest_batch_mixed_when_all_full() {
+        let models = vec![ModelSpec::llama8b()];
+        let mut c = mk(&models);
+        let insts = vec![
+            inst(0, InstanceClass::Mixed, 8, 8, 8),  // full of interactive
+            inst(1, InstanceClass::Mixed, 8, 2, 8),  // 6 evictable batch
+            inst(2, InstanceClass::Mixed, 8, 6, 8),  // 2 evictable
+        ];
+        let q = vec![QueueStats::default()];
+        let v = ClusterView {
+            now: 0.0,
+            instances: &insts,
+            queues: &q,
+            models: &models,
+            gpus_total: 50,
+            gpus_used: 3,
+        };
+        match c.route(&req(RequestClass::Interactive), &v) {
+            Route::Dispatch(id) => assert_eq!(id, InstanceId(1)),
+            r => panic!("unexpected {r:?}"),
+        }
+    }
+
+    #[test]
+    fn batch_queues_when_no_capacity() {
+        let models = vec![ModelSpec::llama8b()];
+        let mut c = mk(&models);
+        let insts = vec![inst(0, InstanceClass::Mixed, 8, 8, 8)];
+        let q = vec![QueueStats::default()];
+        let v = ClusterView {
+            now: 0.0,
+            instances: &insts,
+            queues: &q,
+            models: &models,
+            gpus_total: 50,
+            gpus_used: 1,
+        };
+        assert_eq!(c.route(&req(RequestClass::Batch), &v), Route::Queue);
+    }
+
+    #[test]
+    fn batch_multiplexes_onto_spare_mixed() {
+        let models = vec![ModelSpec::llama8b()];
+        let mut c = mk(&models);
+        let insts = vec![inst(0, InstanceClass::Mixed, 2, 2, 8)];
+        let q = vec![QueueStats::default()];
+        let v = ClusterView {
+            now: 0.0,
+            instances: &insts,
+            queues: &q,
+            models: &models,
+            gpus_total: 50,
+            gpus_used: 1,
+        };
+        assert_eq!(
+            c.route(&req(RequestClass::Batch), &v),
+            Route::Dispatch(InstanceId(0))
+        );
+    }
+
+    #[test]
+    fn interactive_never_left_in_global_queue_when_pool_exists() {
+        let models = vec![ModelSpec::llama8b()];
+        let mut c = mk(&models);
+        // All instances are completely full — zero-queuing still dispatches.
+        let insts = vec![inst(0, InstanceClass::Interactive, 8, 8, 8)];
+        let q = vec![QueueStats::default()];
+        let v = ClusterView {
+            now: 0.0,
+            instances: &insts,
+            queues: &q,
+            models: &models,
+            gpus_total: 50,
+            gpus_used: 1,
+        };
+        assert!(matches!(
+            c.route(&req(RequestClass::Interactive), &v),
+            Route::Dispatch(_)
+        ));
+    }
+
+    #[test]
+    fn bootstrap_composition() {
+        let models = vec![ModelSpec::llama8b()];
+        let mut cfg = ChironConfig::for_models(1);
+        cfg.bootstrap[0] = BootstrapSpec {
+            interactive: 2,
+            mixed: 3,
+            batch: 1,
+        };
+        let mut c = Chiron::new(cfg, &models);
+        let q = vec![QueueStats::default()];
+        let v = ClusterView {
+            now: 0.0,
+            instances: &[],
+            queues: &q,
+            models: &models,
+            gpus_total: 50,
+            gpus_used: 0,
+        };
+        let actions = c.bootstrap(&v);
+        assert_eq!(actions.len(), 6);
+    }
+
+    #[test]
+    fn pull_order_matches_class() {
+        let models = vec![ModelSpec::llama8b()];
+        let c = mk(&models);
+        assert_eq!(
+            c.pull_order(&inst(0, InstanceClass::Interactive, 0, 0, 8)),
+            vec![RequestClass::Interactive]
+        );
+        assert_eq!(
+            c.pull_order(&inst(0, InstanceClass::Batch, 0, 0, 8)),
+            vec![RequestClass::Batch]
+        );
+        assert_eq!(
+            c.pull_order(&inst(0, InstanceClass::Mixed, 0, 0, 8)),
+            vec![RequestClass::Interactive, RequestClass::Batch]
+        );
+    }
+}

@@ -1,0 +1,516 @@
+//! The global autoscaler (paper §5): interactive scaling holds the
+//! over-provisioning ratio (IBP) near Θ; batch scaling (Algorithm 2) adds
+//! the minimum batch instances driving BBP — the number of request groups
+//! whose estimated queue waiting time exceeds their TTFT-SLO deadline — to
+//! zero, and retires all batch instances when no batch work remains.
+
+use crate::core::{InstanceClass, ModelSpec, RequestOutcome, Time};
+use crate::coordinator::groups::{build_groups, RequestGroup};
+use crate::coordinator::waiting::WaitingTimeEstimator;
+use crate::sim::policy::{Action, ClusterView, InstanceView};
+
+/// Tuning parameters for the global autoscaler.
+#[derive(Debug, Clone, Copy)]
+pub struct GlobalConfig {
+    /// Over-provisioning target Θ: the desired ratio of instances running
+    /// interactive requests to total (interactive + mixed) instances.
+    /// Paper §5.2: if the tail arrival spike is 3×, Θ = 1/3.
+    pub theta: f64,
+    /// Hysteresis band δ: act only when IBP leaves [Θ−δ, Θ+δ].
+    pub delta: f64,
+    /// Maximum request-group count for deadline clustering.
+    pub max_groups: usize,
+    /// Within-group deadline-span budget as a fraction of the median
+    /// remaining SLO horizon.
+    pub group_span_frac: f64,
+    /// Floor on interactive+mixed instances once interactive traffic has
+    /// been seen for a model.
+    pub min_interactive_pool: u32,
+}
+
+impl Default for GlobalConfig {
+    fn default() -> Self {
+        GlobalConfig {
+            theta: 1.0 / 3.0,
+            delta: 0.08,
+            max_groups: 6,
+            group_span_frac: 0.25,
+            min_interactive_pool: 1,
+        }
+    }
+}
+
+/// Per-model bookkeeping.
+#[derive(Debug)]
+struct ModelState {
+    estimator: WaitingTimeEstimator,
+    seen_interactive: bool,
+}
+
+/// The hierarchical global autoscaler.
+#[derive(Debug)]
+pub struct GlobalAutoscaler {
+    pub cfg: GlobalConfig,
+    models: Vec<ModelState>,
+}
+
+/// Analytical fallback Θ (tokens/s/instance) before observations exist:
+/// evaluate the decode throughput at a mid-scale batch.
+pub fn fallback_theta(spec: &ModelSpec) -> f64 {
+    let p = &spec.profile;
+    let mean_ctx = 300u64;
+    let b = ((p.kv_capacity_tokens / mean_ctx) / 2).max(1) as u32;
+    let step = p.decode_step_time(b, b as u64 * mean_ctx);
+    (b as f64 * p.tokens_per_step) / step.max(1e-9)
+}
+
+impl GlobalAutoscaler {
+    pub fn new(cfg: GlobalConfig, models: &[ModelSpec]) -> Self {
+        GlobalAutoscaler {
+            cfg,
+            models: models
+                .iter()
+                .map(|m| ModelState {
+                    estimator: WaitingTimeEstimator::new(fallback_theta(m)),
+                    seen_interactive: false,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn on_complete(&mut self, outcome: &RequestOutcome) {
+        if let Some(st) = self.models.get_mut(outcome.model) {
+            st.estimator.observe_completion(outcome.output_tokens);
+        }
+    }
+
+    pub fn estimator(&self, model: usize) -> &WaitingTimeEstimator {
+        &self.models[model].estimator
+    }
+
+    /// Interactive backpressure for a model: (busy, total, IBP).
+    /// "Busy" counts interactive/mixed instances currently serving at least
+    /// one interactive request; Loading instances count toward the pool so
+    /// in-flight scale-ups suppress repeats.
+    pub fn ibp(view: &ClusterView, model: usize) -> (u32, u32, f64) {
+        let mut busy = 0u32;
+        let mut total = 0u32;
+        for i in view.instances_of(model) {
+            if matches!(i.class, InstanceClass::Interactive | InstanceClass::Mixed) {
+                total += 1;
+                if i.running_interactive > 0 {
+                    busy += 1;
+                }
+            }
+        }
+        let ibp = if total > 0 {
+            busy as f64 / total as f64
+        } else {
+            0.0
+        };
+        (busy, total, ibp)
+    }
+
+    /// Build the deadline request groups for a model's batch queue.
+    pub fn request_groups(&self, view: &ClusterView, model: usize) -> Vec<RequestGroup> {
+        let qs = &view.queues[model];
+        if qs.batch_deadline_sample.is_empty() {
+            return Vec::new();
+        }
+        // Span budget scales with the median remaining horizon.
+        let mut remaining: Vec<Time> = qs
+            .batch_deadline_sample
+            .iter()
+            .map(|d| (d - view.now).max(1.0))
+            .collect();
+        remaining.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = remaining[remaining.len() / 2];
+        build_groups(
+            &qs.batch_deadline_sample,
+            qs.stride,
+            median * self.cfg.group_span_frac,
+            self.cfg.max_groups,
+        )
+    }
+
+    /// Batch backpressure (Eq. 2): number of groups whose estimated waiting
+    /// time exceeds their remaining TTFT-SLO budget, given `extra` batch
+    /// instances beyond the current effective pool.
+    pub fn bbp(
+        &self,
+        view: &ClusterView,
+        model: usize,
+        groups: &[RequestGroup],
+        extra: u32,
+    ) -> u32 {
+        let est = &self.models[model].estimator;
+        let n_eff = Self::effective_batch_pool(view, model) + extra as f64;
+        let mut bbp = 0;
+        for g in groups {
+            let wait = est.estimate_wait(g.end_position as f64, n_eff.max(1e-9));
+            let budget = g.earliest_deadline - view.now;
+            if wait > budget {
+                bbp += 1;
+            }
+        }
+        bbp
+    }
+
+    /// Effective batch-serving pool: batch instances (running or loading)
+    /// plus the spare capacity mixed instances can lend to batch requests —
+    /// the over-provisioned headroom the paper's multiplexing exploits.
+    fn effective_batch_pool(view: &ClusterView, model: usize) -> f64 {
+        let mut n = 0.0;
+        for i in view.instances_of(model) {
+            match i.class {
+                InstanceClass::Batch => n += 1.0,
+                InstanceClass::Mixed => {
+                    // Fraction of the instance's slots not consumed by
+                    // interactive work is creditable to batch service.
+                    let spare = 1.0
+                        - i.running_interactive as f64 / i.max_batch.max(1) as f64;
+                    n += spare.clamp(0.0, 1.0);
+                }
+                InstanceClass::Interactive => {}
+            }
+        }
+        n
+    }
+
+    /// One autoscaling pass (called per tick). Interactive scaling runs
+    /// first (it owns the over-provisioned pool); batch scaling then uses
+    /// whatever GPU budget remains.
+    pub fn autoscale(&mut self, view: &ClusterView) -> Vec<Action> {
+        let mut actions = Vec::new();
+        let mut gpus_free = view.gpus_free();
+
+        for model in 0..view.models.len() {
+            let gpi = view.models[model].gpus_per_instance;
+
+            // ---- Interactive autoscaler (paper §5.2) --------------------
+            let (busy, total, ibp) = Self::ibp(view, model);
+            let queued_inter = view.queues[model].interactive_len;
+            if busy > 0 || queued_inter > 0 {
+                self.models[model].seen_interactive = true;
+            }
+            let demand = busy.max(if queued_inter > 0 { 1 } else { 0 });
+            if self.models[model].seen_interactive {
+                let target_total = ((demand as f64 / self.cfg.theta).ceil() as u32)
+                    .max(self.cfg.min_interactive_pool);
+                if ibp > self.cfg.theta + self.cfg.delta || total < self.cfg.min_interactive_pool
+                {
+                    let add = target_total.saturating_sub(total);
+                    for _ in 0..add {
+                        if gpus_free < gpi {
+                            break;
+                        }
+                        gpus_free -= gpi;
+                        actions.push(Action::AddInstance {
+                            model,
+                            class: InstanceClass::Mixed,
+                        });
+                    }
+                } else if ibp < self.cfg.theta - self.cfg.delta && total > target_total {
+                    // Remove mixed instances that are not serving
+                    // interactive requests, idle ones first.
+                    let mut candidates: Vec<&InstanceView> = view
+                        .instances_of(model)
+                        .filter(|i| {
+                            i.class == InstanceClass::Mixed && i.running_interactive == 0
+                        })
+                        .collect();
+                    candidates.sort_by_key(|i| std::cmp::Reverse(i.running == 0));
+                    for c in candidates.iter().take((total - target_total) as usize) {
+                        actions.push(Action::RemoveInstance { id: c.id });
+                    }
+                }
+            }
+
+            // ---- Batch autoscaler (Algorithm 2) -------------------------
+            let qs = &view.queues[model];
+            // Feed throughput observations from batch-serving instances.
+            for i in view.instances_of(model) {
+                let serving_batch = i.class == InstanceClass::Batch
+                    || (i.class == InstanceClass::Mixed
+                        && i.running > i.running_interactive);
+                if serving_batch && i.throughput_tokens > 0.0 {
+                    self.models[model]
+                        .estimator
+                        .observe_throughput(i.throughput_tokens);
+                }
+            }
+            if qs.batch_len > 0 {
+                let groups = self.request_groups(view, model);
+                let mut dispatch = 0u32;
+                // Algorithm 2: add the minimum instances making BBP = 0.
+                while self.bbp(view, model, &groups, dispatch) > 0 {
+                    if gpus_free < gpi {
+                        break; // GPU budget exhausted
+                    }
+                    dispatch += 1;
+                    gpus_free -= gpi;
+                }
+                for _ in 0..dispatch {
+                    actions.push(Action::AddInstance {
+                        model,
+                        class: InstanceClass::Batch,
+                    });
+                }
+            } else {
+                // Algorithm 2 lines 17–19: retire batch instances once no
+                // batch requests remain (queue empty + instance idle).
+                for i in view.instances_of(model) {
+                    if i.class == InstanceClass::Batch
+                        && i.running == 0
+                        && i.waiting == 0
+                        && i.is_running()
+                    {
+                        actions.push(Action::RemoveInstance { id: i.id });
+                    }
+                }
+            }
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{InstanceId, ModelSpec};
+    use crate::sim::policy::{InstanceState, QueueStats};
+
+    fn inst(
+        id: u32,
+        class: InstanceClass,
+        running: u32,
+        running_interactive: u32,
+    ) -> InstanceView {
+        InstanceView {
+            id: InstanceId(id),
+            class,
+            model: 0,
+            state: InstanceState::Running,
+            running,
+            running_interactive,
+            waiting: 0,
+            max_batch: 64,
+            kv_tokens: 0,
+            kv_capacity: 100_000,
+            last_step_time: 0.05,
+            last_decode_time: 0.05,
+            throughput_tokens: 1000.0,
+            min_itl_slo: 0.2,
+            steps: 10,
+        }
+    }
+
+    fn view<'a>(
+        instances: &'a [InstanceView],
+        queues: &'a [QueueStats],
+        models: &'a [ModelSpec],
+        now: Time,
+    ) -> ClusterView<'a> {
+        let gpus_used = instances
+            .iter()
+            .map(|i| models[i.model].gpus_per_instance)
+            .sum();
+        ClusterView {
+            now,
+            instances,
+            queues,
+            models,
+            gpus_total: 50,
+            gpus_used,
+        }
+    }
+
+    fn models() -> Vec<ModelSpec> {
+        vec![ModelSpec::llama8b()]
+    }
+
+    fn queue_with(batch_len: usize, deadline: Time) -> Vec<QueueStats> {
+        let stride = (batch_len / 2048).max(1);
+        let n = batch_len / stride;
+        vec![QueueStats {
+            batch_len,
+            interactive_len: 0,
+            batch_oldest_arrival: Some(0.0),
+            batch_deadline_sample: vec![deadline; n],
+            stride,
+        }]
+    }
+
+    #[test]
+    fn ibp_computation() {
+        let insts = vec![
+            inst(0, InstanceClass::Mixed, 4, 2),
+            inst(1, InstanceClass::Mixed, 0, 0),
+            inst(2, InstanceClass::Interactive, 3, 3),
+            inst(3, InstanceClass::Batch, 10, 0), // excluded from IBP
+        ];
+        let q = vec![QueueStats::default()];
+        let m = models();
+        let v = view(&insts, &q, &m, 0.0);
+        let (busy, total, ibp) = GlobalAutoscaler::ibp(&v, 0);
+        assert_eq!(busy, 2);
+        assert_eq!(total, 3);
+        assert!((ibp - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn high_ibp_adds_mixed_instances() {
+        let m = models();
+        let mut g = GlobalAutoscaler::new(GlobalConfig::default(), &m);
+        // 2 of 2 pool instances busy with interactive → IBP 1.0 > Θ+δ.
+        let insts = vec![
+            inst(0, InstanceClass::Interactive, 4, 4),
+            inst(1, InstanceClass::Mixed, 4, 2),
+        ];
+        let q = vec![QueueStats::default()];
+        let v = view(&insts, &q, &m, 10.0);
+        let actions = g.autoscale(&v);
+        let adds = actions
+            .iter()
+            .filter(|a| {
+                matches!(
+                    a,
+                    Action::AddInstance {
+                        class: InstanceClass::Mixed,
+                        ..
+                    }
+                )
+            })
+            .count();
+        // target_total = ceil(2 / (1/3)) = 6 → add 4
+        assert_eq!(adds, 4, "actions: {actions:?}");
+    }
+
+    #[test]
+    fn low_ibp_removes_idle_mixed() {
+        let m = models();
+        let mut g = GlobalAutoscaler::new(GlobalConfig::default(), &m);
+        // 1 busy of 9 → IBP 0.11 < Θ−δ; target = 3.
+        let mut insts = vec![inst(0, InstanceClass::Interactive, 2, 2)];
+        for i in 1..9 {
+            insts.push(inst(i, InstanceClass::Mixed, 0, 0));
+        }
+        let q = vec![QueueStats::default()];
+        let v = view(&insts, &q, &m, 10.0);
+        let actions = g.autoscale(&v);
+        let removes = actions
+            .iter()
+            .filter(|a| matches!(a, Action::RemoveInstance { .. }))
+            .count();
+        assert_eq!(removes, 6, "actions: {actions:?}");
+    }
+
+    #[test]
+    fn ibp_in_band_no_action() {
+        let m = models();
+        let mut g = GlobalAutoscaler::new(GlobalConfig::default(), &m);
+        // 1 busy of 3 → IBP = 1/3 = Θ → no action.
+        let insts = vec![
+            inst(0, InstanceClass::Interactive, 2, 2),
+            inst(1, InstanceClass::Mixed, 0, 0),
+            inst(2, InstanceClass::Mixed, 0, 0),
+        ];
+        let q = vec![QueueStats::default()];
+        let v = view(&insts, &q, &m, 10.0);
+        assert!(g.autoscale(&v).is_empty());
+    }
+
+    #[test]
+    fn distant_deadline_queues_without_scaling() {
+        let m = models();
+        let mut g = GlobalAutoscaler::new(GlobalConfig::default(), &m);
+        // Small queue, deadline 1 h away: spare-less cluster but no urgency
+        // (estimated wait ≪ budget) → no batch instances added.
+        let insts = vec![inst(0, InstanceClass::Mixed, 2, 2)];
+        let q = queue_with(100, 3600.0);
+        let v = view(&insts, &q, &m, 0.0);
+        let actions = g.autoscale(&v);
+        let batch_adds = actions
+            .iter()
+            .filter(|a| {
+                matches!(
+                    a,
+                    Action::AddInstance {
+                        class: InstanceClass::Batch,
+                        ..
+                    }
+                )
+            })
+            .count();
+        assert_eq!(batch_adds, 0, "actions: {actions:?}");
+    }
+
+    #[test]
+    fn near_deadline_adds_multiple_batch_instances_at_once() {
+        let m = models();
+        let mut g = GlobalAutoscaler::new(GlobalConfig::default(), &m);
+        let insts = vec![inst(0, InstanceClass::Mixed, 2, 2)];
+        // Huge queue due in 10 minutes → Algorithm 2 must add several
+        // instances in one pass (contrast with Llumnix's one-at-a-time).
+        let q = queue_with(200_000, 600.0);
+        let v = view(&insts, &q, &m, 0.0);
+        let actions = g.autoscale(&v);
+        let batch_adds = actions
+            .iter()
+            .filter(|a| {
+                matches!(
+                    a,
+                    Action::AddInstance {
+                        class: InstanceClass::Batch,
+                        ..
+                    }
+                )
+            })
+            .count();
+        assert!(batch_adds >= 2, "got {batch_adds} adds");
+    }
+
+    #[test]
+    fn batch_adds_capped_by_gpu_budget() {
+        let m = vec![ModelSpec::llama70b()]; // 4 GPUs per instance
+        let mut g = GlobalAutoscaler::new(GlobalConfig::default(), &m);
+        let insts: Vec<InstanceView> = Vec::new();
+        let q = queue_with(500_000, 60.0);
+        let mut v = view(&insts, &q, &m, 0.0);
+        v.gpus_total = 10; // room for only 2 instances
+        let actions = g.autoscale(&v);
+        let adds = actions
+            .iter()
+            .filter(|a| matches!(a, Action::AddInstance { .. }))
+            .count();
+        assert!(adds <= 2, "budget violated: {adds}");
+    }
+
+    #[test]
+    fn empty_queue_retires_idle_batch_instances() {
+        let m = models();
+        let mut g = GlobalAutoscaler::new(GlobalConfig::default(), &m);
+        let insts = vec![
+            inst(0, InstanceClass::Batch, 0, 0),
+            inst(1, InstanceClass::Batch, 5, 0), // still active → keep
+        ];
+        let q = vec![QueueStats::default()];
+        let v = view(&insts, &q, &m, 100.0);
+        let actions = g.autoscale(&v);
+        assert!(actions.contains(&Action::RemoveInstance {
+            id: InstanceId(0)
+        }));
+        assert!(!actions.contains(&Action::RemoveInstance {
+            id: InstanceId(1)
+        }));
+    }
+
+    #[test]
+    fn fallback_theta_is_plausible() {
+        let t8 = fallback_theta(&ModelSpec::llama8b());
+        let t70 = fallback_theta(&ModelSpec::llama70b());
+        assert!(t8 > t70, "8B should out-throughput 70B: {t8} vs {t70}");
+        assert!(t8 > 1000.0 && t8 < 100_000.0, "t8 {t8}");
+        assert!(t70 > 100.0 && t70 < 20_000.0, "t70 {t70}");
+    }
+}

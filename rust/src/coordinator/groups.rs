@@ -1,0 +1,207 @@
+//! Request groups (paper §5.3, after SHEPHERD): cluster queued batch
+//! requests by TTFT-SLO deadline so the batch autoscaler provisions for
+//! groups rather than individual requests, minimizing hysteresis (§2.3,
+//! Figure 6).
+//!
+//! Deadlines are 1-D, so we use MacQueen k-means (the paper cites MacQueen
+//! 1967) over the FCFS deadline sample, choosing the smallest k whose
+//! within-group span is below a fraction of the median SLO horizon.
+
+use crate::core::Time;
+
+/// One deadline cluster over the queue sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestGroup {
+    /// Mean deadline of members.
+    pub centroid: Time,
+    /// Earliest member deadline (the binding constraint for scaling).
+    pub earliest_deadline: Time,
+    /// Number of queue members represented (sample count × stride).
+    pub count: usize,
+    /// Queue position (in requests, FCFS) of the group's last member —
+    /// everything before it must be served first under FCFS.
+    pub end_position: usize,
+}
+
+/// MacQueen k-means over sorted 1-D data. Returns cluster assignments as
+/// boundary indices (each cluster is a contiguous range of the sorted data).
+fn kmeans_1d(data: &[Time], k: usize, iters: usize) -> Vec<usize> {
+    debug_assert!(!data.is_empty() && k >= 1);
+    let k = k.min(data.len());
+    // Initialize centroids at quantiles.
+    let mut centroids: Vec<Time> = (0..k)
+        .map(|i| data[(i * (data.len() - 1)) / k.max(1)])
+        .collect();
+    let mut boundaries = vec![0usize; k + 1];
+    for _ in 0..iters {
+        // Assign: for sorted data + sorted centroids, the boundary between
+        // cluster j and j+1 is the midpoint of their centroids.
+        boundaries[0] = 0;
+        boundaries[k] = data.len();
+        for j in 1..k {
+            let mid = (centroids[j - 1] + centroids[j]) / 2.0;
+            boundaries[j] = data.partition_point(|&d| d < mid).max(boundaries[j - 1]);
+        }
+        // Update centroids.
+        let mut changed = false;
+        for j in 0..k {
+            let (a, b) = (boundaries[j], boundaries[j + 1]);
+            if a >= b {
+                continue;
+            }
+            let mean = data[a..b].iter().sum::<Time>() / (b - a) as f64;
+            if (mean - centroids[j]).abs() > 1e-9 {
+                centroids[j] = mean;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    boundaries
+}
+
+/// Build request groups from a FCFS-ordered deadline sample.
+///
+/// `stride` scales sample counts back to true queue counts. `span_budget`
+/// is the maximum acceptable within-group deadline span (we pick the
+/// smallest k ≤ `max_k` that achieves it; requests with similar deadlines
+/// land together, per the paper).
+pub fn build_groups(
+    deadline_sample: &[Time],
+    stride: usize,
+    span_budget: Time,
+    max_k: usize,
+) -> Vec<RequestGroup> {
+    if deadline_sample.is_empty() {
+        return Vec::new();
+    }
+    // k-means needs sorted data; deadlines are near-sorted under FCFS with
+    // uniform SLOs but can interleave when SLO classes mix, so sort a copy
+    // while remembering FCFS positions for `end_position`.
+    let mut sorted: Vec<(Time, usize)> = deadline_sample
+        .iter()
+        .copied()
+        .enumerate()
+        .map(|(i, d)| (d, i))
+        .collect();
+    sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let values: Vec<Time> = sorted.iter().map(|s| s.0).collect();
+
+    let mut chosen: Option<Vec<usize>> = None;
+    for k in 1..=max_k.min(values.len()) {
+        let b = kmeans_1d(&values, k, 16);
+        let worst_span = (0..k)
+            .filter(|&j| b[j + 1] > b[j])
+            .map(|j| values[b[j + 1] - 1] - values[b[j]])
+            .fold(0.0, f64::max);
+        chosen = Some(b.clone());
+        if worst_span <= span_budget {
+            break;
+        }
+    }
+    let boundaries = chosen.unwrap();
+    let k = boundaries.len() - 1;
+    let mut groups = Vec::new();
+    for j in 0..k {
+        let (a, b) = (boundaries[j], boundaries[j + 1]);
+        if a >= b {
+            continue;
+        }
+        let members = &sorted[a..b];
+        let centroid = members.iter().map(|m| m.0).sum::<Time>() / members.len() as f64;
+        let earliest = members
+            .iter()
+            .map(|m| m.0)
+            .fold(f64::INFINITY, f64::min);
+        // FCFS position of the last member in the original queue order.
+        let max_pos = members.iter().map(|m| m.1).max().unwrap();
+        groups.push(RequestGroup {
+            centroid,
+            earliest_deadline: earliest,
+            count: members.len() * stride,
+            end_position: (max_pos + 1) * stride,
+        });
+    }
+    // Order groups by deadline (earliest first = most urgent).
+    groups.sort_by(|a, b| a.centroid.partial_cmp(&b.centroid).unwrap());
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_cluster_for_tight_deadlines() {
+        let d: Vec<Time> = (0..100).map(|i| 1000.0 + i as f64 * 0.01).collect();
+        let g = build_groups(&d, 1, 10.0, 8);
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].count, 100);
+        assert_eq!(g[0].end_position, 100);
+        assert!((g[0].earliest_deadline - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_well_separated_clusters() {
+        let mut d: Vec<Time> = (0..50).map(|i| 100.0 + i as f64 * 0.1).collect();
+        d.extend((0..50).map(|i| 5000.0 + i as f64 * 0.1));
+        let g = build_groups(&d, 1, 50.0, 8);
+        assert_eq!(g.len(), 2);
+        assert_eq!(g[0].count, 50);
+        assert_eq!(g[1].count, 50);
+        assert!(g[0].centroid < g[1].centroid);
+    }
+
+    #[test]
+    fn stride_scales_counts() {
+        let d: Vec<Time> = (0..10).map(|i| 100.0 + i as f64).collect();
+        let g = build_groups(&d, 100, 1000.0, 4);
+        assert_eq!(g.iter().map(|x| x.count).sum::<usize>(), 1000);
+    }
+
+    #[test]
+    fn end_position_respects_fcfs_order() {
+        // Interleaved SLOs: FCFS order is by arrival, deadlines alternate.
+        let d = vec![100.0, 5000.0, 101.0, 5001.0, 102.0, 5002.0];
+        let g = build_groups(&d, 1, 10.0, 4);
+        assert_eq!(g.len(), 2);
+        // Urgent group's last member sits at FCFS index 4 → position 5.
+        assert_eq!(g[0].end_position, 5);
+        // Relaxed group's last member at index 5 → position 6.
+        assert_eq!(g[1].end_position, 6);
+    }
+
+    #[test]
+    fn empty_sample_yields_no_groups() {
+        assert!(build_groups(&[], 1, 1.0, 4).is_empty());
+    }
+
+    #[test]
+    fn groups_are_deadline_sorted() {
+        let d = vec![900.0, 100.0, 905.0, 110.0, 910.0, 95.0];
+        let g = build_groups(&d, 1, 50.0, 4);
+        assert!(g.windows(2).all(|w| w[0].centroid <= w[1].centroid));
+    }
+
+    #[test]
+    fn kmeans_properties_hold_for_random_inputs() {
+        crate::util::check::property("groups partition the sample", |rng| {
+            let n = crate::util::check::gen::int_in(rng, 1, 200);
+            let d: Vec<Time> = (0..n).map(|_| rng.range_f64(0.0, 10_000.0)).collect();
+            let stride = crate::util::check::gen::int_in(rng, 1, 50);
+            let g = build_groups(&d, stride, 500.0, 6);
+            // counts sum to n*stride
+            assert_eq!(g.iter().map(|x| x.count).sum::<usize>(), n * stride);
+            // every centroid within data range
+            let lo = d.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = d.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            for gr in &g {
+                assert!(gr.centroid >= lo - 1e-9 && gr.centroid <= hi + 1e-9);
+                assert!(gr.earliest_deadline >= lo - 1e-9);
+                assert!(gr.end_position <= n * stride);
+            }
+        });
+    }
+}

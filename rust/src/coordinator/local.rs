@@ -1,0 +1,373 @@
+//! The local autoscaler (paper §4, Algorithm 1): per-instance max batch
+//! size driven by *local backpressure* = max(LBP, TBP).
+//!
+//!  - LBP (latency-based) = observed ITL / instance ITL SLO. The instance
+//!    ITL SLO is the tightest SLO among running requests (§4.2).
+//!  - TBP (throughput-based) = previous / current throughput, detecting the
+//!    inflection where larger batches stop paying (Figure 3).
+//!
+//! Scale-up uses EWMA-weighted proportional control (α = 0.5):
+//!     mb ← α·(1/BP)·mb + (1−α)·mb,
+//! and scale-down halves the batch size.
+//!
+//! Deviation from the paper's literal text (documented in DESIGN.md §7):
+//! taken verbatim, TBP = prev/cur throughput halves the batch at any steady
+//! state (ratio = 1). We apply the intended reading: TBP penalizes only a
+//! throughput *drop following a batch-size increase*, measurements are
+//! EWMA-smoothed, and decisions use a ±ε stability band.
+
+use std::collections::HashMap;
+
+use crate::core::{InstanceId, Time};
+use crate::sim::policy::InstanceView;
+use crate::util::stats::Ewma;
+
+/// Tuning parameters for Algorithm 1.
+#[derive(Debug, Clone, Copy)]
+pub struct LocalConfig {
+    /// EWMA smoothing factor α (paper: 0.5).
+    pub alpha: f64,
+    /// Stability band around BP = 1.
+    pub epsilon: f64,
+    /// Per-decision growth-factor clamp (guards 1/BP blowup when ITL ≪ SLO).
+    pub max_growth: f64,
+    /// Default ITL SLO when an instance reports none (idle).
+    pub default_itl_slo: Time,
+    /// Floor/ceiling for max batch size.
+    pub min_batch: u32,
+    pub max_batch: u32,
+    /// Steps between consecutive decisions (lets measurements settle).
+    pub decision_every: u64,
+}
+
+impl Default for LocalConfig {
+    fn default() -> Self {
+        LocalConfig {
+            alpha: 0.5,
+            epsilon: 0.05,
+            max_growth: 4.0,
+            default_itl_slo: 0.2,
+            min_batch: 1,
+            max_batch: crate::sim::MAX_BATCH_CLAMP,
+            decision_every: 4,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct LocalState {
+    itl: Ewma,
+    /// Max batch as f64 so the proportional update composes smoothly.
+    mb: f64,
+    /// (batch size, smoothed throughput) at the previous decision point.
+    prev_mb: f64,
+    prev_thr: f64,
+    last_decision_step: u64,
+}
+
+/// Per-instance Algorithm 1 controller bank.
+#[derive(Debug, Default)]
+pub struct LocalAutoscaler {
+    pub cfg: LocalConfig,
+    state: HashMap<InstanceId, LocalState>,
+}
+
+impl LocalAutoscaler {
+    pub fn new(cfg: LocalConfig) -> Self {
+        LocalAutoscaler {
+            cfg,
+            state: HashMap::new(),
+        }
+    }
+
+    /// Forget state for retired instances (idempotent).
+    pub fn forget(&mut self, id: InstanceId) {
+        self.state.remove(&id);
+    }
+
+    /// Current backpressure components for an instance (for telemetry and
+    /// the figure harness).
+    pub fn backpressure(&self, inst: &InstanceView) -> (f64, f64) {
+        let slo = if inst.min_itl_slo.is_finite() {
+            inst.min_itl_slo
+        } else {
+            self.cfg.default_itl_slo
+        };
+        let st = self.state.get(&inst.id);
+        let itl = st
+            .and_then(|s| s.itl.get())
+            .unwrap_or(inst.last_step_time);
+        let lbp = itl / slo;
+        let tbp = match st {
+            Some(s) if s.prev_thr > 0.0 && inst.throughput_tokens > 0.0 && s.mb > s.prev_mb => {
+                s.prev_thr / inst.throughput_tokens
+            }
+            _ => 0.0,
+        };
+        (lbp, tbp)
+    }
+
+    /// Algorithm 1 update: called after each engine step; returns the new
+    /// max batch size when it changes.
+    pub fn on_step(&mut self, inst: &InstanceView) -> Option<u32> {
+        let cfg = self.cfg;
+        let entry = self.state.entry(inst.id).or_insert_with(|| LocalState {
+            itl: Ewma::new(cfg.alpha),
+            mb: inst.max_batch as f64,
+            prev_mb: inst.max_batch as f64,
+            prev_thr: 0.0,
+            last_decision_step: 0,
+        });
+        // The control signal is the full observed step time (decode plus
+        // the bounded chunked-prefill piggyback) — the ITL requests actually
+        // experience, as Algorithm 1 specifies.
+        entry.itl.push(inst.last_step_time);
+
+        // Decide only every few steps so EWMAs reflect the new batch size.
+        if inst.steps < entry.last_decision_step + cfg.decision_every {
+            return None;
+        }
+        entry.last_decision_step = inst.steps;
+
+        let slo = if inst.min_itl_slo.is_finite() {
+            inst.min_itl_slo
+        } else {
+            cfg.default_itl_slo
+        };
+        let itl = entry.itl.get_or(inst.last_step_time);
+        let lbp = itl / slo;
+        // TBP fires only when throughput dropped after a batch increase,
+        // with a 10% tolerance absorbing admission-churn noise.
+        let tbp = if entry.prev_thr > 0.0
+            && inst.throughput_tokens > 0.0
+            && entry.mb > entry.prev_mb + 0.5
+        {
+            entry.prev_thr / inst.throughput_tokens / 1.10
+        } else {
+            0.0
+        };
+        let bp = lbp.max(tbp);
+
+        let old = entry.mb;
+        if bp > 1.0 + cfg.epsilon {
+            // Scale down: halve (Algorithm 1 line 14). Halving is anchored
+            // to the *achieved* batch: if the cap is slack (running ≪ cap),
+            // halving the slack cap alone would not relieve pressure.
+            let anchor = entry.mb.min(inst.running.max(1) as f64);
+            entry.mb = (anchor / 2.0).max(cfg.min_batch as f64);
+        } else if bp < 1.0 && bp > 0.0 {
+            // Scale up proportionally with EWMA weighting (lines 10–11),
+            // but only when the cap actually binds — growing a cap the
+            // running set never reaches adds no information and lets the
+            // cap run away from the plant.
+            if inst.running + inst.waiting >= (entry.mb * 0.75) as u32 {
+                let growth = (1.0 / bp).min(cfg.max_growth);
+                // Ceiling: the KV-residency bound. Growing the slot cap past
+                // what the KV cache can hold concurrently only floods the
+                // local queue (admission is KV-gated) and thrashes
+                // preemptions — the regime past Figure 3's inflection.
+                let kv_bound = (inst.kv_capacity / 256).max(1) as f64;
+                entry.mb = (cfg.alpha * growth * entry.mb
+                    + (1.0 - cfg.alpha) * entry.mb)
+                    .min(cfg.max_batch as f64)
+                    .min(kv_bound);
+            }
+        }
+        // Record the decision baseline for the next TBP comparison.
+        entry.prev_mb = old;
+        entry.prev_thr = inst.throughput_tokens;
+
+        let new_mb = entry.mb.round().max(1.0) as u32;
+        if new_mb != inst.max_batch {
+            Some(new_mb)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{InstanceClass, InstanceId};
+    use crate::sim::policy::InstanceState;
+
+    fn view(
+        id: u32,
+        steps: u64,
+        max_batch: u32,
+        last_step_time: f64,
+        min_itl_slo: f64,
+        thr: f64,
+    ) -> InstanceView {
+        InstanceView {
+            id: InstanceId(id),
+            class: InstanceClass::Mixed,
+            model: 0,
+            state: InstanceState::Running,
+            running: max_batch,
+            running_interactive: 0,
+            waiting: 0,
+            max_batch,
+            kv_tokens: 0,
+            kv_capacity: 1_000_000,
+            last_step_time,
+            last_decode_time: last_step_time,
+            throughput_tokens: thr,
+            min_itl_slo,
+            steps,
+        }
+    }
+
+    #[test]
+    fn scales_up_when_under_slo() {
+        let mut la = LocalAutoscaler::new(LocalConfig::default());
+        let mut mb = 8u32;
+        let mut steps = 0;
+        for _ in 0..10 {
+            steps += 4;
+            // ITL far below SLO → grow
+            if let Some(new) = la.on_step(&view(1, steps, mb, 0.02, 0.2, 100.0)) {
+                mb = new;
+            }
+        }
+        assert!(mb > 8, "batch should have grown, got {mb}");
+    }
+
+    #[test]
+    fn halves_on_itl_violation() {
+        let mut la = LocalAutoscaler::new(LocalConfig::default());
+        let mut mb = 256u32;
+        // feed several steps so the EWMA reflects the violation
+        let mut steps = 0;
+        for _ in 0..8 {
+            steps += 4;
+            if let Some(new) = la.on_step(&view(1, steps, mb, 0.5, 0.2, 100.0)) {
+                mb = new;
+            }
+        }
+        assert!(mb <= 64, "batch should have halved repeatedly, got {mb}");
+    }
+
+    #[test]
+    fn holds_inside_stability_band() {
+        let mut la = LocalAutoscaler::new(LocalConfig::default());
+        // ITL exactly at SLO → BP = 1 → hold (no halving: the deviation fix)
+        let mut changes = 0;
+        let mut steps = 0;
+        for _ in 0..10 {
+            steps += 4;
+            if la.on_step(&view(1, steps, 64, 0.2, 0.2, 100.0)).is_some() {
+                changes += 1;
+            }
+        }
+        assert_eq!(changes, 0, "steady state must not oscillate");
+    }
+
+    #[test]
+    fn tbp_halts_growth_when_throughput_drops() {
+        let mut la = LocalAutoscaler::new(LocalConfig::default());
+        let mut mb = 64u32;
+        let mut steps = 0;
+        // Phase 1: growth with rising throughput.
+        for i in 0..6 {
+            steps += 4;
+            let thr = 1000.0 + i as f64 * 100.0;
+            if let Some(new) = la.on_step(&view(1, steps, mb, 0.05, 0.2, thr)) {
+                mb = new;
+            }
+        }
+        let grown = mb;
+        assert!(grown > 64);
+        // Phase 2: throughput collapses after growth (past the inflection).
+        // The first decision must halve (TBP > 1); later decisions may probe
+        // upward again, so assert on the minimum observed.
+        let mut min_seen = mb;
+        for _ in 0..4 {
+            steps += 4;
+            if let Some(new) = la.on_step(&view(1, steps, mb, 0.05, 0.2, 200.0)) {
+                mb = new;
+                min_seen = min_seen.min(new);
+            }
+        }
+        assert!(
+            min_seen <= grown / 2 + 1,
+            "TBP should halve after throughput drop (grown {grown}, min {min_seen})"
+        );
+    }
+
+    #[test]
+    fn growth_clamped() {
+        let cfg = LocalConfig {
+            max_growth: 2.0,
+            ..Default::default()
+        };
+        let mut la = LocalAutoscaler::new(cfg);
+        // ITL 1000x under SLO: unbounded 1/BP would explode.
+        let mut mb = 16u32;
+        let mut steps = 0;
+        for _ in 0..2 {
+            steps += 4;
+            if let Some(new) = la.on_step(&view(1, steps, mb, 0.0002, 0.2, 100.0)) {
+                mb = new;
+            }
+        }
+        // per decision: α·2·mb + (1−α)·mb = 1.5·mb at most
+        assert!(mb <= 16 * 3, "growth unexpectedly large: {mb}");
+    }
+
+    #[test]
+    fn respects_min_batch_floor() {
+        let mut la = LocalAutoscaler::new(LocalConfig::default());
+        let mut mb = 2u32;
+        let mut steps = 0;
+        for _ in 0..8 {
+            steps += 4;
+            if let Some(new) = la.on_step(&view(1, steps, mb, 10.0, 0.2, 1.0)) {
+                mb = new;
+            }
+        }
+        assert_eq!(mb, 1);
+    }
+
+    #[test]
+    fn instances_tracked_independently() {
+        let mut la = LocalAutoscaler::new(LocalConfig::default());
+        let a = la.on_step(&view(1, 4, 8, 0.01, 0.2, 100.0));
+        let b = la.on_step(&view(2, 4, 8, 0.9, 0.2, 100.0));
+        // instance 1 grows; instance 2's first decision halves
+        assert!(a.unwrap_or(8) >= 8);
+        assert!(b.unwrap_or(8) <= 8);
+    }
+
+    #[test]
+    fn infinite_slo_uses_default() {
+        let mut la = LocalAutoscaler::new(LocalConfig::default());
+        // idle instance (min_itl_slo = inf) must not panic or divide by inf
+        let v = view(3, 4, 8, 0.01, f64::INFINITY, 0.0);
+        let _ = la.on_step(&v);
+    }
+
+    #[test]
+    fn convergence_to_slo_with_synthetic_plant() {
+        // Closed loop against a synthetic ITL(b) = c·b plant: the controller
+        // should converge near the batch size where ITL = SLO.
+        let mut la = LocalAutoscaler::new(LocalConfig::default());
+        let slo = 0.2;
+        let c = 0.2 / 500.0; // optimum at b = 500
+        let mut mb = 8u32;
+        let mut steps = 0u64;
+        for _ in 0..400 {
+            steps += 1;
+            let itl = c * mb as f64;
+            let thr = mb as f64 / itl.max(1e-9);
+            if let Some(new) = la.on_step(&view(9, steps, mb, itl, slo, thr)) {
+                mb = new;
+            }
+        }
+        assert!(
+            (300..=620).contains(&mb),
+            "should converge near 500, got {mb}"
+        );
+    }
+}

@@ -1,0 +1,21 @@
+//! Chiron's coordination layer — the paper's contribution.
+//!
+//! - `local`: Algorithm 1, the per-instance batch-size autoscaler driven by
+//!   local backpressure (LBP/TBP).
+//! - `global`: §5, the instance autoscaler — interactive over-provisioning
+//!   (IBP vs Θ) and Algorithm 2 batch scaling (BBP → 0).
+//! - `groups`: SHEPHERD-style request groups over TTFT deadlines.
+//! - `waiting`: the QLM waiting-time estimator (Eq. 1 + CLT margin).
+//! - `chiron`: the composed `Policy` with preferential three-class routing.
+
+pub mod chiron;
+pub mod global;
+pub mod groups;
+pub mod local;
+pub mod waiting;
+
+pub use chiron::{BootstrapSpec, Chiron, ChironConfig};
+pub use global::{GlobalAutoscaler, GlobalConfig};
+pub use groups::{build_groups, RequestGroup};
+pub use local::{LocalAutoscaler, LocalConfig};
+pub use waiting::{OutputLenStats, WaitingTimeEstimator};

@@ -1,0 +1,209 @@
+//! Queue waiting-time estimation (paper §5.3, after QLM).
+//!
+//! Equation 1: W_q = Σ_{i<q} O_i / Θ — the tokens queued ahead of a request
+//! divided by the aggregate token-generation throughput. Output lengths O_i
+//! are unknown ahead of time, so they are modeled as a distribution with
+//! mean μ_o and std σ_o fitted online from completed requests; by the CLT
+//! the sum over a long queue concentrates, which is why estimation accuracy
+//! *improves* with queue length (paper Figure 14).
+
+use crate::core::Time;
+use crate::util::stats::{Ewma, Welford};
+
+/// Online fit of the output-token distribution (μ_o, σ_o).
+#[derive(Debug, Clone)]
+pub struct OutputLenStats {
+    w: Welford,
+    prior_mu: f64,
+    prior_sigma: f64,
+    min_samples: u64,
+}
+
+impl Default for OutputLenStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl OutputLenStats {
+    pub fn new() -> Self {
+        OutputLenStats {
+            w: Welford::new(),
+            // ShareGPT-flavored prior until enough completions are observed.
+            prior_mu: 256.0,
+            prior_sigma: 256.0,
+            min_samples: 30,
+        }
+    }
+
+    pub fn observe(&mut self, output_tokens: u32) {
+        self.w.push(output_tokens as f64);
+    }
+
+    pub fn mu(&self) -> f64 {
+        if self.w.count() >= self.min_samples {
+            self.w.mean()
+        } else {
+            self.prior_mu
+        }
+    }
+
+    pub fn sigma(&self) -> f64 {
+        if self.w.count() >= self.min_samples {
+            self.w.std()
+        } else {
+            self.prior_sigma
+        }
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.w.count()
+    }
+}
+
+/// Waiting-time estimator: output-length model + per-instance token
+/// throughput Θ (EWMA of observed instance throughput, with an analytical
+/// fallback before any observation exists).
+#[derive(Debug, Clone)]
+pub struct WaitingTimeEstimator {
+    pub out: OutputLenStats,
+    theta: Ewma,
+    fallback_theta: f64,
+    /// One-sided confidence multiplier: the paper notes estimates are
+    /// deliberately conservative for short queues; z·σ·√q adds that margin.
+    z: f64,
+}
+
+impl WaitingTimeEstimator {
+    /// `fallback_theta`: analytical per-instance tokens/s used before any
+    /// throughput observation (e.g. batch-size × tokens_per_step / step).
+    pub fn new(fallback_theta: f64) -> Self {
+        WaitingTimeEstimator {
+            out: OutputLenStats::new(),
+            theta: Ewma::new(0.2),
+            fallback_theta,
+            z: 1.28, // ~90th percentile one-sided margin
+        }
+    }
+
+    /// Record an observed per-instance token throughput (tokens/s).
+    pub fn observe_throughput(&mut self, tokens_per_sec: f64) {
+        if tokens_per_sec > 0.0 {
+            self.theta.push(tokens_per_sec);
+        }
+    }
+
+    pub fn observe_completion(&mut self, output_tokens: u32) {
+        self.out.observe(output_tokens);
+    }
+
+    /// Current per-instance token throughput estimate Θ.
+    pub fn theta(&self) -> f64 {
+        self.theta.get_or(self.fallback_theta).max(1e-6)
+    }
+
+    /// Estimate the waiting time until the queue position `requests_ahead`
+    /// is fully served by `serving_instances` instances (Eq. 1 scaled to a
+    /// multi-instance pool, with the CLT confidence margin).
+    pub fn estimate_wait(&self, requests_ahead: f64, serving_instances: f64) -> Time {
+        if requests_ahead <= 0.0 {
+            return 0.0;
+        }
+        let q = requests_ahead;
+        let expected_tokens = q * self.out.mu() + self.z * self.out.sigma() * q.sqrt();
+        expected_tokens / (self.theta() * serving_instances.max(1e-9))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::r_squared;
+
+    #[test]
+    fn prior_used_until_enough_samples() {
+        let mut s = OutputLenStats::new();
+        assert_eq!(s.mu(), 256.0);
+        for _ in 0..29 {
+            s.observe(100);
+        }
+        assert_eq!(s.mu(), 256.0); // still prior
+        s.observe(100);
+        assert_eq!(s.mu(), 100.0); // switched to fitted
+    }
+
+    #[test]
+    fn theta_fallback_then_ewma() {
+        let mut e = WaitingTimeEstimator::new(500.0);
+        assert_eq!(e.theta(), 500.0);
+        e.observe_throughput(1000.0);
+        assert!(e.theta() > 500.0);
+    }
+
+    #[test]
+    fn wait_scales_linearly_with_queue_and_inverse_with_instances() {
+        let mut e = WaitingTimeEstimator::new(1000.0);
+        for _ in 0..50 {
+            e.observe_completion(200);
+        }
+        let w1 = e.estimate_wait(1000.0, 1.0);
+        let w2 = e.estimate_wait(2000.0, 1.0);
+        let w1b = e.estimate_wait(1000.0, 2.0);
+        assert!(w2 > 1.9 * w1 && w2 < 2.1 * w1, "w1 {w1} w2 {w2}");
+        assert!((w1b - w1 / 2.0).abs() / w1 < 0.05);
+    }
+
+    #[test]
+    fn conservative_for_short_queues() {
+        // With σ > 0, the per-request margin is larger for short queues.
+        let mut e = WaitingTimeEstimator::new(1000.0);
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            e.observe_completion(rng.normal(200.0, 120.0).max(1.0) as u32);
+        }
+        let per_req_short = e.estimate_wait(10.0, 1.0) / 10.0;
+        let per_req_long = e.estimate_wait(10_000.0, 1.0) / 10_000.0;
+        assert!(per_req_short > per_req_long * 1.05);
+    }
+
+    #[test]
+    fn estimation_accuracy_improves_with_queue_length() {
+        // Monte-Carlo replication of the Figure 14 methodology: estimate the
+        // waiting time of requests at varying queue depths up to Q and
+        // compare against the true token-sum waiting time. R² rises toward
+        // 1 as Q grows (CLT averaging).
+        let mut rng = Rng::new(7);
+        let theta = 2000.0; // tokens/s
+        let r2_for = |q_max: usize, rng: &mut Rng| {
+            let mut e = WaitingTimeEstimator::new(theta);
+            for _ in 0..500 {
+                e.observe_completion(rng.lognormal(5.0, 0.7).min(4000.0).max(1.0) as u32);
+            }
+            e.observe_throughput(theta);
+            let mut actual = Vec::new();
+            let mut predicted = Vec::new();
+            // 20 requests spread across queue depths (the estimator sees
+            // only the depth, never the true token counts).
+            for k in 1..=20 {
+                let q = (q_max * k) / 20;
+                let tokens: f64 = (0..q)
+                    .map(|_| rng.lognormal(5.0, 0.7).min(4000.0).max(1.0))
+                    .sum();
+                actual.push(tokens / theta);
+                predicted.push(e.estimate_wait(q as f64, 1.0));
+            }
+            r_squared(&actual, &predicted)
+        };
+        let r2_small = r2_for(20, &mut rng);
+        let r2_large = r2_for(2000, &mut rng);
+        assert!(r2_large > 0.95, "large-queue R² {r2_large}");
+        assert!(r2_large > r2_small, "small {r2_small} large {r2_large}");
+    }
+
+    #[test]
+    fn zero_queue_is_zero_wait() {
+        let e = WaitingTimeEstimator::new(100.0);
+        assert_eq!(e.estimate_wait(0.0, 4.0), 0.0);
+    }
+}

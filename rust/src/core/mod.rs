@@ -1,0 +1,66 @@
+//! Core domain types shared by the coordinator, simulator, engine, and
+//! experiment harness: requests, SLOs, models, and instance classes.
+
+pub mod model;
+pub mod request;
+
+pub use model::{ModelSpec, PerfProfile, ServingConfig};
+pub use request::{Request, RequestClass, RequestId, RequestOutcome, Slo};
+
+/// Simulation / wall time in seconds. All latency figures in the paper are
+/// seconds or milliseconds; f64 seconds keeps the math simple.
+pub type Time = f64;
+
+/// The class of a serving instance (paper §3, "Lifecycle of a Request"):
+/// interactive instances serve interactive requests only, batch instances
+/// serve batch requests only, and mixed instances multiplex both with
+/// preemption of batch requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum InstanceClass {
+    Interactive,
+    Mixed,
+    Batch,
+}
+
+impl InstanceClass {
+    pub fn accepts(&self, class: RequestClass) -> bool {
+        match self {
+            InstanceClass::Interactive => class == RequestClass::Interactive,
+            InstanceClass::Batch => class == RequestClass::Batch,
+            InstanceClass::Mixed => true,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            InstanceClass::Interactive => "interactive",
+            InstanceClass::Mixed => "mixed",
+            InstanceClass::Batch => "batch",
+        }
+    }
+}
+
+/// Identifier of a serving instance within a cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct InstanceId(pub u32);
+
+impl std::fmt::Display for InstanceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "inst{}", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instance_class_acceptance_matrix() {
+        assert!(InstanceClass::Interactive.accepts(RequestClass::Interactive));
+        assert!(!InstanceClass::Interactive.accepts(RequestClass::Batch));
+        assert!(!InstanceClass::Batch.accepts(RequestClass::Interactive));
+        assert!(InstanceClass::Batch.accepts(RequestClass::Batch));
+        assert!(InstanceClass::Mixed.accepts(RequestClass::Interactive));
+        assert!(InstanceClass::Mixed.accepts(RequestClass::Batch));
+    }
+}

@@ -1,0 +1,179 @@
+//! Requests, SLOs, and per-request outcome records.
+
+use super::Time;
+
+/// Unique request identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+impl std::fmt::Display for RequestId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "req{}", self.0)
+    }
+}
+
+/// Paper §2.1 workload categories.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RequestClass {
+    /// Chatbots / agents: TTFT SLO in seconds, ITL SLO ~200 ms.
+    Interactive,
+    /// Document processing / data generation: TTFT SLO minutes–hours.
+    Batch,
+}
+
+impl RequestClass {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RequestClass::Interactive => "interactive",
+            RequestClass::Batch => "batch",
+        }
+    }
+}
+
+/// Service-level objective (paper Definition 2.1): time-to-first-token and
+/// inter-token latency, both in seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slo {
+    pub ttft: Time,
+    pub itl: Time,
+}
+
+impl Slo {
+    /// Production defaults from the paper's evaluation setup (§6):
+    /// interactive = 10 s TTFT / 200 ms ITL.
+    pub fn interactive_default() -> Slo {
+        Slo {
+            ttft: 10.0,
+            itl: 0.200,
+        }
+    }
+
+    /// Batch = 1 h TTFT / 2 s ITL.
+    pub fn batch_default() -> Slo {
+        Slo {
+            ttft: 3600.0,
+            itl: 2.0,
+        }
+    }
+}
+
+/// One inference request. `output_tokens` is the ground-truth generation
+/// length; the coordinator never reads it directly (the waiting-time
+/// estimator models output lengths statistically, per QLM).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub class: RequestClass,
+    pub slo: Slo,
+    /// Arrival time at the global queue.
+    pub arrival: Time,
+    pub input_tokens: u32,
+    /// Ground truth output length (hidden from scheduling policies).
+    pub output_tokens: u32,
+    /// Which model this request targets (index into the cluster's model set).
+    pub model: usize,
+}
+
+impl Request {
+    /// Deadline by which the first token must be produced.
+    pub fn ttft_deadline(&self) -> Time {
+        self.arrival + self.slo.ttft
+    }
+
+    /// Total KV footprint in tokens when fully generated.
+    pub fn max_context_tokens(&self) -> u32 {
+        self.input_tokens + self.output_tokens
+    }
+}
+
+/// Completion record used by the metrics pipeline. Produced by both the
+/// simulator and the real engine.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    pub id: RequestId,
+    pub class: RequestClass,
+    pub slo: Slo,
+    pub model: usize,
+    pub arrival: Time,
+    /// Time the first output token was emitted (prefill completion).
+    pub first_token: Time,
+    /// Time the final output token was emitted.
+    pub completion: Time,
+    pub input_tokens: u32,
+    pub output_tokens: u32,
+    /// Mean inter-token latency over the decode phase.
+    pub mean_itl: Time,
+    /// Worst observed inter-token latency.
+    pub max_itl: Time,
+    /// Number of times this request was preempted/evicted.
+    pub preemptions: u32,
+}
+
+impl RequestOutcome {
+    pub fn ttft(&self) -> Time {
+        self.first_token - self.arrival
+    }
+
+    pub fn ttft_met(&self) -> bool {
+        self.ttft() <= self.slo.ttft + 1e-9
+    }
+
+    /// The paper's ITL SLO is about the token streaming rate; we follow the
+    /// common definition (mean decode ITL within SLO).
+    pub fn itl_met(&self) -> bool {
+        self.mean_itl <= self.slo.itl + 1e-9
+    }
+
+    pub fn slo_met(&self) -> bool {
+        self.ttft_met() && self.itl_met()
+    }
+
+    pub fn latency(&self) -> Time {
+        self.completion - self.arrival
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(ttft: f64, mean_itl: f64) -> RequestOutcome {
+        RequestOutcome {
+            id: RequestId(1),
+            class: RequestClass::Interactive,
+            slo: Slo::interactive_default(),
+            model: 0,
+            arrival: 100.0,
+            first_token: 100.0 + ttft,
+            completion: 100.0 + ttft + 50.0 * mean_itl,
+            input_tokens: 32,
+            output_tokens: 51,
+            mean_itl,
+            max_itl: mean_itl * 2.0,
+            preemptions: 0,
+        }
+    }
+
+    #[test]
+    fn slo_met_boundary() {
+        assert!(outcome(10.0, 0.2).slo_met());
+        assert!(!outcome(10.1, 0.2).slo_met());
+        assert!(!outcome(10.0, 0.21).slo_met());
+        assert!(outcome(0.5, 0.05).slo_met());
+    }
+
+    #[test]
+    fn deadline_math() {
+        let r = Request {
+            id: RequestId(9),
+            class: RequestClass::Batch,
+            slo: Slo::batch_default(),
+            arrival: 50.0,
+            input_tokens: 100,
+            output_tokens: 200,
+            model: 0,
+        };
+        assert_eq!(r.ttft_deadline(), 3650.0);
+        assert_eq!(r.max_context_tokens(), 300);
+    }
+}

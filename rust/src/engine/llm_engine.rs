@@ -1,0 +1,299 @@
+//! The continuous-batching engine loop over the PJRT runtime.
+//!
+//! Sequences own a per-request KV row ([L, 2, S, H, Dh] flattened); each
+//! step packs up to `max_batch` rows into the batch-variant cache layout
+//! ([L, 2, B, S, H, Dh]), runs one decode step, scatters rows back, and
+//! emits one token per active sequence. New sequences join at step
+//! boundaries through a batched prefill — exactly the iteration-level
+//! scheduling the paper's local autoscaler controls.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::core::Time;
+use crate::runtime::TinyLlmRuntime;
+
+/// A request to the real engine.
+#[derive(Debug, Clone)]
+pub struct EngineRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// Generate this many tokens (greedy).
+    pub max_new_tokens: usize,
+    /// Wall-clock arrival (set by `submit`).
+    pub arrival: Option<Instant>,
+}
+
+/// Completion record from the real engine.
+#[derive(Debug, Clone)]
+pub struct EngineOutcome {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub ttft: Time,
+    pub mean_itl: Time,
+    pub total_latency: Time,
+    pub prompt_len: usize,
+}
+
+/// Rolling engine statistics (feeds the local autoscaler).
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub steps: u64,
+    pub last_step_time: Time,
+    pub tokens_emitted: u64,
+    pub completed: u64,
+    pub running: usize,
+    pub waiting: usize,
+    pub max_batch: usize,
+}
+
+struct ActiveSeq {
+    req: EngineRequest,
+    /// Per-request KV rows: [L, 2, S, H, Dh] flattened.
+    cache: Vec<f32>,
+    pos: usize,
+    generated: Vec<i32>,
+    next_token: i32,
+    started: Instant,
+    first_token_at: Option<Instant>,
+}
+
+/// The engine.
+pub struct LlmEngine {
+    rt: TinyLlmRuntime,
+    active: Vec<ActiveSeq>,
+    waiting: VecDeque<EngineRequest>,
+    pub max_batch: usize,
+    stats: EngineStats,
+    row_len: usize, // per-request cache row length (one b-slice)
+}
+
+impl LlmEngine {
+    pub fn new(rt: TinyLlmRuntime, max_batch: usize) -> Self {
+        let d = &rt.manifest.dims;
+        let row_len = d.n_layers * 2 * d.max_seq * d.n_heads * d.d_head;
+        LlmEngine {
+            rt,
+            active: Vec::new(),
+            waiting: VecDeque::new(),
+            max_batch,
+            stats: EngineStats::default(),
+            row_len,
+        }
+    }
+
+    pub fn runtime(&self) -> &TinyLlmRuntime {
+        &self.rt
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        let mut s = self.stats.clone();
+        s.running = self.active.len();
+        s.waiting = self.waiting.len();
+        s.max_batch = self.max_batch;
+        s
+    }
+
+    pub fn submit(&mut self, mut req: EngineRequest) {
+        req.arrival.get_or_insert_with(Instant::now);
+        self.waiting.push_back(req);
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active.is_empty() && self.waiting.is_empty()
+    }
+
+    /// Gather per-seq rows into the [L, 2, B, S, H, Dh] batch cache.
+    fn pack_cache(&self, batch: usize, members: &[usize]) -> Vec<f32> {
+        let d = &self.rt.manifest.dims;
+        let plane = d.max_seq * d.n_heads * d.d_head; // one (l, kv, b) plane
+        let mut cache = vec![0.0f32; self.rt.manifest.cache_len(batch)];
+        for (slot, &mi) in members.iter().enumerate() {
+            let row = &self.active[mi].cache;
+            for l in 0..d.n_layers {
+                for kv in 0..2 {
+                    let src = (l * 2 + kv) * plane;
+                    let dst = ((l * 2 + kv) * batch + slot) * plane;
+                    cache[dst..dst + plane].copy_from_slice(&row[src..src + plane]);
+                }
+            }
+        }
+        cache
+    }
+
+    /// Scatter updated batch cache rows back into per-seq caches.
+    fn unpack_cache(&mut self, batch: usize, members: &[usize], cache: &[f32]) {
+        let d = &self.rt.manifest.dims;
+        let plane = d.max_seq * d.n_heads * d.d_head;
+        for (slot, &mi) in members.iter().enumerate() {
+            let row = &mut self.active[mi].cache;
+            for l in 0..d.n_layers {
+                for kv in 0..2 {
+                    let dst = (l * 2 + kv) * plane;
+                    let src = ((l * 2 + kv) * batch + slot) * plane;
+                    row[dst..dst + plane].copy_from_slice(&cache[src..src + plane]);
+                }
+            }
+        }
+    }
+
+    /// Admit waiting requests (batched prefill) up to max_batch.
+    fn admit(&mut self) -> Result<()> {
+        let d = self.rt.manifest.dims.clone();
+        while self.active.len() < self.max_batch && !self.waiting.is_empty() {
+            // Prefill in groups of up to the largest variant.
+            let room = self.max_batch - self.active.len();
+            let n = room.min(self.waiting.len());
+            let variant = self.rt.manifest.variant_for(n).batch.min(n).max(1);
+            let group: Vec<EngineRequest> =
+                (0..variant.min(n)).filter_map(|_| self.waiting.pop_front()).collect();
+            if group.is_empty() {
+                break;
+            }
+            let b = self.rt.manifest.variant_for(group.len()).batch;
+            let mut tokens = vec![0i32; b * d.max_seq];
+            let mut lengths = vec![1i32; b];
+            for (i, r) in group.iter().enumerate() {
+                let plen = r.prompt.len().min(d.max_seq);
+                tokens[i * d.max_seq..i * d.max_seq + plen]
+                    .copy_from_slice(&r.prompt[..plen]);
+                lengths[i] = plen.max(1) as i32;
+            }
+            let t0 = Instant::now();
+            let (logits, cache) = self.rt.prefill(b, &tokens, &lengths)?;
+            let now = Instant::now();
+            let plane = d.max_seq * d.n_heads * d.d_head;
+            for (i, req) in group.into_iter().enumerate() {
+                let first = self.rt.argmax_row(&logits, i);
+                // Extract this row's cache planes.
+                let mut row = vec![0.0f32; self.row_len];
+                for l in 0..d.n_layers {
+                    for kv in 0..2 {
+                        let dst = (l * 2 + kv) * plane;
+                        let src = ((l * 2 + kv) * b + i) * plane;
+                        row[dst..dst + plane].copy_from_slice(&cache[src..src + plane]);
+                    }
+                }
+                let pos = lengths[i] as usize;
+                self.stats.tokens_emitted += 1;
+                self.active.push(ActiveSeq {
+                    started: req.arrival.unwrap_or(t0),
+                    req,
+                    cache: row,
+                    pos,
+                    generated: vec![first],
+                    next_token: first,
+                    first_token_at: Some(now),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// One engine step: admit + one decode for all active sequences.
+    /// Returns completed outcomes.
+    pub fn step(&mut self) -> Result<Vec<EngineOutcome>> {
+        let t0 = Instant::now();
+        self.admit()?;
+        let mut done = Vec::new();
+        if self.active.is_empty() {
+            return Ok(done);
+        }
+        let d = self.rt.manifest.dims.clone();
+
+        // Check completion after prefill (max_new_tokens == 1).
+        self.collect_done(&mut done);
+
+        // Decode all active sequences in exact variant-sized groups (the
+        // largest compiled variant that fits the remainder; variant 1 always
+        // exists, so every sequence is covered).
+        let members_all: Vec<usize> = (0..self.active.len()).collect();
+        let mut idx = 0;
+        while idx < members_all.len() {
+            let rem = members_all.len() - idx;
+            let b = self.rt.manifest.variant_for(rem).batch;
+            let chunk = &members_all[idx..idx + b];
+            idx += b;
+            let mut tokens = vec![0i32; b];
+            let mut positions = vec![0i32; b];
+            for (slot, &mi) in chunk.iter().enumerate() {
+                tokens[slot] = self.active[mi].next_token;
+                positions[slot] = self.active[mi].pos as i32;
+            }
+            let cache = self.pack_cache(b, chunk);
+            let (logits, new_cache) = self.rt.decode(b, &tokens, &positions, &cache)?;
+            self.unpack_cache(b, chunk, &new_cache);
+            for (slot, &mi) in chunk.iter().enumerate() {
+                let tok = self.rt.argmax_row(&logits, slot);
+                let seq = &mut self.active[mi];
+                seq.pos += 1;
+                seq.generated.push(tok);
+                seq.next_token = tok;
+                self.stats.tokens_emitted += 1;
+            }
+        }
+        self.collect_done(&mut done);
+
+        // Sequences hitting the context window end too.
+        let max_pos = d.max_seq - 1;
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].pos >= max_pos {
+                let seq = self.active.swap_remove(i);
+                done.push(Self::outcome(seq));
+                self.stats.completed += 1;
+                continue;
+            }
+            i += 1;
+        }
+
+        self.stats.steps += 1;
+        self.stats.last_step_time = t0.elapsed().as_secs_f64();
+        Ok(done)
+    }
+
+    fn collect_done(&mut self, done: &mut Vec<EngineOutcome>) {
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].generated.len() >= self.active[i].req.max_new_tokens {
+                let seq = self.active.swap_remove(i);
+                done.push(Self::outcome(seq));
+                self.stats.completed += 1;
+                continue;
+            }
+            i += 1;
+        }
+    }
+
+    fn outcome(seq: ActiveSeq) -> EngineOutcome {
+        let now = Instant::now();
+        let first = seq.first_token_at.unwrap_or(now);
+        let ttft = (first - seq.started).as_secs_f64();
+        let total = (now - seq.started).as_secs_f64();
+        let n = seq.generated.len();
+        let mean_itl = if n > 1 {
+            (now - first).as_secs_f64() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        EngineOutcome {
+            id: seq.req.id,
+            prompt_len: seq.req.prompt.len(),
+            tokens: seq.generated,
+            ttft,
+            mean_itl,
+            total_latency: total,
+        }
+    }
+
+    /// Run until idle; returns all outcomes.
+    pub fn run_to_completion(&mut self) -> Result<Vec<EngineOutcome>> {
+        let mut out = Vec::new();
+        while !self.is_idle() {
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,11 @@
+//! Real-execution continuous-batching engine over the AOT tiny model.
+//!
+//! This is the L3-side counterpart of vLLM's engine loop, scaled to the
+//! AOT-compiled toy transformer: slot-based batcher, per-sequence KV rows
+//! packed into the batch-variant cache layout, prefill + decode steps via
+//! the PJRT runtime, and a dynamic max-batch knob the same
+//! `coordinator::LocalAutoscaler` drives in the end-to-end example.
+
+pub mod llm_engine;
+
+pub use llm_engine::{EngineOutcome, EngineRequest, EngineStats, LlmEngine};

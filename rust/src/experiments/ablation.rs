@@ -1,0 +1,149 @@
+//! Ablation and appendix experiments: Figure 18 (local vs global
+//! contribution) and Figure 19 (example autoscaling workflow timeline).
+
+use crate::baselines::{Llumnix, LlumnixConfig};
+use crate::core::{RequestClass, Slo};
+use crate::metrics::PolicyRow;
+use crate::sim::{run_sim, SimConfig};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::{ArrivalProcess, ShareGptSampler, TraceBuilder, WorkloadSpec};
+
+use super::common::{
+    chiron, compare, models_small, print_series, print_table, save_result, trace_wb, PolicyKind,
+    Scale,
+};
+
+/// Figure 18: contribution of the local and global autoscalers. Target:
+/// each contributes ~30–60% of Chiron's throughput gain for interactive
+/// and batch requests.
+pub fn fig18(scale: Scale) -> Json {
+    let models = models_small();
+    let inter_n = scale.n(600, 3000);
+    let batch_n = scale.n(3_000, 20_000);
+    let kinds = vec![
+        PolicyKind::Chiron,
+        PolicyKind::LocalOnly,
+        PolicyKind::GlobalOnly(64),
+        PolicyKind::LlumnixUntuned,
+    ];
+    let mk = |seed| trace_wb(&models, &[30.0], inter_n, &[batch_n], 2400.0, 10.0, seed);
+    let rows = compare(&models, 50, mk, &kinds, 4.0 * 3600.0, 18);
+    let table: Vec<PolicyRow> = rows.iter().map(|(r, _)| r.clone()).collect();
+    print_table("Figure 18 — ablation: local vs global autoscaler (W_B)", &table);
+    // Normalized throughput gains over the llumnix floor.
+    let llum = table.last().unwrap().request_throughput.max(1e-9);
+    println!("\nthroughput vs llumnix baseline:");
+    for r in &table {
+        println!("  {:<14} {:.2}x", r.policy, r.request_throughput / llum);
+    }
+    let j = Json::arr(table.iter().map(|r| r.to_json()));
+    save_result("fig18", &j);
+    j
+}
+
+/// Figure 19 (appendix A.2): GPUs over time for Chiron vs Llumnix-tuned on
+/// the example workflow — interactive Gamma arrivals, then a large batch
+/// queue at t = 5 min with a 65-minute deadline. Targets: Chiron holds the
+/// over-provisioned pool and multiplexes, adding instances only near the
+/// deadline; Llumnix ramps toward the cluster cap immediately; Chiron uses
+/// ~60% fewer GPU·hours.
+pub fn fig19(scale: Scale) -> Json {
+    let models = models_small();
+    let batch_n = scale.n(20_000, 120_000);
+    let deadline = 3600.0; // batch TTFT SLO (due 65 min in, arriving at 5 min)
+    let mk_trace = |seed: u64| {
+        let mut rng = Rng::new(seed);
+        TraceBuilder::new()
+            .sampler(ShareGptSampler::new())
+            .stream(WorkloadSpec {
+                class: RequestClass::Interactive,
+                slo: Slo::interactive_default(),
+                arrivals: ArrivalProcess::Gamma {
+                    rate: 30.0,
+                    cv: 4.0,
+                },
+                count: scale.n(2_000, 10_000),
+                model: 0,
+                start: 0.0,
+            })
+            .stream(WorkloadSpec {
+                class: RequestClass::Batch,
+                slo: Slo {
+                    ttft: deadline,
+                    ..Slo::batch_default()
+                },
+                arrivals: ArrivalProcess::Burst { at: 300.0 },
+                count: batch_n,
+                model: 0,
+                start: 300.0,
+            })
+            .build(&mut rng)
+    };
+    let mut cfg = SimConfig::new(50, models.clone());
+    cfg.max_sim_time = 2.0 * 3600.0;
+    cfg.timeline_every = 30; // sample every 30 s
+
+    let mut c = chiron(&models);
+    let r_chiron = run_sim(cfg.clone(), mk_trace(19), &mut c);
+    let mut l = Llumnix::tuned(
+        &models,
+        LlumnixConfig {
+            max_batch: 256,
+            low: 0.2,
+            high: 0.7,
+            ..LlumnixConfig::untuned()
+        },
+    );
+    let r_llum = run_sim(cfg, mk_trace(19), &mut l);
+
+    let mut rows = Vec::new();
+    let n = r_chiron.timeline.len().max(r_llum.timeline.len());
+    for i in 0..n {
+        let t = r_chiron
+            .timeline
+            .get(i)
+            .map(|p| p.t)
+            .or_else(|| r_llum.timeline.get(i).map(|p| p.t))
+            .unwrap_or(0.0);
+        let g_c = r_chiron.timeline.get(i).map(|p| p.gpus_used).unwrap_or(0);
+        let g_l = r_llum.timeline.get(i).map(|p| p.gpus_used).unwrap_or(0);
+        let q_c = r_chiron.timeline.get(i).map(|p| p.queued_batch).unwrap_or(0);
+        rows.push((t / 60.0, vec![g_c as f64, g_l as f64, q_c as f64]));
+    }
+    print_series(
+        "Figure 19 — GPUs over time (minutes): chiron vs llumnix-tuned",
+        "t_min",
+        &["chiron_gpus", "llumnix_gpus", "chiron_queue"],
+        &rows.iter().step_by(4).cloned().collect::<Vec<_>>(),
+    );
+    let gpuh_c = r_chiron.gpu_seconds / 3600.0;
+    let gpuh_l = r_llum.gpu_seconds / 3600.0;
+    println!(
+        "chiron: {:.1} GPU·h, slo {:.1}% | llumnix: {:.1} GPU·h, slo {:.1}% | savings {:.0}% (paper: ~60%)",
+        gpuh_c,
+        r_chiron.slo_attainment() * 100.0,
+        gpuh_l,
+        r_llum.slo_attainment() * 100.0,
+        (1.0 - gpuh_c / gpuh_l.max(1e-9)) * 100.0
+    );
+    let j = Json::obj(vec![
+        ("chiron_gpu_hours", gpuh_c.into()),
+        ("llumnix_gpu_hours", gpuh_l.into()),
+        ("chiron_slo", r_chiron.slo_attainment().into()),
+        ("llumnix_slo", r_llum.slo_attainment().into()),
+        (
+            "timeline",
+            Json::arr(rows.iter().map(|(t, v)| {
+                Json::obj(vec![
+                    ("t_min", (*t).into()),
+                    ("chiron_gpus", v[0].into()),
+                    ("llumnix_gpus", v[1].into()),
+                    ("chiron_queue", v[2].into()),
+                ])
+            })),
+        ),
+    ]);
+    save_result("fig19", &j);
+    j
+}

@@ -1,0 +1,231 @@
+//! Shared machinery for the figure/table harness: policy factories, trace
+//! recipes, comparison runners, and table/JSON reporting.
+
+use crate::baselines::{GlobalOnly, Llumnix, LlumnixConfig, LocalOnly};
+use crate::coordinator::{BootstrapSpec, Chiron, ChironConfig};
+use crate::core::{ModelSpec, RequestClass, Slo};
+use crate::metrics::PolicyRow;
+use crate::sim::{run_sim, Policy, SimConfig, SimReport};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::{ArrivalProcess, ShareGptSampler, Trace, TraceBuilder, WorkloadSpec};
+
+/// Experiment scale: quick mode shrinks request counts ~8× so the full
+/// suite regenerates in minutes; full mode approximates paper scale.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+impl Scale {
+    pub fn n(&self, quick: usize, full: usize) -> usize {
+        match self {
+            Scale::Quick => quick,
+            Scale::Full => full,
+        }
+    }
+
+    pub fn from_flag(quick: bool) -> Scale {
+        if quick {
+            Scale::Quick
+        } else {
+            Scale::Full
+        }
+    }
+}
+
+/// The standard model pair used across the evaluation.
+pub fn models_small() -> Vec<ModelSpec> {
+    vec![ModelSpec::llama8b()]
+}
+
+pub fn models_large() -> Vec<ModelSpec> {
+    vec![ModelSpec::llama70b()]
+}
+
+pub fn models_mixed() -> Vec<ModelSpec> {
+    vec![ModelSpec::llama8b(), ModelSpec::llama70b()]
+}
+
+/// Standard Chiron instance with paper-default Θ = 1/3 and a small warm
+/// bootstrap per model.
+pub fn chiron(models: &[ModelSpec]) -> Chiron {
+    let mut cfg = ChironConfig::for_models(models.len());
+    for b in &mut cfg.bootstrap {
+        *b = BootstrapSpec {
+            interactive: 1,
+            mixed: 2,
+            batch: 0,
+        };
+    }
+    Chiron::new(cfg, models)
+}
+
+pub fn chiron_with_theta(models: &[ModelSpec], theta: f64) -> Chiron {
+    let mut cfg = ChironConfig::for_models(models.len());
+    cfg.global.theta = theta;
+    for b in &mut cfg.bootstrap {
+        *b = BootstrapSpec {
+            interactive: 1,
+            mixed: 2,
+            batch: 0,
+        };
+    }
+    Chiron::new(cfg, models)
+}
+
+/// The four-policy comparison set used by the headline figures.
+pub enum PolicyKind {
+    Chiron,
+    LlumnixUntuned,
+    LlumnixTuned(LlumnixConfig),
+    LocalOnly,
+    GlobalOnly(u32),
+}
+
+pub fn make_policy(kind: &PolicyKind, models: &[ModelSpec]) -> Box<dyn Policy> {
+    match kind {
+        PolicyKind::Chiron => Box::new(chiron(models)),
+        PolicyKind::LlumnixUntuned => Box::new(Llumnix::untuned(models)),
+        PolicyKind::LlumnixTuned(cfg) => Box::new(Llumnix::tuned(models, *cfg)),
+        PolicyKind::LocalOnly => Box::new(LocalOnly::new(models, LlumnixConfig::untuned())),
+        PolicyKind::GlobalOnly(mb) => Box::new(GlobalOnly::new(
+            models,
+            ChironConfig::for_models(models.len()),
+            *mb,
+        )),
+    }
+}
+
+/// W_A: interactive-only trace at `rate` req/s per model.
+pub fn trace_wa(models: &[ModelSpec], rates: &[f64], count: usize, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut tb = TraceBuilder::new().sampler(ShareGptSampler::new());
+    for (m, &rate) in rates.iter().enumerate().take(models.len()) {
+        if rate > 0.0 {
+            tb = tb.stream(WorkloadSpec {
+                class: RequestClass::Interactive,
+                slo: Slo::interactive_default(),
+                arrivals: ArrivalProcess::Poisson { rate },
+                count,
+                model: m,
+                start: 0.0,
+            });
+        }
+    }
+    tb.build(&mut rng)
+}
+
+/// W_B: interactive stream + batch queue dump at t = `batch_at`.
+#[allow(clippy::too_many_arguments)]
+pub fn trace_wb(
+    models: &[ModelSpec],
+    inter_rates: &[f64],
+    inter_count: usize,
+    batch_counts: &[usize],
+    batch_ttft: f64,
+    batch_at: f64,
+    seed: u64,
+) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut tb = TraceBuilder::new().sampler(ShareGptSampler::new());
+    for m in 0..models.len() {
+        if inter_rates[m] > 0.0 && inter_count > 0 {
+            tb = tb.stream(WorkloadSpec {
+                class: RequestClass::Interactive,
+                slo: Slo::interactive_default(),
+                arrivals: ArrivalProcess::Poisson {
+                    rate: inter_rates[m],
+                },
+                count: inter_count,
+                model: m,
+                start: 0.0,
+            });
+        }
+        if batch_counts[m] > 0 {
+            tb = tb.stream(WorkloadSpec {
+                class: RequestClass::Batch,
+                slo: Slo {
+                    ttft: batch_ttft,
+                    ..Slo::batch_default()
+                },
+                arrivals: ArrivalProcess::Burst { at: batch_at },
+                count: batch_counts[m],
+                model: m,
+                start: batch_at,
+            });
+        }
+    }
+    tb.build(&mut rng)
+}
+
+/// Run one policy on a trace with standard settings.
+pub fn run_one(
+    models: &[ModelSpec],
+    gpus: u32,
+    trace: Trace,
+    policy: &mut dyn Policy,
+    max_time: f64,
+) -> SimReport {
+    let mut cfg = SimConfig::new(gpus, models.to_vec());
+    cfg.max_sim_time = max_time;
+    run_sim(cfg, trace, policy)
+}
+
+/// Run the comparison set and return one row per policy.
+pub fn compare(
+    models: &[ModelSpec],
+    gpus: u32,
+    mk_trace: impl Fn(u64) -> Trace,
+    kinds: &[PolicyKind],
+    max_time: f64,
+    seed: u64,
+) -> Vec<(PolicyRow, SimReport)> {
+    let mut rows = Vec::new();
+    for kind in kinds {
+        let mut p = make_policy(kind, models);
+        let report = run_one(models, gpus, mk_trace(seed), p.as_mut(), max_time);
+        rows.push((PolicyRow::from_report(&report), report));
+    }
+    rows
+}
+
+/// Print a titled comparison table.
+pub fn print_table(title: &str, rows: &[PolicyRow]) {
+    println!("\n=== {title} ===");
+    println!("{}", PolicyRow::header());
+    for r in rows {
+        println!("{}", r.line());
+    }
+}
+
+/// Persist a figure's machine-readable output under results/.
+pub fn save_result(name: &str, value: &Json) {
+    let dir = std::path::Path::new("results");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let path = dir.join(format!("{name}.json"));
+        if let Err(e) = std::fs::write(&path, value.to_string()) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        } else {
+            println!("[saved results/{name}.json]");
+        }
+    }
+}
+
+/// Series printer: one row per x with named columns.
+pub fn print_series(title: &str, xlabel: &str, cols: &[&str], rows: &[(f64, Vec<f64>)]) {
+    println!("\n=== {title} ===");
+    print!("{:>12}", xlabel);
+    for c in cols {
+        print!(" {c:>14}");
+    }
+    println!();
+    for (x, vals) in rows {
+        print!("{x:>12.3}");
+        for v in vals {
+            print!(" {v:>14.3}");
+        }
+        println!();
+    }
+}

@@ -1,0 +1,264 @@
+//! Headline evaluation: Figure 2 (GPU requirement / utilization), Figure 9
+//! (W_A interactive sweep), Figure 10 (W_B batch-queue sweep).
+
+use crate::baselines::LlumnixConfig;
+use crate::metrics::PolicyRow;
+use crate::util::json::Json;
+
+use super::common::{
+    compare, models_large, models_mixed, models_small, print_series, print_table, save_result,
+    trace_wa, trace_wb, PolicyKind, Scale,
+};
+
+fn kinds_headline() -> Vec<PolicyKind> {
+    vec![
+        PolicyKind::Chiron,
+        PolicyKind::LlumnixUntuned,
+        PolicyKind::LlumnixTuned(LlumnixConfig {
+            max_batch: 256,
+            low: 0.2,
+            high: 0.7,
+            ..LlumnixConfig::untuned()
+        }),
+        PolicyKind::LocalOnly,
+        PolicyKind::GlobalOnly(64),
+    ]
+}
+
+/// Figure 2: cluster-wide utilization and GPUs required when serving a mix
+/// of batch and interactive requests (8B + 70B). Shape target: Chiron uses
+/// the fewest GPUs (up to ~70% savings vs Llumnix); Local/Global ablations
+/// fall in between.
+///
+/// Workload (mirrors the paper's production setting): bursty interactive
+/// traffic that forces over-provisioning, plus a *continuous* stream of
+/// batch requests with a one-hour deadline — the multiplexing opportunity
+/// Chiron exploits and SLO-blind autoscalers immediately scale out for.
+pub fn fig2(scale: Scale) -> Json {
+    use crate::core::{RequestClass, Slo};
+    use crate::util::rng::Rng;
+    use crate::workload::{ArrivalProcess, ShareGptSampler, TraceBuilder, WorkloadSpec};
+    let models = models_mixed();
+    let inter_n = scale.n(800, 3500);
+    let batch_n = scale.n(2_000, 14_000);
+    let mk = |seed: u64| {
+        let mut rng = Rng::new(seed);
+        let mut tb = TraceBuilder::new().sampler(ShareGptSampler::new());
+        for (m, (irate, brate)) in [(20.0, 80.0), (4.0, 10.0)].iter().enumerate() {
+            tb = tb.stream(WorkloadSpec {
+                class: RequestClass::Interactive,
+                slo: Slo::interactive_default(),
+                arrivals: ArrivalProcess::Gamma { rate: *irate, cv: 4.0 },
+                count: inter_n / (1 + m * 4),
+                model: m,
+                start: 0.0,
+            });
+            tb = tb.stream(WorkloadSpec {
+                class: RequestClass::Batch,
+                slo: Slo { ttft: 3600.0, ..Slo::batch_default() },
+                arrivals: ArrivalProcess::Poisson { rate: *brate },
+                count: batch_n / (1 + m * 7),
+                model: m,
+                start: 0.0,
+            });
+        }
+        tb.build(&mut rng)
+    };
+    let rows = compare(&models, 50, mk, &kinds_headline(), 4.0 * 3600.0, 2);
+    let table: Vec<PolicyRow> = rows.iter().map(|(r, _)| r.clone()).collect();
+    print_table("Figure 2 — GPUs required / utilization (batch + interactive, 8B + 70B)", &table);
+    let chiron_gpuh = table[0].gpu_hours;
+    let llumnix_gpuh = table[1].gpu_hours;
+    println!(
+        "GPU savings vs llumnix: {:.0}% (paper: up to 70%)",
+        (1.0 - chiron_gpuh / llumnix_gpuh.max(1e-9)) * 100.0
+    );
+    let j = Json::arr(table.iter().map(|r| r.to_json()));
+    save_result("fig2", &j);
+    j
+}
+
+/// Figure 9: W_A (interactive-only) sweep over arrival rates for small,
+/// large, and mixed model configurations: per-instance request throughput
+/// and % SLOs met. Shape targets: Chiron ≥ Llumnix-tuned ≥ Llumnix-untuned;
+/// SLO cliff appears at higher rates for Chiron.
+pub fn fig9(scale: Scale) -> Json {
+    let count = scale.n(800, 3500);
+    let mut out = Vec::new();
+    let configs: Vec<(&str, Vec<crate::core::ModelSpec>, Vec<f64>)> = vec![
+        ("small (8B)", models_small(), vec![1.0]),
+        ("large (70B)", models_large(), vec![1.0]),
+        ("mixed (8B+70B)", models_mixed(), vec![0.5, 0.5]),
+    ];
+    for (label, models, split) in configs {
+        // Rate grids per the paper's x-ranges (scaled to the simulator).
+        let rates: Vec<f64> = if label.starts_with("small") {
+            vec![40.0, 120.0, 240.0, 340.0, 420.0]
+        } else if label.starts_with("large") {
+            vec![5.0, 15.0, 30.0, 40.0, 60.0]
+        } else {
+            vec![10.0, 40.0, 70.0, 100.0, 140.0]
+        };
+        let kinds = vec![
+            PolicyKind::Chiron,
+            PolicyKind::LlumnixUntuned,
+            PolicyKind::LlumnixTuned(LlumnixConfig {
+                max_batch: 256,
+                low: 0.2,
+                high: 0.7,
+                ..LlumnixConfig::untuned()
+            }),
+        ];
+        let mut series = Vec::new();
+        let mut json_points = Vec::new();
+        for &rate in &rates {
+            let model_rates: Vec<f64> = split.iter().map(|s| s * rate).collect();
+            let mk = |seed| trace_wa(&models, &model_rates, count, seed);
+            let rows = compare(&models, 50, mk, &kinds, 2.0 * 3600.0, 9);
+            let gpi = models[0].gpus_per_instance as f64;
+            let mut vals = Vec::new();
+            for (r, rep) in &rows {
+                vals.push(rep.per_instance_throughput(gpi));
+                vals.push(r.slo_attainment * 100.0);
+            }
+            json_points.push(Json::obj(vec![
+                ("rate", rate.into()),
+                (
+                    "policies",
+                    Json::arr(rows.iter().map(|(r, rep)| {
+                        Json::obj(vec![
+                            ("policy", r.policy.as_str().into()),
+                            (
+                                "per_instance_throughput",
+                                rep.per_instance_throughput(gpi).into(),
+                            ),
+                            ("slo", r.slo_attainment.into()),
+                            ("mean_gpus", r.mean_gpus.into()),
+                        ])
+                    })),
+                ),
+            ]));
+            series.push((rate, vals));
+        }
+        print_series(
+            &format!("Figure 9 — W_A {label}: per-instance req/s and %SLO"),
+            "rate",
+            &[
+                "chiron_thr",
+                "chiron_slo",
+                "llum_thr",
+                "llum_slo",
+                "llumT_thr",
+                "llumT_slo",
+            ],
+            &series,
+        );
+        out.push(Json::obj(vec![
+            ("config", label.into()),
+            ("points", Json::arr(json_points)),
+        ]));
+    }
+    let j = Json::arr(out);
+    save_result("fig9", &j);
+    j
+}
+
+/// Figure 10: W_B (interactive + batch) sweep over batch-queue size with a
+/// fixed interactive rate. Shape targets: Chiron sustains far larger batch
+/// queues with high SLO attainment; per-instance throughput higher
+/// throughout (≈50× batch sizes on batch instances).
+pub fn fig10(scale: Scale) -> Json {
+    let inter_n = scale.n(500, 2000);
+    let mut out = Vec::new();
+    let configs: Vec<(&str, Vec<crate::core::ModelSpec>, Vec<f64>, Vec<f64>)> = vec![
+        (
+            "small (8B)",
+            models_small(),
+            vec![50.0],
+            vec![2_000.0, 8_000.0, 20_000.0, 50_000.0],
+        ),
+        (
+            "large (70B)",
+            models_large(),
+            vec![10.0],
+            vec![500.0, 2_000.0, 5_000.0, 10_000.0],
+        ),
+        (
+            "mixed (8B+70B)",
+            models_mixed(),
+            vec![25.0, 5.0],
+            vec![1_000.0, 5_000.0, 12_000.0, 25_000.0],
+        ),
+    ];
+    for (label, models, inter_rates, queue_sizes) in configs {
+        let kinds = vec![
+            PolicyKind::Chiron,
+            PolicyKind::LlumnixUntuned,
+            PolicyKind::LlumnixTuned(LlumnixConfig {
+                max_batch: 256,
+                low: 0.2,
+                high: 0.7,
+                ..LlumnixConfig::untuned()
+            }),
+        ];
+        let mut series = Vec::new();
+        let mut json_points = Vec::new();
+        for &q in &queue_sizes {
+            let q_scaled = (q as usize) / if scale == Scale::Quick { 8 } else { 1 };
+            let per_model: Vec<usize> = models
+                .iter()
+                .enumerate()
+                .map(|(i, _)| if i == 0 { q_scaled } else { q_scaled / 8 })
+                .collect();
+            let mk = |seed| {
+                trace_wb(&models, &inter_rates, inter_n, &per_model, 3600.0, 10.0, seed)
+            };
+            let rows = compare(&models, 50, mk, &kinds, 6.0 * 3600.0, 10);
+            let gpi = models[0].gpus_per_instance as f64;
+            let mut vals = Vec::new();
+            for (r, rep) in &rows {
+                vals.push(rep.per_instance_throughput(gpi));
+                vals.push(r.slo_attainment * 100.0);
+            }
+            json_points.push(Json::obj(vec![
+                ("queue", q.into()),
+                (
+                    "policies",
+                    Json::arr(rows.iter().map(|(r, rep)| {
+                        Json::obj(vec![
+                            ("policy", r.policy.as_str().into()),
+                            (
+                                "per_instance_throughput",
+                                rep.per_instance_throughput(gpi).into(),
+                            ),
+                            ("slo", r.slo_attainment.into()),
+                            ("slo_batch", r.slo_batch.into()),
+                            ("gpu_hours", r.gpu_hours.into()),
+                        ])
+                    })),
+                ),
+            ]));
+            series.push((q, vals));
+        }
+        print_series(
+            &format!("Figure 10 — W_B {label}: per-instance req/s and %SLO vs batch queue"),
+            "queue",
+            &[
+                "chiron_thr",
+                "chiron_slo",
+                "llum_thr",
+                "llum_slo",
+                "llumT_thr",
+                "llumT_slo",
+            ],
+            &series,
+        );
+        out.push(Json::obj(vec![
+            ("config", label.into()),
+            ("points", Json::arr(json_points)),
+        ]));
+    }
+    let j = Json::arr(out);
+    save_result("fig10", &j);
+    j
+}

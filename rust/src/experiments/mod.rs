@@ -1,0 +1,43 @@
+//! The figure/table harness: one function per paper artifact, each printing
+//! the same rows/series the paper reports and saving machine-readable JSON
+//! under `results/`. See DESIGN.md §6 for the experiment index and
+//! EXPERIMENTS.md for paper-vs-measured.
+
+pub mod ablation;
+pub mod characterization;
+pub mod common;
+pub mod main_results;
+pub mod robustness;
+
+use crate::util::json::Json;
+use common::Scale;
+
+/// All experiment ids in run order.
+pub const ALL: &[&str] = &[
+    "fig2", "fig3", "fig4", "fig5", "fig6", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
+    "fig15", "fig16", "fig17", "fig18", "fig19",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, scale: Scale) -> Option<Json> {
+    let j = match id {
+        "fig2" => main_results::fig2(scale),
+        "fig3" => characterization::fig3(scale),
+        "fig4" => characterization::fig4(scale),
+        "fig5" => characterization::fig5(scale),
+        "fig6" => characterization::fig6(scale),
+        "fig9" => main_results::fig9(scale),
+        "fig10" => main_results::fig10(scale),
+        "fig11" => robustness::fig11(scale),
+        "fig12" => robustness::fig12(scale),
+        "fig13" => robustness::fig13(scale),
+        "fig14" => robustness::fig14(scale),
+        "fig15" => robustness::fig15(scale),
+        "fig16" => robustness::fig16(scale),
+        "fig17" => robustness::fig17(scale),
+        "fig18" => ablation::fig18(scale),
+        "fig19" => ablation::fig19(scale),
+        _ => return None,
+    };
+    Some(j)
+}

@@ -1,0 +1,397 @@
+//! Robustness analysis: Figures 11–17 (paper §6.3).
+
+use crate::coordinator::local::{LocalAutoscaler, LocalConfig};
+use crate::coordinator::waiting::WaitingTimeEstimator;
+use crate::core::{
+    InstanceClass, InstanceId, ModelSpec, RequestClass, ServingConfig, Slo,
+};
+use crate::sim::policy::{InstanceState, InstanceView};
+use crate::sim::{run_sim, SimConfig};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::r_squared;
+use crate::workload::{ArrivalProcess, ShareGptSampler, TraceBuilder, WorkloadSpec};
+
+use super::common::{chiron, chiron_with_theta, print_series, save_result, Scale};
+
+/// Closed-loop plant for the local autoscaler: ITL(b) from the analytical
+/// profile with admission at saturation. Returns (itl, batch) per decision.
+fn converge_plant(
+    model: &ModelSpec,
+    serving: ServingConfig,
+    itl_slo: f64,
+    steps: usize,
+) -> Vec<(f64, u32)> {
+    let profile = model.profile.with_config(serving);
+    let mut la = LocalAutoscaler::new(LocalConfig::default());
+    let mut mb = 8u32;
+    let mut trace = Vec::new();
+    let mean_ctx = 300u64;
+    for step in 1..=steps {
+        // The plant: instance saturated at its cap; KV pressure beyond
+        // capacity inflates effective ITL via rotation (preemptions).
+        let resident = ((profile.kv_capacity_tokens / mean_ctx) as u32).min(mb).max(1);
+        let step_t = profile.decode_step_time(resident, resident as u64 * mean_ctx)
+            * (mb as f64 / resident as f64);
+        let thr = resident as f64 * profile.tokens_per_step / step_t.max(1e-9);
+        let v = InstanceView {
+            id: InstanceId(0),
+            class: InstanceClass::Mixed,
+            model: 0,
+            state: InstanceState::Running,
+            running: mb,
+            running_interactive: 0,
+            waiting: 4,
+            max_batch: mb,
+            kv_tokens: 0,
+            kv_capacity: profile.kv_capacity_tokens,
+            last_step_time: step_t,
+            last_decode_time: step_t,
+            throughput_tokens: thr,
+            min_itl_slo: itl_slo,
+            steps: step as u64,
+        };
+        if let Some(new_mb) = la.on_step(&v) {
+            mb = new_mb;
+        }
+        trace.push((step_t, mb));
+    }
+    trace
+}
+
+/// Figure 11: converged batch size across serving configurations. Shape
+/// target: base > prefix-cache > spec-decode (both optimizations prefer
+/// smaller batches), and all converge.
+pub fn fig11(_scale: Scale) -> Json {
+    let mut out = Vec::new();
+    println!("\n=== Figure 11 — converged batch size per serving config ===");
+    println!(
+        "{:<12} {:<14} {:>16} {:>12}",
+        "model", "config", "converged_batch", "itl_ms"
+    );
+    for model in [ModelSpec::llama8b(), ModelSpec::llama70b()] {
+        for serving in [
+            ServingConfig::base(),
+            ServingConfig::with_prefix_caching(),
+            ServingConfig::with_spec_decode(),
+        ] {
+            let trace = converge_plant(&model, serving, 0.2, 400);
+            let (itl, mb) = *trace.last().unwrap();
+            println!(
+                "{:<12} {:<14} {:>16} {:>12.1}",
+                model.name,
+                serving.label(),
+                mb,
+                itl * 1000.0
+            );
+            out.push(Json::obj(vec![
+                ("model", model.name.as_str().into()),
+                ("config", serving.label().into()),
+                ("converged_batch", (mb as u64).into()),
+                ("final_itl_s", itl.into()),
+            ]));
+        }
+    }
+    let j = Json::arr(out);
+    save_result("fig11", &j);
+    j
+}
+
+/// Figure 12: local-autoscaler convergence time. Targets: minutes at most;
+/// 8B ≈ 10× faster than 70B (its step time is much shorter); batch-SLO
+/// configurations converge to larger batches.
+pub fn fig12(_scale: Scale) -> Json {
+    let mut out = Vec::new();
+    println!("\n=== Figure 12 — convergence time of the local autoscaler ===");
+    println!(
+        "{:<12} {:<14} {:>14} {:>16}",
+        "model", "slo", "conv_steps", "conv_time_s"
+    );
+    let mut conv_times = std::collections::BTreeMap::new();
+    for model in [ModelSpec::llama8b(), ModelSpec::llama70b()] {
+        for (label, slo) in [("interactive", 0.2), ("batch", 2.0)] {
+            let trace = converge_plant(&model, ServingConfig::base(), slo, 800);
+            let final_mb = trace.last().unwrap().1 as f64;
+            // Converged: first decision after which batch stays within 15%.
+            let mut conv_idx = trace.len() - 1;
+            for (i, &(_, mb)) in trace.iter().enumerate() {
+                if (mb as f64 - final_mb).abs() / final_mb < 0.15
+                    && trace[i..]
+                        .iter()
+                        .all(|&(_, m)| (m as f64 - final_mb).abs() / final_mb < 0.3)
+                {
+                    conv_idx = i;
+                    break;
+                }
+            }
+            let conv_time: f64 = trace[..=conv_idx].iter().map(|&(t, _)| t).sum();
+            println!(
+                "{:<12} {:<14} {:>14} {:>16.1}",
+                model.name, label, conv_idx, conv_time
+            );
+            conv_times.insert(format!("{}-{}", model.name, label), conv_time);
+            out.push(Json::obj(vec![
+                ("model", model.name.as_str().into()),
+                ("slo", label.into()),
+                ("conv_steps", conv_idx.into()),
+                ("conv_time_s", conv_time.into()),
+            ]));
+        }
+    }
+    let ratio = conv_times["llama70b-interactive"] / conv_times["llama8b-interactive"].max(1e-9);
+    println!("70B/8B convergence-time ratio: {ratio:.1}x (paper: ~10x; all < a few minutes)");
+    let j = Json::arr(out);
+    save_result("fig12", &j);
+    j
+}
+
+/// Figure 13: sustained queue size vs batch TTFT SLO. Target: longer SLOs
+/// hold more requests queued (more multiplexing opportunity).
+pub fn fig13(scale: Scale) -> Json {
+    let models = vec![ModelSpec::llama8b()];
+    let batch_n = scale.n(3_000, 20_000);
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for &slo in &[600.0, 1800.0, 3600.0, 7200.0] {
+        let mut rng = Rng::new(13);
+        let trace = TraceBuilder::new()
+            .sampler(ShareGptSampler::new())
+            .stream(WorkloadSpec {
+                class: RequestClass::Interactive,
+                slo: Slo::interactive_default(),
+                arrivals: ArrivalProcess::Poisson { rate: 20.0 },
+                count: scale.n(400, 2000),
+                model: 0,
+                start: 0.0,
+            })
+            .stream(WorkloadSpec {
+                class: RequestClass::Batch,
+                slo: Slo {
+                    ttft: slo,
+                    ..Slo::batch_default()
+                },
+                arrivals: ArrivalProcess::Burst { at: 5.0 },
+                count: batch_n,
+                model: 0,
+                start: 5.0,
+            })
+            .build(&mut rng);
+        let mut cfg = SimConfig::new(50, models.clone());
+        cfg.max_sim_time = slo + 3600.0;
+        cfg.timeline_every = 2;
+        let mut policy = chiron(&models);
+        let report = run_sim(cfg, trace, &mut policy);
+        // Mean sustained queue over the time the queue was non-empty.
+        let q: Vec<f64> = report
+            .timeline
+            .iter()
+            .filter(|p| p.queued_batch > 0)
+            .map(|p| p.queued_batch as f64)
+            .collect();
+        let mean_q = if q.is_empty() {
+            0.0
+        } else {
+            q.iter().sum::<f64>() / q.len() as f64
+        };
+        let queue_time = q.len() as f64 * 2.0; // timeline_every=2 ticks of 1 s
+        rows.push((slo, vec![mean_q, queue_time, report.slo_attainment() * 100.0]));
+        out.push(Json::obj(vec![
+            ("ttft_slo", slo.into()),
+            ("mean_queue", mean_q.into()),
+            ("queue_time_s", queue_time.into()),
+            ("slo_attainment", report.slo_attainment().into()),
+        ]));
+    }
+    print_series(
+        "Figure 13 — sustained batch queue vs batch TTFT SLO",
+        "ttft_slo",
+        &["mean_queue", "queue_time_s", "slo%"],
+        &rows,
+    );
+    let j = Json::arr(out);
+    save_result("fig13", &j);
+    j
+}
+
+/// Figure 14: accuracy (R²) of queue waiting-time estimation vs queue
+/// length. Target: → ~0.99 by ~2000 queued requests; conservative (worse)
+/// for short queues.
+pub fn fig14(scale: Scale) -> Json {
+    let mut rng = Rng::new(14);
+    let sampler = ShareGptSampler::new();
+    let theta = 6000.0; // tokens/s per instance (8B-like)
+    let trials = scale.n(40, 200);
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for &q_max in &[10usize, 50, 100, 500, 1000, 2000, 5000] {
+        let mut est = WaitingTimeEstimator::new(theta);
+        for _ in 0..500 {
+            let (_, o) = sampler.sample(&mut rng);
+            est.observe_completion(o);
+        }
+        est.observe_throughput(theta);
+        let mut actual = Vec::new();
+        let mut predicted = Vec::new();
+        for t in 0..trials {
+            let q = ((t + 1) * q_max) / trials;
+            let tokens: f64 = (0..q)
+                .map(|_| sampler.sample(&mut rng).1 as f64)
+                .sum();
+            actual.push(tokens / theta);
+            predicted.push(est.estimate_wait(q as f64, 1.0));
+        }
+        let r2 = r_squared(&actual, &predicted);
+        rows.push((q_max as f64, vec![r2]));
+        out.push(Json::obj(vec![
+            ("queue", q_max.into()),
+            ("r2", r2.into()),
+        ]));
+    }
+    print_series(
+        "Figure 14 — waiting-time estimator accuracy (R²) vs queue size",
+        "queue",
+        &["r2"],
+        &rows,
+    );
+    let j = Json::arr(out);
+    save_result("fig14", &j);
+    j
+}
+
+/// Figure 15: observed ITL across local-autoscaler steps. Target: converges
+/// to the SLO from below without oscillating above it persistently.
+pub fn fig15(_scale: Scale) -> Json {
+    let mut out = Vec::new();
+    for model in [ModelSpec::llama8b(), ModelSpec::llama70b()] {
+        let trace = converge_plant(&model, ServingConfig::base(), 0.2, 120);
+        let rows: Vec<(f64, Vec<f64>)> = trace
+            .iter()
+            .enumerate()
+            .step_by(4)
+            .map(|(i, &(itl, mb))| (i as f64, vec![itl * 1000.0, mb as f64]))
+            .collect();
+        print_series(
+            &format!("Figure 15 — ITL (ms) and batch across steps: {}", model.name),
+            "step",
+            &["itl_ms", "batch"],
+            &rows,
+        );
+        let final_itl = trace.last().unwrap().0;
+        out.push(Json::obj(vec![
+            ("model", model.name.as_str().into()),
+            ("final_itl_s", final_itl.into()),
+            (
+                "series",
+                Json::arr(trace.iter().enumerate().map(|(i, &(itl, mb))| {
+                    Json::obj(vec![
+                        ("step", i.into()),
+                        ("itl_s", itl.into()),
+                        ("batch", (mb as u64).into()),
+                    ])
+                })),
+            ),
+        ]));
+    }
+    let j = Json::arr(out);
+    save_result("fig15", &j);
+    j
+}
+
+/// Figure 16 (table): ITL-SLO sweep on the 70B model — % SLOs met,
+/// request throughput, and GPUs required (normalized to the tightest SLO).
+/// Target: relaxing the ITL SLO collapses the GPU requirement (100% → ~7%).
+pub fn fig16(scale: Scale) -> Json {
+    let models = vec![ModelSpec::llama70b()];
+    let count = scale.n(500, 2000);
+    let mut out = Vec::new();
+    let mut rows = Vec::new();
+    let mut base_gpuh: Option<f64> = None;
+    for &itl_slo in &[0.1, 0.2, 1.0, 10.0, 100.0] {
+        let mut rng = Rng::new(16);
+        let trace = TraceBuilder::new()
+            .sampler(ShareGptSampler::new())
+            .stream(WorkloadSpec {
+                class: RequestClass::Interactive,
+                slo: Slo {
+                    ttft: 10.0,
+                    itl: itl_slo,
+                },
+                arrivals: ArrivalProcess::Poisson { rate: 10.0 },
+                count,
+                model: 0,
+                start: 0.0,
+            })
+            .build(&mut rng);
+        let mut cfg = SimConfig::new(48, models.clone());
+        cfg.max_sim_time = 3.0 * 3600.0;
+        let mut policy = chiron(&models);
+        let report = run_sim(cfg, trace, &mut policy);
+        let gpuh = report.gpu_seconds / 3600.0;
+        let base = *base_gpuh.get_or_insert(gpuh);
+        rows.push((
+            itl_slo,
+            vec![
+                report.slo_attainment() * 100.0,
+                report.request_throughput(),
+                gpuh / base * 100.0,
+            ],
+        ));
+        out.push(Json::obj(vec![
+            ("itl_slo", itl_slo.into()),
+            ("slo_met", report.slo_attainment().into()),
+            ("throughput", report.request_throughput().into()),
+            ("gpu_required_pct", (gpuh / base * 100.0).into()),
+        ]));
+    }
+    print_series(
+        "Figure 16 (table) — ITL SLO sweep, Llama-70B (paper: 100% → 7% GPUs)",
+        "itl_slo",
+        &["slo_met%", "req/s", "gpus%"],
+        &rows,
+    );
+    let j = Json::arr(out);
+    save_result("fig16", &j);
+    j
+}
+
+/// Figure 17: SLO satisfaction vs arrival burstiness (Gamma CV) under the
+/// default over-provisioning. Target: flat near 100% until the CV exceeds
+/// what Θ-over-provisioning absorbs, then degrades.
+pub fn fig17(scale: Scale) -> Json {
+    let models = vec![ModelSpec::llama8b()];
+    let count = scale.n(600, 3000);
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for &cv in &[1.0, 2.0, 4.0, 8.0, 12.0, 16.0] {
+        let mut rng = Rng::new(17);
+        let trace = TraceBuilder::new()
+            .sampler(ShareGptSampler::new())
+            .stream(WorkloadSpec {
+                class: RequestClass::Interactive,
+                slo: Slo::interactive_default(),
+                arrivals: ArrivalProcess::Gamma { rate: 30.0, cv },
+                count,
+                model: 0,
+                start: 0.0,
+            })
+            .build(&mut rng);
+        let mut cfg = SimConfig::new(50, models.clone());
+        cfg.max_sim_time = 2.0 * 3600.0;
+        let mut policy = chiron_with_theta(&models, 1.0 / 3.0);
+        let report = run_sim(cfg, trace, &mut policy);
+        rows.push((cv, vec![report.slo_attainment() * 100.0]));
+        out.push(Json::obj(vec![
+            ("cv", cv.into()),
+            ("slo_attainment", report.slo_attainment().into()),
+        ]));
+    }
+    print_series(
+        "Figure 17 — SLO satisfaction vs burstiness (Θ = 1/3)",
+        "cv",
+        &["slo%"],
+        &rows,
+    );
+    let j = Json::arr(out);
+    save_result("fig17", &j);
+    j
+}

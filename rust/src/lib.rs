@@ -1,0 +1,36 @@
+//! # Chiron — hierarchical autoscaling for LLM serving
+//!
+//! Reproduction of *"Hierarchical Autoscaling for Large Language Model
+//! Serving with Chiron"* (Patke et al., 2025) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the Rust coordinator: global queue, preferential
+//!   router, the paper's local (batch-size) and global (instance) autoscalers,
+//!   request groups, the QLM waiting-time estimator, plus the discrete-event
+//!   cluster simulator substrate and baseline autoscalers used by the
+//!   evaluation harness.
+//! - **L2** — `python/compile/model.py`: a decoder-only transformer in JAX
+//!   (prefill + decode-step functions) lowered AOT to HLO text.
+//! - **L1** — `python/compile/kernels/decode_attention.py`: the decode
+//!   attention hot-spot as a Pallas kernel (interpret mode), validated
+//!   against a pure-jnp oracle.
+//!
+//! The runtime (`runtime` module) loads the AOT artifacts through the PJRT C
+//! API (`xla` crate) so Python never runs on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and the per-figure experiment
+//! index, and `EXPERIMENTS.md` for reproduction results.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod engine;
+pub mod experiments;
+pub mod metrics;
+pub mod perf;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,255 @@
+//! `chiron` — leader entrypoint and CLI.
+//!
+//! Subcommands:
+//!   experiment <id|all> [--quick]     regenerate a paper figure/table
+//!   simulate --config <file.json>     run one simulation from a config
+//!   trace-gen [--rate R ...]          emit a workload trace as JSON
+//!   serve [--requests N ...]          serve the real AOT model end-to-end
+//!   list                              list experiment ids
+
+use chiron::config::ExperimentConfig;
+use chiron::coordinator::{LocalAutoscaler, LocalConfig};
+use chiron::core::{InstanceClass, InstanceId};
+use chiron::engine::{EngineRequest, LlmEngine};
+use chiron::experiments::{self, common::Scale};
+use chiron::metrics::PolicyRow;
+use chiron::runtime::TinyLlmRuntime;
+use chiron::server::ServingFrontend;
+use chiron::sim::policy::{InstanceState, InstanceView};
+use chiron::sim::run_sim;
+use chiron::util::cli::Args;
+use chiron::util::rng::Rng;
+use chiron::workload::trace::{workload_a, workload_b_batch};
+use chiron::workload::TraceBuilder;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if argv.is_empty() {
+        "help".to_string()
+    } else {
+        argv.remove(0)
+    };
+    match cmd.as_str() {
+        "experiment" => cmd_experiment(argv),
+        "simulate" => cmd_simulate(argv),
+        "trace-gen" => cmd_trace_gen(argv),
+        "serve" => cmd_serve(argv),
+        "list" => {
+            for id in experiments::ALL {
+                println!("{id}");
+            }
+        }
+        "help" | "--help" | "-h" => help(),
+        other => {
+            eprintln!("unknown subcommand '{other}'\n");
+            help();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn help() {
+    println!(
+        "chiron — hierarchical autoscaling for LLM serving (paper reproduction)\n\n\
+         USAGE: chiron <subcommand> [flags]\n\n\
+         SUBCOMMANDS:\n\
+         \u{20}  experiment <id|all> [--quick]   regenerate paper figures/tables (see `chiron list`)\n\
+         \u{20}  simulate --config <file>        run a simulation described by a JSON config\n\
+         \u{20}  trace-gen [flags]               generate a workload trace (JSON to stdout)\n\
+         \u{20}  serve [flags]                   end-to-end: serve the real AOT model (needs `make artifacts`)\n\
+         \u{20}  list                            list experiment ids"
+    );
+}
+
+fn cmd_experiment(argv: Vec<String>) {
+    let args = Args::new("chiron experiment <id|all>")
+        .switch("quick", "reduced request counts (~minutes for the full suite)")
+        .parse_from(argv)
+        .unwrap_or_else(|m| {
+            eprintln!("{m}");
+            std::process::exit(2);
+        });
+    let scale = Scale::from_flag(args.get_bool("quick"));
+    let ids: Vec<String> = match args.positional().first().map(|s| s.as_str()) {
+        Some("all") | None => experiments::ALL.iter().map(|s| s.to_string()).collect(),
+        Some(id) => vec![id.to_string()],
+    };
+    for id in &ids {
+        let t0 = std::time::Instant::now();
+        match experiments::run(id, scale) {
+            Some(_) => println!("[{id} done in {:.1}s]", t0.elapsed().as_secs_f64()),
+            None => {
+                eprintln!("unknown experiment '{id}' (try `chiron list`)");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+fn cmd_simulate(argv: Vec<String>) {
+    let args = Args::new("chiron simulate")
+        .flag("config", "configs/quickstart.json", "experiment config JSON")
+        .parse_from(argv)
+        .unwrap_or_else(|m| {
+            eprintln!("{m}");
+            std::process::exit(2);
+        });
+    let cfg = match ExperimentConfig::load(args.get("config")) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let mut rng = Rng::new(cfg.seed);
+    let trace = cfg.trace(&mut rng);
+    println!(
+        "simulating {} requests on {} GPUs ...",
+        trace.len(),
+        cfg.gpus
+    );
+    let mut policy = cfg.policy();
+    let report = run_sim(cfg.sim_config(), trace, policy.as_mut());
+    let row = PolicyRow::from_report(&report);
+    println!("{}", PolicyRow::header());
+    println!("{}", row.line());
+    println!("{}", row.to_json());
+}
+
+fn cmd_trace_gen(argv: Vec<String>) {
+    let args = Args::new("chiron trace-gen")
+        .flag("rate", "20", "interactive arrival rate (req/s)")
+        .flag("count", "1000", "interactive request count")
+        .flag("batch", "0", "batch request count (burst at t=batch-at)")
+        .flag("batch-at", "0", "batch burst time (s)")
+        .flag("batch-slo", "3600", "batch TTFT SLO (s)")
+        .flag("seed", "42", "RNG seed")
+        .parse_from(argv)
+        .unwrap_or_else(|m| {
+            eprintln!("{m}");
+            std::process::exit(2);
+        });
+    let mut rng = Rng::new(args.get_u64("seed"));
+    let mut tb = TraceBuilder::new().stream(workload_a(
+        args.get_f64("rate"),
+        args.get_usize("count"),
+        0,
+    ));
+    if args.get_usize("batch") > 0 {
+        tb = tb.stream(workload_b_batch(
+            args.get_usize("batch"),
+            args.get_f64("batch-at"),
+            0,
+            args.get_f64("batch-slo"),
+        ));
+    }
+    let trace = tb.build(&mut rng);
+    println!("{}", trace.to_json());
+}
+
+/// End-to-end real serving: load artifacts, serve synthetic prompts through
+/// the engine with the Chiron local autoscaler controlling batch size.
+fn cmd_serve(argv: Vec<String>) {
+    let args = Args::new("chiron serve")
+        .flag("artifacts", "artifacts", "AOT artifacts directory")
+        .flag("requests", "32", "number of synthetic requests")
+        .flag("max-new-tokens", "24", "tokens to generate per request")
+        .flag("max-batch", "8", "initial max batch size")
+        .flag("seed", "1", "RNG seed")
+        .switch("no-autoscale", "disable the local batch-size autoscaler")
+        .parse_from(argv)
+        .unwrap_or_else(|m| {
+            eprintln!("{m}");
+            std::process::exit(2);
+        });
+    let artifacts = args.get("artifacts").to_string();
+    // Fail fast with a clear message before spawning the worker.
+    if let Err(e) = chiron::runtime::Manifest::load(&artifacts) {
+        eprintln!("failed to load artifacts: {e:#}\nrun `make artifacts` first");
+        std::process::exit(1);
+    }
+    let max_batch = args.get_usize("max-batch");
+    let factory = {
+        let artifacts = artifacts.clone();
+        move || -> anyhow::Result<LlmEngine> {
+            let rt = TinyLlmRuntime::load(&artifacts)?;
+            println!(
+                "loaded tiny model: vocab={} layers={} d_model={} variants={:?}",
+                rt.manifest.dims.vocab,
+                rt.manifest.dims.n_layers,
+                rt.manifest.dims.d_model,
+                rt.batch_variants()
+            );
+            Ok(LlmEngine::new(rt, max_batch))
+        }
+    };
+
+    // The same Algorithm-1 controller that drives the simulator, wired to
+    // the real engine's observed step times.
+    let controller: Option<chiron::server::BatchController> = if args.get_bool("no-autoscale") {
+        None
+    } else {
+        let mut la = LocalAutoscaler::new(LocalConfig {
+            default_itl_slo: 0.05, // CPU-scale ITL SLO for the tiny model
+            ..LocalConfig::default()
+        });
+        Some(Box::new(move |st: &chiron::engine::EngineStats| {
+            let v = InstanceView {
+                id: InstanceId(0),
+                class: InstanceClass::Mixed,
+                model: 0,
+                state: InstanceState::Running,
+                running: st.running as u32,
+                running_interactive: st.running as u32,
+                waiting: st.waiting as u32,
+                max_batch: st.max_batch as u32,
+                kv_tokens: 0,
+                kv_capacity: 1,
+                last_step_time: st.last_step_time,
+                last_decode_time: st.last_step_time,
+                throughput_tokens: if st.last_step_time > 0.0 {
+                    st.running as f64 / st.last_step_time
+                } else {
+                    0.0
+                },
+                min_itl_slo: 0.05,
+                steps: st.steps,
+            };
+            la.on_step(&v).map(|b| (b as usize).min(8))
+        }))
+    };
+
+    let front = ServingFrontend::start(factory, controller);
+    let mut rng = Rng::new(args.get_u64("seed"));
+    let n = args.get_usize("requests");
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        let plen = 4 + rng.index(24);
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.index(255) as i32 + 1).collect();
+        front
+            .submit(EngineRequest {
+                id: i as u64,
+                prompt,
+                max_new_tokens: args.get_usize("max-new-tokens"),
+                arrival: None,
+            })
+            .expect("submit");
+    }
+    let outcomes = front.wait_for(n, std::time::Duration::from_secs(600));
+    let wall = t0.elapsed().as_secs_f64();
+    let total_tokens: usize = outcomes.iter().map(|o| o.tokens.len()).sum();
+    let mean_ttft =
+        outcomes.iter().map(|o| o.ttft).sum::<f64>() / outcomes.len().max(1) as f64;
+    let mean_itl =
+        outcomes.iter().map(|o| o.mean_itl).sum::<f64>() / outcomes.len().max(1) as f64;
+    println!(
+        "served {} requests in {:.2}s: {:.1} req/s, {:.0} tok/s, mean TTFT {:.1} ms, mean ITL {:.2} ms",
+        outcomes.len(),
+        wall,
+        outcomes.len() as f64 / wall,
+        total_tokens as f64 / wall,
+        mean_ttft * 1000.0,
+        mean_itl * 1000.0
+    );
+    front.shutdown().expect("engine shutdown");
+}

@@ -1,0 +1,206 @@
+//! Metrics aggregation over request outcomes and sim reports: SLO
+//! attainment, latency percentiles, throughput, GPU efficiency, hysteresis.
+
+use crate::core::{RequestClass, RequestOutcome};
+use crate::sim::SimReport;
+use crate::util::json::Json;
+use crate::util::stats::Percentiles;
+
+/// Aggregated serving metrics for a set of outcomes.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub count: usize,
+    pub slo_attainment: f64,
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    pub itl_mean: f64,
+    pub itl_p99: f64,
+    pub preemptions_per_request: f64,
+    pub mean_output_tokens: f64,
+}
+
+impl Summary {
+    pub fn of(outcomes: &[RequestOutcome]) -> Summary {
+        let mut ttft = Percentiles::new();
+        let mut itl = Percentiles::new();
+        let mut met = 0usize;
+        let mut preempt = 0u64;
+        let mut out_tokens = 0u64;
+        for o in outcomes {
+            ttft.push(o.ttft());
+            itl.push(o.mean_itl);
+            if o.slo_met() {
+                met += 1;
+            }
+            preempt += o.preemptions as u64;
+            out_tokens += o.output_tokens as u64;
+        }
+        let n = outcomes.len();
+        Summary {
+            count: n,
+            slo_attainment: if n == 0 { 1.0 } else { met as f64 / n as f64 },
+            ttft_p50: ttft.pct(50.0),
+            ttft_p99: ttft.pct(99.0),
+            itl_mean: itl.mean(),
+            itl_p99: itl.pct(99.0),
+            preemptions_per_request: if n == 0 { 0.0 } else { preempt as f64 / n as f64 },
+            mean_output_tokens: if n == 0 { 0.0 } else { out_tokens as f64 / n as f64 },
+        }
+    }
+
+    pub fn of_class(outcomes: &[RequestOutcome], class: RequestClass) -> Summary {
+        let filtered: Vec<RequestOutcome> = outcomes
+            .iter()
+            .filter(|o| o.class == class)
+            .cloned()
+            .collect();
+        Summary::of(&filtered)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", self.count.into()),
+            ("slo_attainment", self.slo_attainment.into()),
+            ("ttft_p50", self.ttft_p50.into()),
+            ("ttft_p99", self.ttft_p99.into()),
+            ("itl_mean", self.itl_mean.into()),
+            ("itl_p99", self.itl_p99.into()),
+            (
+                "preemptions_per_request",
+                self.preemptions_per_request.into(),
+            ),
+            ("mean_output_tokens", self.mean_output_tokens.into()),
+        ])
+    }
+}
+
+/// One comparison row for the experiment tables (a policy's run).
+#[derive(Debug, Clone)]
+pub struct PolicyRow {
+    pub policy: String,
+    pub slo_attainment: f64,
+    pub slo_interactive: f64,
+    pub slo_batch: f64,
+    pub request_throughput: f64,
+    pub mean_gpus: f64,
+    pub peak_gpus: u32,
+    pub gpu_hours: f64,
+    pub hysteresis: f64,
+    pub unfinished: usize,
+}
+
+impl PolicyRow {
+    pub fn from_report(r: &SimReport) -> PolicyRow {
+        PolicyRow {
+            policy: r.policy.clone(),
+            slo_attainment: r.slo_attainment(),
+            slo_interactive: r.slo_attainment_class(RequestClass::Interactive),
+            slo_batch: r.slo_attainment_class(RequestClass::Batch),
+            request_throughput: r.request_throughput(),
+            mean_gpus: r.mean_gpus(),
+            peak_gpus: r.peak_gpus(),
+            gpu_hours: r.gpu_seconds / 3600.0,
+            hysteresis: r.hysteresis(),
+            unfinished: r.unfinished,
+        }
+    }
+
+    pub fn header() -> String {
+        format!(
+            "{:<16} {:>8} {:>8} {:>8} {:>9} {:>9} {:>9} {:>9} {:>10} {:>6}",
+            "policy",
+            "slo%",
+            "slo_i%",
+            "slo_b%",
+            "req/s",
+            "meanGPU",
+            "peakGPU",
+            "GPUh",
+            "hysteresis",
+            "unfin"
+        )
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<16} {:>8.1} {:>8.1} {:>8.1} {:>9.2} {:>9.1} {:>9} {:>9.2} {:>10.2} {:>6}",
+            self.policy,
+            self.slo_attainment * 100.0,
+            self.slo_interactive * 100.0,
+            self.slo_batch * 100.0,
+            self.request_throughput,
+            self.mean_gpus,
+            self.peak_gpus,
+            self.gpu_hours,
+            self.hysteresis,
+            self.unfinished
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", self.policy.as_str().into()),
+            ("slo_attainment", self.slo_attainment.into()),
+            ("slo_interactive", self.slo_interactive.into()),
+            ("slo_batch", self.slo_batch.into()),
+            ("request_throughput", self.request_throughput.into()),
+            ("mean_gpus", self.mean_gpus.into()),
+            ("peak_gpus", (self.peak_gpus as u64).into()),
+            ("gpu_hours", self.gpu_hours.into()),
+            ("hysteresis", self.hysteresis.into()),
+            ("unfinished", self.unfinished.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{RequestId, Slo};
+
+    fn outcome(ttft: f64, itl: f64, met_class: RequestClass) -> RequestOutcome {
+        RequestOutcome {
+            id: RequestId(0),
+            class: met_class,
+            slo: Slo::interactive_default(),
+            model: 0,
+            arrival: 0.0,
+            first_token: ttft,
+            completion: ttft + itl * 10.0,
+            input_tokens: 10,
+            output_tokens: 11,
+            mean_itl: itl,
+            max_itl: itl,
+            preemptions: 1,
+        }
+    }
+
+    #[test]
+    fn summary_counts_and_attainment() {
+        let outs = vec![
+            outcome(1.0, 0.1, RequestClass::Interactive), // met
+            outcome(20.0, 0.1, RequestClass::Interactive), // ttft miss
+            outcome(1.0, 0.5, RequestClass::Interactive), // itl miss
+        ];
+        let s = Summary::of(&outs);
+        assert_eq!(s.count, 3);
+        assert!((s.slo_attainment - 1.0 / 3.0).abs() < 1e-9);
+        assert_eq!(s.preemptions_per_request, 1.0);
+    }
+
+    #[test]
+    fn empty_summary_is_benign() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.slo_attainment, 1.0);
+    }
+
+    #[test]
+    fn class_filter() {
+        let outs = vec![
+            outcome(1.0, 0.1, RequestClass::Interactive),
+            outcome(1.0, 0.1, RequestClass::Batch),
+        ];
+        assert_eq!(Summary::of_class(&outs, RequestClass::Batch).count, 1);
+    }
+}

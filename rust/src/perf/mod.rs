@@ -1,0 +1,153 @@
+//! Instance performance analysis: batch-size sweeps that regenerate the
+//! paper's Figure 3 shapes (ITL and token throughput vs. batch size) on the
+//! simulated substrate, plus a closed-form steady-state approximation used
+//! by quick estimates and tests.
+
+use crate::core::{ModelSpec, PerfProfile, RequestClass, ServingConfig, Slo, Time};
+use crate::baselines::StaticPolicy;
+use crate::sim::{run_sim, SimConfig};
+use crate::util::rng::Rng;
+use crate::workload::{ArrivalProcess, ShareGptSampler, TraceBuilder, WorkloadSpec};
+
+/// One point on the batch-size sweep curve.
+#[derive(Debug, Clone)]
+pub struct CurvePoint {
+    pub batch: u32,
+    /// Mean observed inter-token latency (s).
+    pub itl: Time,
+    /// Token throughput (tokens/s).
+    pub token_throughput: f64,
+    /// Preemptions per completed request.
+    pub preemptions: f64,
+}
+
+/// Closed-form steady-state approximation (no preemption dynamics): decode
+/// ITL and throughput at batch `b` with mean context `ctx` tokens/request.
+pub fn steady_state(profile: &PerfProfile, b: u32, ctx: u64) -> (Time, f64) {
+    let resident = ((profile.kv_capacity_tokens / ctx.max(1)) as u32).min(b).max(1);
+    // Requests beyond KV residency rotate through eviction: each token for
+    // an over-committed batch takes b/resident steps on average.
+    let step = profile.decode_step_time(resident, resident as u64 * ctx);
+    let rotation = b as f64 / resident as f64;
+    let itl = step * rotation;
+    // Re-prefill overhead for rotated-out requests erodes throughput.
+    let overhead = if b > resident {
+        let frac_evicted = 1.0 - resident as f64 / b as f64;
+        1.0 + frac_evicted * profile.prefill_time(ctx as u32) / step.max(1e-9) * 0.1
+    } else {
+        1.0
+    };
+    let throughput = resident as f64 * profile.tokens_per_step / (step * overhead);
+    (itl, throughput)
+}
+
+/// Sweep batch sizes on a single simulated instance fed a saturating batch
+/// workload (the Figure 3 methodology). Returns one point per batch size.
+pub fn batch_sweep(
+    model: &ModelSpec,
+    serving: ServingConfig,
+    batches: &[u32],
+    requests: usize,
+    itl_slo: Time,
+    seed: u64,
+) -> Vec<CurvePoint> {
+    let mut out = Vec::new();
+    for &b in batches {
+        let mut rng = Rng::new(seed ^ b as u64);
+        // Saturating workload: all requests queued up front.
+        let trace = TraceBuilder::new()
+            .sampler(ShareGptSampler::new())
+            .stream(WorkloadSpec {
+                class: RequestClass::Batch,
+                slo: Slo {
+                    ttft: 1e9,
+                    itl: itl_slo,
+                },
+                arrivals: ArrivalProcess::Burst { at: 0.0 },
+                count: requests,
+                model: 0,
+                start: 0.0,
+            })
+            .build(&mut rng);
+        let mut cfg = SimConfig::new(model.gpus_per_instance, vec![model.clone()])
+            .with_serving(vec![serving]);
+        cfg.timeline_every = 0;
+        cfg.max_sim_time = 1e7;
+        let mut policy = StaticPolicy::new(vec![1], b);
+        let report = run_sim(cfg, trace, &mut policy);
+        let n = report.outcomes.len().max(1);
+        let itl_mean: f64 =
+            report.outcomes.iter().map(|o| o.mean_itl).sum::<f64>() / n as f64;
+        let preempt: f64 =
+            report.outcomes.iter().map(|o| o.preemptions as f64).sum::<f64>() / n as f64;
+        let tok_thr = report.total_tokens / report.end_time.max(1e-9);
+        out.push(CurvePoint {
+            batch: b,
+            itl: itl_mean,
+            token_throughput: tok_thr,
+            preemptions: preempt,
+        });
+    }
+    out
+}
+
+/// Locate the throughput inflection point of a curve (the batch size after
+/// which throughput declines), if any.
+pub fn inflection(curve: &[CurvePoint]) -> Option<u32> {
+    let peak = curve
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.token_throughput.partial_cmp(&b.1.token_throughput).unwrap())?;
+    if peak.0 + 1 < curve.len() {
+        Some(peak.1.batch)
+    } else {
+        None // monotone within the sweep range
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_form_itl_monotone_in_batch() {
+        let p = ModelSpec::llama8b().profile;
+        let mut prev = 0.0;
+        for b in [1u32, 16, 128, 1024, 4096] {
+            let (itl, _) = steady_state(&p, b, 300);
+            assert!(itl >= prev);
+            prev = itl;
+        }
+    }
+
+    #[test]
+    fn closed_form_throughput_saturates_past_capacity() {
+        let p = ModelSpec::llama8b().profile;
+        let resident_limit = (p.kv_capacity_tokens / 300) as u32;
+        let (_, thr_in) = steady_state(&p, resident_limit / 2, 300);
+        let (_, thr_over) = steady_state(&p, resident_limit * 4, 300);
+        assert!(
+            thr_over < thr_in * 1.05,
+            "over-capacity throughput should not keep growing: {thr_in} -> {thr_over}"
+        );
+    }
+
+    #[test]
+    fn sweep_reproduces_figure3_shape_small_model() {
+        // ITL grows with batch; throughput grows at small batch.
+        let curve = batch_sweep(
+            &ModelSpec::llama8b(),
+            ServingConfig::default(),
+            &[1, 8, 64, 256],
+            300,
+            2.0,
+            42,
+        );
+        assert_eq!(curve.len(), 4);
+        assert!(curve[3].itl > curve[0].itl, "{curve:?}");
+        assert!(
+            curve[3].token_throughput > curve[0].token_throughput * 4.0,
+            "{curve:?}"
+        );
+    }
+}

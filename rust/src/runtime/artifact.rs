@@ -1,0 +1,171 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime (shapes, batch variants, file names).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model dimensions as recorded by the AOT pipeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub d_head: usize,
+    pub seed: u64,
+}
+
+/// One batch variant's artifact files.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    pub batch: usize,
+    pub prefill: PathBuf,
+    pub decode: PathBuf,
+    pub cache_shape: Vec<usize>,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dims: ModelDims,
+    pub variants: Vec<ArtifactSet>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let m = j.get("model");
+        let need = |k: &str| -> Result<u64> {
+            m.get(k)
+                .as_u64()
+                .with_context(|| format!("manifest model.{k} missing"))
+        };
+        let dims = ModelDims {
+            vocab: need("vocab")? as usize,
+            d_model: need("d_model")? as usize,
+            n_heads: need("n_heads")? as usize,
+            n_layers: need("n_layers")? as usize,
+            d_ff: need("d_ff")? as usize,
+            max_seq: need("max_seq")? as usize,
+            d_head: need("d_head")? as usize,
+            seed: need("seed")?,
+        };
+        let mut variants = Vec::new();
+        let arts = j
+            .get("artifacts")
+            .as_obj()
+            .context("manifest artifacts missing")?;
+        for (b, entry) in arts {
+            let batch: usize = b.parse().context("bad batch key")?;
+            let prefill = dir.join(
+                entry
+                    .get("prefill")
+                    .as_str()
+                    .context("prefill path missing")?,
+            );
+            let decode = dir.join(
+                entry
+                    .get("decode")
+                    .as_str()
+                    .context("decode path missing")?,
+            );
+            let cache_shape: Vec<usize> = entry
+                .get("cache_shape")
+                .as_arr()
+                .context("cache_shape missing")?
+                .iter()
+                .filter_map(|x| x.as_u64().map(|v| v as usize))
+                .collect();
+            if !prefill.exists() || !decode.exists() {
+                bail!("artifact files missing for batch {batch}");
+            }
+            variants.push(ArtifactSet {
+                batch,
+                prefill,
+                decode,
+                cache_shape,
+            });
+        }
+        variants.sort_by_key(|v| v.batch);
+        if variants.is_empty() {
+            bail!("manifest has no batch variants");
+        }
+        Ok(Manifest { dims, variants, dir })
+    }
+
+    /// Largest compiled batch variant that is <= `want` (fallback: smallest).
+    pub fn variant_for(&self, want: usize) -> &ArtifactSet {
+        self.variants
+            .iter()
+            .rev()
+            .find(|v| v.batch <= want.max(1))
+            .unwrap_or(&self.variants[0])
+    }
+
+    /// Cache element count for a batch variant.
+    pub fn cache_len(&self, batch: usize) -> usize {
+        self.dims.n_layers * 2 * batch * self.dims.max_seq * self.dims.n_heads * self.dims.d_head
+    }
+}
+
+/// Default artifacts directory: $CHIRON_ARTIFACTS or ./artifacts.
+pub fn default_dir() -> PathBuf {
+    std::env::var("CHIRON_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, variants: &[usize]) {
+        let mut arts = String::new();
+        for (i, b) in variants.iter().enumerate() {
+            if i > 0 {
+                arts.push(',');
+            }
+            std::fs::write(dir.join(format!("prefill_b{b}.hlo.txt")), "HloModule x").unwrap();
+            std::fs::write(dir.join(format!("decode_b{b}.hlo.txt")), "HloModule x").unwrap();
+            arts.push_str(&format!(
+                r#""{b}": {{"prefill": "prefill_b{b}.hlo.txt", "decode": "decode_b{b}.hlo.txt", "cache_shape": [2,2,{b},128,4,16]}}"#
+            ));
+        }
+        let manifest = format!(
+            r#"{{"model": {{"vocab":256,"d_model":64,"n_heads":4,"n_layers":2,"d_ff":192,"max_seq":128,"d_head":16,"seed":0}},
+                "batch_variants": [1], "artifacts": {{{arts}}}}}"#
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    }
+
+    #[test]
+    fn load_and_select_variants() {
+        let dir = std::env::temp_dir().join(format!("chiron-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, &[1, 2, 4, 8]);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.dims.vocab, 256);
+        assert_eq!(m.variants.len(), 4);
+        assert_eq!(m.variant_for(1).batch, 1);
+        assert_eq!(m.variant_for(3).batch, 2);
+        assert_eq!(m.variant_for(8).batch, 8);
+        assert_eq!(m.variant_for(100).batch, 8);
+        assert_eq!(m.variant_for(0).batch, 1);
+        assert_eq!(m.cache_len(2), 2 * 2 * 2 * 128 * 4 * 16);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        assert!(Manifest::load("/nonexistent/dir").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them through the `xla` crate's PJRT
+//! CPU client. This is the only place the process touches XLA; Python never
+//! runs on the request path.
+
+pub mod artifact;
+pub mod pjrt;
+
+pub use artifact::{ArtifactSet, Manifest, ModelDims};
+pub use pjrt::{CompiledFn, TinyLlmRuntime};

@@ -1,0 +1,187 @@
+//! PJRT execution: compile HLO-text artifacts once, run them many times.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: HLO text →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Outputs are 1-tuples (prefill and
+//! decode return (logits, cache) as a 2-tuple inside the lowering's
+//! return_tuple wrapper).
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use super::artifact::{ArtifactSet, Manifest};
+
+/// One compiled XLA executable.
+pub struct CompiledFn {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl CompiledFn {
+    pub fn load(client: &xla::PjRtClient, path: &std::path::Path, name: &str) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        Ok(CompiledFn {
+            exe,
+            name: name.to_string(),
+        })
+    }
+
+    /// Execute with literal inputs; returns the untupled outputs.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("sync {}: {e:?}", self.name))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {}: {e:?}", self.name))
+    }
+}
+
+/// The tiny-LLM runtime: compiled (prefill, decode) per batch variant plus
+/// the dimensions needed to shape inputs.
+pub struct TinyLlmRuntime {
+    pub manifest: Manifest,
+    prefill: HashMap<usize, CompiledFn>,
+    decode: HashMap<usize, CompiledFn>,
+}
+
+impl TinyLlmRuntime {
+    /// Load + compile every batch variant in the manifest (done once at
+    /// startup; compilation is off the request path).
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        let mut prefill = HashMap::new();
+        let mut decode = HashMap::new();
+        for v in &manifest.variants {
+            prefill.insert(
+                v.batch,
+                CompiledFn::load(&client, &v.prefill, &format!("prefill_b{}", v.batch))?,
+            );
+            decode.insert(
+                v.batch,
+                CompiledFn::load(&client, &v.decode, &format!("decode_b{}", v.batch))?,
+            );
+        }
+        Ok(TinyLlmRuntime {
+            manifest,
+            prefill,
+            decode,
+        })
+    }
+
+    pub fn batch_variants(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.decode.keys().copied().collect();
+        v.sort();
+        v
+    }
+
+    fn variant(&self, want: usize) -> &ArtifactSet {
+        self.manifest.variant_for(want)
+    }
+
+    /// Run prefill for up to `variant` rows: `tokens` is row-major
+    /// [b, max_seq] i32 (padded), `lengths` is [b]. Returns (logits, cache)
+    /// flattened as f32 vectors.
+    pub fn prefill(
+        &self,
+        batch: usize,
+        tokens: &[i32],
+        lengths: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let v = self.variant(batch);
+        let b = v.batch;
+        let s = self.manifest.dims.max_seq;
+        anyhow::ensure!(tokens.len() == b * s, "tokens len {} != {}", tokens.len(), b * s);
+        anyhow::ensure!(lengths.len() == b, "lengths len");
+        let tok = xla::Literal::vec1(tokens)
+            .reshape(&[b as i64, s as i64])
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let len = xla::Literal::vec1(lengths);
+        let f = self.prefill.get(&b).context("variant not compiled")?;
+        let out = f.run(&[tok, len])?;
+        anyhow::ensure!(out.len() == 2, "prefill must return (logits, cache)");
+        let logits = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let cache = out[1]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok((logits, cache))
+    }
+
+    /// Run one decode step: `tokens`/`positions` are [b] i32; `cache` is the
+    /// flattened cache for this variant. Returns (logits, new cache).
+    pub fn decode(
+        &self,
+        batch: usize,
+        tokens: &[i32],
+        positions: &[i32],
+        cache: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let v = self.variant(batch);
+        let b = v.batch;
+        anyhow::ensure!(tokens.len() == b && positions.len() == b, "batch mismatch");
+        let expect_cache = self.manifest.cache_len(b);
+        anyhow::ensure!(
+            cache.len() == expect_cache,
+            "cache len {} != {}",
+            cache.len(),
+            expect_cache
+        );
+        let d = &self.manifest.dims;
+        let tok = xla::Literal::vec1(tokens);
+        let pos = xla::Literal::vec1(positions);
+        let cache_dims = [
+            d.n_layers as i64,
+            2,
+            b as i64,
+            d.max_seq as i64,
+            d.n_heads as i64,
+            d.d_head as i64,
+        ];
+        let cache_lit = xla::Literal::vec1(cache)
+            .reshape(&cache_dims)
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let f = self.decode.get(&b).context("variant not compiled")?;
+        let out = f.run(&[tok, pos, cache_lit])?;
+        anyhow::ensure!(out.len() == 2, "decode must return (logits, cache)");
+        let logits = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let new_cache = out[1]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok((logits, new_cache))
+    }
+
+    /// Greedy argmax over a row of logits.
+    pub fn argmax_row(&self, logits: &[f32], row: usize) -> i32 {
+        let v = self.manifest.dims.vocab;
+        let slice = &logits[row * v..(row + 1) * v];
+        let mut best = 0usize;
+        let mut bv = f32::NEG_INFINITY;
+        for (i, &x) in slice.iter().enumerate() {
+            if x > bv {
+                bv = x;
+                best = i;
+            }
+        }
+        best as i32
+    }
+
+    /// Zeroed cache for a batch variant.
+    pub fn empty_cache(&self, batch: usize) -> Vec<f32> {
+        vec![0.0; self.manifest.cache_len(self.variant(batch).batch)]
+    }
+}

@@ -1,0 +1,148 @@
+//! Thread-based serving front-end for the real engine.
+//!
+//! The engine loop runs on a worker thread; clients submit requests through
+//! a channel and poll completions. A pluggable batch-size controller hook
+//! lets the end-to-end example drive the engine with the same
+//! `coordinator::LocalAutoscaler` the simulator uses (no HTTP stack is
+//! available offline; `examples/quickstart.rs` exposes a line-protocol TCP
+//! front-end on top of this).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::engine::{EngineOutcome, EngineRequest, EngineStats, LlmEngine};
+
+/// Batch-size controller callback: observes engine stats after each step and
+/// may return a new max batch.
+pub type BatchController = Box<dyn FnMut(&EngineStats) -> Option<usize> + Send>;
+
+/// Handle to a running serving front-end.
+pub struct ServingFrontend {
+    tx: Sender<EngineRequest>,
+    outcomes: Arc<Mutex<Vec<EngineOutcome>>>,
+    stats: Arc<Mutex<EngineStats>>,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<JoinHandle<Result<()>>>,
+}
+
+impl ServingFrontend {
+    /// Spawn the engine loop on a worker thread. The engine is constructed
+    /// *inside* the worker via `factory` because PJRT handles (`xla` crate)
+    /// are not `Send` — the executables never leave the thread that
+    /// compiled them.
+    pub fn start<F>(factory: F, mut controller: Option<BatchController>) -> Self
+    where
+        F: FnOnce() -> Result<LlmEngine> + Send + 'static,
+    {
+        let (tx, rx): (Sender<EngineRequest>, Receiver<EngineRequest>) = channel();
+        let outcomes = Arc::new(Mutex::new(Vec::new()));
+        let stats = Arc::new(Mutex::new(EngineStats::default()));
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let out_c = outcomes.clone();
+        let stats_c = stats.clone();
+        let stop = shutdown.clone();
+        let handle = std::thread::spawn(move || -> Result<()> {
+            let mut engine = factory()?;
+            *stats_c.lock().unwrap() = engine.stats();
+            loop {
+                // Drain the submission channel.
+                loop {
+                    match rx.try_recv() {
+                        Ok(req) => engine.submit(req),
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            stop.store(true, Ordering::SeqCst);
+                            break;
+                        }
+                    }
+                }
+                if engine.is_idle() {
+                    if stop.load(Ordering::SeqCst) {
+                        return Ok(());
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    continue;
+                }
+                let done = engine.step()?;
+                let st = engine.stats();
+                if let Some(ctrl) = controller.as_mut() {
+                    if let Some(mb) = ctrl(&st) {
+                        engine.max_batch = mb.max(1);
+                    }
+                }
+                *stats_c.lock().unwrap() = st;
+                if !done.is_empty() {
+                    out_c.lock().unwrap().extend(done);
+                }
+            }
+        });
+
+        ServingFrontend {
+            tx,
+            outcomes,
+            stats,
+            shutdown,
+            handle: Some(handle),
+        }
+    }
+
+    pub fn submit(&self, req: EngineRequest) -> Result<()> {
+        self.tx
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("engine thread terminated"))
+    }
+
+    /// Take completed outcomes accumulated so far.
+    pub fn take_outcomes(&self) -> Vec<EngineOutcome> {
+        std::mem::take(&mut *self.outcomes.lock().unwrap())
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Wait until `n` outcomes have accumulated (or timeout), then take them.
+    pub fn wait_for(&self, n: usize, timeout: std::time::Duration) -> Vec<EngineOutcome> {
+        let start = std::time::Instant::now();
+        loop {
+            {
+                let got = self.outcomes.lock().unwrap();
+                if got.len() >= n {
+                    break;
+                }
+            }
+            if start.elapsed() > timeout {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        self.take_outcomes()
+    }
+
+    /// Signal shutdown and join the worker.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow::anyhow!("engine thread panicked")),
+            }
+        } else {
+            Ok(())
+        }
+    }
+}
+
+impl Drop for ServingFrontend {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,669 @@
+//! The discrete-event cluster simulator: a GPU pool, serving-instance
+//! lifecycle (Loading → Running → Draining → Retired), a per-model global
+//! queue, and the event loop that drives an autoscaling `Policy` over a
+//! request trace.
+//!
+//! Event types: request arrivals, engine-step completions, instance-ready
+//! (model load finished), and the periodic autoscaler tick. Determinism:
+//! events at equal timestamps are ordered by insertion sequence.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+use crate::core::{
+    InstanceClass, InstanceId, ModelSpec, RequestClass, RequestOutcome, ServingConfig, Time,
+};
+use crate::sim::instance::{SimInstance, WorkItem};
+use crate::sim::policy::{
+    Action, ClusterView, InstanceState, InstanceView, Policy, QueueStats, QueuedReq, Route,
+};
+use crate::workload::Trace;
+
+/// Hard clamp on policy-requested batch sizes (the paper's observed maximum
+/// useful batch is 4096; 16384 leaves room for sweep experiments).
+pub const MAX_BATCH_CLAMP: u32 = 16_384;
+
+/// Deadline-sample size exposed to policies for large batch queues.
+const QUEUE_SAMPLE: usize = 2_048;
+
+/// Simulator configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub gpus_total: u32,
+    pub models: Vec<ModelSpec>,
+    /// Per-model serving optimizations (prefix caching / spec decode).
+    pub serving: Vec<ServingConfig>,
+    /// Global-autoscaler tick interval in seconds.
+    pub tick_interval: Time,
+    /// Safety cap on simulated time.
+    pub max_sim_time: Time,
+    /// Sample the timeline every `timeline_every` ticks (0 = off).
+    pub timeline_every: u32,
+    /// Skip model-load delay for bootstrap instances (warm start, as in the
+    /// paper's experiments which begin from a provisioned cluster).
+    pub warm_bootstrap: bool,
+}
+
+impl SimConfig {
+    pub fn new(gpus_total: u32, models: Vec<ModelSpec>) -> Self {
+        let n = models.len();
+        SimConfig {
+            gpus_total,
+            models,
+            serving: vec![ServingConfig::default(); n],
+            tick_interval: 1.0,
+            max_sim_time: 24.0 * 3600.0,
+            timeline_every: 5,
+            warm_bootstrap: true,
+        }
+    }
+
+    pub fn with_serving(mut self, serving: Vec<ServingConfig>) -> Self {
+        assert_eq!(serving.len(), self.models.len());
+        self.serving = serving;
+        self
+    }
+}
+
+/// One sampled timeline point (cluster state at a tick).
+#[derive(Debug, Clone)]
+pub struct TimelinePoint {
+    pub t: Time,
+    pub gpus_used: u32,
+    pub instances_interactive: u32,
+    pub instances_mixed: u32,
+    pub instances_batch: u32,
+    pub queued_batch: usize,
+    pub running_requests: u32,
+    /// Mean max-batch across running instances.
+    pub mean_max_batch: f64,
+    /// Mean KV utilization across running instances.
+    pub mean_kv_util: f64,
+}
+
+/// Simulation output.
+#[derive(Debug, Default)]
+pub struct SimReport {
+    pub policy: String,
+    pub outcomes: Vec<RequestOutcome>,
+    pub timeline: Vec<TimelinePoint>,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// Integrated GPU·seconds consumed.
+    pub gpu_seconds: f64,
+    /// Simulated end time (all requests done or cap reached).
+    pub end_time: Time,
+    pub total_requests: usize,
+    /// Requests still unfinished at end (cap reached).
+    pub unfinished: usize,
+    pub total_tokens: f64,
+}
+
+impl SimReport {
+    /// Fraction of requests meeting both SLO components.
+    pub fn slo_attainment(&self) -> f64 {
+        // Unfinished requests count as violations.
+        if self.total_requests == 0 {
+            return 1.0;
+        }
+        let met = self.outcomes.iter().filter(|o| o.slo_met()).count();
+        met as f64 / self.total_requests as f64
+    }
+
+    pub fn slo_attainment_class(&self, class: RequestClass) -> f64 {
+        let total = self
+            .outcomes
+            .iter()
+            .filter(|o| o.class == class)
+            .count();
+        if total == 0 {
+            return 1.0;
+        }
+        let met = self
+            .outcomes
+            .iter()
+            .filter(|o| o.class == class && o.slo_met())
+            .count();
+        met as f64 / total as f64
+    }
+
+    /// Completed-request throughput over the active duration.
+    pub fn request_throughput(&self) -> f64 {
+        if self.end_time <= 0.0 {
+            return 0.0;
+        }
+        self.outcomes.len() as f64 / self.end_time
+    }
+
+    /// Completed requests per GPU·hour consumed (efficiency headline).
+    pub fn requests_per_gpu_hour(&self) -> f64 {
+        if self.gpu_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.outcomes.len() as f64 / (self.gpu_seconds / 3600.0)
+    }
+
+    /// Mean per-instance request throughput (requests/s divided by the mean
+    /// number of instances), the y-axis of paper Figures 9 and 10.
+    pub fn per_instance_throughput(&self, gpus_per_instance: f64) -> f64 {
+        if self.gpu_seconds <= 0.0 || self.end_time <= 0.0 {
+            return 0.0;
+        }
+        let mean_instances = self.gpu_seconds / self.end_time / gpus_per_instance;
+        if mean_instances <= 0.0 {
+            return 0.0;
+        }
+        self.request_throughput() / mean_instances
+    }
+
+    /// Hysteresis: total scaling actions per scale-up (paper §2.3; 1.0 is
+    /// the minimum since every scale-up counts itself).
+    pub fn hysteresis(&self) -> f64 {
+        if self.scale_ups == 0 {
+            return 0.0;
+        }
+        (self.scale_ups + self.scale_downs) as f64 / self.scale_ups as f64
+    }
+
+    /// Peak GPUs used over the run.
+    pub fn peak_gpus(&self) -> u32 {
+        self.timeline.iter().map(|p| p.gpus_used).max().unwrap_or(0)
+    }
+
+    /// Mean GPUs used over the run.
+    pub fn mean_gpus(&self) -> f64 {
+        if self.end_time <= 0.0 {
+            0.0
+        } else {
+            self.gpu_seconds / self.end_time
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Ev {
+    Arrival(u32),
+    StepDone { inst: InstanceId, duration: Time },
+    Ready(InstanceId),
+    Tick,
+}
+
+/// Build a `ClusterView` from a `Simulation`'s fields with disjoint borrows
+/// (so `self.policy` can be borrowed mutably alongside it).
+macro_rules! view_of {
+    ($s:expr) => {
+        ClusterView {
+            now: $s.now,
+            instances: &$s.views_cache,
+            queues: &$s.queue_stats,
+            models: &$s.cfg.models,
+            gpus_total: $s.cfg.gpus_total,
+            gpus_used: $s.gpus_used,
+        }
+    };
+}
+
+/// Heap entry: payload carried inline (§Perf: a side HashMap cost two hash
+/// operations per event). Ordered by (time, priority, sequence) so
+/// Ready/StepDone precede Ticks at equal timestamps and ties stay
+/// deterministic.
+struct HeapEv {
+    t: f64,
+    pri: u8,
+    seq: u64,
+    ev: Ev,
+}
+impl PartialEq for HeapEv {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.pri == other.pri && self.seq == other.seq
+    }
+}
+impl Eq for HeapEv {}
+impl PartialOrd for HeapEv {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEv {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t
+            .partial_cmp(&other.t)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.pri.cmp(&other.pri))
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// The cluster simulator.
+pub struct Simulation<'p> {
+    cfg: SimConfig,
+    policy: &'p mut dyn Policy,
+    heap: BinaryHeap<Reverse<HeapEv>>,
+    seq: u64,
+    now: Time,
+    instances: Vec<SimInstance>,
+    index: HashMap<InstanceId, usize>,
+    next_instance: u32,
+    // Global queues per model.
+    q_batch: Vec<VecDeque<WorkItem>>,
+    q_inter: Vec<VecDeque<WorkItem>>,
+    gpus_used: u32,
+    gpu_seconds: f64,
+    last_gpu_change: Time,
+    report: SimReport,
+    completed: usize,
+    views_cache: Vec<InstanceView>,
+    views_dirty: bool,
+    queue_stats: Vec<QueueStats>,
+    trace: Trace,
+    ticks: u64,
+}
+
+impl<'p> Simulation<'p> {
+    pub fn new(cfg: SimConfig, trace: Trace, policy: &'p mut dyn Policy) -> Self {
+        let nm = cfg.models.len();
+        let total = trace.len();
+        Simulation {
+            cfg,
+            policy,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+            instances: Vec::new(),
+            index: HashMap::new(),
+            next_instance: 0,
+            q_batch: vec![VecDeque::new(); nm],
+            q_inter: vec![VecDeque::new(); nm],
+            gpus_used: 0,
+            gpu_seconds: 0.0,
+            last_gpu_change: 0.0,
+            report: SimReport {
+                total_requests: total,
+                ..Default::default()
+            },
+            completed: 0,
+            views_cache: Vec::new(),
+            views_dirty: true,
+            queue_stats: vec![QueueStats::default(); nm],
+            trace,
+            ticks: 0,
+        }
+    }
+
+    fn push_event(&mut self, t: Time, ev: Ev) {
+        let seq = self.seq;
+        self.seq += 1;
+        // priority class keeps Ready/StepDone before Tick at equal times
+        let pri = match ev {
+            Ev::Ready(_) => 0,
+            Ev::StepDone { .. } => 1,
+            Ev::Arrival(_) => 2,
+            Ev::Tick => 3,
+        };
+        self.heap.push(Reverse(HeapEv { t, pri, seq, ev }));
+    }
+
+    /// Rebuild cached instance views if marked stale. §Perf: rebuilding on
+    /// every arrival dominated the event loop; views are now refreshed
+    /// lazily and patched point-wise after a dispatch.
+    fn refresh_instance_views(&mut self) {
+        if !self.views_dirty {
+            return;
+        }
+        self.views_dirty = false;
+        self.views_cache.clear();
+        self.views_cache
+            .extend(self.instances.iter().map(|i| i.view()));
+    }
+
+    /// Rebuild queue statistics (deadline samples). §Perf: only the global
+    /// autoscaler consumes these, so they refresh per tick, not per event.
+    fn refresh_queue_stats(&mut self) {
+        for (m, stats) in self.queue_stats.iter_mut().enumerate() {
+            let qb = &self.q_batch[m];
+            stats.batch_len = qb.len();
+            stats.interactive_len = self.q_inter[m].len();
+            stats.batch_oldest_arrival = qb.front().map(|w| w.req.arrival);
+            let stride = (qb.len() / QUEUE_SAMPLE).max(1);
+            stats.stride = stride;
+            stats.batch_deadline_sample.clear();
+            let mut i = 0;
+            while i < qb.len() {
+                stats
+                    .batch_deadline_sample
+                    .push(qb[i].req.ttft_deadline());
+                i += stride;
+            }
+        }
+    }
+
+    // NOTE: view construction is inlined via the `view_of!` macro at call
+    // sites so the borrow checker sees the (immutable views_cache / mutable
+    // policy) field borrows as disjoint.
+
+    fn set_gpus(&mut self, delta: i64) {
+        self.gpu_seconds += self.gpus_used as f64 * (self.now - self.last_gpu_change);
+        self.last_gpu_change = self.now;
+        self.gpus_used = (self.gpus_used as i64 + delta) as u32;
+    }
+
+    fn apply_actions(&mut self, actions: Vec<Action>, warm: bool) {
+        for a in actions {
+            match a {
+                Action::AddInstance { model, class } => {
+                    let spec = &self.cfg.models[model];
+                    if self.gpus_used + spec.gpus_per_instance > self.cfg.gpus_total {
+                        continue; // out of GPU budget
+                    }
+                    let id = InstanceId(self.next_instance);
+                    self.next_instance += 1;
+                    let profile = spec.profile.with_config(self.cfg.serving[model]);
+                    let mb = self
+                        .policy
+                        .initial_max_batch(spec, class)
+                        .clamp(1, MAX_BATCH_CLAMP);
+                    let mut inst =
+                        SimInstance::new(id, class, model, profile, mb, self.now);
+                    self.set_gpus(spec.gpus_per_instance as i64);
+                    self.report.scale_ups += 1;
+                    if warm {
+                        inst.state = InstanceState::Running;
+                        self.index.insert(id, self.instances.len());
+                        self.instances.push(inst);
+                    } else {
+                        let ready = inst.ready_at().unwrap();
+                        self.index.insert(id, self.instances.len());
+                        self.instances.push(inst);
+                        self.push_event(ready, Ev::Ready(id));
+                    }
+                }
+                Action::RemoveInstance { id } => {
+                    if let Some(&idx) = self.index.get(&id) {
+                        let inst = &mut self.instances[idx];
+                        if inst.state != InstanceState::Draining {
+                            inst.state = InstanceState::Draining;
+                            self.report.scale_downs += 1;
+                        }
+                    }
+                }
+                Action::SetClass { id, class } => {
+                    if let Some(&idx) = self.index.get(&id) {
+                        self.instances[idx].class = class;
+                    }
+                }
+            }
+        }
+        // Retire any drained instances immediately.
+        self.retire_drained();
+        self.views_dirty = true;
+    }
+
+    fn retire_drained(&mut self) {
+        let mut i = 0;
+        while i < self.instances.len() {
+            let inst = &self.instances[i];
+            if inst.state == InstanceState::Draining && inst.is_idle() && !inst.step_in_flight {
+                let gpus = self.cfg.models[inst.model].gpus_per_instance;
+                let id = inst.id;
+                self.set_gpus(-(gpus as i64));
+                self.instances.swap_remove(i);
+                self.index.remove(&id);
+                if i < self.instances.len() {
+                    let moved = self.instances[i].id;
+                    self.index.insert(moved, i);
+                }
+                continue;
+            }
+            i += 1;
+        }
+    }
+
+    /// Try to start a step on an idle instance. Draining instances keep
+    /// stepping (they must finish their running/queued work to retire).
+    fn kick(&mut self, idx: usize) {
+        let inst = &mut self.instances[idx];
+        if inst.step_in_flight
+            || matches!(inst.state, InstanceState::Loading { .. })
+        {
+            return;
+        }
+        if let Some(d) = inst.begin_step(self.now) {
+            let id = inst.id;
+            self.push_event(self.now + d, Ev::StepDone { inst: id, duration: d });
+        }
+    }
+
+    /// Instance pulls work from the global queues per the policy's order.
+    fn pull_for(&mut self, idx: usize) {
+        let view = self.instances[idx].view();
+        let order = self.policy.pull_order(&view);
+        let model = self.instances[idx].model;
+        for class in order {
+            loop {
+                let inst = &mut self.instances[idx];
+                if inst.admission_headroom() == 0 {
+                    return;
+                }
+                let q = match class {
+                    RequestClass::Batch => &mut self.q_batch[model],
+                    RequestClass::Interactive => &mut self.q_inter[model],
+                };
+                let Some(front) = q.front() else { break };
+                if !inst.kv_admittable(front.req.input_tokens) {
+                    break;
+                }
+                let item = q.pop_front().unwrap();
+                inst.enqueue(item);
+            }
+        }
+    }
+
+    fn route_item(&mut self, item: WorkItem) {
+        self.refresh_instance_views();
+        let qr = QueuedReq::from_request(&item.req);
+        let view = view_of!(self);
+        let decision = self.policy.route(&qr, &view);
+        match decision {
+            Route::Dispatch(id) => {
+                if let Some(&idx) = self.index.get(&id) {
+                    // Interactive dispatch to a full mixed instance evicts
+                    // batch requests back to the global queue (paper §3).
+                    if item.req.class == RequestClass::Interactive
+                        && self.instances[idx].class == InstanceClass::Mixed
+                        && self.instances[idx].admission_headroom() == 0
+                    {
+                        let kv = item.req.input_tokens as u64;
+                        let evicted =
+                            self.instances[idx].evict_batch_for_slots(1, kv, self.now);
+                        for e in evicted {
+                            let w = WorkItem::from_evicted(e);
+                            self.q_batch[w.req.model].push_front(w);
+                        }
+                    }
+                    self.instances[idx].enqueue(item);
+                    self.kick(idx);
+                    // Point-patch the touched instance's cached view so the
+                    // next route sees the updated load without a rebuild.
+                    if idx < self.views_cache.len() {
+                        self.views_cache[idx] = self.instances[idx].view();
+                    }
+                } else {
+                    // Stale instance id: queue instead of dropping.
+                    self.queue_item(item);
+                }
+            }
+            Route::Queue => self.queue_item(item),
+        }
+    }
+
+    fn queue_item(&mut self, item: WorkItem) {
+        let m = item.req.model;
+        match item.req.class {
+            RequestClass::Batch => self.q_batch[m].push_back(item),
+            RequestClass::Interactive => self.q_inter[m].push_back(item),
+        }
+    }
+
+    fn sample_timeline(&mut self) {
+        let mut by_class = [0u32; 3];
+        let mut running = 0u32;
+        let mut mb_sum = 0.0;
+        let mut kv_sum = 0.0;
+        let mut n_run = 0u32;
+        for i in &self.instances {
+            let c = match i.class {
+                InstanceClass::Interactive => 0,
+                InstanceClass::Mixed => 1,
+                InstanceClass::Batch => 2,
+            };
+            by_class[c] += 1;
+            running += i.running_len() as u32;
+            if i.state == InstanceState::Running {
+                mb_sum += i.max_batch as f64;
+                kv_sum += i.kv_tokens() as f64 / i.profile.kv_capacity_tokens as f64;
+                n_run += 1;
+            }
+        }
+        let queued: usize = self.q_batch.iter().map(|q| q.len()).sum();
+        self.report.timeline.push(TimelinePoint {
+            t: self.now,
+            gpus_used: self.gpus_used,
+            instances_interactive: by_class[0],
+            instances_mixed: by_class[1],
+            instances_batch: by_class[2],
+            queued_batch: queued,
+            running_requests: running,
+            mean_max_batch: if n_run > 0 { mb_sum / n_run as f64 } else { 0.0 },
+            mean_kv_util: if n_run > 0 { kv_sum / n_run as f64 } else { 0.0 },
+        });
+    }
+
+    /// Run the simulation to completion.
+    pub fn run(mut self) -> SimReport {
+        // Bootstrap the cluster.
+        self.views_dirty = true;
+        self.refresh_instance_views();
+        self.refresh_queue_stats();
+        let view = view_of!(self);
+        let boot = self.policy.bootstrap(&view);
+        let warm = self.cfg.warm_bootstrap;
+        self.apply_actions(boot, warm);
+
+        // Stream arrivals: only the next arrival lives in the heap (§Perf:
+        // preloading a 700k-request trace made every heap op log-huge).
+        if !self.trace.is_empty() {
+            self.push_event(self.trace.requests[0].arrival, Ev::Arrival(0));
+        }
+        self.push_event(self.cfg.tick_interval, Ev::Tick);
+
+        while let Some(Reverse(HeapEv { t, ev, .. })) = self.heap.pop() {
+            self.now = t;
+            if self.now > self.cfg.max_sim_time {
+                break;
+            }
+            match ev {
+                Ev::Arrival(i) => {
+                    let next = i as usize + 1;
+                    if next < self.trace.len() {
+                        self.push_event(
+                            self.trace.requests[next].arrival,
+                            Ev::Arrival(next as u32),
+                        );
+                    }
+                    let req = self.trace.requests[i as usize].clone();
+                    self.route_item(WorkItem::fresh(req));
+                }
+                Ev::Ready(iid) => {
+                    self.views_dirty = true;
+                    if let Some(&idx) = self.index.get(&iid) {
+                        if self.instances[idx].state
+                            == (InstanceState::Loading {
+                                ready_at: self.instances[idx].ready_at().unwrap_or(t),
+                            })
+                        {
+                            self.instances[idx].state = InstanceState::Running;
+                        }
+                        self.pull_for(idx);
+                        self.kick(idx);
+                    }
+                }
+                Ev::StepDone { inst: iid, duration } => {
+                    self.views_dirty = true;
+                    let Some(&idx) = self.index.get(&iid) else {
+                        continue;
+                    };
+                    let result = self.instances[idx].finish_step(self.now, duration);
+                    self.completed += result.completed.len();
+                    self.report.total_tokens += result.tokens_emitted;
+                    for o in &result.completed {
+                        self.policy.on_complete(o);
+                    }
+                    self.report.outcomes.extend(result.completed);
+                    // Evicted batch requests return to the global queue
+                    // head (FCFS); evicted interactive requests re-route
+                    // immediately (zero-queuing — they must not wait behind
+                    // the batch backlog).
+                    for e in result.evicted {
+                        let w = WorkItem::from_evicted(e);
+                        if w.req.class == RequestClass::Interactive {
+                            self.route_item(w);
+                        } else {
+                            self.q_batch[w.req.model].push_front(w);
+                        }
+                    }
+                    // Local autoscaler.
+                    let v = self.instances[idx].view();
+                    if let Some(mb) = self.policy.on_step(&v, self.now) {
+                        self.instances[idx].max_batch = mb.clamp(1, MAX_BATCH_CLAMP);
+                    }
+                    // Pull more work, continue stepping, or retire.
+                    self.pull_for(idx);
+                    self.kick(idx);
+                    self.retire_drained();
+                    if self.completed >= self.report.total_requests {
+                        break;
+                    }
+                }
+                Ev::Tick => {
+                    self.ticks += 1;
+                    // Idle instances with queued matching work pull on ticks.
+                    for idx in 0..self.instances.len() {
+                        if !self.instances[idx].step_in_flight
+                            && self.instances[idx].state == InstanceState::Running
+                        {
+                            self.pull_for(idx);
+                            self.kick(idx);
+                        }
+                    }
+                    self.views_dirty = true;
+                    self.refresh_instance_views();
+                    self.refresh_queue_stats();
+                    let view = view_of!(self);
+                    let actions = self.policy.autoscale(&view);
+                    self.apply_actions(actions, false);
+                    if self.cfg.timeline_every > 0
+                        && self.ticks % self.cfg.timeline_every as u64 == 0
+                    {
+                        self.sample_timeline();
+                    }
+                    if self.completed < self.report.total_requests {
+                        self.push_event(self.now + self.cfg.tick_interval, Ev::Tick);
+                    }
+                }
+            }
+        }
+
+        // Final accounting.
+        self.gpu_seconds += self.gpus_used as f64 * (self.now - self.last_gpu_change);
+        self.report.gpu_seconds = self.gpu_seconds;
+        self.report.end_time = self.now;
+        self.report.unfinished = self.report.total_requests - self.completed;
+        self.report.policy = self.policy.name().to_string();
+        self.report
+    }
+}
+
+/// Convenience: run a trace under a policy and config.
+pub fn run_sim(cfg: SimConfig, trace: Trace, policy: &mut dyn Policy) -> SimReport {
+    Simulation::new(cfg, trace, policy).run()
+}

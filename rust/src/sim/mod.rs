@@ -1,0 +1,18 @@
+//! Discrete-event cluster simulator substrate.
+//!
+//! The paper evaluates Chiron on a 50×A100 elastic cloud running vLLM; this
+//! module provides the equivalent substrate: simulated continuous-batching
+//! instances (`instance`), the GPU pool + event loop (`cluster`), and the
+//! policy interface (`policy`) that Chiron and every baseline implement.
+//! The same `Policy` objects also drive the real PJRT-backed engine in
+//! `crate::server`.
+
+pub mod cluster;
+pub mod instance;
+pub mod policy;
+
+pub use cluster::{run_sim, SimConfig, SimReport, Simulation, TimelinePoint, MAX_BATCH_CLAMP};
+pub use instance::{Evicted, SimInstance, StepResult, WorkItem};
+pub use policy::{
+    Action, ClusterView, InstanceState, InstanceView, Policy, QueueStats, QueuedReq, Route,
+};

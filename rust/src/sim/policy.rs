@@ -1,0 +1,238 @@
+//! The autoscaling-policy interface the simulator (and the real server)
+//! drive. Chiron (`coordinator::chiron`) and all baselines
+//! (`baselines::*`) implement `Policy`.
+//!
+//! The split mirrors the paper's hierarchy:
+//!  - `route` / `pull_order` — request placement (global queue vs instance);
+//!  - `on_step` — the *local* autoscaler (per-instance max batch size);
+//!  - `autoscale` — the *global* autoscaler (instance add/remove), invoked
+//!    on a periodic tick.
+
+use crate::core::{InstanceClass, InstanceId, ModelSpec, Request, RequestClass, Time};
+
+/// Lifecycle state of a serving instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InstanceState {
+    /// Model weights loading; becomes Running at `ready_at`.
+    Loading { ready_at: Time },
+    Running,
+    /// No new admissions; retires when the running set drains.
+    Draining,
+}
+
+/// Read-only per-instance snapshot handed to policies.
+#[derive(Debug, Clone)]
+pub struct InstanceView {
+    pub id: InstanceId,
+    pub class: InstanceClass,
+    pub model: usize,
+    pub state: InstanceState,
+    /// Requests currently decoding.
+    pub running: u32,
+    /// Of which interactive.
+    pub running_interactive: u32,
+    /// Requests admitted but waiting in the instance-local queue.
+    pub waiting: u32,
+    pub max_batch: u32,
+    pub kv_tokens: u64,
+    pub kv_capacity: u64,
+    /// Duration of the most recent engine step (the observed ITL).
+    pub last_step_time: Time,
+    /// Decode-only component of the most recent step (batch-dependent ITL;
+    /// excludes chunked-prefill time — see coordinator::local).
+    pub last_decode_time: Time,
+    /// EWMA decode-token throughput (tokens/s).
+    pub throughput_tokens: f64,
+    /// Tightest ITL SLO among running requests (paper §4.2: the instance's
+    /// operative ITL SLO); f64::INFINITY when idle.
+    pub min_itl_slo: Time,
+    /// Completed engine steps (local-autoscaler invocations so far).
+    pub steps: u64,
+}
+
+impl InstanceView {
+    pub fn is_running(&self) -> bool {
+        self.state == InstanceState::Running
+    }
+
+    pub fn kv_headroom(&self) -> u64 {
+        self.kv_capacity.saturating_sub(self.kv_tokens)
+    }
+
+    /// Free running slots under the current max batch.
+    pub fn slot_headroom(&self) -> u32 {
+        self.max_batch
+            .saturating_sub(self.running + self.waiting)
+    }
+
+    pub fn has_interactive(&self) -> bool {
+        self.running_interactive > 0
+    }
+}
+
+/// Summary of one queued request (the policy never sees ground-truth output
+/// lengths).
+#[derive(Debug, Clone)]
+pub struct QueuedReq {
+    pub id: crate::core::RequestId,
+    pub class: RequestClass,
+    pub model: usize,
+    pub arrival: Time,
+    pub ttft_deadline: Time,
+    pub itl_slo: Time,
+    pub input_tokens: u32,
+}
+
+impl QueuedReq {
+    pub fn from_request(r: &Request) -> Self {
+        QueuedReq {
+            id: r.id,
+            class: r.class,
+            model: r.model,
+            arrival: r.arrival,
+            ttft_deadline: r.ttft_deadline(),
+            itl_slo: r.slo.itl,
+            input_tokens: r.input_tokens,
+        }
+    }
+}
+
+/// Summary of one model's global queue. Policies never see ground-truth
+/// output lengths; for large queues (the W_B evaluation reaches 700k batch
+/// requests) the deadline list is a uniform FCFS-ordered sample with a
+/// recorded stride so estimators can scale counts back up.
+#[derive(Debug, Clone, Default)]
+pub struct QueueStats {
+    pub batch_len: usize,
+    pub interactive_len: usize,
+    pub batch_oldest_arrival: Option<Time>,
+    /// Uniform sample of batch-queue TTFT deadlines in FCFS order.
+    pub batch_deadline_sample: Vec<Time>,
+    /// Each sampled deadline represents `stride` queued requests.
+    pub stride: usize,
+}
+
+/// Read-only cluster snapshot.
+#[derive(Debug)]
+pub struct ClusterView<'a> {
+    pub now: Time,
+    pub instances: &'a [InstanceView],
+    /// Per-model global-queue summaries.
+    pub queues: &'a [QueueStats],
+    pub models: &'a [ModelSpec],
+    pub gpus_total: u32,
+    pub gpus_used: u32,
+}
+
+impl<'a> ClusterView<'a> {
+    pub fn gpus_free(&self) -> u32 {
+        self.gpus_total.saturating_sub(self.gpus_used)
+    }
+
+    /// Can another instance of `model` fit in the GPU budget?
+    pub fn can_fit(&self, model: usize) -> bool {
+        self.models[model].gpus_per_instance <= self.gpus_free()
+    }
+
+    pub fn instances_of(&self, model: usize) -> impl Iterator<Item = &InstanceView> {
+        self.instances.iter().filter(move |i| i.model == model)
+    }
+
+    pub fn queue_len_batch(&self, model: usize) -> usize {
+        self.queues[model].batch_len
+    }
+}
+
+/// Global-autoscaler actions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    AddInstance { model: usize, class: InstanceClass },
+    /// Graceful removal: stop admissions, retire when drained.
+    RemoveInstance { id: InstanceId },
+    /// Reclassify a running instance (Chiron converts mixed↔interactive as
+    /// over-provisioning shifts).
+    SetClass { id: InstanceId, class: InstanceClass },
+}
+
+/// Routing decision for a newly arrived (or re-queued) request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Route {
+    /// Send to this instance's local queue now.
+    Dispatch(InstanceId),
+    /// Keep in the global queue (batch requests awaiting capacity).
+    Queue,
+}
+
+/// An autoscaling policy under evaluation.
+pub trait Policy {
+    fn name(&self) -> &str;
+
+    /// Route a request at arrival (or when re-queued after eviction).
+    fn route(&mut self, req: &QueuedReq, view: &ClusterView) -> Route;
+
+    /// Which global queues may `inst` pull from when it has headroom,
+    /// in priority order.
+    fn pull_order(&self, inst: &InstanceView) -> Vec<RequestClass>;
+
+    /// Local autoscaler: called after each engine step of `inst`; returns
+    /// the new max batch size if it should change.
+    fn on_step(&mut self, inst: &InstanceView, now: Time) -> Option<u32>;
+
+    /// Global autoscaler: called on each tick; returns scaling actions.
+    fn autoscale(&mut self, view: &ClusterView) -> Vec<Action>;
+
+    /// Initial max batch size for a newly added instance.
+    fn initial_max_batch(&self, _model: &ModelSpec, _class: InstanceClass) -> u32 {
+        8
+    }
+
+    /// Initial cluster composition before the trace starts.
+    fn bootstrap(&mut self, view: &ClusterView) -> Vec<Action>;
+
+    /// Completion callback: lets estimators fit output-length statistics
+    /// from observed completions (QLM-style), never from ground truth.
+    fn on_complete(&mut self, _outcome: &crate::core::RequestOutcome) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst(running: u32, waiting: u32, max_batch: u32) -> InstanceView {
+        InstanceView {
+            id: InstanceId(0),
+            class: InstanceClass::Mixed,
+            model: 0,
+            state: InstanceState::Running,
+            running,
+            running_interactive: 0,
+            waiting,
+            max_batch,
+            kv_tokens: 100,
+            kv_capacity: 1000,
+            last_step_time: 0.05,
+            last_decode_time: 0.05,
+            throughput_tokens: 100.0,
+            min_itl_slo: 0.2,
+            steps: 1,
+        }
+    }
+
+    #[test]
+    fn headroom_math() {
+        let i = inst(3, 2, 8);
+        assert_eq!(i.slot_headroom(), 3);
+        assert_eq!(i.kv_headroom(), 900);
+        let full = inst(6, 2, 8);
+        assert_eq!(full.slot_headroom(), 0);
+        let over = inst(9, 2, 8);
+        assert_eq!(over.slot_headroom(), 0); // saturates
+    }
+
+    #[test]
+    fn loading_is_not_running() {
+        let mut i = inst(0, 0, 8);
+        i.state = InstanceState::Loading { ready_at: 5.0 };
+        assert!(!i.is_running());
+    }
+}

@@ -1,0 +1,216 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Benches declared with [[bench]] harness = false use `Bencher` to run a
+//! closure repeatedly, with warmup, and report min / mean / p50 / p99 per
+//! iteration plus derived throughput. Output is a stable text table that the
+//! perf pass in EXPERIMENTS.md §Perf copies verbatim.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// Optional units processed per iteration, for throughput reporting.
+    pub units_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    pub fn throughput(&self) -> Option<f64> {
+        self.units_per_iter
+            .map(|u| u / (self.mean_ns / 1e9))
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn fmt_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2} G/s", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2} M/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2} k/s", r / 1e3)
+    } else {
+        format!("{r:.1} /s")
+    }
+}
+
+/// Benchmark runner. Collects measurements and prints a report at the end.
+pub struct Bencher {
+    target_time: Duration,
+    warmup: Duration,
+    results: Vec<Measurement>,
+    filter: Option<String>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // `cargo bench -- <filter>` passes the filter through argv.
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-'));
+        let quick = std::env::var("CHIRON_BENCH_QUICK").is_ok();
+        Bencher {
+            target_time: if quick {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(1)
+            },
+            warmup: if quick {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(250)
+            },
+            results: Vec::new(),
+            filter,
+        }
+    }
+
+    fn skip(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => !name.contains(f.as_str()),
+            None => false,
+        }
+    }
+
+    /// Benchmark `f`, which performs one iteration of work. Returns the
+    /// measurement (also retained for the final report).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> Option<Measurement> {
+        self.bench_units(name, None, f)
+    }
+
+    /// Benchmark with a known number of logical units per iteration
+    /// (events, tokens, requests) to report throughput.
+    pub fn bench_units<F: FnMut()>(
+        &mut self,
+        name: &str,
+        units_per_iter: Option<f64>,
+        mut f: F,
+    ) -> Option<Measurement> {
+        if self.skip(name) {
+            return None;
+        }
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.target_time || samples_ns.len() < 10 {
+            let t = Instant::now();
+            f();
+            samples_ns.push(t.elapsed().as_nanos() as f64);
+            if samples_ns.len() >= 1_000_000 {
+                break;
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let m = Measurement {
+            name: name.to_string(),
+            iters: n as u64,
+            mean_ns: samples_ns.iter().sum::<f64>() / n as f64,
+            min_ns: samples_ns[0],
+            p50_ns: samples_ns[n / 2],
+            p99_ns: samples_ns[(n as f64 * 0.99) as usize % n],
+            units_per_iter,
+        };
+        println!(
+            "{:<44} {:>10} iters  mean {:>10}  min {:>10}  p99 {:>10}{}",
+            m.name,
+            m.iters,
+            fmt_ns(m.mean_ns),
+            fmt_ns(m.min_ns),
+            fmt_ns(m.p99_ns),
+            m.throughput()
+                .map(|t| format!("  [{}]", fmt_rate(t)))
+                .unwrap_or_default()
+        );
+        self.results.push(m.clone());
+        Some(m)
+    }
+
+    /// Print the final summary table.
+    pub fn report(&self) {
+        println!("\n== bench summary ==");
+        println!(
+            "{:<44} {:>12} {:>12} {:>14}",
+            "bench", "mean", "p99", "throughput"
+        );
+        for m in &self.results {
+            println!(
+                "{:<44} {:>12} {:>12} {:>14}",
+                m.name,
+                fmt_ns(m.mean_ns),
+                fmt_ns(m.p99_ns),
+                m.throughput().map(fmt_rate).unwrap_or_else(|| "-".into())
+            );
+        }
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_measurement() {
+        std::env::set_var("CHIRON_BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        let m = b
+            .bench_units("noop-loop", Some(1000.0), || {
+                let mut acc = 0u64;
+                for i in 0..1000u64 {
+                    acc = acc.wrapping_add(black_box(i));
+                }
+                black_box(acc);
+            })
+            .expect("not filtered");
+        assert!(m.iters >= 10);
+        assert!(m.mean_ns > 0.0);
+        assert!(m.min_ns <= m.mean_ns);
+        assert!(m.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_rate(2e6).contains("M/s"));
+    }
+}

@@ -1,0 +1,116 @@
+//! Seeded property-testing harness (proptest is unavailable offline).
+//!
+//! `property` runs a closure over many deterministically generated cases; on
+//! failure it reports the seed and case index so the failure is reproducible
+//! with `CHIRON_PROP_SEED=<seed>`. Shrinking is intentionally out of scope —
+//! generators here produce small cases by construction.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with CHIRON_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("CHIRON_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("CHIRON_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC41_0E5)
+}
+
+/// Run `f` over `default_cases()` generated cases. `f` receives a fresh RNG
+/// per case and should panic (assert) on violation.
+pub fn property<F: FnMut(&mut Rng)>(name: &str, mut f: F) {
+    let seed = base_seed();
+    let cases = default_cases();
+    for case in 0..cases {
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (reproduce with CHIRON_PROP_SEED={seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Generator helpers for common case shapes.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// Vec of length in [min_len, max_len] with elements from `el`.
+    pub fn vec_of<T>(
+        rng: &mut Rng,
+        min_len: usize,
+        max_len: usize,
+        mut el: impl FnMut(&mut Rng) -> T,
+    ) -> Vec<T> {
+        let n = min_len + rng.index(max_len - min_len + 1);
+        (0..n).map(|_| el(rng)).collect()
+    }
+
+    /// Positive f64 in a log-uniform range [lo, hi].
+    pub fn log_uniform(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        assert!(lo > 0.0 && hi > lo);
+        (rng.range_f64(lo.ln(), hi.ln())).exp()
+    }
+
+    /// usize in [lo, hi].
+    pub fn int_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.index(hi - lo + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_runs_all_cases() {
+        let mut count = 0;
+        property("counts", |_rng| {
+            count += 1;
+        });
+        assert_eq!(count, default_cases());
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        property("record", |rng| first.push(rng.next_u64()));
+        let mut second: Vec<u64> = Vec::new();
+        property("record", |rng| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        property("fails", |rng| {
+            assert!(rng.f64() < 2.0); // always true...
+            assert!(rng.f64() < 0.0); // ...this one always fails
+        });
+    }
+
+    #[test]
+    fn gen_vec_respects_bounds() {
+        property("vec bounds", |rng| {
+            let v = gen::vec_of(rng, 2, 10, |r| r.f64());
+            assert!(v.len() >= 2 && v.len() <= 10);
+        });
+    }
+
+    #[test]
+    fn gen_log_uniform_in_range() {
+        property("log uniform", |rng| {
+            let x = gen::log_uniform(rng, 0.1, 100.0);
+            assert!((0.1..=100.0001).contains(&x));
+        });
+    }
+}

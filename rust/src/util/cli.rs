@@ -1,0 +1,217 @@
+//! Tiny declarative CLI flag parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and positional
+//! arguments. Each binary declares its flags up front so `--help` output is
+//! generated consistently.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative argument parser.
+#[derive(Debug, Default)]
+pub struct Args {
+    about: String,
+    specs: Vec<FlagSpec>,
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(about: &str) -> Self {
+        Args {
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Declare a value-taking flag with a default.
+    pub fn flag(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: true,
+            default: Some(default.to_string()),
+        });
+        self
+    }
+
+    /// Declare a boolean switch (default false).
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    fn usage(&self) -> String {
+        let mut s = format!("{}\n\nFlags:\n", self.about);
+        for f in &self.specs {
+            let d = f
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<24} {}{}\n", f.name, f.help, d));
+        }
+        s
+    }
+
+    /// Parse a list of argument tokens (without argv[0]).
+    pub fn parse_from<I, S>(mut self, args: I) -> Result<Args, String>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        for f in &self.specs {
+            if let Some(d) = &f.default {
+                self.values.insert(f.name.clone(), d.clone());
+            }
+            if !f.takes_value {
+                self.bools.insert(f.name.clone(), false);
+            }
+        }
+        let mut it = args.into_iter().map(Into::into).peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("flag --{name} expects a value"))?,
+                    };
+                    self.values.insert(name, v);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("flag --{name} takes no value"));
+                    }
+                    self.bools.insert(name, true);
+                }
+            } else {
+                self.positional.push(tok);
+            }
+        }
+        Ok(self)
+    }
+
+    /// Parse from the process environment, skipping argv[0] (and the
+    /// subcommand name if the caller already consumed it).
+    pub fn parse(self, skip: usize) -> Args {
+        match self.parse_from(std::env::args().skip(skip)) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} was not declared"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("flag --{name} expects a number"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("flag --{name} expects an integer"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get_u64(name) as usize
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        *self
+            .bools
+            .get(name)
+            .unwrap_or_else(|| panic!("switch --{name} was not declared"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Args {
+        Args::new("test")
+            .flag("rate", "10", "arrival rate")
+            .flag("model", "llama8b", "model name")
+            .switch("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = spec().parse_from(Vec::<String>::new()).unwrap();
+        assert_eq!(a.get_f64("rate"), 10.0);
+        assert_eq!(a.get("model"), "llama8b");
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn parse_space_and_equals_forms() {
+        let a = spec()
+            .parse_from(["--rate", "25.5", "--model=llama70b", "--verbose"])
+            .unwrap();
+        assert_eq!(a.get_f64("rate"), 25.5);
+        assert_eq!(a.get("model"), "llama70b");
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = spec().parse_from(["fig9", "--rate", "1"]).unwrap();
+        assert_eq!(a.positional(), &["fig9".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(spec().parse_from(["--nope"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(spec().parse_from(["--rate"]).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = spec().parse_from(["--help"]).unwrap_err();
+        assert!(err.contains("--rate"));
+        assert!(err.contains("arrival rate"));
+    }
+}

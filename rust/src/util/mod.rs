@@ -1,0 +1,11 @@
+//! std-only infrastructure: PRNG + samplers, streaming statistics, JSON,
+//! CLI parsing, a property-test harness, and a bench harness. These exist
+//! in-tree because the offline sandbox only vendors the `xla` crate's
+//! dependency closure (no rand / serde / clap / criterion / proptest).
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

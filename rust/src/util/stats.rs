@@ -1,0 +1,374 @@
+//! Streaming statistics used throughout the coordinator and the experiment
+//! harness: online mean/variance (Welford), exponentially weighted moving
+//! averages, percentile summaries, linear-fit R², and fixed-bucket
+//! histograms.
+
+/// Online mean / variance via Welford's algorithm.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Merge another accumulator (parallel Welford / Chan et al.).
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.mean += d * other.n as f64 / n as f64;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+    }
+}
+
+/// Exponentially weighted moving average with smoothing factor `alpha`
+/// (weight of the *new* observation), per the paper's Algorithm 1 usage.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ewma { alpha, value: None }
+    }
+
+    pub fn push(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn get_or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+
+    pub fn reset(&mut self) {
+        self.value = None;
+    }
+}
+
+/// Exact percentile summary over a collected sample (the experiment harness
+/// collects full vectors; sizes are bounded by request counts).
+#[derive(Debug, Clone, Default)]
+pub struct Percentiles {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Percentiles {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend<I: IntoIterator<Item = f64>>(&mut self, it: I) {
+        self.xs.extend(it);
+        self.sorted = false;
+    }
+
+    pub fn count(&self) -> usize {
+        self.xs.len()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile p in [0, 100], nearest-rank with linear interpolation.
+    pub fn pct(&mut self, p: f64) -> f64 {
+        self.ensure_sorted();
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        let rank = (p / 100.0) * (self.xs.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            self.xs[lo]
+        } else {
+            let w = rank - lo as f64;
+            self.xs[lo] * (1.0 - w) + self.xs[hi] * w
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            0.0
+        } else {
+            self.xs.iter().sum::<f64>() / self.xs.len() as f64
+        }
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.pct(100.0)
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.pct(0.0)
+    }
+}
+
+/// Coefficient of determination R² of predictions vs. observations
+/// (used for the Figure 14 waiting-time estimator accuracy experiment).
+pub fn r_squared(observed: &[f64], predicted: &[f64]) -> f64 {
+    assert_eq!(observed.len(), predicted.len());
+    if observed.is_empty() {
+        return 0.0;
+    }
+    let mean = observed.iter().sum::<f64>() / observed.len() as f64;
+    let ss_tot: f64 = observed.iter().map(|y| (y - mean) * (y - mean)).sum();
+    let ss_res: f64 = observed
+        .iter()
+        .zip(predicted)
+        .map(|(y, f)| (y - f) * (y - f))
+        .sum();
+    if ss_tot == 0.0 {
+        if ss_res == 0.0 {
+            1.0
+        } else {
+            0.0
+        }
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+/// Fixed-width histogram over [lo, hi) with `n` buckets plus overflow.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    width: f64,
+    counts: Vec<u64>,
+    overflow: u64,
+    underflow: u64,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, buckets: usize) -> Self {
+        assert!(hi > lo && buckets > 0);
+        Histogram {
+            lo,
+            width: (hi - lo) / buckets as f64,
+            counts: vec![0; buckets],
+            overflow: 0,
+            underflow: 0,
+            total: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.total += 1;
+        if x < self.lo {
+            self.underflow += 1;
+            return;
+        }
+        let idx = ((x - self.lo) / self.width) as usize;
+        if idx >= self.counts.len() {
+            self.overflow += 1;
+        } else {
+            self.counts[idx] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn buckets(&self) -> impl Iterator<Item = (f64, u64)> + '_ {
+        self.counts
+            .iter()
+            .enumerate()
+            .map(move |(i, &c)| (self.lo + (i as f64 + 0.5) * self.width, c))
+    }
+
+    /// Fraction of samples at or below x (approximate CDF).
+    pub fn cdf(&self, x: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let mut acc = self.underflow;
+        for (i, &c) in self.counts.iter().enumerate() {
+            let upper = self.lo + (i as f64 + 1.0) * self.width;
+            if upper <= x {
+                acc += c;
+            } else {
+                break;
+            }
+        }
+        acc as f64 / self.total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0, -2.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut whole = Welford::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-10);
+        assert!((a.variance() - whole.variance()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn ewma_first_value_passthrough() {
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.push(10.0), 10.0);
+        assert_eq!(e.push(0.0), 5.0);
+        assert_eq!(e.push(5.0), 5.0);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        for _ in 0..64 {
+            e.push(3.0);
+        }
+        assert!((e.get().unwrap() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_basic() {
+        let mut p = Percentiles::new();
+        p.extend((1..=100).map(|i| i as f64));
+        assert!((p.pct(50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(p.pct(0.0), 1.0);
+        assert_eq!(p.pct(100.0), 100.0);
+        assert!((p.pct(90.0) - 90.1).abs() < 1e-9);
+        assert!((p.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_single_element() {
+        let mut p = Percentiles::new();
+        p.push(7.0);
+        assert_eq!(p.pct(50.0), 7.0);
+        assert_eq!(p.pct(99.0), 7.0);
+    }
+
+    #[test]
+    fn r2_perfect_and_mean_predictor() {
+        let obs = [1.0, 2.0, 3.0, 4.0];
+        assert!((r_squared(&obs, &obs) - 1.0).abs() < 1e-12);
+        let mean_pred = [2.5; 4];
+        assert!(r_squared(&obs, &mean_pred).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r2_noisy_predictor_below_one() {
+        let obs = [1.0, 2.0, 3.0, 4.0];
+        let pred = [1.1, 2.2, 2.7, 4.3];
+        let r2 = r_squared(&obs, &pred);
+        assert!(r2 > 0.9 && r2 < 1.0, "{r2}");
+    }
+
+    #[test]
+    fn histogram_cdf() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..100 {
+            h.push(i as f64 * 0.1);
+        }
+        assert_eq!(h.total(), 100);
+        assert!((h.cdf(5.0) - 0.5).abs() < 0.02);
+        assert!((h.cdf(10.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_overflow_underflow() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.push(-1.0);
+        h.push(2.0);
+        h.push(0.5);
+        assert_eq!(h.total(), 3);
+        assert!((h.cdf(1.0) - (2.0 / 3.0)).abs() < 1e-9); // underflow + in-range
+    }
+}

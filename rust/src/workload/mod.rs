@@ -1,0 +1,11 @@
+//! Workload generation: ShareGPT-like token-length distributions, arrival
+//! processes (Poisson / Gamma-CV / spike trains), and the paper's workload
+//! builders W_A (interactive-only) and W_B (interactive + batch).
+
+pub mod arrivals;
+pub mod sharegpt;
+pub mod trace;
+
+pub use arrivals::{ArrivalProcess, SpikeTrain};
+pub use sharegpt::ShareGptSampler;
+pub use trace::{Trace, TraceBuilder, WorkloadSpec};

@@ -1,0 +1,158 @@
+//! ShareGPT-like token-length sampler.
+//!
+//! The paper's traces draw input/output token counts from the ShareGPT
+//! dataset (Figure 8). We cannot ship the dataset, so this sampler matches
+//! the published distribution shape: both input and output lengths are
+//! heavy-tailed with most mass below ~512 tokens and a tail to a few
+//! thousand; outputs run somewhat longer than inputs. We model each as a
+//! two-component log-normal mixture (a short conversational mode plus a
+//! long-document tail), truncated to [1, max_len].
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+struct LogNormalMix {
+    /// (weight, mu, sigma) per component, over token counts.
+    c1: (f64, f64, f64),
+    c2: (f64, f64, f64),
+    max_len: u32,
+}
+
+impl LogNormalMix {
+    fn sample(&self, rng: &mut Rng) -> u32 {
+        let (w1, mu1, s1) = self.c1;
+        let (_, mu2, s2) = self.c2;
+        let x = if rng.f64() < w1 {
+            rng.lognormal(mu1, s1)
+        } else {
+            rng.lognormal(mu2, s2)
+        };
+        (x.round() as u32).clamp(1, self.max_len)
+    }
+}
+
+/// Samples (input_tokens, output_tokens) pairs with ShareGPT-like marginals.
+#[derive(Debug, Clone)]
+pub struct ShareGptSampler {
+    input: LogNormalMix,
+    output: LogNormalMix,
+}
+
+impl Default for ShareGptSampler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShareGptSampler {
+    pub fn new() -> Self {
+        ShareGptSampler {
+            // Inputs: mode ~60 tokens, tail to ~4k. mean ≈ 150.
+            input: LogNormalMix {
+                c1: (0.75, 4.1, 0.8),
+                c2: (0.25, 5.8, 1.0),
+                max_len: 4096,
+            },
+            // Outputs: mode ~120 tokens, heavier tail. mean ≈ 240.
+            output: LogNormalMix {
+                c1: (0.70, 4.8, 0.7),
+                c2: (0.30, 5.9, 0.9),
+                max_len: 4096,
+            },
+        }
+    }
+
+    /// A compact variant for the tiny real-engine model (short sequences
+    /// that fit its 128-token context window).
+    pub fn tiny() -> Self {
+        ShareGptSampler {
+            input: LogNormalMix {
+                c1: (0.8, 2.5, 0.5),
+                c2: (0.2, 3.2, 0.4),
+                max_len: 48,
+            },
+            output: LogNormalMix {
+                c1: (0.8, 2.8, 0.5),
+                c2: (0.2, 3.4, 0.4),
+                max_len: 64,
+            },
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> (u32, u32) {
+        (self.input.sample(rng), self.output.sample(rng))
+    }
+
+    /// Empirical mean of input+output tokens (used to size experiments).
+    pub fn mean_total_tokens(&self, rng: &mut Rng, n: usize) -> f64 {
+        let mut acc = 0u64;
+        for _ in 0..n {
+            let (i, o) = self.sample(rng);
+            acc += (i + o) as u64;
+        }
+        acc as f64 / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Percentiles;
+
+    #[test]
+    fn lengths_in_bounds() {
+        let s = ShareGptSampler::new();
+        let mut rng = Rng::new(1);
+        for _ in 0..10_000 {
+            let (i, o) = s.sample(&mut rng);
+            assert!((1..=4096).contains(&i));
+            assert!((1..=4096).contains(&o));
+        }
+    }
+
+    #[test]
+    fn distribution_shape_matches_figure8() {
+        // Figure 8 qualitative targets: median well under 300 tokens, heavy
+        // tail beyond 1k, outputs longer than inputs on average.
+        let s = ShareGptSampler::new();
+        let mut rng = Rng::new(2);
+        let mut pi = Percentiles::new();
+        let mut po = Percentiles::new();
+        for _ in 0..50_000 {
+            let (i, o) = s.sample(&mut rng);
+            pi.push(i as f64);
+            po.push(o as f64);
+        }
+        assert!(pi.pct(50.0) < 300.0, "input median {}", pi.pct(50.0));
+        assert!(po.pct(50.0) < 400.0, "output median {}", po.pct(50.0));
+        assert!(pi.pct(99.0) > 800.0, "input p99 {}", pi.pct(99.0));
+        assert!(po.mean() > pi.mean(), "outputs should run longer");
+        // Means in a plausible ShareGPT band.
+        assert!((80.0..350.0).contains(&pi.mean()), "input mean {}", pi.mean());
+        assert!((120.0..450.0).contains(&po.mean()), "output mean {}", po.mean());
+    }
+
+    #[test]
+    fn tiny_fits_context_window() {
+        let s = ShareGptSampler::tiny();
+        let mut rng = Rng::new(3);
+        for _ in 0..5_000 {
+            let (i, o) = s.sample(&mut rng);
+            assert!(i + o <= 112, "tiny sample {i}+{o} too long");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let s = ShareGptSampler::new();
+        let a: Vec<_> = {
+            let mut r = Rng::new(9);
+            (0..100).map(|_| s.sample(&mut r)).collect()
+        };
+        let b: Vec<_> = {
+            let mut r = Rng::new(9);
+            (0..100).map(|_| s.sample(&mut r)).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

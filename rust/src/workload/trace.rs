@@ -1,0 +1,226 @@
+//! Trace construction: combine arrival processes with token-length sampling
+//! into a time-sorted request trace, including the paper's W_A and W_B
+//! workload recipes (§6 "Workloads"). Traces serialize to JSON for replay.
+
+use crate::core::{Request, RequestClass, RequestId, Slo, Time};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::arrivals::ArrivalProcess;
+use super::sharegpt::ShareGptSampler;
+
+/// One request-stream component of a workload.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub class: RequestClass,
+    pub slo: Slo,
+    pub arrivals: ArrivalProcess,
+    pub count: usize,
+    /// Model index this stream targets.
+    pub model: usize,
+    pub start: Time,
+}
+
+/// A complete, time-sorted request trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    pub fn duration(&self) -> Time {
+        self.requests.last().map(|r| r.arrival).unwrap_or(0.0)
+    }
+
+    pub fn count_class(&self, class: RequestClass) -> usize {
+        self.requests.iter().filter(|r| r.class == class).count()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.requests.iter().map(|r| {
+            Json::obj(vec![
+                ("id", r.id.0.into()),
+                ("class", r.class.as_str().into()),
+                ("ttft_slo", r.slo.ttft.into()),
+                ("itl_slo", r.slo.itl.into()),
+                ("arrival", r.arrival.into()),
+                ("input", (r.input_tokens as u64).into()),
+                ("output", (r.output_tokens as u64).into()),
+                ("model", (r.model as u64).into()),
+            ])
+        }))
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Trace> {
+        let arr = j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("trace json must be an array"))?;
+        let mut requests = Vec::with_capacity(arr.len());
+        for item in arr {
+            let class = match item.get("class").as_str() {
+                Some("interactive") => RequestClass::Interactive,
+                Some("batch") => RequestClass::Batch,
+                other => anyhow::bail!("bad class {other:?}"),
+            };
+            requests.push(Request {
+                id: RequestId(item.get("id").as_u64().unwrap_or(0)),
+                class,
+                slo: Slo {
+                    ttft: item.get("ttft_slo").as_f64().unwrap_or(10.0),
+                    itl: item.get("itl_slo").as_f64().unwrap_or(0.2),
+                },
+                arrival: item.get("arrival").as_f64().unwrap_or(0.0),
+                input_tokens: item.get("input").as_u64().unwrap_or(1) as u32,
+                output_tokens: item.get("output").as_u64().unwrap_or(1) as u32,
+                model: item.get("model").as_u64().unwrap_or(0) as usize,
+            });
+        }
+        Ok(Trace { requests })
+    }
+}
+
+/// Builds traces from one or more workload streams.
+#[derive(Debug, Default)]
+pub struct TraceBuilder {
+    streams: Vec<WorkloadSpec>,
+    sampler: Option<ShareGptSampler>,
+    next_id: u64,
+}
+
+impl TraceBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn sampler(mut self, s: ShareGptSampler) -> Self {
+        self.sampler = Some(s);
+        self
+    }
+
+    pub fn stream(mut self, spec: WorkloadSpec) -> Self {
+        self.streams.push(spec);
+        self
+    }
+
+    pub fn build(mut self, rng: &mut Rng) -> Trace {
+        let sampler = self.sampler.take().unwrap_or_default();
+        let mut requests = Vec::new();
+        for spec in &self.streams {
+            let times = spec.arrivals.generate(rng, spec.start, spec.count);
+            for t in times {
+                let (input, output) = sampler.sample(rng);
+                requests.push(Request {
+                    id: RequestId(self.next_id),
+                    class: spec.class,
+                    slo: spec.slo,
+                    arrival: t,
+                    input_tokens: input,
+                    output_tokens: output,
+                    model: spec.model,
+                });
+                self.next_id += 1;
+            }
+        }
+        requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        Trace { requests }
+    }
+}
+
+/// Paper workload W_A: interactive-only at a given Poisson rate.
+/// `model` selects the target; the "mixed" configuration calls this twice.
+pub fn workload_a(rate: f64, count: usize, model: usize) -> WorkloadSpec {
+    WorkloadSpec {
+        class: RequestClass::Interactive,
+        slo: Slo::interactive_default(),
+        arrivals: ArrivalProcess::Poisson { rate },
+        count,
+        model,
+        start: 0.0,
+    }
+}
+
+/// Paper workload W_B batch component: a queue of `count` batch requests
+/// dumped at `at` (the evaluation varies this queue size).
+pub fn workload_b_batch(count: usize, at: Time, model: usize, ttft_slo: Time) -> WorkloadSpec {
+    WorkloadSpec {
+        class: RequestClass::Batch,
+        slo: Slo {
+            ttft: ttft_slo,
+            ..Slo::batch_default()
+        },
+        arrivals: ArrivalProcess::Burst { at },
+        count,
+        model,
+        start: at,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_sorts_by_arrival_and_ids_unique() {
+        let mut rng = Rng::new(1);
+        let t = TraceBuilder::new()
+            .stream(workload_a(20.0, 500, 0))
+            .stream(workload_b_batch(300, 5.0, 0, 3600.0))
+            .build(&mut rng);
+        assert_eq!(t.len(), 800);
+        assert!(t
+            .requests
+            .windows(2)
+            .all(|w| w[0].arrival <= w[1].arrival));
+        let mut ids: Vec<u64> = t.requests.iter().map(|r| r.id.0).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 800);
+    }
+
+    #[test]
+    fn class_counts() {
+        let mut rng = Rng::new(2);
+        let t = TraceBuilder::new()
+            .stream(workload_a(10.0, 100, 0))
+            .stream(workload_b_batch(50, 0.0, 1, 600.0))
+            .build(&mut rng);
+        assert_eq!(t.count_class(RequestClass::Interactive), 100);
+        assert_eq!(t.count_class(RequestClass::Batch), 50);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut rng = Rng::new(3);
+        let t = TraceBuilder::new()
+            .stream(workload_a(10.0, 50, 1))
+            .build(&mut rng);
+        let j = t.to_json();
+        let back = Trace::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.len(), t.len());
+        for (a, b) in t.requests.iter().zip(&back.requests) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.input_tokens, b.input_tokens);
+            assert_eq!(a.output_tokens, b.output_tokens);
+            assert!((a.arrival - b.arrival).abs() < 1e-9);
+            assert_eq!(a.model, b.model);
+        }
+    }
+
+    #[test]
+    fn batch_burst_arrives_at_once() {
+        let mut rng = Rng::new(4);
+        let t = TraceBuilder::new()
+            .stream(workload_b_batch(100, 300.0, 0, 3600.0))
+            .build(&mut rng);
+        assert!(t.requests.iter().all(|r| r.arrival == 300.0));
+        assert!(t.requests.iter().all(|r| r.slo.ttft == 3600.0));
+    }
+}

@@ -1,0 +1,242 @@
+//! Property-based invariant tests over the coordinator and simulator,
+//! using the in-tree seeded property harness (proptest is unavailable
+//! offline). Each property runs across randomized workloads/configs.
+
+use chiron::coordinator::groups::build_groups;
+use chiron::coordinator::waiting::WaitingTimeEstimator;
+use chiron::coordinator::{BootstrapSpec, Chiron, ChironConfig, LocalAutoscaler, LocalConfig};
+use chiron::core::{InstanceClass, InstanceId, ModelSpec, RequestClass};
+use chiron::sim::policy::{InstanceState, InstanceView};
+use chiron::sim::{run_sim, SimConfig};
+use chiron::util::check::{gen, property};
+use chiron::util::rng::Rng;
+use chiron::workload::trace::{workload_a, workload_b_batch};
+use chiron::workload::TraceBuilder;
+
+fn small_cases() {
+    // Keep whole-sim properties cheap.
+    std::env::set_var("CHIRON_PROP_CASES", "12");
+}
+
+#[test]
+fn sim_conserves_requests_and_tokens() {
+    small_cases();
+    property("request conservation", |rng| {
+        let n_inter = gen::int_in(rng, 20, 200);
+        let n_batch = gen::int_in(rng, 0, 200);
+        let rate = gen::log_uniform(rng, 2.0, 40.0);
+        let models = vec![ModelSpec::llama8b()];
+        let mut trng = rng.fork();
+        let trace = TraceBuilder::new()
+            .stream(workload_a(rate, n_inter, 0))
+            .stream(workload_b_batch(n_batch, 5.0, 0, 1200.0))
+            .build(&mut trng);
+        let expected_tokens: f64 = trace.requests.iter().map(|r| r.output_tokens as f64).sum();
+        let mut cfg = ChironConfig::for_models(1);
+        cfg.bootstrap[0] = BootstrapSpec {
+            interactive: 1,
+            mixed: 2,
+            batch: 0,
+        };
+        let mut policy = Chiron::new(cfg, &models);
+        let mut sim_cfg = SimConfig::new(20, models.clone());
+        sim_cfg.max_sim_time = 3.0 * 3600.0;
+        let report = run_sim(sim_cfg, trace, &mut policy);
+        // Every request completes exactly once; token accounting matches.
+        assert_eq!(report.unfinished, 0);
+        assert_eq!(report.outcomes.len(), n_inter + n_batch);
+        let mut ids: Vec<u64> = report.outcomes.iter().map(|o| o.id.0).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n_inter + n_batch, "duplicate completions");
+        assert!(
+            (report.total_tokens - expected_tokens).abs() < 1e-6 * expected_tokens.max(1.0),
+            "tokens {} vs expected {}",
+            report.total_tokens,
+            expected_tokens
+        );
+        // Causality: first token after arrival, completion after first.
+        for o in &report.outcomes {
+            assert!(o.first_token >= o.arrival - 1e-9);
+            assert!(o.completion >= o.first_token - 1e-9);
+        }
+    });
+}
+
+#[test]
+fn gpu_budget_is_invariant_under_any_load() {
+    small_cases();
+    property("gpu budget", |rng| {
+        let gpus = gen::int_in(rng, 2, 16) as u32;
+        let models = vec![ModelSpec::llama8b()];
+        let mut trng = rng.fork();
+        let trace = TraceBuilder::new()
+            .stream(workload_a(gen::log_uniform(rng, 5.0, 100.0), 150, 0))
+            .stream(workload_b_batch(gen::int_in(rng, 0, 2000), 1.0, 0, 300.0))
+            .build(&mut trng);
+        let mut cfg = ChironConfig::for_models(1);
+        cfg.bootstrap[0] = BootstrapSpec {
+            interactive: 1,
+            mixed: 1,
+            batch: 0,
+        };
+        let mut policy = Chiron::new(cfg, &models);
+        let mut sim_cfg = SimConfig::new(gpus, models.clone());
+        sim_cfg.max_sim_time = 1800.0;
+        sim_cfg.timeline_every = 1;
+        let report = run_sim(sim_cfg, trace, &mut policy);
+        for p in &report.timeline {
+            assert!(p.gpus_used <= gpus, "t={} used {}", p.t, p.gpus_used);
+        }
+    });
+}
+
+#[test]
+fn local_autoscaler_never_exceeds_bounds_and_converges() {
+    property("algorithm 1 bounds", |rng| {
+        let slo = gen::log_uniform(rng, 0.05, 2.0);
+        let c = slo / gen::log_uniform(rng, 20.0, 2000.0); // plant: itl = c*b
+        let cfg = LocalConfig::default();
+        let mut la = LocalAutoscaler::new(cfg);
+        let mut mb = gen::int_in(rng, 1, 64) as u32;
+        let mut steps = 0u64;
+        for _ in 0..300 {
+            steps += 1;
+            let itl = c * mb as f64;
+            let thr = mb as f64 / itl.max(1e-9);
+            let v = InstanceView {
+                id: InstanceId(1),
+                class: InstanceClass::Mixed,
+                model: 0,
+                state: InstanceState::Running,
+                running: mb,
+                running_interactive: 0,
+                waiting: 2,
+                max_batch: mb,
+                kv_tokens: 0,
+                kv_capacity: u64::MAX / 2,
+                last_step_time: itl,
+                last_decode_time: itl,
+                throughput_tokens: thr,
+                min_itl_slo: slo,
+                steps,
+            };
+            if let Some(new) = la.on_step(&v) {
+                assert!(new >= cfg.min_batch && new <= cfg.max_batch);
+                mb = new;
+            }
+        }
+        // Converged ITL must end at or below ~1.6x the SLO (halving bound).
+        let final_itl = c * mb as f64;
+        assert!(
+            final_itl <= slo * 1.6,
+            "final itl {final_itl} vs slo {slo} (mb {mb})"
+        );
+    });
+}
+
+#[test]
+fn request_groups_partition_and_cover() {
+    property("group partition", |rng| {
+        let n = gen::int_in(rng, 1, 500);
+        let base = rng.range_f64(0.0, 1e6);
+        let deadlines: Vec<f64> = (0..n)
+            .map(|_| base + rng.range_f64(0.0, 20_000.0))
+            .collect();
+        let stride = gen::int_in(rng, 1, 64);
+        let g = build_groups(&deadlines, stride, rng.range_f64(10.0, 5000.0), 8);
+        assert!(!g.is_empty());
+        assert_eq!(g.iter().map(|x| x.count).sum::<usize>(), n * stride);
+        // Earliest deadlines must be honest lower bounds per group.
+        for gr in &g {
+            assert!(gr.earliest_deadline <= gr.centroid + 1e-6);
+        }
+        // Groups sorted by deadline.
+        assert!(g.windows(2).all(|w| w[0].centroid <= w[1].centroid));
+    });
+}
+
+#[test]
+fn waiting_estimator_is_monotone() {
+    property("estimator monotonicity", |rng| {
+        let mut est = WaitingTimeEstimator::new(gen::log_uniform(rng, 100.0, 10_000.0));
+        for _ in 0..gen::int_in(rng, 0, 100) {
+            est.observe_completion(gen::int_in(rng, 1, 2000) as u32);
+        }
+        let q1 = gen::log_uniform(rng, 1.0, 1e5);
+        let q2 = q1 * rng.range_f64(1.0, 10.0);
+        let i1 = gen::log_uniform(rng, 1.0, 50.0);
+        let i2 = i1 * rng.range_f64(1.0, 8.0);
+        // More queue => more wait; more instances => less wait.
+        assert!(est.estimate_wait(q2, i1) >= est.estimate_wait(q1, i1) - 1e-12);
+        assert!(est.estimate_wait(q1, i2) <= est.estimate_wait(q1, i1) + 1e-12);
+        assert!(est.estimate_wait(q1, i1).is_finite());
+    });
+}
+
+#[test]
+fn interactive_requests_never_starve_behind_batch() {
+    small_cases();
+    property("interactive no-starvation", |rng| {
+        let models = vec![ModelSpec::llama8b()];
+        let mut trng = rng.fork();
+        // Batch flood first, interactive arriving after.
+        let trace = TraceBuilder::new()
+            .stream(workload_b_batch(gen::int_in(rng, 500, 3000), 0.0, 0, 7200.0))
+            .stream(workload_a(10.0, 100, 0))
+            .build(&mut trng);
+        let mut cfg = ChironConfig::for_models(1);
+        cfg.bootstrap[0] = BootstrapSpec {
+            interactive: 1,
+            mixed: 2,
+            batch: 0,
+        };
+        let mut policy = Chiron::new(cfg, &models);
+        let mut sim_cfg = SimConfig::new(16, models.clone());
+        sim_cfg.max_sim_time = 3.0 * 3600.0;
+        let report = run_sim(sim_cfg, trace, &mut policy);
+        // Interactive p99 TTFT stays bounded even under a batch flood
+        // (preemptible mixed instances: paper §3).
+        let mut worst: f64 = 0.0;
+        for o in report
+            .outcomes
+            .iter()
+            .filter(|o| o.class == RequestClass::Interactive)
+        {
+            worst = worst.max(o.ttft());
+        }
+        assert!(worst < 60.0, "interactive starved: worst ttft {worst}s");
+    });
+}
+
+#[test]
+fn deterministic_across_identical_runs() {
+    small_cases();
+    property("determinism", |rng| {
+        let seed = rng.next_u64();
+        let run = || {
+            let models = vec![ModelSpec::llama8b()];
+            let mut trng = Rng::new(seed);
+            let trace = TraceBuilder::new()
+                .stream(workload_a(15.0, 120, 0))
+                .build(&mut trng);
+            let mut cfg = ChironConfig::for_models(1);
+            cfg.bootstrap[0] = BootstrapSpec {
+                interactive: 1,
+                mixed: 1,
+                batch: 0,
+            };
+            let mut policy = Chiron::new(cfg, &models);
+            let mut sim_cfg = SimConfig::new(8, models.clone());
+            sim_cfg.max_sim_time = 1800.0;
+            let r = run_sim(sim_cfg, trace, &mut policy);
+            (
+                r.outcomes.len(),
+                r.end_time.to_bits(),
+                r.total_tokens.to_bits(),
+                r.scale_ups,
+            )
+        };
+        assert_eq!(run(), run());
+    });
+}

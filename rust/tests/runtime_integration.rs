@@ -1,0 +1,173 @@
+//! Integration tests over the PJRT runtime and the real engine. These
+//! require the AOT artifacts (`make artifacts`); they are skipped (pass
+//! trivially with a notice) when artifacts are absent so `cargo test`
+//! stays green on a fresh checkout.
+
+use chiron::engine::{EngineRequest, LlmEngine};
+use chiron::runtime::{Manifest, TinyLlmRuntime};
+use chiron::server::ServingFrontend;
+
+fn artifacts_dir() -> Option<String> {
+    for cand in ["artifacts", "../artifacts"] {
+        if Manifest::load(cand).is_ok() {
+            return Some(cand.to_string());
+        }
+    }
+    eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+    None
+}
+
+#[test]
+fn manifest_loads_with_expected_dims() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.dims.vocab, 256);
+    assert_eq!(m.dims.max_seq, 128);
+    assert!(!m.variants.is_empty());
+    assert_eq!(m.variants[0].batch, 1);
+}
+
+#[test]
+fn decode_is_deterministic_and_logits_finite() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = TinyLlmRuntime::load(&dir).unwrap();
+    let cache = rt.empty_cache(1);
+    let (l1, c1) = rt.decode(1, &[5], &[0], &cache).unwrap();
+    let (l2, _) = rt.decode(1, &[5], &[0], &cache).unwrap();
+    assert_eq!(l1, l2, "decode must be deterministic");
+    assert!(l1.iter().all(|x| x.is_finite()));
+    assert_eq!(l1.len(), rt.manifest.dims.vocab);
+    assert_eq!(c1.len(), cache.len());
+    // The cache must actually change (K/V written at position 0).
+    assert_ne!(c1, cache);
+}
+
+#[test]
+fn prefill_matches_decode_chain() {
+    // The KV-cache correctness test across the FFI boundary: greedy chain
+    // after a prefill must match a token-by-token decode from scratch.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = TinyLlmRuntime::load(&dir).unwrap();
+    let prompt = [7i32, 11, 13, 17];
+    let s = rt.manifest.dims.max_seq;
+
+    // Path A: prefill then one decode.
+    let mut tokens = vec![0i32; s];
+    tokens[..4].copy_from_slice(&prompt);
+    let (logits_a, cache_a) = rt.prefill(1, &tokens, &[4]).unwrap();
+    let first_a = rt.argmax_row(&logits_a, 0);
+    let (logits_a2, _) = rt.decode(1, &[first_a], &[4], &cache_a).unwrap();
+
+    // Path B: decode token-by-token from an empty cache.
+    let mut cache_b = rt.empty_cache(1);
+    let mut logits_b = Vec::new();
+    for (pos, &t) in prompt.iter().enumerate() {
+        let (l, c) = rt.decode(1, &[t], &[pos as i32], &cache_b).unwrap();
+        cache_b = c;
+        logits_b = l;
+    }
+    let first_b = rt.argmax_row(&logits_b, 0);
+    assert_eq!(first_a, first_b, "first generated token must agree");
+    let (logits_b2, _) = rt.decode(1, &[first_b], &[4], &cache_b).unwrap();
+    for (a, b) in logits_a2.iter().zip(&logits_b2) {
+        assert!((a - b).abs() < 1e-3, "logits diverge: {a} vs {b}");
+    }
+}
+
+#[test]
+fn batch_rows_match_single_row_execution() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = TinyLlmRuntime::load(&dir).unwrap();
+    if !rt.batch_variants().contains(&4) {
+        return;
+    }
+    // Batch of 4 identical rows must produce identical logits per row, and
+    // match the single-row run.
+    let cache4 = rt.empty_cache(4);
+    let (l4, _) = rt.decode(4, &[9, 9, 9, 9], &[0; 4], &cache4).unwrap();
+    let cache1 = rt.empty_cache(1);
+    let (l1, _) = rt.decode(1, &[9], &[0], &cache1).unwrap();
+    let v = rt.manifest.dims.vocab;
+    for row in 0..4 {
+        for i in 0..v {
+            let a = l4[row * v + i];
+            assert!((a - l1[i]).abs() < 1e-4, "row {row} logit {i}: {a} vs {}", l1[i]);
+        }
+    }
+}
+
+#[test]
+fn engine_serves_batched_requests() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = TinyLlmRuntime::load(&dir).unwrap();
+    let mut engine = LlmEngine::new(rt, 4);
+    for i in 0..6u64 {
+        engine.submit(EngineRequest {
+            id: i,
+            prompt: vec![1 + i as i32, 2, 3],
+            max_new_tokens: 5,
+            arrival: None,
+        });
+    }
+    let outcomes = engine.run_to_completion().unwrap();
+    assert_eq!(outcomes.len(), 6);
+    for o in &outcomes {
+        assert_eq!(o.tokens.len(), 5);
+        assert!(o.ttft >= 0.0 && o.total_latency >= o.ttft);
+    }
+    // Greedy decoding is deterministic: same prompt => same output.
+    let rt2 = TinyLlmRuntime::load(&dir).unwrap();
+    let mut e2 = LlmEngine::new(rt2, 4);
+    e2.submit(EngineRequest {
+        id: 0,
+        prompt: vec![1, 2, 3],
+        max_new_tokens: 5,
+        arrival: None,
+    });
+    let again = e2.run_to_completion().unwrap();
+    let orig = outcomes.iter().find(|o| o.id == 0).unwrap();
+    assert_eq!(orig.tokens, again[0].tokens);
+}
+
+#[test]
+fn engine_batch_size_affects_concurrency_not_results() {
+    let Some(dir) = artifacts_dir() else { return };
+    let gen = |max_batch: usize| {
+        let rt = TinyLlmRuntime::load(&dir).unwrap();
+        let mut e = LlmEngine::new(rt, max_batch);
+        for i in 0..4u64 {
+            e.submit(EngineRequest {
+                id: i,
+                prompt: vec![10 + i as i32, 20, 30],
+                max_new_tokens: 6,
+                arrival: None,
+            });
+        }
+        let mut out = e.run_to_completion().unwrap();
+        out.sort_by_key(|o| o.id);
+        out.into_iter().map(|o| o.tokens).collect::<Vec<_>>()
+    };
+    assert_eq!(gen(1), gen(4), "batching must not change greedy outputs");
+}
+
+#[test]
+fn frontend_threaded_serving() {
+    let Some(dir) = artifacts_dir() else { return };
+    let front = ServingFrontend::start(
+        move || Ok(LlmEngine::new(TinyLlmRuntime::load(&dir)?, 4)),
+        None,
+    );
+    for i in 0..5u64 {
+        front
+            .submit(EngineRequest {
+                id: i,
+                prompt: vec![2, 4, 6],
+                max_new_tokens: 4,
+                arrival: None,
+            })
+            .unwrap();
+    }
+    let outcomes = front.wait_for(5, std::time::Duration::from_secs(120));
+    assert_eq!(outcomes.len(), 5);
+    front.shutdown().unwrap();
+}

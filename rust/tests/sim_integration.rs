@@ -1,0 +1,151 @@
+//! End-to-end integration tests: full traces through the discrete-event
+//! simulator under Chiron and the baselines.
+
+use chiron::baselines::{Llumnix, StaticPolicy};
+use chiron::coordinator::{BootstrapSpec, Chiron, ChironConfig};
+use chiron::core::{ModelSpec, RequestClass};
+use chiron::sim::{run_sim, SimConfig};
+use chiron::util::rng::Rng;
+use chiron::workload::trace::{workload_a, workload_b_batch};
+use chiron::workload::TraceBuilder;
+
+fn chiron_for(models: &[ModelSpec], inter: u32, mixed: u32) -> Chiron {
+    let mut cfg = ChironConfig::for_models(models.len());
+    for b in &mut cfg.bootstrap {
+        *b = BootstrapSpec {
+            interactive: inter,
+            mixed,
+            batch: 0,
+        };
+    }
+    Chiron::new(cfg, models)
+}
+
+#[test]
+fn chiron_serves_interactive_workload_within_slo() {
+    let models = vec![ModelSpec::llama8b()];
+    let mut rng = Rng::new(1);
+    let trace = TraceBuilder::new()
+        .stream(workload_a(30.0, 2_000, 0))
+        .build(&mut rng);
+    let cfg = SimConfig::new(50, models.clone());
+    let mut policy = chiron_for(&models, 2, 4);
+    let report = run_sim(cfg, trace, &mut policy);
+    assert_eq!(report.unfinished, 0, "all requests must finish");
+    assert!(
+        report.slo_attainment() > 0.9,
+        "SLO attainment {} too low",
+        report.slo_attainment()
+    );
+    assert!(report.gpu_seconds > 0.0);
+}
+
+#[test]
+fn chiron_completes_batch_queue_before_deadline() {
+    let models = vec![ModelSpec::llama8b()];
+    let mut rng = Rng::new(2);
+    let trace = TraceBuilder::new()
+        .stream(workload_a(10.0, 500, 0))
+        .stream(workload_b_batch(2_000, 10.0, 0, 1800.0))
+        .build(&mut rng);
+    let mut cfg = SimConfig::new(50, models.clone());
+    cfg.max_sim_time = 3600.0 * 4.0;
+    let mut policy = chiron_for(&models, 1, 3);
+    let report = run_sim(cfg, trace, &mut policy);
+    assert_eq!(report.unfinished, 0, "batch queue must drain");
+    let batch_slo = report.slo_attainment_class(RequestClass::Batch);
+    assert!(batch_slo > 0.8, "batch SLO attainment {batch_slo}");
+}
+
+#[test]
+fn chiron_beats_llumnix_on_batch_dominated_load() {
+    // The paper's core efficiency claim, in shape: on a batch-dominated
+    // workload (where SLO-aware queuing + large batch instances pay off),
+    // Chiron consumes fewer GPU·hours at equal-or-better SLO attainment.
+    let models = vec![ModelSpec::llama8b()];
+    let mk_trace = |seed| {
+        let mut rng = Rng::new(seed);
+        TraceBuilder::new()
+            .stream(workload_a(10.0, 400, 0))
+            .stream(workload_b_batch(20_000, 5.0, 0, 2400.0))
+            .build(&mut rng)
+    };
+    let mut cfg = SimConfig::new(50, models.clone());
+    cfg.max_sim_time = 3600.0 * 4.0;
+
+    let mut chiron = chiron_for(&models, 1, 3);
+    let r_chiron = run_sim(cfg.clone(), mk_trace(3), &mut chiron);
+
+    let mut llumnix = Llumnix::untuned(&models);
+    let r_llumnix = run_sim(cfg, mk_trace(3), &mut llumnix);
+
+    assert_eq!(r_chiron.unfinished, 0);
+    assert!(
+        r_chiron.gpu_seconds < r_llumnix.gpu_seconds,
+        "chiron {} GPUs·s vs llumnix {} GPUs·s",
+        r_chiron.gpu_seconds,
+        r_llumnix.gpu_seconds
+    );
+    assert!(
+        r_chiron.slo_attainment() >= r_llumnix.slo_attainment() - 0.02,
+        "chiron slo {} vs llumnix {}",
+        r_chiron.slo_attainment(),
+        r_llumnix.slo_attainment()
+    );
+}
+
+#[test]
+fn static_policy_is_deterministic() {
+    let models = vec![ModelSpec::llama8b()];
+    let run = || {
+        let mut rng = Rng::new(7);
+        let trace = TraceBuilder::new()
+            .stream(workload_a(10.0, 300, 0))
+            .build(&mut rng);
+        let cfg = SimConfig::new(8, models.clone());
+        let mut p = StaticPolicy::new(vec![2], 32);
+        run_sim(cfg, trace, &mut p)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.outcomes.len(), b.outcomes.len());
+    assert_eq!(a.end_time, b.end_time);
+    assert_eq!(a.total_tokens, b.total_tokens);
+    let ka: Vec<_> = a.outcomes.iter().map(|o| (o.id, o.completion.to_bits())).collect();
+    let kb: Vec<_> = b.outcomes.iter().map(|o| (o.id, o.completion.to_bits())).collect();
+    assert_eq!(ka, kb, "simulation must be bit-deterministic");
+}
+
+#[test]
+fn two_model_mixed_configuration_runs() {
+    let models = vec![ModelSpec::llama8b(), ModelSpec::llama70b()];
+    let mut rng = Rng::new(9);
+    let trace = TraceBuilder::new()
+        .stream(workload_a(20.0, 600, 0))
+        .stream(workload_a(4.0, 150, 1))
+        .build(&mut rng);
+    let mut cfg = SimConfig::new(50, models.clone());
+    cfg.max_sim_time = 3600.0;
+    let mut policy = chiron_for(&models, 1, 3);
+    let report = run_sim(cfg, trace, &mut policy);
+    assert_eq!(report.unfinished, 0);
+    assert!(report.slo_attainment() > 0.8, "{}", report.slo_attainment());
+}
+
+#[test]
+fn gpu_budget_never_exceeded() {
+    let models = vec![ModelSpec::llama8b()];
+    let mut rng = Rng::new(11);
+    let trace = TraceBuilder::new()
+        .stream(workload_a(200.0, 3_000, 0)) // heavy overload
+        .stream(workload_b_batch(5_000, 0.0, 0, 600.0)) // urgent batch
+        .build(&mut rng);
+    let mut cfg = SimConfig::new(10, models.clone());
+    cfg.max_sim_time = 1800.0;
+    cfg.timeline_every = 1;
+    let mut policy = chiron_for(&models, 1, 2);
+    let report = run_sim(cfg, trace, &mut policy);
+    for p in &report.timeline {
+        assert!(p.gpus_used <= 10, "budget exceeded at t={}: {}", p.t, p.gpus_used);
+    }
+}
