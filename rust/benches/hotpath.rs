@@ -9,10 +9,12 @@
 use chiron::coordinator::groups::build_groups;
 use chiron::coordinator::waiting::WaitingTimeEstimator;
 use chiron::coordinator::{BootstrapSpec, Chiron, ChironConfig, LocalAutoscaler, LocalConfig};
-use chiron::core::{InstanceClass, InstanceId, ModelSpec, RequestClass, RequestId};
+use chiron::core::{InstanceClass, InstanceId, ModelSpec, Request, RequestClass, RequestId, Slo};
+use chiron::experiments::common::{make_policy, PolicyKind};
 use chiron::sim::policy::{ClusterView, InstanceState, InstanceView, Policy, QueueStats, QueuedReq};
-use chiron::sim::{run_sim, SimConfig};
+use chiron::sim::{run_sim, SimConfig, SimInstance, WorkItem};
 use chiron::util::bench::{black_box, Bencher};
+use chiron::util::parallel::run_grid_jobs;
 use chiron::util::rng::Rng;
 use chiron::workload::trace::{workload_a, workload_b_batch};
 use chiron::workload::{ShareGptSampler, TraceBuilder};
@@ -125,6 +127,50 @@ fn main() {
         });
     }
 
+    // -- instance view snapshot (the per-step policy input) -----------------
+    {
+        let mut inst = SimInstance::new(
+            InstanceId(0),
+            InstanceClass::Mixed,
+            0,
+            ModelSpec::llama8b().profile,
+            64,
+            0.0,
+        );
+        inst.state = InstanceState::Running;
+        for i in 0..64u64 {
+            inst.enqueue(WorkItem::fresh(Request {
+                id: RequestId(i),
+                class: if i % 4 == 0 {
+                    RequestClass::Interactive
+                } else {
+                    RequestClass::Batch
+                },
+                slo: if i % 4 == 0 {
+                    Slo::interactive_default()
+                } else {
+                    Slo::batch_default()
+                },
+                arrival: 0.0,
+                input_tokens: 2,
+                output_tokens: 10_000,
+                model: 0,
+            }));
+        }
+        let d = inst.begin_step(0.0).expect("work admitted");
+        inst.finish_step(d, d);
+        assert_eq!(inst.running_len(), 64);
+        // §Perf target: O(1) and heap-free regardless of the running set
+        // (the seed scanned all running requests twice per snapshot).
+        b.bench_units("instance.view x1000 (64 running)", Some(1000.0), || {
+            let mut steps = 0u64;
+            for _ in 0..1000 {
+                steps = steps.wrapping_add(black_box(inst.view()).steps);
+            }
+            black_box(steps);
+        });
+    }
+
     // -- end-to-end simulator throughput -----------------------------------
     {
         let mk = |n_inter: usize, n_batch: usize| {
@@ -152,5 +198,52 @@ fn main() {
         });
     }
 
+    // -- parallel grid: the four-policy compare() fan-out -------------------
+    // Same grid at --jobs 1 vs --jobs N; the trajectory file records both,
+    // so the speedup (ideally near-linear in cores) is tracked over PRs.
+    {
+        let kinds = vec![
+            PolicyKind::Chiron,
+            PolicyKind::LlumnixUntuned,
+            PolicyKind::LocalOnly,
+            PolicyKind::GlobalOnly(64),
+        ];
+        let models_grid = models.clone();
+        let grid = |jobs_n: usize| {
+            let tasks: Vec<&PolicyKind> = kinds.iter().collect();
+            let done: usize = run_grid_jobs(jobs_n, tasks, |_, kind| {
+                let mut rng = Rng::new(11);
+                let trace = TraceBuilder::new()
+                    .stream(workload_a(25.0, 700, 0))
+                    .stream(workload_b_batch(1400, 5.0, 0, 1800.0))
+                    .build(&mut rng);
+                let mut p = make_policy(kind, &models_grid);
+                let mut sim_cfg = SimConfig::new(50, models_grid.clone());
+                sim_cfg.max_sim_time = 4.0 * 3600.0;
+                sim_cfg.timeline_every = 0;
+                run_sim(sim_cfg, trace, p.as_mut()).outcomes.len()
+            })
+            .into_iter()
+            .sum();
+            black_box(done);
+        };
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(4);
+        b.bench_units("grid.compare4 jobs=1", Some(4.0), || grid(1));
+        if cores > 1 {
+            b.bench_units(&format!("grid.compare4 jobs={cores}"), Some(4.0), || {
+                grid(cores)
+            });
+        }
+    }
+
     b.report();
+
+    // Machine-readable perf trajectory at the repo root (BENCH_hotpath.json)
+    // so this and future PRs can prove regressions/improvements.
+    let out = std::env::var("CHIRON_BENCH_OUT")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json").into());
+    b.write_json(&out);
 }

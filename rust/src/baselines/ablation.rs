@@ -37,7 +37,7 @@ impl Policy for LocalOnly {
         self.llumnix.route(req, view)
     }
 
-    fn pull_order(&self, inst: &InstanceView) -> Vec<RequestClass> {
+    fn pull_order(&self, inst: &InstanceView) -> &'static [RequestClass] {
         self.llumnix.pull_order(inst)
     }
 
@@ -82,7 +82,7 @@ impl Policy for GlobalOnly {
         self.chiron.route(req, view)
     }
 
-    fn pull_order(&self, inst: &InstanceView) -> Vec<RequestClass> {
+    fn pull_order(&self, inst: &InstanceView) -> &'static [RequestClass] {
         self.chiron.pull_order(inst)
     }
 

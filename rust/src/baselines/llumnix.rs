@@ -101,9 +101,9 @@ impl Policy for Llumnix {
         }
     }
 
-    fn pull_order(&self, _inst: &InstanceView) -> Vec<RequestClass> {
+    fn pull_order(&self, _inst: &InstanceView) -> &'static [RequestClass] {
         // FCFS across classes once capacity exists.
-        vec![RequestClass::Interactive, RequestClass::Batch]
+        &[RequestClass::Interactive, RequestClass::Batch]
     }
 
     fn on_step(&mut self, _inst: &InstanceView, _now: Time) -> Option<u32> {

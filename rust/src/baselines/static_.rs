@@ -49,8 +49,8 @@ impl Policy for StaticPolicy {
         }
     }
 
-    fn pull_order(&self, _inst: &InstanceView) -> Vec<RequestClass> {
-        vec![RequestClass::Interactive, RequestClass::Batch]
+    fn pull_order(&self, _inst: &InstanceView) -> &'static [RequestClass] {
+        &[RequestClass::Interactive, RequestClass::Batch]
     }
 
     fn on_step(&mut self, _inst: &InstanceView, _now: Time) -> Option<u32> {

@@ -190,13 +190,11 @@ impl Policy for Chiron {
         }
     }
 
-    fn pull_order(&self, inst: &InstanceView) -> Vec<RequestClass> {
+    fn pull_order(&self, inst: &InstanceView) -> &'static [RequestClass] {
         match inst.class {
-            InstanceClass::Interactive => vec![RequestClass::Interactive],
-            InstanceClass::Batch => vec![RequestClass::Batch],
-            InstanceClass::Mixed => {
-                vec![RequestClass::Interactive, RequestClass::Batch]
-            }
+            InstanceClass::Interactive => &[RequestClass::Interactive],
+            InstanceClass::Batch => &[RequestClass::Batch],
+            InstanceClass::Mixed => &[RequestClass::Interactive, RequestClass::Batch],
         }
     }
 

@@ -6,6 +6,7 @@ use crate::core::{RequestClass, Slo};
 use crate::metrics::PolicyRow;
 use crate::sim::{run_sim, SimConfig};
 use crate::util::json::Json;
+use crate::util::parallel;
 use crate::util::rng::Rng;
 use crate::workload::{ArrivalProcess, ShareGptSampler, TraceBuilder, WorkloadSpec};
 
@@ -84,18 +85,34 @@ pub fn fig19(scale: Scale) -> Json {
     cfg.max_sim_time = 2.0 * 3600.0;
     cfg.timeline_every = 30; // sample every 30 s
 
-    let mut c = chiron(&models);
-    let r_chiron = run_sim(cfg.clone(), mk_trace(19), &mut c);
-    let mut l = Llumnix::tuned(
-        &models,
-        LlumnixConfig {
-            max_batch: 256,
-            low: 0.2,
-            high: 0.7,
-            ..LlumnixConfig::untuned()
+    // The two head-to-head sims are independent; run them side by side.
+    let (r_chiron, r_llum) = parallel::join(
+        {
+            let cfg = cfg.clone();
+            let models = &models;
+            let mk_trace = &mk_trace;
+            move || {
+                let mut c = chiron(models);
+                run_sim(cfg, mk_trace(19), &mut c)
+            }
+        },
+        {
+            let models = &models;
+            let mk_trace = &mk_trace;
+            move || {
+                let mut l = Llumnix::tuned(
+                    models,
+                    LlumnixConfig {
+                        max_batch: 256,
+                        low: 0.2,
+                        high: 0.7,
+                        ..LlumnixConfig::untuned()
+                    },
+                );
+                run_sim(cfg, mk_trace(19), &mut l)
+            }
         },
     );
-    let r_llum = run_sim(cfg, mk_trace(19), &mut l);
 
     let mut rows = Vec::new();
     let n = r_chiron.timeline.len().max(r_llum.timeline.len());

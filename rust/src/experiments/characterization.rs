@@ -6,6 +6,7 @@ use crate::sim::run_sim;
 use crate::sim::SimConfig;
 use crate::baselines::{Llumnix, StaticPolicy};
 use crate::util::json::Json;
+use crate::util::parallel::{self, run_grid};
 use crate::util::rng::Rng;
 use crate::util::stats::Percentiles;
 use crate::workload::{ArrivalProcess, ShareGptSampler, SpikeTrain, TraceBuilder, WorkloadSpec};
@@ -104,37 +105,45 @@ pub fn fig5(scale: Scale) -> Json {
     let models = vec![ModelSpec::llama8b()];
     let count = scale.n(600, 3000);
     let rate = 30.0;
+    // Each (cv, target) pair runs its own sequential search for the
+    // instance count; the 12 searches are independent, so they fan out.
+    let cvs = [1.0, 2.0, 4.0, 8.0];
+    let targets = [0.90, 0.95, 0.99];
+    let mut pairs = Vec::new();
+    for &cv in &cvs {
+        for &target in &targets {
+            pairs.push((cv, target));
+        }
+    }
+    let needed_flat = run_grid(pairs, |_, (cv, target)| {
+        let mut n_inst = 1u32;
+        loop {
+            let mut rng = Rng::new(5 + cv as u64);
+            let trace = TraceBuilder::new()
+                .sampler(ShareGptSampler::new())
+                .stream(WorkloadSpec {
+                    class: RequestClass::Interactive,
+                    slo: Slo::interactive_default(),
+                    arrivals: ArrivalProcess::Gamma { rate, cv },
+                    count,
+                    model: 0,
+                    start: 0.0,
+                })
+                .build(&mut rng);
+            let mut cfg = SimConfig::new(n_inst, models.clone());
+            cfg.max_sim_time = 4.0 * 3600.0;
+            let mut p = StaticPolicy::new(vec![n_inst], 2048);
+            let report = run_sim(cfg, trace, &mut p);
+            if report.slo_attainment() >= target || n_inst >= 32 {
+                return n_inst as f64;
+            }
+            n_inst += 1;
+        }
+    });
     let mut rows = Vec::new();
     let mut json_rows = Vec::new();
-    for &cv in &[1.0, 2.0, 4.0, 8.0] {
-        // Baseline demand: instances needed at CV=1 to meet SLOs.
-        let mut needed = Vec::new();
-        for &target in &[0.90, 0.95, 0.99] {
-            let mut n_inst = 1u32;
-            loop {
-                let mut rng = Rng::new(5 + cv as u64);
-                let trace = TraceBuilder::new()
-                    .sampler(ShareGptSampler::new())
-                    .stream(WorkloadSpec {
-                        class: RequestClass::Interactive,
-                        slo: Slo::interactive_default(),
-                        arrivals: ArrivalProcess::Gamma { rate, cv },
-                        count,
-                        model: 0,
-                        start: 0.0,
-                    })
-                    .build(&mut rng);
-                let mut cfg = SimConfig::new(n_inst, models.clone());
-                cfg.max_sim_time = 4.0 * 3600.0;
-                let mut p = StaticPolicy::new(vec![n_inst], 2048);
-                let report = run_sim(cfg, trace, &mut p);
-                if report.slo_attainment() >= target || n_inst >= 32 {
-                    needed.push(n_inst as f64);
-                    break;
-                }
-                n_inst += 1;
-            }
-        }
+    for (i, &cv) in cvs.iter().enumerate() {
+        let needed: Vec<f64> = needed_flat[i * targets.len()..(i + 1) * targets.len()].to_vec();
         rows.push((cv, needed.clone()));
         json_rows.push(Json::obj(vec![
             ("cv", cv.into()),
@@ -180,11 +189,26 @@ pub fn fig6(scale: Scale) -> Json {
     let mut cfg = SimConfig::new(20, models.clone());
     cfg.max_sim_time = 4.0 * 3600.0;
 
-    let mut grouped = chiron(&models);
-    let r_grouped = run_sim(cfg.clone(), mk_trace(6), &mut grouped);
-
-    let mut ungrouped = Llumnix::untuned(&models);
-    let r_ungrouped = run_sim(cfg, mk_trace(6), &mut ungrouped);
+    // Grouped vs per-request scaling are independent sims: run side by side.
+    let (r_grouped, r_ungrouped) = parallel::join(
+        {
+            let cfg = cfg.clone();
+            let models = &models;
+            let mk_trace = &mk_trace;
+            move || {
+                let mut grouped = chiron(models);
+                run_sim(cfg, mk_trace(6), &mut grouped)
+            }
+        },
+        {
+            let models = &models;
+            let mk_trace = &mk_trace;
+            move || {
+                let mut ungrouped = Llumnix::untuned(models);
+                run_sim(cfg, mk_trace(6), &mut ungrouped)
+            }
+        },
+    );
 
     let h_g = r_grouped.hysteresis().max(1.0);
     let h_u = r_ungrouped.hysteresis().max(1.0);

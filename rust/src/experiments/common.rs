@@ -7,6 +7,7 @@ use crate::core::{ModelSpec, RequestClass, Slo};
 use crate::metrics::PolicyRow;
 use crate::sim::{run_sim, Policy, SimConfig, SimReport};
 use crate::util::json::Json;
+use crate::util::parallel::run_grid;
 use crate::util::rng::Rng;
 use crate::workload::{ArrivalProcess, ShareGptSampler, Trace, TraceBuilder, WorkloadSpec};
 
@@ -76,6 +77,12 @@ pub fn chiron_with_theta(models: &[ModelSpec], theta: f64) -> Chiron {
 }
 
 /// The four-policy comparison set used by the headline figures.
+///
+/// `PolicyKind` is the thread-safe *factory* for policies: the comparison
+/// grid ships `&PolicyKind`s across worker threads and each worker calls
+/// `make_policy` locally, so the (stateful, non-`Sync`) `Policy` objects
+/// themselves never cross threads.
+#[derive(Debug, Clone)]
 pub enum PolicyKind {
     Chiron,
     LlumnixUntuned,
@@ -174,21 +181,24 @@ pub fn run_one(
 }
 
 /// Run the comparison set and return one row per policy.
+///
+/// Policies are independent simulations over the same (re-generated) trace,
+/// so they fan out across the worker pool (`util::parallel`); results come
+/// back in `kinds` order, so output is identical at any `--jobs` setting.
 pub fn compare(
     models: &[ModelSpec],
     gpus: u32,
-    mk_trace: impl Fn(u64) -> Trace,
+    mk_trace: impl Fn(u64) -> Trace + Sync,
     kinds: &[PolicyKind],
     max_time: f64,
     seed: u64,
 ) -> Vec<(PolicyRow, SimReport)> {
-    let mut rows = Vec::new();
-    for kind in kinds {
+    let tasks: Vec<&PolicyKind> = kinds.iter().collect();
+    run_grid(tasks, |_, kind| {
         let mut p = make_policy(kind, models);
         let report = run_one(models, gpus, mk_trace(seed), p.as_mut(), max_time);
-        rows.push((PolicyRow::from_report(&report), report));
-    }
-    rows
+        (PolicyRow::from_report(&report), report)
+    })
 }
 
 /// Print a titled comparison table.

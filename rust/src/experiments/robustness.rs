@@ -8,6 +8,7 @@ use crate::core::{
 use crate::sim::policy::{InstanceState, InstanceView};
 use crate::sim::{run_sim, SimConfig};
 use crate::util::json::Json;
+use crate::util::parallel::run_grid;
 use crate::util::rng::Rng;
 use crate::util::stats::r_squared;
 use crate::workload::{ArrivalProcess, ShareGptSampler, TraceBuilder, WorkloadSpec};
@@ -150,9 +151,9 @@ pub fn fig12(_scale: Scale) -> Json {
 pub fn fig13(scale: Scale) -> Json {
     let models = vec![ModelSpec::llama8b()];
     let batch_n = scale.n(3_000, 20_000);
-    let mut rows = Vec::new();
-    let mut out = Vec::new();
-    for &slo in &[600.0, 1800.0, 3600.0, 7200.0] {
+    // Independent sims per SLO point — fan out across the worker pool.
+    let slos = vec![600.0, 1800.0, 3600.0, 7200.0];
+    let points = run_grid(slos, |_, slo| {
         let mut rng = Rng::new(13);
         let trace = TraceBuilder::new()
             .sampler(ShareGptSampler::new())
@@ -194,12 +195,17 @@ pub fn fig13(scale: Scale) -> Json {
             q.iter().sum::<f64>() / q.len() as f64
         };
         let queue_time = q.len() as f64 * 2.0; // timeline_every=2 ticks of 1 s
-        rows.push((slo, vec![mean_q, queue_time, report.slo_attainment() * 100.0]));
+        (slo, mean_q, queue_time, report.slo_attainment())
+    });
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for (slo, mean_q, queue_time, slo_att) in points {
+        rows.push((slo, vec![mean_q, queue_time, slo_att * 100.0]));
         out.push(Json::obj(vec![
             ("ttft_slo", slo.into()),
             ("mean_queue", mean_q.into()),
             ("queue_time_s", queue_time.into()),
-            ("slo_attainment", report.slo_attainment().into()),
+            ("slo_attainment", slo_att.into()),
         ]));
     }
     print_series(
@@ -303,10 +309,10 @@ pub fn fig15(_scale: Scale) -> Json {
 pub fn fig16(scale: Scale) -> Json {
     let models = vec![ModelSpec::llama70b()];
     let count = scale.n(500, 2000);
-    let mut out = Vec::new();
-    let mut rows = Vec::new();
-    let mut base_gpuh: Option<f64> = None;
-    for &itl_slo in &[0.1, 0.2, 1.0, 10.0, 100.0] {
+    // Independent sims per ITL-SLO point; the normalization base (the
+    // tightest SLO's GPU·hours) is applied after the grid completes.
+    let slos = vec![0.1, 0.2, 1.0, 10.0, 100.0];
+    let points = run_grid(slos, |_, itl_slo| {
         let mut rng = Rng::new(16);
         let trace = TraceBuilder::new()
             .sampler(ShareGptSampler::new())
@@ -326,20 +332,25 @@ pub fn fig16(scale: Scale) -> Json {
         cfg.max_sim_time = 3.0 * 3600.0;
         let mut policy = chiron(&models);
         let report = run_sim(cfg, trace, &mut policy);
-        let gpuh = report.gpu_seconds / 3600.0;
-        let base = *base_gpuh.get_or_insert(gpuh);
+        (
+            itl_slo,
+            report.slo_attainment(),
+            report.request_throughput(),
+            report.gpu_seconds / 3600.0,
+        )
+    });
+    let base = points.first().map(|p| p.3).unwrap_or(1.0).max(1e-9);
+    let mut out = Vec::new();
+    let mut rows = Vec::new();
+    for (itl_slo, slo_met, throughput, gpuh) in points {
         rows.push((
             itl_slo,
-            vec![
-                report.slo_attainment() * 100.0,
-                report.request_throughput(),
-                gpuh / base * 100.0,
-            ],
+            vec![slo_met * 100.0, throughput, gpuh / base * 100.0],
         ));
         out.push(Json::obj(vec![
             ("itl_slo", itl_slo.into()),
-            ("slo_met", report.slo_attainment().into()),
-            ("throughput", report.request_throughput().into()),
+            ("slo_met", slo_met.into()),
+            ("throughput", throughput.into()),
             ("gpu_required_pct", (gpuh / base * 100.0).into()),
         ]));
     }
@@ -360,9 +371,9 @@ pub fn fig16(scale: Scale) -> Json {
 pub fn fig17(scale: Scale) -> Json {
     let models = vec![ModelSpec::llama8b()];
     let count = scale.n(600, 3000);
-    let mut rows = Vec::new();
-    let mut out = Vec::new();
-    for &cv in &[1.0, 2.0, 4.0, 8.0, 12.0, 16.0] {
+    // One independent sim per burstiness level — fan out.
+    let cvs = vec![1.0, 2.0, 4.0, 8.0, 12.0, 16.0];
+    let points = run_grid(cvs, |_, cv| {
         let mut rng = Rng::new(17);
         let trace = TraceBuilder::new()
             .sampler(ShareGptSampler::new())
@@ -379,10 +390,15 @@ pub fn fig17(scale: Scale) -> Json {
         cfg.max_sim_time = 2.0 * 3600.0;
         let mut policy = chiron_with_theta(&models, 1.0 / 3.0);
         let report = run_sim(cfg, trace, &mut policy);
-        rows.push((cv, vec![report.slo_attainment() * 100.0]));
+        (cv, report.slo_attainment())
+    });
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for (cv, slo_att) in points {
+        rows.push((cv, vec![slo_att * 100.0]));
         out.push(Json::obj(vec![
             ("cv", cv.into()),
-            ("slo_attainment", report.slo_attainment().into()),
+            ("slo_attainment", slo_att.into()),
         ]));
     }
     print_series(

@@ -1,7 +1,7 @@
 //! `chiron` — leader entrypoint and CLI.
 //!
 //! Subcommands:
-//!   experiment <id|all> [--quick]     regenerate a paper figure/table
+//!   experiment <id|all> [--quick] [--jobs N]   regenerate a paper figure/table
 //!   simulate --config <file.json>     run one simulation from a config
 //!   trace-gen [--rate R ...]          emit a workload trace as JSON
 //!   serve [--requests N ...]          serve the real AOT model end-to-end
@@ -53,7 +53,9 @@ fn help() {
         "chiron — hierarchical autoscaling for LLM serving (paper reproduction)\n\n\
          USAGE: chiron <subcommand> [flags]\n\n\
          SUBCOMMANDS:\n\
-         \u{20}  experiment <id|all> [--quick]   regenerate paper figures/tables (see `chiron list`)\n\
+         \u{20}  experiment <id|all> [--quick] [--jobs N]\n\
+         \u{20}                                  regenerate paper figures/tables (see `chiron list`);\n\
+         \u{20}                                  sweeps fan out over N worker threads (default: all cores)\n\
          \u{20}  simulate --config <file>        run a simulation described by a JSON config\n\
          \u{20}  trace-gen [flags]               generate a workload trace (JSON to stdout)\n\
          \u{20}  serve [flags]                   end-to-end: serve the real AOT model (needs `make artifacts`)\n\
@@ -64,11 +66,17 @@ fn help() {
 fn cmd_experiment(argv: Vec<String>) {
     let args = Args::new("chiron experiment <id|all>")
         .switch("quick", "reduced request counts (~minutes for the full suite)")
+        .flag(
+            "jobs",
+            "0",
+            "worker threads for sweep grids (0 = all cores; also CHIRON_JOBS)",
+        )
         .parse_from(argv)
         .unwrap_or_else(|m| {
             eprintln!("{m}");
             std::process::exit(2);
         });
+    chiron::util::parallel::set_jobs(args.get_usize("jobs"));
     let scale = Scale::from_flag(args.get_bool("quick"));
     let ids: Vec<String> = match args.positional().first().map(|s| s.as_str()) {
         Some("all") | None => experiments::ALL.iter().map(|s| s.to_string()).collect(),

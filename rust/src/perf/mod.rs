@@ -6,6 +6,7 @@
 use crate::core::{ModelSpec, PerfProfile, RequestClass, ServingConfig, Slo, Time};
 use crate::baselines::StaticPolicy;
 use crate::sim::{run_sim, SimConfig};
+use crate::util::parallel::run_grid;
 use crate::util::rng::Rng;
 use crate::workload::{ArrivalProcess, ShareGptSampler, TraceBuilder, WorkloadSpec};
 
@@ -51,8 +52,9 @@ pub fn batch_sweep(
     itl_slo: Time,
     seed: u64,
 ) -> Vec<CurvePoint> {
-    let mut out = Vec::new();
-    for &b in batches {
+    // One independent saturating sim per batch size: fan out across the
+    // worker pool; results stay in `batches` order.
+    run_grid(batches.to_vec(), |_, b| {
         let mut rng = Rng::new(seed ^ b as u64);
         // Saturating workload: all requests queued up front.
         let trace = TraceBuilder::new()
@@ -81,14 +83,13 @@ pub fn batch_sweep(
         let preempt: f64 =
             report.outcomes.iter().map(|o| o.preemptions as f64).sum::<f64>() / n as f64;
         let tok_thr = report.total_tokens / report.end_time.max(1e-9);
-        out.push(CurvePoint {
+        CurvePoint {
             batch: b,
             itl: itl_mean,
             token_throughput: tok_thr,
             preemptions: preempt,
-        });
-    }
-    out
+        }
+    })
 }
 
 /// Locate the throughput inflection point of a curve (the batch size after

@@ -8,7 +8,7 @@
 //! events at equal timestamps are ordered by insertion sequence.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::core::{
     InstanceClass, InstanceId, ModelSpec, RequestClass, RequestOutcome, ServingConfig, Time,
@@ -25,6 +25,9 @@ pub const MAX_BATCH_CLAMP: u32 = 16_384;
 
 /// Deadline-sample size exposed to policies for large batch queues.
 const QUEUE_SAMPLE: usize = 2_048;
+
+/// Slab sentinel: this `InstanceId` has no live slot.
+const SLOT_NONE: u32 = u32::MAX;
 
 /// Simulator configuration.
 #[derive(Debug, Clone)]
@@ -242,7 +245,11 @@ pub struct Simulation<'p> {
     seq: u64,
     now: Time,
     instances: Vec<SimInstance>,
-    index: HashMap<InstanceId, usize>,
+    /// Slab index keyed directly on `InstanceId.0` (ids are handed out
+    /// densely, so this stays a flat Vec): `slots[id] == SLOT_NONE` once the
+    /// instance retires. §Perf: replaced a `HashMap<InstanceId, usize>`
+    /// that cost two hash lookups per event.
+    slots: Vec<u32>,
     next_instance: u32,
     // Global queues per model.
     q_batch: Vec<VecDeque<WorkItem>>,
@@ -252,8 +259,14 @@ pub struct Simulation<'p> {
     last_gpu_change: Time,
     report: SimReport,
     completed: usize,
+    /// Cached per-instance views, index-aligned with `instances`.
     views_cache: Vec<InstanceView>,
-    views_dirty: bool,
+    /// Indices whose cached view is stale (point-patched on refresh).
+    /// §Perf: a StepDone→arrival pair used to rebuild the whole cache;
+    /// now only the touched instance is rewritten.
+    views_dirty_idx: Vec<u32>,
+    /// Structural change (add/retire) pending: rebuild the whole cache.
+    views_all_dirty: bool,
     queue_stats: Vec<QueueStats>,
     trace: Trace,
     ticks: u64,
@@ -270,7 +283,7 @@ impl<'p> Simulation<'p> {
             seq: 0,
             now: 0.0,
             instances: Vec::new(),
-            index: HashMap::new(),
+            slots: Vec::new(),
             next_instance: 0,
             q_batch: vec![VecDeque::new(); nm],
             q_inter: vec![VecDeque::new(); nm],
@@ -283,7 +296,8 @@ impl<'p> Simulation<'p> {
             },
             completed: 0,
             views_cache: Vec::new(),
-            views_dirty: true,
+            views_dirty_idx: Vec::new(),
+            views_all_dirty: true,
             queue_stats: vec![QueueStats::default(); nm],
             trace,
             ticks: 0,
@@ -303,17 +317,45 @@ impl<'p> Simulation<'p> {
         self.heap.push(Reverse(HeapEv { t, pri, seq, ev }));
     }
 
-    /// Rebuild cached instance views if marked stale. §Perf: rebuilding on
-    /// every arrival dominated the event loop; views are now refreshed
-    /// lazily and patched point-wise after a dispatch.
+    /// Live slot for an instance id, if any.
+    #[inline]
+    fn slot_of(&self, id: InstanceId) -> Option<usize> {
+        match self.slots.get(id.0 as usize) {
+            Some(&s) if s != SLOT_NONE => Some(s as usize),
+            _ => None,
+        }
+    }
+
+    /// Mark one instance's cached view stale. Duplicate marks are fine —
+    /// refresh just rewrites the slot twice.
+    #[inline]
+    fn mark_view_dirty(&mut self, idx: usize) {
+        if !self.views_all_dirty {
+            self.views_dirty_idx.push(idx as u32);
+        }
+    }
+
+    /// Bring the cached views up to date. §Perf: the seed rebuilt the whole
+    /// cache on every arrival after any step completed; now per-event
+    /// changes patch only the dirty indices, and a full rebuild happens
+    /// only after structural changes (instance add/retire) — which occur at
+    /// tick frequency, not event frequency.
     fn refresh_instance_views(&mut self) {
-        if !self.views_dirty {
+        if self.views_all_dirty {
+            self.views_all_dirty = false;
+            self.views_dirty_idx.clear();
+            self.views_cache.clear();
+            self.views_cache
+                .extend(self.instances.iter().map(|i| i.view()));
             return;
         }
-        self.views_dirty = false;
-        self.views_cache.clear();
-        self.views_cache
-            .extend(self.instances.iter().map(|i| i.view()));
+        // Invariant: with no structural change pending, views_cache is
+        // index-aligned with instances, so dirty indices are in range.
+        for k in 0..self.views_dirty_idx.len() {
+            let i = self.views_dirty_idx[k] as usize;
+            self.instances[i].write_view(&mut self.views_cache[i]);
+        }
+        self.views_dirty_idx.clear();
     }
 
     /// Rebuild queue statistics (deadline samples). §Perf: only the global
@@ -366,19 +408,22 @@ impl<'p> Simulation<'p> {
                         SimInstance::new(id, class, model, profile, mb, self.now);
                     self.set_gpus(spec.gpus_per_instance as i64);
                     self.report.scale_ups += 1;
+                    // Ids are allocated densely, so the slab grows by
+                    // exactly one slot per instance ever created.
+                    debug_assert_eq!(self.slots.len(), id.0 as usize);
                     if warm {
                         inst.state = InstanceState::Running;
-                        self.index.insert(id, self.instances.len());
+                        self.slots.push(self.instances.len() as u32);
                         self.instances.push(inst);
                     } else {
                         let ready = inst.ready_at().unwrap();
-                        self.index.insert(id, self.instances.len());
+                        self.slots.push(self.instances.len() as u32);
                         self.instances.push(inst);
                         self.push_event(ready, Ev::Ready(id));
                     }
                 }
                 Action::RemoveInstance { id } => {
-                    if let Some(&idx) = self.index.get(&id) {
+                    if let Some(idx) = self.slot_of(id) {
                         let inst = &mut self.instances[idx];
                         if inst.state != InstanceState::Draining {
                             inst.state = InstanceState::Draining;
@@ -387,7 +432,7 @@ impl<'p> Simulation<'p> {
                     }
                 }
                 Action::SetClass { id, class } => {
-                    if let Some(&idx) = self.index.get(&id) {
+                    if let Some(idx) = self.slot_of(id) {
                         self.instances[idx].class = class;
                     }
                 }
@@ -395,7 +440,7 @@ impl<'p> Simulation<'p> {
         }
         // Retire any drained instances immediately.
         self.retire_drained();
-        self.views_dirty = true;
+        self.views_all_dirty = true;
     }
 
     fn retire_drained(&mut self) {
@@ -407,11 +452,13 @@ impl<'p> Simulation<'p> {
                 let id = inst.id;
                 self.set_gpus(-(gpus as i64));
                 self.instances.swap_remove(i);
-                self.index.remove(&id);
+                self.slots[id.0 as usize] = SLOT_NONE;
                 if i < self.instances.len() {
                     let moved = self.instances[i].id;
-                    self.index.insert(moved, i);
+                    self.slots[moved.0 as usize] = i as u32;
                 }
+                // Cached views are now misaligned with `instances`.
+                self.views_all_dirty = true;
                 continue;
             }
             i += 1;
@@ -434,11 +481,13 @@ impl<'p> Simulation<'p> {
     }
 
     /// Instance pulls work from the global queues per the policy's order.
+    /// Zero-alloc: the view is a stack snapshot (O(1), heap-free) and
+    /// `pull_order` returns a static slice.
     fn pull_for(&mut self, idx: usize) {
         let view = self.instances[idx].view();
         let order = self.policy.pull_order(&view);
         let model = self.instances[idx].model;
-        for class in order {
+        for &class in order {
             loop {
                 let inst = &mut self.instances[idx];
                 if inst.admission_headroom() == 0 {
@@ -465,7 +514,7 @@ impl<'p> Simulation<'p> {
         let decision = self.policy.route(&qr, &view);
         match decision {
             Route::Dispatch(id) => {
-                if let Some(&idx) = self.index.get(&id) {
+                if let Some(idx) = self.slot_of(id) {
                     // Interactive dispatch to a full mixed instance evicts
                     // batch requests back to the global queue (paper §3).
                     if item.req.class == RequestClass::Interactive
@@ -485,7 +534,7 @@ impl<'p> Simulation<'p> {
                     // Point-patch the touched instance's cached view so the
                     // next route sees the updated load without a rebuild.
                     if idx < self.views_cache.len() {
-                        self.views_cache[idx] = self.instances[idx].view();
+                        self.instances[idx].write_view(&mut self.views_cache[idx]);
                     }
                 } else {
                     // Stale instance id: queue instead of dropping.
@@ -541,7 +590,7 @@ impl<'p> Simulation<'p> {
     /// Run the simulation to completion.
     pub fn run(mut self) -> SimReport {
         // Bootstrap the cluster.
-        self.views_dirty = true;
+        self.views_all_dirty = true;
         self.refresh_instance_views();
         self.refresh_queue_stats();
         let view = view_of!(self);
@@ -574,25 +623,23 @@ impl<'p> Simulation<'p> {
                     self.route_item(WorkItem::fresh(req));
                 }
                 Ev::Ready(iid) => {
-                    self.views_dirty = true;
-                    if let Some(&idx) = self.index.get(&iid) {
-                        if self.instances[idx].state
-                            == (InstanceState::Loading {
-                                ready_at: self.instances[idx].ready_at().unwrap_or(t),
-                            })
-                        {
+                    if let Some(idx) = self.slot_of(iid) {
+                        if matches!(self.instances[idx].state, InstanceState::Loading { .. }) {
                             self.instances[idx].state = InstanceState::Running;
                         }
                         self.pull_for(idx);
                         self.kick(idx);
+                        self.mark_view_dirty(idx);
                     }
                 }
                 Ev::StepDone { inst: iid, duration } => {
-                    self.views_dirty = true;
-                    let Some(&idx) = self.index.get(&iid) else {
+                    let Some(idx) = self.slot_of(iid) else {
                         continue;
                     };
                     let result = self.instances[idx].finish_step(self.now, duration);
+                    // Stale immediately: eviction re-routes below consult
+                    // the cached views through route_item.
+                    self.mark_view_dirty(idx);
                     self.completed += result.completed.len();
                     self.report.total_tokens += result.tokens_emitted;
                     for o in &result.completed {
@@ -611,7 +658,7 @@ impl<'p> Simulation<'p> {
                             self.q_batch[w.req.model].push_front(w);
                         }
                     }
-                    // Local autoscaler.
+                    // Local autoscaler (stack-snapshot view; O(1)).
                     let v = self.instances[idx].view();
                     if let Some(mb) = self.policy.on_step(&v, self.now) {
                         self.instances[idx].max_batch = mb.clamp(1, MAX_BATCH_CLAMP);
@@ -619,6 +666,9 @@ impl<'p> Simulation<'p> {
                     // Pull more work, continue stepping, or retire.
                     self.pull_for(idx);
                     self.kick(idx);
+                    // Mark again: pull/kick changed the load since the
+                    // eviction re-route refreshed this slot.
+                    self.mark_view_dirty(idx);
                     self.retire_drained();
                     if self.completed >= self.report.total_requests {
                         break;
@@ -635,7 +685,7 @@ impl<'p> Simulation<'p> {
                             self.kick(idx);
                         }
                     }
-                    self.views_dirty = true;
+                    self.views_all_dirty = true;
                     self.refresh_instance_views();
                     self.refresh_queue_stats();
                     let view = view_of!(self);

@@ -122,6 +122,13 @@ pub struct SimInstance {
     running: Vec<Running>,
     local_queue: VecDeque<WorkItem>,
     kv_tokens: u64,
+    /// Interactive members of `running`, maintained incrementally so
+    /// `view()` never scans the running set (§Perf: the scan dominated
+    /// per-step view construction at batch sizes in the thousands).
+    n_running_interactive: u32,
+    /// Cached min ITL SLO over `running` (∞ when empty); min-updated on
+    /// admission, recomputed only when the current minimum leaves.
+    min_itl_cache: Time,
     pub step_in_flight: bool,
     last_step_time: Time,
     /// Decode-only component of the last step (the batch-size-dependent ITL
@@ -155,6 +162,8 @@ impl SimInstance {
             running: Vec::new(),
             local_queue: VecDeque::new(),
             kv_tokens: 0,
+            n_running_interactive: 0,
+            min_itl_cache: f64::INFINITY,
             step_in_flight: false,
             last_step_time: 0.0,
             last_decode_time: 0.0,
@@ -262,6 +271,12 @@ impl SimInstance {
             let item = self.local_queue.pop_front().unwrap();
             let pending = item.req.input_tokens; // prompt tokens to (re)build
             self.kv_tokens += needed;
+            if item.req.class == RequestClass::Interactive {
+                self.n_running_interactive += 1;
+            }
+            if item.req.slo.itl < self.min_itl_cache {
+                self.min_itl_cache = item.req.slo.itl;
+            }
             self.running.push(Running {
                 generated: item.generated,
                 ctx_tokens: needed,
@@ -355,6 +370,10 @@ impl SimInstance {
                 // Completed: assemble the outcome record.
                 let r = self.running.swap_remove(i);
                 self.kv_tokens -= r.ctx_tokens;
+                if r.req.class == RequestClass::Interactive {
+                    self.n_running_interactive -= 1;
+                }
+                self.note_min_itl_removed(r.req.slo.itl);
                 let first = r.first_token.unwrap_or(now);
                 let out_tokens = r.req.output_tokens.max(1);
                 let mean_itl = if out_tokens > 1 {
@@ -397,6 +416,10 @@ impl SimInstance {
     fn evict_index(&mut self, idx: usize, now: Time) -> Evicted {
         let r = self.running.remove(idx);
         self.kv_tokens -= r.ctx_tokens;
+        if r.req.class == RequestClass::Interactive {
+            self.n_running_interactive -= 1;
+        }
+        self.note_min_itl_removed(r.req.slo.itl);
         let kv_saved = self.class == InstanceClass::Mixed;
         Evicted {
             generated: r.generated,
@@ -454,18 +477,25 @@ impl SimInstance {
     }
 
     /// Tightest ITL SLO among running requests (paper: the instance SLO).
+    /// O(1): served from the incrementally maintained cache.
     pub fn min_itl_slo(&self) -> Time {
-        self.running
-            .iter()
-            .map(|r| r.req.slo.itl)
-            .fold(f64::INFINITY, f64::min)
+        self.min_itl_cache
+    }
+
+    /// A request holding the cached minimum left the running set; rescan
+    /// only then (the min of the survivors can only be ≥ the cached value).
+    fn note_min_itl_removed(&mut self, itl: Time) {
+        if itl <= self.min_itl_cache {
+            self.min_itl_cache = self
+                .running
+                .iter()
+                .map(|r| r.req.slo.itl)
+                .fold(f64::INFINITY, f64::min);
+        }
     }
 
     pub fn running_interactive(&self) -> u32 {
-        self.running
-            .iter()
-            .filter(|r| r.req.class == RequestClass::Interactive)
-            .count() as u32
+        self.n_running_interactive
     }
 
     /// Any interactive request running or locally queued? (IBP accounting.)
@@ -477,6 +507,8 @@ impl SimInstance {
                 .any(|w| w.class() == RequestClass::Interactive)
     }
 
+    /// Build a policy-facing snapshot. O(1) and heap-free: every field is a
+    /// scalar served from incrementally maintained state.
     pub fn view(&self) -> InstanceView {
         InstanceView {
             id: self.id,
@@ -495,6 +527,12 @@ impl SimInstance {
             min_itl_slo: self.min_itl_slo(),
             steps: self.steps,
         }
+    }
+
+    /// Refresh an existing view slot in place (the cluster's cached-view
+    /// patching path; `InstanceView` is `Copy`, so this is a plain store).
+    pub fn write_view(&self, out: &mut InstanceView) {
+        *out = self.view();
     }
 }
 
@@ -700,5 +738,35 @@ mod tests {
         let mut inst = instance(8);
         inst.state = InstanceState::Draining;
         assert_eq!(inst.admission_headroom(), 0);
+    }
+
+    #[test]
+    fn incremental_view_counters_track_ground_truth() {
+        // The O(1) running_interactive / min_itl_slo caches must agree with
+        // a full scan through admissions, evictions, and completions.
+        let mut inst = instance(4);
+        assert_eq!(inst.running_interactive(), 0);
+        assert!(inst.min_itl_slo().is_infinite());
+
+        inst.enqueue(WorkItem::fresh(req(1, RequestClass::Interactive, 16, 40)));
+        inst.enqueue(WorkItem::fresh(req(2, RequestClass::Batch, 16, 40)));
+        inst.enqueue(WorkItem::fresh(req(3, RequestClass::Batch, 16, 2)));
+        let d = inst.begin_step(0.0).unwrap();
+        inst.finish_step(d, d);
+        assert_eq!(inst.running_interactive(), 1);
+        assert_eq!(inst.min_itl_slo(), Slo::interactive_default().itl);
+
+        // Evicting the batch requests must not disturb the interactive
+        // count; the min stays at the interactive SLO (the tightest).
+        let ev = inst.evict_batch_for_slots(4, 0, d);
+        assert_eq!(ev.len(), 2);
+        assert_eq!(inst.running_interactive(), 1);
+        assert_eq!(inst.min_itl_slo(), Slo::interactive_default().itl);
+
+        // Run the interactive request to completion: counters reset.
+        let (done, _) = run_to_completion(&mut inst, d);
+        assert_eq!(done.len(), 1);
+        assert_eq!(inst.running_interactive(), 0);
+        assert!(inst.min_itl_slo().is_infinite());
     }
 }

@@ -20,8 +20,10 @@ pub enum InstanceState {
     Draining,
 }
 
-/// Read-only per-instance snapshot handed to policies.
-#[derive(Debug, Clone)]
+/// Read-only per-instance snapshot handed to policies. Plain scalar data —
+/// `Copy`, heap-free — so snapshots live on the stack and cached views are
+/// patched in place by the simulator.
+#[derive(Debug, Clone, Copy)]
 pub struct InstanceView {
     pub id: InstanceId,
     pub class: InstanceClass,
@@ -170,9 +172,10 @@ pub trait Policy {
     /// Route a request at arrival (or when re-queued after eviction).
     fn route(&mut self, req: &QueuedReq, view: &ClusterView) -> Route;
 
-    /// Which global queues may `inst` pull from when it has headroom,
-    /// in priority order.
-    fn pull_order(&self, inst: &InstanceView) -> Vec<RequestClass>;
+    /// Which global queues may `inst` pull from when it has headroom, in
+    /// priority order. Returns a static slice: this runs after every engine
+    /// step, and per-call `Vec`s were measurable allocator traffic.
+    fn pull_order(&self, inst: &InstanceView) -> &'static [RequestClass];
 
     /// Local autoscaler: called after each engine step of `inst`; returns
     /// the new max batch size if it should change.

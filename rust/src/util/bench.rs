@@ -7,6 +7,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
+
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
 pub struct Measurement {
@@ -24,6 +26,25 @@ impl Measurement {
     pub fn throughput(&self) -> Option<f64> {
         self.units_per_iter
             .map(|u| u / (self.mean_ns / 1e9))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("iters", self.iters.into()),
+            ("mean_ns", self.mean_ns.into()),
+            ("min_ns", self.min_ns.into()),
+            ("p50_ns", self.p50_ns.into()),
+            ("p99_ns", self.p99_ns.into()),
+            (
+                "units_per_iter",
+                self.units_per_iter.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "throughput_per_s",
+                self.throughput().map(Json::Num).unwrap_or(Json::Null),
+            ),
+        ])
     }
 }
 
@@ -117,10 +138,18 @@ impl Bencher {
         while w0.elapsed() < self.warmup {
             f();
         }
-        // Measure.
+        // Measure. The 10-sample floor gives micro-benches a stable
+        // distribution; the hard time cap keeps macro-benches (whole
+        // simulation grids, seconds per iteration) from being forced
+        // through 10+ iterations — they stop after 2 samples once the
+        // budget is well exceeded.
+        let hard_cap = self.target_time * 12;
         let mut samples_ns: Vec<f64> = Vec::new();
         let start = Instant::now();
         while start.elapsed() < self.target_time || samples_ns.len() < 10 {
+            if samples_ns.len() >= 2 && start.elapsed() >= hard_cap {
+                break;
+            }
             let t = Instant::now();
             f();
             samples_ns.push(t.elapsed().as_nanos() as f64);
@@ -175,6 +204,51 @@ impl Bencher {
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }
+
+    /// Append this run to a machine-readable trajectory file:
+    /// `{"runs": [{timestamp, quick, git_rev, results: [...]}, ...]}`.
+    /// Each bench invocation appends one entry (capped to the most recent
+    /// `MAX_RUNS`), so successive PRs accumulate a perf history that
+    /// regressions stand out in. Corrupt/missing files start a fresh one.
+    pub fn write_json(&self, path: &str) {
+        const MAX_RUNS: usize = 200;
+        let mut runs: Vec<Json> = match std::fs::read_to_string(path) {
+            Ok(text) => Json::parse(&text)
+                .ok()
+                .and_then(|j| j.get("runs").as_arr().map(|a| a.to_vec()))
+                .unwrap_or_default(),
+            Err(_) => Vec::new(),
+        };
+        let timestamp = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let git_rev = std::process::Command::new("git")
+            .args(["rev-parse", "--short", "HEAD"])
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+            .unwrap_or_default();
+        runs.push(Json::obj(vec![
+            ("timestamp", timestamp.into()),
+            ("quick", std::env::var("CHIRON_BENCH_QUICK").is_ok().into()),
+            ("git_rev", git_rev.into()),
+            (
+                "results",
+                Json::arr(self.results.iter().map(|m| m.to_json())),
+            ),
+        ]));
+        if runs.len() > MAX_RUNS {
+            let excess = runs.len() - MAX_RUNS;
+            runs.drain(..excess);
+        }
+        let doc = Json::obj(vec![("runs", Json::Arr(runs))]);
+        match std::fs::write(path, doc.to_string()) {
+            Ok(()) => println!("[bench trajectory appended to {path}]"),
+            Err(e) => eprintln!("warning: could not write {path}: {e}"),
+        }
+    }
 }
 
 /// Prevent the optimizer from eliding a computed value.
@@ -204,6 +278,33 @@ mod tests {
         assert!(m.mean_ns > 0.0);
         assert!(m.min_ns <= m.mean_ns);
         assert!(m.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn write_json_appends_runs() {
+        std::env::set_var("CHIRON_BENCH_QUICK", "1");
+        let path = std::env::temp_dir().join(format!("chiron-bench-{}.json", std::process::id()));
+        let path_s = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        for _ in 0..2 {
+            let mut b = Bencher::new();
+            b.bench_units("json-roundtrip-probe", Some(1.0), || {
+                black_box(1 + 1);
+            })
+            .expect("not filtered");
+            b.write_json(&path_s);
+        }
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let runs = j.get("runs").as_arr().unwrap();
+        assert_eq!(runs.len(), 2, "each invocation appends one run");
+        let results = runs[1].get("results").as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(
+            results[0].get("name").as_str().unwrap(),
+            "json-roundtrip-probe"
+        );
+        assert!(results[0].get("mean_ns").as_f64().unwrap() > 0.0);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

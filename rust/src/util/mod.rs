@@ -7,5 +7,6 @@ pub mod bench;
 pub mod check;
 pub mod cli;
 pub mod json;
+pub mod parallel;
 pub mod rng;
 pub mod stats;

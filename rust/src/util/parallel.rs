@@ -1,0 +1,186 @@
+//! Std-only scoped-thread pool for embarrassingly parallel experiment
+//! grids.
+//!
+//! Chiron's evaluation is a grid of *independent* simulations — policies ×
+//! workloads × seeds × rates (paper Figs. 7–13). `run_grid` fans those runs
+//! across cores with work stealing (an atomic next-task cursor) while
+//! keeping **deterministic result ordering**: results land in the same slot
+//! order as the input tasks regardless of which worker ran them or when, so
+//! `--jobs 1` and `--jobs N` produce byte-identical output. Policies are
+//! constructed inside the worker (thread-local), so `Policy` impls never
+//! need to be `Send`.
+//!
+//! The worker count comes from, in priority order: `set_jobs` (the CLI's
+//! `--jobs N`), the `CHIRON_JOBS` environment variable, then
+//! `available_parallelism`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Process-wide override; 0 means "auto".
+static JOBS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the worker count for subsequent `run_grid` / `join` calls
+/// (0 restores auto-detection).
+pub fn set_jobs(n: usize) {
+    JOBS.store(n, Ordering::SeqCst);
+}
+
+/// Effective worker count.
+pub fn jobs() -> usize {
+    let j = JOBS.load(Ordering::SeqCst);
+    if j > 0 {
+        return j;
+    }
+    if let Ok(v) = std::env::var("CHIRON_JOBS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f` over every task using the configured worker count; results come
+/// back in task order. See `run_grid_jobs`.
+pub fn run_grid<T, R, F>(tasks: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    run_grid_jobs(jobs(), tasks, f)
+}
+
+/// Run `f(index, task)` for every task on up to `jobs` scoped worker
+/// threads. Results are returned in input order. With `jobs <= 1` (or a
+/// single task) everything runs inline on the caller's thread — the
+/// sequential and parallel paths produce identical results because tasks
+/// never share mutable state.
+pub fn run_grid_jobs<T, R, F>(jobs: usize, tasks: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = tasks.len();
+    let workers = jobs.max(1).min(n);
+    if workers <= 1 {
+        return tasks
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| f(i, t))
+            .collect();
+    }
+
+    // Per-slot mutexes rather than one queue lock: task grains here are
+    // whole simulations (milliseconds to minutes), so contention is nil and
+    // the result slots double as the ordered output buffer.
+    let task_slots: Vec<Mutex<Option<T>>> =
+        tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let result_slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let task = task_slots[i]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("each task is claimed exactly once");
+                let r = f(i, task);
+                *result_slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    result_slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("scope joined all workers, so every slot is filled")
+        })
+        .collect()
+}
+
+/// Run two independent closures, the second on a scoped thread when more
+/// than one worker is configured.
+pub fn join<A, B, FA, FB>(fa: FA, fb: FB) -> (A, B)
+where
+    A: Send,
+    B: Send,
+    FA: FnOnce() -> A + Send,
+    FB: FnOnce() -> B + Send,
+{
+    if jobs() <= 1 {
+        let a = fa();
+        let b = fb();
+        return (a, b);
+    }
+    std::thread::scope(|s| {
+        let hb = s.spawn(fb);
+        let a = fa();
+        match hb.join() {
+            Ok(b) => (a, b),
+            Err(p) => std::panic::resume_unwind(p),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_keep_task_order() {
+        let tasks: Vec<u64> = (0..64).collect();
+        let out = run_grid_jobs(8, tasks, |i, t| {
+            // Uneven work so completion order differs from task order.
+            let spin = (t % 7) * 1000;
+            let mut acc = 0u64;
+            for k in 0..spin {
+                acc = acc.wrapping_add(k);
+            }
+            std::hint::black_box(acc);
+            (i as u64) * 100 + t
+        });
+        let expect: Vec<u64> = (0..64).map(|t| t * 100 + t).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let tasks: Vec<u64> = (0..33).collect();
+        let f = |_i: usize, t: u64| t.wrapping_mul(0x9E3779B97F4A7C15).rotate_left(13);
+        let serial = run_grid_jobs(1, tasks.clone(), f);
+        let parallel = run_grid_jobs(4, tasks, f);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn empty_and_single_task_edges() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(run_grid_jobs(4, empty, |_, t: u32| t).is_empty());
+        assert_eq!(run_grid_jobs(4, vec![9u32], |i, t| (i, t)), vec![(0, 9)]);
+    }
+
+    #[test]
+    fn join_returns_both() {
+        let (a, b) = join(|| 1 + 1, || "two");
+        assert_eq!((a, b), (2, "two"));
+    }
+
+    #[test]
+    fn jobs_floor_is_one() {
+        assert!(jobs() >= 1);
+    }
+}
