@@ -171,6 +171,27 @@ fn main() {
         });
     }
 
+    // -- streaming scenario source ------------------------------------------
+    // Drain a ~10k-request multi-stream catalog scenario through the lazy
+    // k-way merge (the trace-side hot path for scenario runs; memory stays
+    // O(streams) regardless of request count).
+    {
+        use chiron::workload::scenario::by_name;
+        use chiron::workload::ArrivalSource;
+        let spec = by_name("paper-wb").expect("catalog scenario").scaled(1.0 / 3.0);
+        let total = spec.max_requests() as f64;
+        b.bench_units("scenario.stream_10k", Some(total), || {
+            let mut src = spec.source(7);
+            let mut n = 0usize;
+            let mut acc = 0u64;
+            while let Some(r) = src.next_request() {
+                acc = acc.wrapping_add(r.id.0 ^ r.output_tokens as u64);
+                n += 1;
+            }
+            black_box((n, acc));
+        });
+    }
+
     // -- end-to-end simulator throughput -----------------------------------
     {
         let mk = |n_inter: usize, n_batch: usize| {

@@ -40,6 +40,18 @@ impl LlumnixConfig {
             adds_per_tick: 1,
         }
     }
+
+    /// The tuned configuration used by the headline figures (and the
+    /// `llumnix-tuned` CLI policy) — single source of truth so the CLI and
+    /// the paper-figure harness cannot drift apart.
+    pub fn tuned_headline() -> Self {
+        LlumnixConfig {
+            max_batch: 256,
+            low: 0.2,
+            high: 0.7,
+            ..Self::untuned()
+        }
+    }
 }
 
 /// The Llumnix-like policy.

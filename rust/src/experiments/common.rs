@@ -91,6 +91,30 @@ pub enum PolicyKind {
     GlobalOnly(u32),
 }
 
+impl PolicyKind {
+    /// Parse a CLI policy name. `llumnix-tuned` uses the headline-figure
+    /// tuned configuration.
+    pub fn parse(name: &str) -> Option<PolicyKind> {
+        match name {
+            "chiron" => Some(PolicyKind::Chiron),
+            "llumnix" => Some(PolicyKind::LlumnixUntuned),
+            "llumnix-tuned" => Some(PolicyKind::LlumnixTuned(LlumnixConfig::tuned_headline())),
+            "local-only" => Some(PolicyKind::LocalOnly),
+            "global-only" => Some(PolicyKind::GlobalOnly(64)),
+            _ => None,
+        }
+    }
+
+    /// Names accepted by [`PolicyKind::parse`].
+    pub const NAMES: &'static [&'static str] = &[
+        "chiron",
+        "llumnix",
+        "llumnix-tuned",
+        "local-only",
+        "global-only",
+    ];
+}
+
 pub fn make_policy(kind: &PolicyKind, models: &[ModelSpec]) -> Box<dyn Policy> {
     match kind {
         PolicyKind::Chiron => Box::new(chiron(models)),
@@ -193,12 +217,51 @@ pub fn compare(
     max_time: f64,
     seed: u64,
 ) -> Vec<(PolicyRow, SimReport)> {
-    let tasks: Vec<&PolicyKind> = kinds.iter().collect();
-    run_grid(tasks, |_, kind| {
+    compare_seeds(models, gpus, mk_trace, kinds, max_time, &[seed])
+        .into_iter()
+        .map(|mut per_seed| per_seed.remove(0))
+        .collect()
+}
+
+/// Multi-seed replication of [`compare`]: every (policy × seed) pair is an
+/// independent simulation fanned through `run_grid`, so replication
+/// parallelizes exactly like the policy sweep. Results are grouped per
+/// policy (in `kinds` order), seeds in `seeds` order within each group —
+/// deterministic at any `--jobs` setting. Aggregate with
+/// [`PolicyRow::aggregate_json`] for mean ± std error bars.
+pub fn compare_seeds(
+    models: &[ModelSpec],
+    gpus: u32,
+    mk_trace: impl Fn(u64) -> Trace + Sync,
+    kinds: &[PolicyKind],
+    max_time: f64,
+    seeds: &[u64],
+) -> Vec<Vec<(PolicyRow, SimReport)>> {
+    let tasks: Vec<(&PolicyKind, u64)> = kinds
+        .iter()
+        .flat_map(|k| seeds.iter().map(move |&s| (k, s)))
+        .collect();
+    let flat = run_grid(tasks, |_, (kind, seed)| {
         let mut p = make_policy(kind, models);
         let report = run_one(models, gpus, mk_trace(seed), p.as_mut(), max_time);
         (PolicyRow::from_report(&report), report)
-    })
+    });
+    let mut it = flat.into_iter();
+    kinds
+        .iter()
+        .map(|_| {
+            seeds
+                .iter()
+                .map(|_| it.next().expect("one grid result per (policy, seed) task"))
+                .collect()
+        })
+        .collect()
+}
+
+/// Derive `n` replication seeds from a base seed (spaced so per-stream
+/// `Rng::fork` chains never collide).
+pub fn seed_list(base: u64, n: usize) -> Vec<u64> {
+    (0..n as u64).map(|i| base.wrapping_add(i * 1009)).collect()
 }
 
 /// Print a titled comparison table.

@@ -14,12 +14,7 @@ fn kinds_headline() -> Vec<PolicyKind> {
     vec![
         PolicyKind::Chiron,
         PolicyKind::LlumnixUntuned,
-        PolicyKind::LlumnixTuned(LlumnixConfig {
-            max_batch: 256,
-            low: 0.2,
-            high: 0.7,
-            ..LlumnixConfig::untuned()
-        }),
+        PolicyKind::LlumnixTuned(LlumnixConfig::tuned_headline()),
         PolicyKind::LocalOnly,
         PolicyKind::GlobalOnly(64),
     ]
@@ -102,12 +97,7 @@ pub fn fig9(scale: Scale) -> Json {
         let kinds = vec![
             PolicyKind::Chiron,
             PolicyKind::LlumnixUntuned,
-            PolicyKind::LlumnixTuned(LlumnixConfig {
-                max_batch: 256,
-                low: 0.2,
-                high: 0.7,
-                ..LlumnixConfig::untuned()
-            }),
+            PolicyKind::LlumnixTuned(LlumnixConfig::tuned_headline()),
         ];
         let mut series = Vec::new();
         let mut json_points = Vec::new();
@@ -194,12 +184,7 @@ pub fn fig10(scale: Scale) -> Json {
         let kinds = vec![
             PolicyKind::Chiron,
             PolicyKind::LlumnixUntuned,
-            PolicyKind::LlumnixTuned(LlumnixConfig {
-                max_batch: 256,
-                low: 0.2,
-                high: 0.7,
-                ..LlumnixConfig::untuned()
-            }),
+            PolicyKind::LlumnixTuned(LlumnixConfig::tuned_headline()),
         ];
         let mut series = Vec::new();
         let mut json_points = Vec::new();

@@ -2,23 +2,28 @@
 //!
 //! Subcommands:
 //!   experiment <id|all> [--quick] [--jobs N]   regenerate a paper figure/table
+//!   scenario <list|show|run|sweep>    declarative workload catalog (streaming traces)
 //!   simulate --config <file.json>     run one simulation from a config
 //!   trace-gen [--rate R ...]          emit a workload trace as JSON
 //!   serve [--requests N ...]          serve the real AOT model end-to-end
+//!   bench-gate [flags]                CI gate on the bench trajectory
 //!   list                              list experiment ids
 
 use chiron::config::ExperimentConfig;
 use chiron::coordinator::{LocalAutoscaler, LocalConfig};
-use chiron::core::{InstanceClass, InstanceId};
+use chiron::core::{InstanceClass, InstanceId, ModelSpec};
 use chiron::engine::{EngineRequest, LlmEngine};
-use chiron::experiments::{self, common::Scale};
-use chiron::metrics::PolicyRow;
+use chiron::experiments;
+use chiron::experiments::common::{make_policy, save_result, seed_list, PolicyKind, Scale};
+use chiron::metrics::{PolicyRow, Summary, SummaryStats};
 use chiron::runtime::TinyLlmRuntime;
 use chiron::server::ServingFrontend;
 use chiron::sim::policy::{InstanceState, InstanceView};
-use chiron::sim::run_sim;
+use chiron::sim::{run_sim, run_sim_source, SimConfig};
 use chiron::util::cli::Args;
+use chiron::util::json::Json;
 use chiron::util::rng::Rng;
+use chiron::workload::scenario::{self, ScenarioSpec};
 use chiron::workload::trace::{workload_a, workload_b_batch};
 use chiron::workload::TraceBuilder;
 
@@ -31,9 +36,11 @@ fn main() {
     };
     match cmd.as_str() {
         "experiment" => cmd_experiment(argv),
+        "scenario" => cmd_scenario(argv),
         "simulate" => cmd_simulate(argv),
         "trace-gen" => cmd_trace_gen(argv),
         "serve" => cmd_serve(argv),
+        "bench-gate" => cmd_bench_gate(argv),
         "list" => {
             for id in experiments::ALL {
                 println!("{id}");
@@ -56,9 +63,16 @@ fn help() {
          \u{20}  experiment <id|all> [--quick] [--jobs N]\n\
          \u{20}                                  regenerate paper figures/tables (see `chiron list`);\n\
          \u{20}                                  sweeps fan out over N worker threads (default: all cores)\n\
+         \u{20}  scenario list                   list the built-in workload catalog\n\
+         \u{20}  scenario show <name|file>       print a scenario spec as JSON\n\
+         \u{20}  scenario run <name|file> [--policy P --seeds N --jobs J --scale F]\n\
+         \u{20}                                  run a scenario (streaming trace), per-seed + mean±std JSON\n\
+         \u{20}  scenario sweep [--scenarios A,B --policies P,Q --seeds N]\n\
+         \u{20}                                  (policy × scenario × seed) grid over the worker pool\n\
          \u{20}  simulate --config <file>        run a simulation described by a JSON config\n\
          \u{20}  trace-gen [flags]               generate a workload trace (JSON to stdout)\n\
          \u{20}  serve [flags]                   end-to-end: serve the real AOT model (needs `make artifacts`)\n\
+         \u{20}  bench-gate [flags]              fail when the bench trajectory regresses (CI)\n\
          \u{20}  list                            list experiment ids"
     );
 }
@@ -92,6 +106,452 @@ fn cmd_experiment(argv: Vec<String>) {
             }
         }
     }
+}
+
+fn scenario_fail(e: anyhow::Error) -> ! {
+    eprintln!("scenario error: {e:#}");
+    std::process::exit(1);
+}
+
+/// Resolve a scenario argument: catalog name first, then JSON file path.
+fn load_scenario(name_or_path: &str) -> anyhow::Result<ScenarioSpec> {
+    if let Some(spec) = scenario::by_name(name_or_path) {
+        return Ok(spec);
+    }
+    if std::path::Path::new(name_or_path).exists() {
+        let text = std::fs::read_to_string(name_or_path)
+            .map_err(|e| anyhow::anyhow!("reading {name_or_path}: {e}"))?;
+        return ScenarioSpec::parse(&text);
+    }
+    anyhow::bail!(
+        "unknown scenario '{name_or_path}' (try `chiron scenario list`, or pass a JSON file path)"
+    )
+}
+
+/// One (scenario, policy, seed) cell's distilled result. The full
+/// `SimReport` is dropped inside the cell: `batch-backlog` outcomes alone
+/// are ~1M records per seed, and the grid holds every cell's result
+/// simultaneously — keeping reports would defeat the streaming engine's
+/// flat-memory goal.
+struct CellResult {
+    row: PolicyRow,
+    summary: Summary,
+    total_requests: usize,
+    unfinished: usize,
+}
+
+/// Run one (scenario, policy, seed) cell: stream the scenario through the
+/// simulator and summarize.
+fn run_scenario_cell(
+    spec: &ScenarioSpec,
+    models: &[ModelSpec],
+    kind: &PolicyKind,
+    gpus: u32,
+    seed: u64,
+) -> CellResult {
+    let mut cfg = SimConfig::new(gpus, models.to_vec());
+    cfg.max_sim_time = spec.max_time;
+    let mut policy = make_policy(kind, models);
+    let report = run_sim_source(cfg, Box::new(spec.source(seed)), policy.as_mut());
+    CellResult {
+        row: PolicyRow::from_report(&report),
+        summary: Summary::of(&report.outcomes),
+        total_requests: report.total_requests,
+        unfinished: report.unfinished,
+    }
+}
+
+/// Per-seed + aggregate JSON for one (scenario, policy) pair.
+fn scenario_result_json(
+    spec: &ScenarioSpec,
+    policy: &str,
+    gpus: u32,
+    cells: &[(u64, CellResult)],
+) -> Json {
+    let rows: Vec<PolicyRow> = cells.iter().map(|(_, c)| c.row.clone()).collect();
+    let summaries: Vec<Summary> = cells.iter().map(|(_, c)| c.summary.clone()).collect();
+    Json::obj(vec![
+        ("scenario", spec.name.as_str().into()),
+        ("policy", policy.into()),
+        ("gpus", (gpus as u64).into()),
+        (
+            "per_seed",
+            Json::arr(cells.iter().map(|(seed, c)| {
+                Json::obj(vec![
+                    ("seed", (*seed).into()),
+                    ("summary", c.summary.to_json()),
+                    ("row", c.row.to_json()),
+                    ("total_requests", c.total_requests.into()),
+                    ("unfinished", c.unfinished.into()),
+                ])
+            })),
+        ),
+        (
+            "aggregate",
+            Json::obj(vec![
+                ("summary", SummaryStats::of(&summaries).to_json()),
+                ("row", PolicyRow::aggregate_json(&rows)),
+            ]),
+        ),
+    ])
+}
+
+fn cmd_scenario(argv: Vec<String>) {
+    let args = Args::new(
+        "chiron scenario <list|show|run|sweep> [name|file.json]\n\n\
+         Declarative workload catalog with streaming (O(streams)-memory) trace\n\
+         generation. `run` executes one scenario under one policy across N seeds;\n\
+         `sweep` fans a (policy × scenario × seed) grid over the worker pool.",
+    )
+    .flag(
+        "policy",
+        "chiron",
+        "policy for `run` (chiron|llumnix|llumnix-tuned|local-only|global-only)",
+    )
+    .flag(
+        "policies",
+        "chiron,llumnix",
+        "comma-separated policies for `sweep`",
+    )
+    .flag(
+        "scenarios",
+        "",
+        "comma-separated scenario names for `sweep` (default: whole catalog)",
+    )
+    .flag(
+        "seeds",
+        "1",
+        "replications per cell; JSON reports per-seed results and mean ± std",
+    )
+    .flag("seed", "42", "base RNG seed")
+    .flag(
+        "jobs",
+        "0",
+        "worker threads for the run/sweep grid (0 = all cores; also CHIRON_JOBS)",
+    )
+    .flag("gpus", "0", "override the scenario's cluster size (0 = spec default)")
+    .flag(
+        "scale",
+        "1",
+        "multiply every stream's request cap (e.g. 0.05 for a quick pass)",
+    )
+    .parse_from(argv)
+    .unwrap_or_else(|m| {
+        eprintln!("{m}");
+        std::process::exit(2);
+    });
+    chiron::util::parallel::set_jobs(args.get_usize("jobs"));
+    let scale = args.get_f64("scale");
+    if !(scale.is_finite() && scale > 0.0) {
+        eprintln!("--scale must be a positive number, got '{}'", args.get("scale"));
+        std::process::exit(2);
+    }
+    // `--gpus 0` (the default) defers to the scenario's own cluster size.
+    let gpus_flag = args.get_usize("gpus") as u32;
+    let effective_gpus = |spec: &ScenarioSpec| if gpus_flag == 0 { spec.gpus } else { gpus_flag };
+    let action = args
+        .positional()
+        .first()
+        .map(String::as_str)
+        .unwrap_or("list")
+        .to_string();
+    match action.as_str() {
+        "list" => {
+            println!(
+                "{:<14} {:>7} {:>9} {:>6}  {}",
+                "name", "streams", "requests", "gpus", "description"
+            );
+            for spec in scenario::catalog() {
+                let reqs = match spec.total_requests() {
+                    Some(n) => n.to_string(),
+                    None => format!("<={}", spec.max_requests()),
+                };
+                println!(
+                    "{:<14} {:>7} {:>9} {:>6}  {}",
+                    spec.name,
+                    spec.streams.len(),
+                    reqs,
+                    spec.gpus,
+                    spec.description
+                );
+            }
+        }
+        "show" => {
+            let name = args.positional().get(1).cloned().unwrap_or_else(|| {
+                eprintln!("usage: chiron scenario show <name|file.json>");
+                std::process::exit(2);
+            });
+            let spec = load_scenario(&name).unwrap_or_else(|e| scenario_fail(e));
+            println!("{}", spec.to_json());
+        }
+        "run" => {
+            let name = args.positional().get(1).cloned().unwrap_or_else(|| {
+                eprintln!("usage: chiron scenario run <name|file.json> [flags]");
+                std::process::exit(2);
+            });
+            let spec = load_scenario(&name)
+                .map(|s| s.scaled(scale))
+                .unwrap_or_else(|e| scenario_fail(e));
+            spec.validate().unwrap_or_else(|e| scenario_fail(e));
+            let models = spec.model_specs().unwrap_or_else(|e| scenario_fail(e));
+            let policy_name = args.get("policy").to_string();
+            let kind = PolicyKind::parse(&policy_name).unwrap_or_else(|| {
+                eprintln!(
+                    "unknown policy '{policy_name}' (one of: {})",
+                    PolicyKind::NAMES.join(", ")
+                );
+                std::process::exit(2);
+            });
+            let gpus = effective_gpus(&spec);
+            let seeds = seed_list(args.get_u64("seed"), args.get_usize("seeds").max(1));
+            println!(
+                "running scenario '{}' under {policy_name}: {} stream(s), {} seed(s), {} GPUs",
+                spec.name,
+                spec.streams.len(),
+                seeds.len(),
+                gpus
+            );
+            let t0 = std::time::Instant::now();
+            let results = chiron::util::parallel::run_grid(seeds.clone(), |_, seed| {
+                (seed, run_scenario_cell(&spec, &models, &kind, gpus, seed))
+            });
+            println!("[{} seed(s) done in {:.1}s]", seeds.len(), t0.elapsed().as_secs_f64());
+            println!("{}", PolicyRow::header());
+            for (_, cell) in &results {
+                println!("{}", cell.row.line());
+            }
+            let j = scenario_result_json(&spec, &policy_name, gpus, &results);
+            println!("{j}");
+            save_result(&format!("scenario_{}_{policy_name}", spec.name), &j);
+        }
+        "sweep" => {
+            let scenario_names = args.get_list("scenarios");
+            let specs: Vec<ScenarioSpec> = if scenario_names.is_empty() {
+                scenario::catalog()
+            } else {
+                scenario_names
+                    .iter()
+                    .map(|n| load_scenario(n))
+                    .collect::<anyhow::Result<_>>()
+                    .unwrap_or_else(|e| scenario_fail(e))
+            };
+            let specs: Vec<ScenarioSpec> =
+                specs.into_iter().map(|s| s.scaled(scale)).collect();
+            let mut cells: Vec<(ScenarioSpec, Vec<ModelSpec>, String, PolicyKind, u32)> =
+                Vec::new();
+            for spec in &specs {
+                spec.validate().unwrap_or_else(|e| scenario_fail(e));
+                let models = spec.model_specs().unwrap_or_else(|e| scenario_fail(e));
+                let gpus = effective_gpus(spec);
+                for pname in args.get_list("policies") {
+                    let kind = PolicyKind::parse(&pname).unwrap_or_else(|| {
+                        eprintln!(
+                            "unknown policy '{pname}' (one of: {})",
+                            PolicyKind::NAMES.join(", ")
+                        );
+                        std::process::exit(2);
+                    });
+                    cells.push((spec.clone(), models.clone(), pname, kind, gpus));
+                }
+            }
+            let seeds = seed_list(args.get_u64("seed"), args.get_usize("seeds").max(1));
+            // One flat (cell × seed) grid so replication parallelizes with
+            // the sweep itself; results regroup deterministically below.
+            let tasks: Vec<(usize, u64)> = (0..cells.len())
+                .flat_map(|c| seeds.iter().map(move |&s| (c, s)))
+                .collect();
+            println!(
+                "sweeping {} scenario(s) × {} policy-cell(s) × {} seed(s) = {} simulations",
+                specs.len(),
+                cells.len() / specs.len().max(1),
+                seeds.len(),
+                tasks.len()
+            );
+            let t0 = std::time::Instant::now();
+            let flat = chiron::util::parallel::run_grid(tasks, |_, (c, seed)| {
+                let (spec, models, _, kind, gpus) = &cells[c];
+                (seed, run_scenario_cell(spec, models, kind, *gpus, seed))
+            });
+            println!("[sweep done in {:.1}s]", t0.elapsed().as_secs_f64());
+            let mut it = flat.into_iter();
+            let mut out = Vec::with_capacity(cells.len());
+            println!(
+                "{:<14} {:<14} {:>10} {:>12} {:>12}",
+                "scenario", "policy", "slo%±std", "GPUh±std", "p99ttft±std"
+            );
+            for (spec, _, pname, _, gpus) in &cells {
+                let per_seed: Vec<(u64, CellResult)> =
+                    seeds.iter().map(|_| it.next().expect("grid result")).collect();
+                let rows: Vec<PolicyRow> =
+                    per_seed.iter().map(|(_, c)| c.row.clone()).collect();
+                let summaries: Vec<Summary> =
+                    per_seed.iter().map(|(_, c)| c.summary.clone()).collect();
+                let slo = chiron::metrics::MeanStd::of(&rows, |r| r.slo_attainment);
+                let gpuh = chiron::metrics::MeanStd::of(&rows, |r| r.gpu_hours);
+                let p99 = chiron::metrics::MeanStd::of(&summaries, |s| s.ttft_p99);
+                println!(
+                    "{:<14} {:<14} {:>5.1}±{:<4.1} {:>7.2}±{:<4.2} {:>7.2}±{:<4.2}",
+                    spec.name,
+                    pname,
+                    slo.mean * 100.0,
+                    slo.std * 100.0,
+                    gpuh.mean,
+                    gpuh.std,
+                    p99.mean,
+                    p99.std
+                );
+                out.push(scenario_result_json(spec, pname, *gpus, &per_seed));
+            }
+            let j = Json::arr(out);
+            save_result("scenario_sweep", &j);
+        }
+        other => {
+            eprintln!("unknown scenario action '{other}' (list|show|run|sweep)");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// One trajectory entry as the gate sees it.
+struct GateRun {
+    quick: bool,
+    /// mean_ns of the gated bench, when this run contains it.
+    bench_mean: Option<f64>,
+    /// mean_ns of the machine-speed calibration bench, when present.
+    baseline_mean: Option<f64>,
+}
+
+/// CI regression gate over the bench trajectory (`BENCH_hotpath.json`):
+/// compares the latest run's bench mean against the previous run with the
+/// same quick/full mode, failing on a > threshold regression. When both
+/// runs carry the `--baseline` calibration bench, means are normalized by
+/// it first — successive CI pushes land on shared runners whose absolute
+/// speed varies by tens of percent, so gating on the ratio *to a
+/// CPU-bound bench from the same run* is what makes a fixed threshold
+/// meaningful across machines. Skips (exit 0) when the trajectory holds
+/// fewer than two comparable runs.
+fn cmd_bench_gate(argv: Vec<String>) {
+    let args = Args::new("chiron bench-gate")
+        .flag("file", "BENCH_hotpath.json", "bench trajectory file")
+        .flag("bench", "sim.run", "bench name substring to gate on")
+        .flag(
+            "baseline",
+            "rng.u64",
+            "calibration bench substring; normalizes means across runner speeds \
+             (empty = compare raw wall-clock)",
+        )
+        .flag("threshold", "0.20", "max allowed mean-time regression (fraction)")
+        .switch(
+            "require-file",
+            "fail (exit 1) when the trajectory file is missing/unreadable or the latest \
+             run lacks the gated bench, instead of skipping — use in CI right after the \
+             bench step, where those mean a broken path or bench name, not a fresh repo",
+        )
+        .parse_from(argv)
+        .unwrap_or_else(|m| {
+            eprintln!("{m}");
+            std::process::exit(2);
+        });
+    let path = args.get("file");
+    let bench = args.get("bench");
+    let baseline = args.get("baseline");
+    let threshold = args.get_f64("threshold");
+    let require = args.get_bool("require-file");
+    let skip_or_die = |msg: String| {
+        if require {
+            eprintln!("bench-gate: FAIL — {msg} (and --require-file is set)");
+            std::process::exit(1);
+        }
+        println!("bench-gate: {msg}; skipping");
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => {
+            skip_or_die(format!("no trajectory at {path}"));
+            return;
+        }
+    };
+    let j = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            skip_or_die(format!("unreadable trajectory at {path} ({e})"));
+            return;
+        }
+    };
+    let mean_of = |results: &[Json], name: &str| -> Option<f64> {
+        results
+            .iter()
+            .find(|r| r.get("name").as_str().is_some_and(|n| n.contains(name)))
+            .and_then(|r| r.get("mean_ns").as_f64())
+    };
+    let runs: Vec<GateRun> = j
+        .get("runs")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(|run| {
+            let results = run.get("results").as_arr().unwrap_or(&[]);
+            GateRun {
+                quick: run.get("quick").as_bool().unwrap_or(false),
+                bench_mean: mean_of(results, bench),
+                baseline_mean: if baseline.is_empty() {
+                    None
+                } else {
+                    mean_of(results, baseline)
+                },
+            }
+        })
+        .collect();
+    // Gate on the LATEST run specifically — falling back to an older run
+    // that happens to contain the bench would silently compare stale
+    // history (e.g. after a bench rename or a typo'd --bench).
+    let Some(last) = runs.last() else {
+        // Under --require-file the bench step just ran, so an empty runs
+        // array means the append silently failed — fail, don't skip.
+        skip_or_die("trajectory has no runs".to_string());
+        return;
+    };
+    let Some(last_mean) = last.bench_mean else {
+        skip_or_die(format!("latest run does not contain bench '{bench}'"));
+        return;
+    };
+    let Some(prev) = runs[..runs.len() - 1]
+        .iter()
+        .rev()
+        .find(|r| r.quick == last.quick && r.bench_mean.is_some())
+    else {
+        println!("bench-gate: no previous comparable run for '{bench}'; skipping");
+        return;
+    };
+    let prev_mean = prev.bench_mean.expect("filtered on is_some");
+    // Normalize by the calibration bench when both runs carry it.
+    let (ratio, normalized) = match (last.baseline_mean, prev.baseline_mean) {
+        (Some(lb), Some(pb)) if lb > 0.0 && pb > 0.0 => {
+            ((last_mean / lb) / (prev_mean / pb), true)
+        }
+        _ => (last_mean / prev_mean, false),
+    };
+    println!(
+        "bench-gate: '{bench}' mean {:.3} ms vs previous {:.3} ms — {}ratio {:.3} ({:+.1}%)",
+        last_mean / 1e6,
+        prev_mean / 1e6,
+        if normalized {
+            format!("'{baseline}'-normalized ")
+        } else {
+            String::new()
+        },
+        ratio,
+        (ratio - 1.0) * 100.0
+    );
+    if ratio > 1.0 + threshold {
+        eprintln!(
+            "bench-gate: FAIL — '{bench}' regressed {:.1}% (> {:.0}% allowed)",
+            (ratio - 1.0) * 100.0,
+            threshold * 100.0
+        );
+        std::process::exit(1);
+    }
+    println!("bench-gate: OK (threshold {:.0}%)", threshold * 100.0);
 }
 
 fn cmd_simulate(argv: Vec<String>) {

@@ -1,10 +1,11 @@
 //! Metrics aggregation over request outcomes and sim reports: SLO
-//! attainment, latency percentiles, throughput, GPU efficiency, hysteresis.
+//! attainment, latency percentiles, throughput, GPU efficiency, hysteresis,
+//! and multi-seed mean ± std aggregates for replicated runs.
 
 use crate::core::{RequestClass, RequestOutcome};
 use crate::sim::SimReport;
 use crate::util::json::Json;
-use crate::util::stats::Percentiles;
+use crate::util::stats::{Percentiles, Welford};
 
 /// Aggregated serving metrics for a set of outcomes.
 #[derive(Debug, Clone)]
@@ -70,6 +71,87 @@ impl Summary {
                 self.preemptions_per_request.into(),
             ),
             ("mean_output_tokens", self.mean_output_tokens.into()),
+        ])
+    }
+}
+
+/// Mean ± standard deviation of one metric over replicated runs
+/// (the error-bar payload for multi-seed sweeps). `std` is the
+/// Bessel-corrected sample std (n−1): replications are a sample of the
+/// seed distribution, and population std would understate the error bars
+/// at the small seed counts (~3) the CLI encourages.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MeanStd {
+    pub mean: f64,
+    pub std: f64,
+    pub n: usize,
+}
+
+impl MeanStd {
+    pub fn of<T, F: Fn(&T) -> f64>(xs: &[T], f: F) -> MeanStd {
+        let mut w = Welford::new();
+        for x in xs {
+            w.push(f(x));
+        }
+        MeanStd {
+            mean: w.mean(),
+            std: w.sample_std(),
+            n: xs.len(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mean", self.mean.into()),
+            ("std", self.std.into()),
+        ])
+    }
+}
+
+/// Mean ± std over a set of per-seed [`Summary`]s: the aggregate block of
+/// `chiron scenario run/sweep` JSON output.
+#[derive(Debug, Clone)]
+pub struct SummaryStats {
+    pub seeds: usize,
+    pub count: MeanStd,
+    pub slo_attainment: MeanStd,
+    pub ttft_p50: MeanStd,
+    pub ttft_p99: MeanStd,
+    pub itl_mean: MeanStd,
+    pub itl_p99: MeanStd,
+    pub preemptions_per_request: MeanStd,
+    pub mean_output_tokens: MeanStd,
+}
+
+impl SummaryStats {
+    pub fn of(summaries: &[Summary]) -> SummaryStats {
+        SummaryStats {
+            seeds: summaries.len(),
+            count: MeanStd::of(summaries, |s| s.count as f64),
+            slo_attainment: MeanStd::of(summaries, |s| s.slo_attainment),
+            ttft_p50: MeanStd::of(summaries, |s| s.ttft_p50),
+            ttft_p99: MeanStd::of(summaries, |s| s.ttft_p99),
+            itl_mean: MeanStd::of(summaries, |s| s.itl_mean),
+            itl_p99: MeanStd::of(summaries, |s| s.itl_p99),
+            preemptions_per_request: MeanStd::of(summaries, |s| s.preemptions_per_request),
+            mean_output_tokens: MeanStd::of(summaries, |s| s.mean_output_tokens),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seeds", self.seeds.into()),
+            ("count", self.count.to_json()),
+            ("slo_attainment", self.slo_attainment.to_json()),
+            ("ttft_p50", self.ttft_p50.to_json()),
+            ("ttft_p99", self.ttft_p99.to_json()),
+            ("itl_mean", self.itl_mean.to_json()),
+            ("itl_p99", self.itl_p99.to_json()),
+            (
+                "preemptions_per_request",
+                self.preemptions_per_request.to_json(),
+            ),
+            ("mean_output_tokens", self.mean_output_tokens.to_json()),
         ])
     }
 }
@@ -151,6 +233,41 @@ impl PolicyRow {
             ("unfinished", self.unfinished.into()),
         ])
     }
+
+    /// Mean ± std aggregate over replicated rows (one policy, many seeds).
+    pub fn aggregate_json(rows: &[PolicyRow]) -> Json {
+        Json::obj(vec![
+            (
+                "policy",
+                rows.first().map(|r| r.policy.as_str()).unwrap_or("").into(),
+            ),
+            ("seeds", rows.len().into()),
+            (
+                "slo_attainment",
+                MeanStd::of(rows, |r| r.slo_attainment).to_json(),
+            ),
+            (
+                "slo_interactive",
+                MeanStd::of(rows, |r| r.slo_interactive).to_json(),
+            ),
+            ("slo_batch", MeanStd::of(rows, |r| r.slo_batch).to_json()),
+            (
+                "request_throughput",
+                MeanStd::of(rows, |r| r.request_throughput).to_json(),
+            ),
+            ("mean_gpus", MeanStd::of(rows, |r| r.mean_gpus).to_json()),
+            (
+                "peak_gpus",
+                MeanStd::of(rows, |r| r.peak_gpus as f64).to_json(),
+            ),
+            ("gpu_hours", MeanStd::of(rows, |r| r.gpu_hours).to_json()),
+            ("hysteresis", MeanStd::of(rows, |r| r.hysteresis).to_json()),
+            (
+                "unfinished",
+                MeanStd::of(rows, |r| r.unfinished as f64).to_json(),
+            ),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -202,5 +319,38 @@ mod tests {
             outcome(1.0, 0.1, RequestClass::Batch),
         ];
         assert_eq!(Summary::of_class(&outs, RequestClass::Batch).count, 1);
+    }
+
+    #[test]
+    fn mean_std_matches_naive() {
+        let xs = [1.0f64, 2.0, 3.0, 6.0];
+        let ms = MeanStd::of(&xs, |&x| x);
+        assert_eq!(ms.n, 4);
+        assert!((ms.mean - 3.0).abs() < 1e-12);
+        // Bessel-corrected sample std (n − 1).
+        let var = xs.iter().map(|x| (x - 3.0) * (x - 3.0)).sum::<f64>() / 3.0;
+        assert!((ms.std - var.sqrt()).abs() < 1e-12);
+        let empty: [f64; 0] = [];
+        let e = MeanStd::of(&empty, |&x| x);
+        assert_eq!((e.mean, e.std, e.n), (0.0, 0.0, 0));
+        // A single replication has no spread estimate.
+        let one = MeanStd::of(&[5.0f64], |&x| x);
+        assert_eq!((one.mean, one.std), (5.0, 0.0));
+    }
+
+    #[test]
+    fn summary_stats_aggregate() {
+        let a = Summary::of(&[outcome(1.0, 0.1, RequestClass::Interactive)]);
+        let b = Summary::of(&[
+            outcome(3.0, 0.1, RequestClass::Interactive),
+            outcome(20.0, 0.1, RequestClass::Interactive),
+        ]);
+        let stats = SummaryStats::of(&[a, b]);
+        assert_eq!(stats.seeds, 2);
+        assert!((stats.count.mean - 1.5).abs() < 1e-12);
+        assert!((stats.slo_attainment.mean - 0.75).abs() < 1e-12);
+        assert!(stats.slo_attainment.std > 0.0);
+        let j = stats.to_json();
+        assert!((j.get("slo_attainment").get("mean").as_f64().unwrap() - 0.75).abs() < 1e-12);
     }
 }

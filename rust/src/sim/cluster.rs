@@ -1,7 +1,8 @@
 //! The discrete-event cluster simulator: a GPU pool, serving-instance
 //! lifecycle (Loading → Running → Draining → Retired), a per-model global
 //! queue, and the event loop that drives an autoscaling `Policy` over a
-//! request trace.
+//! stream of request arrivals (a materialized `Trace` or any streaming
+//! `ArrivalSource`, e.g. a lazily generated scenario workload).
 //!
 //! Event types: request arrivals, engine-step completions, instance-ready
 //! (model load finished), and the periodic autoscaler tick. Determinism:
@@ -11,13 +12,14 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
 use crate::core::{
-    InstanceClass, InstanceId, ModelSpec, RequestClass, RequestOutcome, ServingConfig, Time,
+    InstanceClass, InstanceId, ModelSpec, Request, RequestClass, RequestOutcome, ServingConfig,
+    Time,
 };
 use crate::sim::instance::{SimInstance, WorkItem};
 use crate::sim::policy::{
     Action, ClusterView, InstanceState, InstanceView, Policy, QueueStats, QueuedReq, Route,
 };
-use crate::workload::Trace;
+use crate::workload::{ArrivalSource, Trace, TraceSource};
 
 /// Hard clamp on policy-requested batch sizes (the paper's observed maximum
 /// useful batch is 4096; 16384 leaves room for sweep experiments).
@@ -185,7 +187,12 @@ impl SimReport {
 
 #[derive(Debug)]
 enum Ev {
-    Arrival(u32),
+    /// The request in `Simulation::pending_arrival` arrives. Only one
+    /// arrival event is in flight at a time: popping it fetches the next
+    /// request from the arrival source (§Perf: preloading a 700k-request
+    /// trace made every heap op log-huge; streaming also lets scenario
+    /// sources synthesize multi-million-request workloads lazily).
+    Arrival,
     StepDone { inst: InstanceId, duration: Time },
     Ready(InstanceId),
     Tick,
@@ -268,14 +275,35 @@ pub struct Simulation<'p> {
     /// Structural change (add/retire) pending: rebuild the whole cache.
     views_all_dirty: bool,
     queue_stats: Vec<QueueStats>,
-    trace: Trace,
+    /// Streaming arrival feed (a `TraceSource` for materialized traces, a
+    /// `ScenarioSource` for lazily generated scenario workloads).
+    source: Box<dyn ArrivalSource>,
+    /// The request the in-flight `Ev::Arrival` will deliver.
+    pending_arrival: Option<Request>,
+    /// Requests delivered so far.
+    arrived: usize,
+    /// The source is exhausted (no pending arrival remains).
+    arrivals_done: bool,
+    /// Exact expected total when the source knows it up front.
+    total_hint: Option<usize>,
     ticks: u64,
 }
 
 impl<'p> Simulation<'p> {
     pub fn new(cfg: SimConfig, trace: Trace, policy: &'p mut dyn Policy) -> Self {
+        Self::from_source(cfg, Box::new(TraceSource::new(trace)), policy)
+    }
+
+    /// Build a simulation fed by a streaming arrival source. Trace-side
+    /// memory is whatever the source holds — O(streams) for scenario
+    /// sources — instead of a materialized request vector.
+    pub fn from_source(
+        cfg: SimConfig,
+        source: Box<dyn ArrivalSource>,
+        policy: &'p mut dyn Policy,
+    ) -> Self {
         let nm = cfg.models.len();
-        let total = trace.len();
+        let total_hint = source.total_hint();
         Simulation {
             cfg,
             policy,
@@ -291,7 +319,7 @@ impl<'p> Simulation<'p> {
             gpu_seconds: 0.0,
             last_gpu_change: 0.0,
             report: SimReport {
-                total_requests: total,
+                total_requests: total_hint.unwrap_or(0),
                 ..Default::default()
             },
             completed: 0,
@@ -299,9 +327,32 @@ impl<'p> Simulation<'p> {
             views_dirty_idx: Vec::new(),
             views_all_dirty: true,
             queue_stats: vec![QueueStats::default(); nm],
-            trace,
+            source,
+            pending_arrival: None,
+            arrived: 0,
+            arrivals_done: false,
+            total_hint,
             ticks: 0,
         }
+    }
+
+    /// Pull the next request from the source and schedule its arrival
+    /// event; flips `arrivals_done` at stream end.
+    fn schedule_next_arrival(&mut self) {
+        match self.source.next_request() {
+            Some(req) => {
+                let t = req.arrival;
+                self.pending_arrival = Some(req);
+                self.push_event(t, Ev::Arrival);
+            }
+            None => self.arrivals_done = true,
+        }
+    }
+
+    /// All requests that will ever arrive have arrived and completed.
+    #[inline]
+    fn all_work_done(&self) -> bool {
+        self.arrivals_done && self.completed >= self.arrived
     }
 
     fn push_event(&mut self, t: Time, ev: Ev) {
@@ -311,7 +362,7 @@ impl<'p> Simulation<'p> {
         let pri = match ev {
             Ev::Ready(_) => 0,
             Ev::StepDone { .. } => 1,
-            Ev::Arrival(_) => 2,
+            Ev::Arrival => 2,
             Ev::Tick => 3,
         };
         self.heap.push(Reverse(HeapEv { t, pri, seq, ev }));
@@ -598,11 +649,8 @@ impl<'p> Simulation<'p> {
         let warm = self.cfg.warm_bootstrap;
         self.apply_actions(boot, warm);
 
-        // Stream arrivals: only the next arrival lives in the heap (§Perf:
-        // preloading a 700k-request trace made every heap op log-huge).
-        if !self.trace.is_empty() {
-            self.push_event(self.trace.requests[0].arrival, Ev::Arrival(0));
-        }
+        // Stream arrivals: only the next arrival lives in the heap.
+        self.schedule_next_arrival();
         self.push_event(self.cfg.tick_interval, Ev::Tick);
 
         while let Some(Reverse(HeapEv { t, ev, .. })) = self.heap.pop() {
@@ -611,15 +659,13 @@ impl<'p> Simulation<'p> {
                 break;
             }
             match ev {
-                Ev::Arrival(i) => {
-                    let next = i as usize + 1;
-                    if next < self.trace.len() {
-                        self.push_event(
-                            self.trace.requests[next].arrival,
-                            Ev::Arrival(next as u32),
-                        );
-                    }
-                    let req = self.trace.requests[i as usize].clone();
+                Ev::Arrival => {
+                    let req = self
+                        .pending_arrival
+                        .take()
+                        .expect("an Arrival event always has a pending request");
+                    self.arrived += 1;
+                    self.schedule_next_arrival();
                     self.route_item(WorkItem::fresh(req));
                 }
                 Ev::Ready(iid) => {
@@ -670,7 +716,7 @@ impl<'p> Simulation<'p> {
                     // eviction re-route refreshed this slot.
                     self.mark_view_dirty(idx);
                     self.retire_drained();
-                    if self.completed >= self.report.total_requests {
+                    if self.all_work_done() {
                         break;
                     }
                 }
@@ -696,17 +742,21 @@ impl<'p> Simulation<'p> {
                     {
                         self.sample_timeline();
                     }
-                    if self.completed < self.report.total_requests {
+                    if !self.all_work_done() {
                         self.push_event(self.now + self.cfg.tick_interval, Ev::Tick);
                     }
                 }
             }
         }
 
-        // Final accounting.
+        // Final accounting. Sources without an exact up-front total (e.g.
+        // stop-truncated scenario streams) report the arrived count; a
+        // known total also counts never-arrived requests (time cap hit) as
+        // unfinished, matching the materialized-trace semantics.
         self.gpu_seconds += self.gpus_used as f64 * (self.now - self.last_gpu_change);
         self.report.gpu_seconds = self.gpu_seconds;
         self.report.end_time = self.now;
+        self.report.total_requests = self.total_hint.unwrap_or(self.arrived);
         self.report.unfinished = self.report.total_requests - self.completed;
         self.report.policy = self.policy.name().to_string();
         self.report
@@ -716,4 +766,13 @@ impl<'p> Simulation<'p> {
 /// Convenience: run a trace under a policy and config.
 pub fn run_sim(cfg: SimConfig, trace: Trace, policy: &mut dyn Policy) -> SimReport {
     Simulation::new(cfg, trace, policy).run()
+}
+
+/// Convenience: run a streaming arrival source under a policy and config.
+pub fn run_sim_source(
+    cfg: SimConfig,
+    source: Box<dyn ArrivalSource>,
+    policy: &mut dyn Policy,
+) -> SimReport {
+    Simulation::from_source(cfg, source, policy).run()
 }

@@ -11,7 +11,9 @@ pub mod cluster;
 pub mod instance;
 pub mod policy;
 
-pub use cluster::{run_sim, SimConfig, SimReport, Simulation, TimelinePoint, MAX_BATCH_CLAMP};
+pub use cluster::{
+    run_sim, run_sim_source, SimConfig, SimReport, Simulation, TimelinePoint, MAX_BATCH_CLAMP,
+};
 pub use instance::{Evicted, SimInstance, StepResult, WorkItem};
 pub use policy::{
     Action, ClusterView, InstanceState, InstanceView, Policy, QueueStats, QueuedReq, Route,

@@ -158,6 +158,16 @@ impl Args {
             .unwrap_or_else(|| panic!("switch --{name} was not declared"))
     }
 
+    /// Comma-separated list value (empty string → empty list).
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect()
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -206,6 +216,16 @@ mod tests {
     #[test]
     fn missing_value_errors() {
         assert!(spec().parse_from(["--rate"]).is_err());
+    }
+
+    #[test]
+    fn list_values_split_on_commas() {
+        let a = spec()
+            .parse_from(["--model", "a, b,c,,"])
+            .unwrap();
+        assert_eq!(a.get_list("model"), vec!["a", "b", "c"]);
+        let empty = spec().parse_from(["--model", ""]).unwrap();
+        assert!(empty.get_list("model").is_empty());
     }
 
     #[test]

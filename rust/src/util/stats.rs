@@ -48,6 +48,20 @@ impl Welford {
         self.variance().sqrt()
     }
 
+    /// Bessel-corrected sample variance (divide by n−1; 0 for n < 2) — the
+    /// right estimator for error bars over independent replications.
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn sample_std(&self) -> f64 {
+        self.sample_variance().sqrt()
+    }
+
     /// Merge another accumulator (parallel Welford / Chan et al.).
     pub fn merge(&mut self, other: &Welford) {
         if other.n == 0 {
@@ -277,6 +291,22 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
         assert!((w.mean() - mean).abs() < 1e-12);
         assert!((w.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_sample_variance_bessel_corrected() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = 5.0;
+        let ss: f64 = xs.iter().map(|x| (x - mean).powi(2)).sum();
+        assert!((w.sample_variance() - ss / 7.0).abs() < 1e-12);
+        assert!((w.variance() - ss / 8.0).abs() < 1e-12);
+        let mut single = Welford::new();
+        single.push(3.0);
+        assert_eq!(single.sample_variance(), 0.0);
     }
 
     #[test]

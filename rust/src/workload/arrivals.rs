@@ -3,10 +3,11 @@
 //! spike statistics of paper Figure 4.
 
 use crate::core::Time;
+use crate::util::json::Json;
 use crate::util::rng::{GammaArrivals, Rng};
 
 /// A stream of arrival timestamps.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ArrivalProcess {
     /// Poisson arrivals at `rate` requests/second (paper §6 default).
     Poisson { rate: f64 },
@@ -21,49 +22,16 @@ pub enum ArrivalProcess {
 }
 
 impl ArrivalProcess {
-    /// Generate `n` arrival timestamps starting at `start`.
+    /// Generate up to `n` arrival timestamps starting at `start`. The
+    /// stream may end early (fewer than `n` times) for a `Phased` process
+    /// whose final segment has zero rate — see [`ArrivalClock::next`].
     pub fn generate(&self, rng: &mut Rng, start: Time, n: usize) -> Vec<Time> {
+        let mut clock = ArrivalClock::new(self.clone(), start);
         let mut out = Vec::with_capacity(n);
-        match self {
-            ArrivalProcess::Poisson { rate } => {
-                let mut t = start;
-                for _ in 0..n {
-                    t += rng.exp(*rate);
-                    out.push(t);
-                }
-            }
-            ArrivalProcess::Gamma { rate, cv } => {
-                let g = GammaArrivals::new(*rate, *cv);
-                let mut t = start;
-                for _ in 0..n {
-                    t += g.next_gap(rng);
-                    out.push(t);
-                }
-            }
-            ArrivalProcess::Burst { at } => {
-                out.resize(n, *at);
-            }
-            ArrivalProcess::Phased { segments } => {
-                assert!(!segments.is_empty());
-                let mut seg = 0usize;
-                let mut t = start.max(segments[0].0);
-                while out.len() < n {
-                    // advance to the active segment for time t
-                    while seg + 1 < segments.len() && t >= segments[seg + 1].0 {
-                        seg += 1;
-                    }
-                    let rate = segments[seg].1.max(1e-9);
-                    let gap = rng.exp(rate);
-                    // If the gap crosses a segment boundary, restart from it
-                    // (thinning-free approximation adequate for experiments).
-                    if seg + 1 < segments.len() && t + gap > segments[seg + 1].0 {
-                        t = segments[seg + 1].0;
-                        seg += 1;
-                        continue;
-                    }
-                    t += gap;
-                    out.push(t);
-                }
+        while out.len() < n {
+            match clock.next(rng) {
+                Some(t) => out.push(t),
+                None => break,
             }
         }
         out
@@ -75,6 +43,217 @@ impl ArrivalProcess {
             ArrivalProcess::Poisson { rate } => Some(*rate),
             ArrivalProcess::Gamma { rate, .. } => Some(*rate),
             _ => None,
+        }
+    }
+
+    /// Reject malformed processes with a proper error instead of panicking
+    /// deep inside generation (the old code `assert!`ed on empty `Phased`
+    /// segment lists).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match self {
+            ArrivalProcess::Poisson { rate } => {
+                anyhow::ensure!(
+                    rate.is_finite() && *rate > 0.0,
+                    "poisson arrival rate must be finite and positive, got {rate}"
+                );
+            }
+            ArrivalProcess::Gamma { rate, cv } => {
+                anyhow::ensure!(
+                    rate.is_finite() && *rate > 0.0,
+                    "gamma arrival rate must be finite and positive, got {rate}"
+                );
+                anyhow::ensure!(
+                    cv.is_finite() && *cv > 0.0,
+                    "gamma arrival cv must be finite and positive, got {cv}"
+                );
+            }
+            ArrivalProcess::Burst { at } => {
+                anyhow::ensure!(
+                    at.is_finite() && *at >= 0.0,
+                    "burst time must be finite and non-negative, got {at}"
+                );
+            }
+            ArrivalProcess::Phased { segments } => {
+                anyhow::ensure!(
+                    !segments.is_empty(),
+                    "phased arrival process needs at least one (start, rate) segment"
+                );
+                anyhow::ensure!(
+                    segments.iter().any(|&(_, r)| r > 0.0),
+                    "phased arrival process needs at least one positive-rate segment"
+                );
+                for w in segments.windows(2) {
+                    anyhow::ensure!(
+                        w[0].0 <= w[1].0,
+                        "phased segment starts must be non-decreasing ({} > {})",
+                        w[0].0,
+                        w[1].0
+                    );
+                }
+                for &(t, r) in segments {
+                    anyhow::ensure!(
+                        t.is_finite() && r.is_finite() && r >= 0.0,
+                        "phased segment ({t}, {r}) must be finite with rate >= 0"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            ArrivalProcess::Poisson { rate } => {
+                Json::obj(vec![("kind", "poisson".into()), ("rate", (*rate).into())])
+            }
+            ArrivalProcess::Gamma { rate, cv } => Json::obj(vec![
+                ("kind", "gamma".into()),
+                ("rate", (*rate).into()),
+                ("cv", (*cv).into()),
+            ]),
+            ArrivalProcess::Burst { at } => {
+                Json::obj(vec![("kind", "burst".into()), ("at", (*at).into())])
+            }
+            ArrivalProcess::Phased { segments } => Json::obj(vec![
+                ("kind", "phased".into()),
+                (
+                    "segments",
+                    Json::arr(
+                        segments
+                            .iter()
+                            .map(|&(t, r)| Json::arr(vec![t.into(), r.into()])),
+                    ),
+                ),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ArrivalProcess> {
+        let proc = match j.get("kind").as_str() {
+            Some("poisson") => ArrivalProcess::Poisson {
+                rate: j
+                    .get("rate")
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("poisson arrivals need a numeric 'rate'"))?,
+            },
+            Some("gamma") => ArrivalProcess::Gamma {
+                rate: j
+                    .get("rate")
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("gamma arrivals need a numeric 'rate'"))?,
+                cv: j.get("cv").as_f64().unwrap_or(1.0),
+            },
+            Some("burst") => ArrivalProcess::Burst {
+                at: j.get("at").as_f64().unwrap_or(0.0),
+            },
+            Some("phased") => {
+                let segs = j
+                    .get("segments")
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("phased arrivals need a 'segments' array"))?;
+                let mut segments = Vec::with_capacity(segs.len());
+                for s in segs {
+                    let pair = s
+                        .as_arr()
+                        .filter(|p| p.len() == 2)
+                        .ok_or_else(|| anyhow::anyhow!("phased segment must be [start, rate]"))?;
+                    let t = pair[0]
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("phased segment start must be numeric"))?;
+                    let r = pair[1]
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("phased segment rate must be numeric"))?;
+                    segments.push((t, r));
+                }
+                ArrivalProcess::Phased { segments }
+            }
+            other => anyhow::bail!("unknown arrival process kind {other:?}"),
+        };
+        proc.validate()?;
+        Ok(proc)
+    }
+}
+
+/// Stateful one-at-a-time arrival generator: the streaming counterpart of
+/// [`ArrivalProcess::generate`], yielding the identical timestamp sequence
+/// for the same `Rng` state but holding only O(1) state. The scenario
+/// engine's k-way merge pulls one timestamp per stream at a time, so
+/// multi-million-request traces never materialize.
+#[derive(Debug, Clone)]
+pub struct ArrivalClock {
+    proc: ArrivalProcess,
+    t: Time,
+    seg: usize,
+}
+
+impl ArrivalClock {
+    pub fn new(proc: ArrivalProcess, start: Time) -> Self {
+        let t = match &proc {
+            ArrivalProcess::Phased { segments } if !segments.is_empty() => {
+                start.max(segments[0].0)
+            }
+            _ => start,
+        };
+        ArrivalClock { proc, t, seg: 0 }
+    }
+
+    /// Next arrival timestamp, or `None` when the process can produce no
+    /// more arrivals (zero-rate tail segment, degenerate rates, empty
+    /// segment list).
+    pub fn next(&mut self, rng: &mut Rng) -> Option<Time> {
+        match &self.proc {
+            ArrivalProcess::Poisson { rate } => {
+                if !(*rate > 0.0) {
+                    return None;
+                }
+                self.t += rng.exp(*rate);
+                Some(self.t)
+            }
+            ArrivalProcess::Gamma { rate, cv } => {
+                if !(*rate > 0.0 && *cv > 0.0) {
+                    return None;
+                }
+                let g = GammaArrivals::new(*rate, *cv);
+                self.t += g.next_gap(rng);
+                Some(self.t)
+            }
+            ArrivalProcess::Burst { at } => Some(*at),
+            ArrivalProcess::Phased { segments } => {
+                if segments.is_empty() {
+                    return None;
+                }
+                loop {
+                    // advance to the active segment for time t
+                    while self.seg + 1 < segments.len() && self.t >= segments[self.seg + 1].0 {
+                        self.seg += 1;
+                    }
+                    let rate = segments[self.seg].1;
+                    if !(rate > 0.0) {
+                        // Zero-rate segment: no arrivals until the next
+                        // boundary; a zero-rate *final* segment ends the
+                        // stream (the old code clamped to 1e-9 and emitted
+                        // bogus astronomically-spaced arrivals).
+                        if self.seg + 1 >= segments.len() {
+                            return None;
+                        }
+                        self.t = segments[self.seg + 1].0;
+                        self.seg += 1;
+                        continue;
+                    }
+                    let gap = rng.exp(rate);
+                    // A gap crossing the boundary restarts from it. Exact
+                    // for piecewise-constant Poisson: the exponential is
+                    // memoryless, so resampling at the boundary with the
+                    // new rate preserves the rate in both segments.
+                    if self.seg + 1 < segments.len() && self.t + gap > segments[self.seg + 1].0 {
+                        self.t = segments[self.seg + 1].0;
+                        self.seg += 1;
+                        continue;
+                    }
+                    self.t += gap;
+                    return Some(self.t);
+                }
+            }
         }
     }
 }
@@ -211,6 +390,101 @@ mod tests {
         let early = ts.iter().filter(|&&t| t < 100.0).count();
         let late = ts.iter().filter(|&&t| (100.0..200.0).contains(&t)).count();
         assert!(late > 5 * early, "early {early} late {late}");
+    }
+
+    #[test]
+    fn clock_matches_generate_exactly() {
+        for proc in [
+            ArrivalProcess::Poisson { rate: 12.0 },
+            ArrivalProcess::Gamma { rate: 8.0, cv: 3.0 },
+            ArrivalProcess::Burst { at: 42.0 },
+            ArrivalProcess::Phased {
+                segments: vec![(0.0, 4.0), (50.0, 30.0), (80.0, 2.0)],
+            },
+        ] {
+            let mut ra = Rng::new(77);
+            let mut rb = Rng::new(77);
+            let batch = proc.generate(&mut ra, 1.5, 500);
+            let mut clock = ArrivalClock::new(proc.clone(), 1.5);
+            let streamed: Vec<Time> = (0..500).map_while(|_| clock.next(&mut rb)).collect();
+            assert_eq!(batch.len(), streamed.len(), "{proc:?}");
+            for (a, b) in batch.iter().zip(&streamed) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{proc:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn phased_zero_rate_tail_ends_stream() {
+        // A flash-crowd shape: nothing, then a spike, then nothing. The
+        // stream must END at the final zero-rate segment instead of
+        // emitting 1e9-second-spaced arrivals (the old 1e-9 clamp).
+        let p = ArrivalProcess::Phased {
+            segments: vec![(0.0, 0.0), (100.0, 50.0), (160.0, 0.0)],
+        };
+        let mut rng = Rng::new(6);
+        let ts = p.generate(&mut rng, 0.0, 1_000_000);
+        assert!(!ts.is_empty());
+        assert!(ts.len() < 1_000_000, "stream must end at the zero tail");
+        assert!(ts.iter().all(|&t| (100.0..=160.0).contains(&t)), "arrivals confined to the spike window");
+        // ~50 req/s over 60 s => ~3000 arrivals.
+        assert!((2400..3600).contains(&ts.len()), "got {}", ts.len());
+    }
+
+    #[test]
+    fn phased_empty_segments_is_error_not_panic() {
+        let p = ArrivalProcess::Phased { segments: vec![] };
+        assert!(p.validate().is_err());
+        // generate degrades to an empty stream rather than panicking.
+        let mut rng = Rng::new(1);
+        assert!(p.generate(&mut rng, 0.0, 10).is_empty());
+    }
+
+    #[test]
+    fn validate_rejects_degenerate() {
+        assert!(ArrivalProcess::Poisson { rate: 0.0 }.validate().is_err());
+        assert!(ArrivalProcess::Poisson { rate: -3.0 }.validate().is_err());
+        assert!(ArrivalProcess::Gamma { rate: 5.0, cv: 0.0 }.validate().is_err());
+        assert!(ArrivalProcess::Burst { at: f64::NAN }.validate().is_err());
+        assert!(ArrivalProcess::Phased {
+            segments: vec![(0.0, 0.0), (10.0, 0.0)]
+        }
+        .validate()
+        .is_err());
+        assert!(ArrivalProcess::Phased {
+            segments: vec![(10.0, 1.0), (0.0, 2.0)]
+        }
+        .validate()
+        .is_err());
+        assert!(ArrivalProcess::Poisson { rate: 4.0 }.validate().is_ok());
+        assert!(ArrivalProcess::Phased {
+            segments: vec![(0.0, 1.0), (10.0, 0.0)]
+        }
+        .validate()
+        .is_ok());
+    }
+
+    #[test]
+    fn arrival_process_json_roundtrip() {
+        for proc in [
+            ArrivalProcess::Poisson { rate: 12.5 },
+            ArrivalProcess::Gamma { rate: 8.0, cv: 3.0 },
+            ArrivalProcess::Burst { at: 300.0 },
+            ArrivalProcess::Phased {
+                segments: vec![(0.0, 4.0), (50.0, 30.0)],
+            },
+        ] {
+            let j = proc.to_json();
+            let back =
+                ArrivalProcess::from_json(&crate::util::json::Json::parse(&j.to_string()).unwrap())
+                    .unwrap();
+            assert_eq!(proc, back);
+        }
+        assert!(ArrivalProcess::from_json(&Json::parse(r#"{"kind":"nope"}"#).unwrap()).is_err());
+        assert!(ArrivalProcess::from_json(
+            &Json::parse(r#"{"kind":"phased","segments":[]}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

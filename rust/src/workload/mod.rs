@@ -1,11 +1,18 @@
 //! Workload generation: ShareGPT-like token-length distributions, arrival
-//! processes (Poisson / Gamma-CV / spike trains), and the paper's workload
-//! builders W_A (interactive-only) and W_B (interactive + batch).
+//! processes (Poisson / Gamma-CV / phased / spike trains), the paper's
+//! workload builders W_A (interactive-only) and W_B (interactive + batch),
+//! and the scenario engine — a declarative workload catalog with streaming
+//! (O(streams)-memory) trace generation. See `README.md` in this directory
+//! for the scenario catalog.
 
 pub mod arrivals;
+pub mod scenario;
 pub mod sharegpt;
+pub mod source;
 pub mod trace;
 
-pub use arrivals::{ArrivalProcess, SpikeTrain};
+pub use arrivals::{ArrivalClock, ArrivalProcess, SpikeTrain};
+pub use scenario::{LengthDist, ScenarioSource, ScenarioSpec, StreamSpec};
 pub use sharegpt::ShareGptSampler;
+pub use source::{ArrivalSource, TraceSource};
 pub use trace::{Trace, TraceBuilder, WorkloadSpec};

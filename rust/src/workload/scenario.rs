@@ -1,0 +1,1059 @@
+//! Declarative workload scenarios and streaming trace generation.
+//!
+//! Chiron's contribution is SLO-aware autoscaling under *diverse* arrival
+//! regimes (paper §6, Figs. 4/5/17): interactive vs. batch, diurnal swings,
+//! flash crowds, multi-model multiplexing, heavy-tailed generation lengths,
+//! and the appendix-A.2 million-request batch backlog. This module makes
+//! those regimes first-class data instead of one-off experiment code:
+//!
+//! - [`ScenarioSpec`] — a declarative, JSON-round-trippable description of
+//!   a multi-stream workload: per-stream request class, SLO, target model,
+//!   arrival process, token-length distribution, and start/stop window.
+//! - [`ScenarioSource`] — a streaming [`ArrivalSource`]: a k-way merge over
+//!   per-stream lazy generators that yields time-ordered `Request`s with
+//!   O(streams) memory, so multi-million-request scenarios never
+//!   materialize a request vector. [`ScenarioSpec::trace`] materializes the
+//!   byte-identical sequence for callers that want a `Trace`.
+//! - [`catalog`] — the built-in scenario registry driving
+//!   `chiron scenario {list,show,run,sweep}`.
+//!
+//! Determinism: stream `i` draws from an `Rng` forked deterministically
+//! from the scenario seed, and ties in the merge break by stream index,
+//! exactly matching the stable sort in [`ScenarioSpec::trace`] — so the
+//! streaming and materialized paths produce identical request sequences.
+
+use crate::core::{ModelSpec, Request, RequestClass, RequestId, Slo, Time};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::arrivals::{ArrivalClock, ArrivalProcess};
+use super::sharegpt::ShareGptSampler;
+use super::source::ArrivalSource;
+use super::trace::Trace;
+
+/// Token-length distribution for one stream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LengthDist {
+    /// ShareGPT-like log-normal mixture (paper Figure 8).
+    ShareGpt,
+    /// Compact variant fitting the tiny real-engine context window.
+    Tiny,
+    /// Constant lengths (useful for capacity math and benchmarks).
+    Fixed { input: u32, output: u32 },
+    /// ShareGPT-like inputs with Pareto(α, min) output lengths: the
+    /// heavy-tail stress regime where a few requests decode for thousands
+    /// of tokens (α close to 1 ⇒ heavier tail).
+    ParetoOutput {
+        output_min: f64,
+        alpha: f64,
+        max_len: u32,
+    },
+}
+
+impl LengthDist {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match self {
+            LengthDist::Fixed { input, output } => {
+                anyhow::ensure!(
+                    *input >= 1 && *output >= 1,
+                    "fixed lengths must be >= 1, got input={input} output={output}"
+                );
+            }
+            LengthDist::ParetoOutput {
+                output_min,
+                alpha,
+                max_len,
+            } => {
+                anyhow::ensure!(
+                    output_min.is_finite() && *output_min >= 1.0,
+                    "pareto output_min must be >= 1, got {output_min}"
+                );
+                anyhow::ensure!(
+                    alpha.is_finite() && *alpha > 1.0,
+                    "pareto alpha must be > 1 (finite mean), got {alpha}"
+                );
+                anyhow::ensure!(*max_len >= 1, "pareto max_len must be >= 1");
+            }
+            LengthDist::ShareGpt | LengthDist::Tiny => {}
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            LengthDist::ShareGpt => Json::obj(vec![("kind", "sharegpt".into())]),
+            LengthDist::Tiny => Json::obj(vec![("kind", "sharegpt-tiny".into())]),
+            LengthDist::Fixed { input, output } => Json::obj(vec![
+                ("kind", "fixed".into()),
+                ("input", (*input as u64).into()),
+                ("output", (*output as u64).into()),
+            ]),
+            LengthDist::ParetoOutput {
+                output_min,
+                alpha,
+                max_len,
+            } => Json::obj(vec![
+                ("kind", "pareto-output".into()),
+                ("output_min", (*output_min).into()),
+                ("alpha", (*alpha).into()),
+                ("max_len", (*max_len as u64).into()),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<LengthDist> {
+        // Parameterized kinds parse strictly (like poisson's `rate`): a
+        // misspelled field silently falling back to a default would run a
+        // different distribution than the author intended.
+        let dist = match j.get("kind").as_str() {
+            Some("sharegpt") | None => LengthDist::ShareGpt,
+            Some("sharegpt-tiny") => LengthDist::Tiny,
+            Some("fixed") => LengthDist::Fixed {
+                input: j
+                    .get("input")
+                    .as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("fixed lengths need a numeric 'input'"))?
+                    as u32,
+                output: j
+                    .get("output")
+                    .as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("fixed lengths need a numeric 'output'"))?
+                    as u32,
+            },
+            Some("pareto-output") => LengthDist::ParetoOutput {
+                output_min: j.get("output_min").as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("pareto-output lengths need a numeric 'output_min'")
+                })?,
+                alpha: j
+                    .get("alpha")
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("pareto-output lengths need a numeric 'alpha'"))?,
+                // A pure clamp, not a shape parameter — defaulting is safe.
+                max_len: j.get("max_len").as_u64().unwrap_or(4096) as u32,
+            },
+            Some(other) => anyhow::bail!("unknown length distribution kind {other:?}"),
+        };
+        dist.validate()?;
+        Ok(dist)
+    }
+
+    fn sampler(&self) -> LengthSampler {
+        match self {
+            LengthDist::ShareGpt => LengthSampler::ShareGpt(ShareGptSampler::new()),
+            LengthDist::Tiny => LengthSampler::ShareGpt(ShareGptSampler::tiny()),
+            LengthDist::Fixed { input, output } => LengthSampler::Fixed {
+                input: *input,
+                output: *output,
+            },
+            LengthDist::ParetoOutput {
+                output_min,
+                alpha,
+                max_len,
+            } => LengthSampler::Pareto {
+                inputs: ShareGptSampler::new(),
+                output_min: *output_min,
+                inv_alpha: 1.0 / *alpha,
+                max_len: *max_len,
+            },
+        }
+    }
+}
+
+/// Materialized sampler state for one stream.
+#[derive(Debug, Clone)]
+enum LengthSampler {
+    ShareGpt(ShareGptSampler),
+    Fixed {
+        input: u32,
+        output: u32,
+    },
+    Pareto {
+        inputs: ShareGptSampler,
+        output_min: f64,
+        inv_alpha: f64,
+        max_len: u32,
+    },
+}
+
+impl LengthSampler {
+    fn sample(&self, rng: &mut Rng) -> (u32, u32) {
+        match self {
+            LengthSampler::ShareGpt(s) => s.sample(rng),
+            LengthSampler::Fixed { input, output } => (*input, *output),
+            LengthSampler::Pareto {
+                inputs,
+                output_min,
+                inv_alpha,
+                max_len,
+            } => {
+                let (input, _) = inputs.sample(rng);
+                // Inverse-CDF Pareto: x = x_m * U^(-1/alpha).
+                let x = output_min * rng.f64_open().powf(-inv_alpha);
+                (input, (x.round() as u32).clamp(1, *max_len))
+            }
+        }
+    }
+}
+
+/// One request stream of a scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSpec {
+    /// Label used in docs and `scenario show`.
+    pub name: String,
+    pub class: RequestClass,
+    pub slo: Slo,
+    pub arrivals: ArrivalProcess,
+    /// Cap on the number of requests this stream emits.
+    pub count: usize,
+    /// Model index into the scenario's `models`.
+    pub model: usize,
+    pub start: Time,
+    /// Truncate arrivals after this time (the stream may also end earlier
+    /// on a zero-rate phased tail).
+    pub stop: Option<Time>,
+    pub lengths: LengthDist,
+}
+
+impl StreamSpec {
+    /// True when this stream is guaranteed to emit exactly `count`
+    /// requests (no stop-time truncation, no zero-rate phased tail).
+    pub fn exact_count(&self) -> bool {
+        if self.stop.is_some() {
+            return false;
+        }
+        match &self.arrivals {
+            ArrivalProcess::Phased { segments } => {
+                segments.last().map_or(false, |&(_, r)| r > 0.0)
+            }
+            _ => true,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("class", self.class.as_str().into()),
+            (
+                "slo",
+                Json::obj(vec![
+                    ("ttft", self.slo.ttft.into()),
+                    ("itl", self.slo.itl.into()),
+                ]),
+            ),
+            ("arrivals", self.arrivals.to_json()),
+            ("count", self.count.into()),
+            ("model", self.model.into()),
+            ("start", self.start.into()),
+            (
+                "stop",
+                self.stop.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("lengths", self.lengths.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json, idx: usize) -> anyhow::Result<StreamSpec> {
+        let class = match j.get("class").as_str() {
+            Some("interactive") | None => RequestClass::Interactive,
+            Some("batch") => RequestClass::Batch,
+            Some(other) => anyhow::bail!("stream {idx}: unknown class {other:?}"),
+        };
+        let default_slo = match class {
+            RequestClass::Interactive => Slo::interactive_default(),
+            RequestClass::Batch => Slo::batch_default(),
+        };
+        let slo = Slo {
+            ttft: j.get("slo").get("ttft").as_f64().unwrap_or(default_slo.ttft),
+            itl: j.get("slo").get("itl").as_f64().unwrap_or(default_slo.itl),
+        };
+        let arrivals = ArrivalProcess::from_json(j.get("arrivals"))
+            .map_err(|e| e.context(format!("stream {idx}: arrivals")))?;
+        let count = j
+            .get("count")
+            .as_u64()
+            .filter(|&c| c > 0)
+            .ok_or_else(|| anyhow::anyhow!("stream {idx}: needs a positive 'count'"))?
+            as usize;
+        Ok(StreamSpec {
+            name: j
+                .get("name")
+                .as_str()
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("stream{idx}")),
+            class,
+            slo,
+            arrivals,
+            count,
+            model: j.get("model").as_u64().unwrap_or(0) as usize,
+            start: j.get("start").as_f64().unwrap_or(0.0),
+            stop: j.get("stop").as_f64(),
+            lengths: LengthDist::from_json(j.get("lengths"))
+                .map_err(|e| e.context(format!("stream {idx}: lengths")))?,
+        })
+    }
+}
+
+/// A complete declarative workload scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub description: String,
+    /// Model names (resolved via `ModelSpec::by_name`).
+    pub models: Vec<String>,
+    /// Default cluster size (CLI `--gpus` overrides).
+    pub gpus: u32,
+    /// Simulated-time safety cap in seconds.
+    pub max_time: Time,
+    pub streams: Vec<StreamSpec>,
+}
+
+impl ScenarioSpec {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.name.is_empty(), "scenario needs a name");
+        anyhow::ensure!(!self.models.is_empty(), "scenario needs at least one model");
+        anyhow::ensure!(
+            !self.streams.is_empty(),
+            "scenario '{}' needs at least one stream",
+            self.name
+        );
+        anyhow::ensure!(self.gpus > 0, "scenario '{}' needs gpus > 0", self.name);
+        for m in &self.models {
+            anyhow::ensure!(
+                ModelSpec::by_name(m).is_some(),
+                "scenario '{}': unknown model '{m}'",
+                self.name
+            );
+        }
+        for (i, s) in self.streams.iter().enumerate() {
+            anyhow::ensure!(
+                s.model < self.models.len(),
+                "scenario '{}' stream {i}: model index {} out of range (have {})",
+                self.name,
+                s.model,
+                self.models.len()
+            );
+            anyhow::ensure!(
+                s.count > 0,
+                "scenario '{}' stream {i}: count must be positive",
+                self.name
+            );
+            anyhow::ensure!(
+                s.slo.ttft > 0.0 && s.slo.itl > 0.0,
+                "scenario '{}' stream {i}: SLO components must be positive",
+                self.name
+            );
+            if let Some(stop) = s.stop {
+                anyhow::ensure!(
+                    stop > s.start,
+                    "scenario '{}' stream {i}: stop {} must be after start {}",
+                    self.name,
+                    stop,
+                    s.start
+                );
+            }
+            // Burst arrivals fire at `at` regardless of the clock's start
+            // time, so an `at` before the declared start would silently
+            // emit requests earlier than the spec claims.
+            if let ArrivalProcess::Burst { at } = s.arrivals {
+                anyhow::ensure!(
+                    at >= s.start,
+                    "scenario '{}' stream {i}: burst at {} precedes stream start {}",
+                    self.name,
+                    at,
+                    s.start
+                );
+            }
+            s.arrivals
+                .validate()
+                .map_err(|e| e.context(format!("scenario '{}' stream {i}", self.name)))?;
+            s.lengths
+                .validate()
+                .map_err(|e| e.context(format!("scenario '{}' stream {i}", self.name)))?;
+        }
+        Ok(())
+    }
+
+    /// Resolve the model set.
+    pub fn model_specs(&self) -> anyhow::Result<Vec<ModelSpec>> {
+        self.models
+            .iter()
+            .map(|m| {
+                ModelSpec::by_name(m).ok_or_else(|| anyhow::anyhow!("unknown model '{m}'"))
+            })
+            .collect()
+    }
+
+    /// Exact total request count when every stream's count is exact.
+    pub fn total_requests(&self) -> Option<usize> {
+        if self.streams.iter().all(StreamSpec::exact_count) {
+            Some(self.streams.iter().map(|s| s.count).sum())
+        } else {
+            None
+        }
+    }
+
+    /// Upper bound on emitted requests (streams may end early).
+    pub fn max_requests(&self) -> usize {
+        self.streams.iter().map(|s| s.count).sum()
+    }
+
+    /// Scale every stream's request cap by `f` (counts round up, min 1) —
+    /// the `--scale` / quick-mode knob.
+    pub fn scaled(&self, f: f64) -> ScenarioSpec {
+        let mut s = self.clone();
+        if (f - 1.0).abs() < 1e-12 {
+            return s;
+        }
+        for st in &mut s.streams {
+            st.count = ((st.count as f64 * f).ceil() as usize).max(1);
+        }
+        s
+    }
+
+    /// Streaming source over this scenario: O(streams) memory.
+    pub fn source(&self, seed: u64) -> ScenarioSource {
+        ScenarioSource::new(self, seed)
+    }
+
+    /// Materialize the full trace — byte-identical to draining
+    /// [`ScenarioSpec::source`] with the same seed (per-stream generation
+    /// is shared; the stable sort here matches the merge's stream-index
+    /// tie-break).
+    pub fn trace(&self, seed: u64) -> Trace {
+        let mut root = Rng::new(seed);
+        let mut requests = Vec::new();
+        let mut id_base = 0u64;
+        for spec in &self.streams {
+            let rng = root.fork();
+            let mut g = StreamGen::new(spec, id_base, rng);
+            while let Some(r) = g.next_req() {
+                requests.push(r);
+            }
+            id_base += spec.count as u64;
+        }
+        requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        Trace { requests }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("description", self.description.as_str().into()),
+            (
+                "models",
+                Json::arr(self.models.iter().map(|m| Json::str(m.as_str()))),
+            ),
+            ("gpus", (self.gpus as u64).into()),
+            ("max_time", self.max_time.into()),
+            (
+                "streams",
+                Json::arr(self.streams.iter().map(|s| s.to_json())),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ScenarioSpec> {
+        let models = match j.get("models").as_arr() {
+            Some(a) => a
+                .iter()
+                .map(|m| {
+                    m.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow::anyhow!("model names must be strings"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            None => vec!["llama8b".to_string()],
+        };
+        let streams = j
+            .get("streams")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("scenario needs a 'streams' array"))?
+            .iter()
+            .enumerate()
+            .map(|(i, s)| StreamSpec::from_json(s, i))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let spec = ScenarioSpec {
+            name: j
+                .get("name")
+                .as_str()
+                .map(str::to_string)
+                .unwrap_or_else(|| "unnamed".to_string()),
+            description: j
+                .get("description")
+                .as_str()
+                .map(str::to_string)
+                .unwrap_or_default(),
+            models,
+            gpus: j.get("gpus").as_u64().unwrap_or(50) as u32,
+            max_time: j.get("max_time").as_f64().unwrap_or(4.0 * 3600.0),
+            streams,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a scenario from JSON text (CLI file input).
+    pub fn parse(text: &str) -> anyhow::Result<ScenarioSpec> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("scenario json: {e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+/// Lazy per-stream request generator: O(1) state (arrival clock, RNG,
+/// counters). Ids are `id_base + k` for the stream's k-th request, so the
+/// streaming merge and the materialized sort assign identical ids.
+#[derive(Debug, Clone)]
+struct StreamGen {
+    class: RequestClass,
+    slo: Slo,
+    model: usize,
+    sampler: LengthSampler,
+    clock: ArrivalClock,
+    rng: Rng,
+    stop: Option<Time>,
+    next_id: u64,
+    remaining: usize,
+}
+
+impl StreamGen {
+    fn new(spec: &StreamSpec, id_base: u64, rng: Rng) -> StreamGen {
+        StreamGen {
+            class: spec.class,
+            slo: spec.slo,
+            model: spec.model,
+            sampler: spec.lengths.sampler(),
+            clock: ArrivalClock::new(spec.arrivals.clone(), spec.start),
+            rng,
+            stop: spec.stop,
+            next_id: id_base,
+            remaining: spec.count,
+        }
+    }
+
+    fn next_req(&mut self) -> Option<Request> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let t = self.clock.next(&mut self.rng)?;
+        if let Some(stop) = self.stop {
+            if t > stop {
+                self.remaining = 0;
+                return None;
+            }
+        }
+        let (input, output) = self.sampler.sample(&mut self.rng);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.remaining -= 1;
+        Some(Request {
+            id: RequestId(id),
+            class: self.class,
+            slo: self.slo,
+            arrival: t,
+            input_tokens: input,
+            output_tokens: output,
+            model: self.model,
+        })
+    }
+}
+
+/// Streaming k-way merge over a scenario's stream generators.
+///
+/// Memory is O(streams): one pending lookahead request per stream. Ties in
+/// arrival time resolve to the lowest stream index, matching the stable
+/// sort in [`ScenarioSpec::trace`].
+pub struct ScenarioSource {
+    streams: Vec<StreamGen>,
+    /// One-request lookahead per stream (the merge frontier).
+    heads: Vec<Option<Request>>,
+    total: Option<usize>,
+}
+
+impl ScenarioSource {
+    pub fn new(spec: &ScenarioSpec, seed: u64) -> ScenarioSource {
+        let mut root = Rng::new(seed);
+        let mut streams = Vec::with_capacity(spec.streams.len());
+        let mut id_base = 0u64;
+        for s in &spec.streams {
+            let rng = root.fork();
+            streams.push(StreamGen::new(s, id_base, rng));
+            id_base += s.count as u64;
+        }
+        let heads: Vec<Option<Request>> =
+            streams.iter_mut().map(StreamGen::next_req).collect();
+        ScenarioSource {
+            streams,
+            heads,
+            total: spec.total_requests(),
+        }
+    }
+
+    /// Number of component streams (the memory footprint driver).
+    pub fn stream_count(&self) -> usize {
+        self.streams.len()
+    }
+}
+
+impl ArrivalSource for ScenarioSource {
+    fn next_request(&mut self) -> Option<Request> {
+        // Linear min-scan: stream counts are small (≤ tens), so this beats
+        // heap bookkeeping and makes the lowest-index tie-break explicit.
+        let mut best: Option<(usize, Time)> = None;
+        for (i, head) in self.heads.iter().enumerate() {
+            if let Some(r) = head {
+                if best.map_or(true, |(_, t)| r.arrival < t) {
+                    best = Some((i, r.arrival));
+                }
+            }
+        }
+        let (i, _) = best?;
+        let r = self.heads[i].take();
+        self.heads[i] = self.streams[i].next_req();
+        r
+    }
+
+    fn total_hint(&self) -> Option<usize> {
+        self.total
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in catalog
+// ---------------------------------------------------------------------------
+
+fn stream(
+    name: &str,
+    class: RequestClass,
+    slo: Slo,
+    arrivals: ArrivalProcess,
+    count: usize,
+    model: usize,
+    start: Time,
+) -> StreamSpec {
+    StreamSpec {
+        name: name.to_string(),
+        class,
+        slo,
+        arrivals,
+        count,
+        model,
+        start,
+        stop: None,
+        lengths: LengthDist::ShareGpt,
+    }
+}
+
+fn batch_slo(ttft: Time) -> Slo {
+    Slo {
+        ttft,
+        ..Slo::batch_default()
+    }
+}
+
+/// The built-in scenario registry.
+pub fn catalog() -> Vec<ScenarioSpec> {
+    let i_slo = Slo::interactive_default();
+    vec![
+        ScenarioSpec {
+            name: "paper-wa".into(),
+            description: "Paper W_A: interactive-only Poisson stream (§6)".into(),
+            models: vec!["llama8b".into()],
+            gpus: 50,
+            max_time: 2.0 * 3600.0,
+            streams: vec![stream(
+                "interactive",
+                RequestClass::Interactive,
+                i_slo,
+                ArrivalProcess::Poisson { rate: 30.0 },
+                20_000,
+                0,
+                0.0,
+            )],
+        },
+        ScenarioSpec {
+            name: "paper-wb".into(),
+            description: "Paper W_B: interactive stream + batch queue dump at t=300s (§6)".into(),
+            models: vec!["llama8b".into()],
+            gpus: 50,
+            max_time: 4.0 * 3600.0,
+            streams: vec![
+                stream(
+                    "interactive",
+                    RequestClass::Interactive,
+                    i_slo,
+                    ArrivalProcess::Poisson { rate: 25.0 },
+                    10_000,
+                    0,
+                    0.0,
+                ),
+                stream(
+                    "batch-dump",
+                    RequestClass::Batch,
+                    batch_slo(1800.0),
+                    ArrivalProcess::Burst { at: 300.0 },
+                    20_000,
+                    0,
+                    300.0,
+                ),
+            ],
+        },
+        ScenarioSpec {
+            name: "diurnal".into(),
+            description:
+                "Day/night sinusoid approximated by 12 phased rate segments over a 30-min cycle"
+                    .into(),
+            models: vec!["llama8b".into()],
+            gpus: 50,
+            max_time: 2.0 * 3600.0,
+            streams: vec![stream(
+                "diurnal-interactive",
+                RequestClass::Interactive,
+                i_slo,
+                ArrivalProcess::Phased {
+                    // rate(t) ≈ 11 + 8·sin(2πt/1800 − π/2), sampled every
+                    // 150 s; the zero-rate tail ends the stream after one
+                    // cycle (exercising the fixed tail semantics).
+                    segments: vec![
+                        (0.0, 3.0),
+                        (150.0, 5.0),
+                        (300.0, 8.0),
+                        (450.0, 12.0),
+                        (600.0, 15.0),
+                        (750.0, 18.0),
+                        (900.0, 19.0),
+                        (1050.0, 18.0),
+                        (1200.0, 15.0),
+                        (1350.0, 12.0),
+                        (1500.0, 8.0),
+                        (1650.0, 5.0),
+                        (1800.0, 0.0),
+                    ],
+                },
+                12_000,
+                0,
+                0.0,
+            )],
+        },
+        ScenarioSpec {
+            name: "flash-crowd".into(),
+            description:
+                "Steady interactive baseline with a 12x arrival spike for 60s (paper Fig. 4 spikes)"
+                    .into(),
+            models: vec!["llama8b".into()],
+            gpus: 50,
+            max_time: 2.0 * 3600.0,
+            streams: vec![
+                stream(
+                    "baseline",
+                    RequestClass::Interactive,
+                    i_slo,
+                    ArrivalProcess::Poisson { rate: 10.0 },
+                    8_000,
+                    0,
+                    0.0,
+                ),
+                stream(
+                    "spike",
+                    RequestClass::Interactive,
+                    i_slo,
+                    ArrivalProcess::Phased {
+                        segments: vec![(0.0, 0.0), (600.0, 120.0), (660.0, 0.0)],
+                    },
+                    10_000,
+                    0,
+                    0.0,
+                ),
+                stream(
+                    "batch-floor",
+                    RequestClass::Batch,
+                    batch_slo(1800.0),
+                    ArrivalProcess::Burst { at: 60.0 },
+                    3_000,
+                    0,
+                    60.0,
+                ),
+            ],
+        },
+        ScenarioSpec {
+            name: "multi-tenant".into(),
+            description: "Two models with 8:1 skewed interactive rates plus per-model batch dumps"
+                .into(),
+            models: vec!["llama8b".into(), "llama70b".into()],
+            gpus: 80,
+            max_time: 4.0 * 3600.0,
+            streams: vec![
+                stream(
+                    "tenant0-interactive",
+                    RequestClass::Interactive,
+                    i_slo,
+                    ArrivalProcess::Poisson { rate: 24.0 },
+                    12_000,
+                    0,
+                    0.0,
+                ),
+                stream(
+                    "tenant1-interactive",
+                    RequestClass::Interactive,
+                    i_slo,
+                    ArrivalProcess::Poisson { rate: 3.0 },
+                    1_500,
+                    1,
+                    0.0,
+                ),
+                stream(
+                    "tenant0-batch",
+                    RequestClass::Batch,
+                    batch_slo(1800.0),
+                    ArrivalProcess::Burst { at: 300.0 },
+                    8_000,
+                    0,
+                    300.0,
+                ),
+                stream(
+                    "tenant1-batch",
+                    RequestClass::Batch,
+                    batch_slo(3600.0),
+                    ArrivalProcess::Burst { at: 600.0 },
+                    1_000,
+                    1,
+                    600.0,
+                ),
+            ],
+        },
+        {
+            let mut heavy = ScenarioSpec {
+                name: "heavy-tail".into(),
+                description:
+                    "Pareto output lengths (α=1.35): a few requests decode for thousands of tokens"
+                        .into(),
+                models: vec!["llama8b".into()],
+                gpus: 50,
+                max_time: 4.0 * 3600.0,
+                streams: vec![
+                    stream(
+                        "interactive-pareto",
+                        RequestClass::Interactive,
+                        i_slo,
+                        ArrivalProcess::Poisson { rate: 15.0 },
+                        10_000,
+                        0,
+                        0.0,
+                    ),
+                    stream(
+                        "batch-pareto",
+                        RequestClass::Batch,
+                        batch_slo(3600.0),
+                        ArrivalProcess::Burst { at: 120.0 },
+                        2_000,
+                        0,
+                        120.0,
+                    ),
+                ],
+            };
+            heavy.streams[0].lengths = LengthDist::ParetoOutput {
+                output_min: 48.0,
+                alpha: 1.35,
+                max_len: 4096,
+            };
+            heavy.streams[1].lengths = LengthDist::ParetoOutput {
+                output_min: 96.0,
+                alpha: 1.2,
+                max_len: 4096,
+            };
+            heavy
+        },
+        ScenarioSpec {
+            name: "batch-backlog".into(),
+            description:
+                "Appendix A.2: 1M-request batch dump at t=300s under a light interactive stream"
+                    .into(),
+            models: vec!["llama8b".into()],
+            gpus: 50,
+            max_time: 24.0 * 3600.0,
+            streams: vec![
+                stream(
+                    "interactive",
+                    RequestClass::Interactive,
+                    i_slo,
+                    ArrivalProcess::Poisson { rate: 5.0 },
+                    2_000,
+                    0,
+                    0.0,
+                ),
+                stream(
+                    "backlog",
+                    RequestClass::Batch,
+                    batch_slo(8.0 * 3600.0),
+                    ArrivalProcess::Burst { at: 300.0 },
+                    1_000_000,
+                    0,
+                    300.0,
+                ),
+            ],
+        },
+    ]
+}
+
+/// Look up a catalog scenario by name.
+pub fn by_name(name: &str) -> Option<ScenarioSpec> {
+    catalog().into_iter().find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_is_complete_and_valid() {
+        let cat = catalog();
+        assert!(cat.len() >= 6, "catalog has {} entries", cat.len());
+        let mut names: Vec<&str> = cat.iter().map(|s| s.name.as_str()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), cat.len(), "catalog names must be unique");
+        for spec in &cat {
+            spec.validate().unwrap_or_else(|e| panic!("{}: {e:#}", spec.name));
+        }
+        for required in [
+            "paper-wa",
+            "paper-wb",
+            "diurnal",
+            "flash-crowd",
+            "multi-tenant",
+            "heavy-tail",
+            "batch-backlog",
+        ] {
+            assert!(by_name(required).is_some(), "missing catalog entry {required}");
+        }
+    }
+
+    #[test]
+    fn catalog_json_roundtrip() {
+        for spec in catalog() {
+            let j = spec.to_json();
+            let back = ScenarioSpec::parse(&j.to_string())
+                .unwrap_or_else(|e| panic!("{}: {e:#}", spec.name));
+            assert_eq!(spec, back, "{} must round-trip", spec.name);
+        }
+    }
+
+    #[test]
+    fn streaming_merge_matches_materialized_sort() {
+        // Multi-stream with burst ties and a phased stream: the hard cases
+        // for merge/sort equivalence.
+        let spec = by_name("flash-crowd").unwrap().scaled(0.05);
+        for seed in [1u64, 7, 42] {
+            let trace = spec.trace(seed);
+            let mut src = spec.source(seed);
+            let mut streamed = Vec::new();
+            while let Some(r) = src.next_request() {
+                streamed.push(r);
+            }
+            assert_eq!(trace.len(), streamed.len());
+            for (a, b) in trace.requests.iter().zip(&streamed) {
+                assert_eq!(a.id, b.id, "seed {seed}");
+                assert_eq!(a.arrival.to_bits(), b.arrival.to_bits(), "seed {seed}");
+                assert_eq!(a.input_tokens, b.input_tokens);
+                assert_eq!(a.output_tokens, b.output_tokens);
+                assert_eq!(a.class, b.class);
+                assert_eq!(a.model, b.model);
+            }
+        }
+    }
+
+    #[test]
+    fn ids_unique_and_arrivals_sorted() {
+        let spec = by_name("multi-tenant").unwrap().scaled(0.02);
+        let trace = spec.trace(3);
+        assert!(trace
+            .requests
+            .windows(2)
+            .all(|w| w[0].arrival <= w[1].arrival));
+        let mut ids: Vec<u64> = trace.requests.iter().map(|r| r.id.0).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), trace.len());
+    }
+
+    #[test]
+    fn total_hint_exact_only_when_counts_exact() {
+        let wb = by_name("paper-wb").unwrap();
+        assert_eq!(wb.total_requests(), Some(30_000));
+        let src = wb.source(1);
+        assert_eq!(src.total_hint(), Some(30_000));
+        // diurnal ends on a zero-rate tail: count is a cap, not a promise.
+        let diurnal = by_name("diurnal").unwrap();
+        assert_eq!(diurnal.total_requests(), None);
+        // ...and stop-time truncation also voids the hint.
+        let mut wa = by_name("paper-wa").unwrap();
+        wa.streams[0].stop = Some(60.0);
+        assert_eq!(wa.total_requests(), None);
+        let mut src = wa.source(2);
+        let mut n = 0usize;
+        while let Some(r) = src.next_request() {
+            assert!(r.arrival <= 60.0);
+            n += 1;
+        }
+        // ~30 req/s for 60 s.
+        assert!((1_400..2_300).contains(&n), "got {n}");
+    }
+
+    #[test]
+    fn pareto_outputs_are_heavy_tailed() {
+        let dist = LengthDist::ParetoOutput {
+            output_min: 48.0,
+            alpha: 1.35,
+            max_len: 4096,
+        };
+        let sampler = dist.sampler();
+        let mut rng = Rng::new(9);
+        let mut xs: Vec<f64> = (0..20_000)
+            .map(|_| sampler.sample(&mut rng).1 as f64)
+            .collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[xs.len() / 2];
+        let p99 = xs[(xs.len() as f64 * 0.99) as usize];
+        assert!(xs.iter().all(|&x| (1.0..=4096.0).contains(&x)));
+        assert!(median < 200.0, "median {median}");
+        assert!(p99 > 1000.0, "p99 {p99} should be deep in the tail");
+    }
+
+    #[test]
+    fn scaled_scales_counts() {
+        let spec = by_name("paper-wb").unwrap().scaled(0.1);
+        assert_eq!(spec.max_requests(), 3_000);
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn spec_rejects_bad_inputs() {
+        assert!(ScenarioSpec::parse("{}").is_err());
+        assert!(ScenarioSpec::parse(r#"{"name":"x","streams":[]}"#).is_err());
+        // Out-of-range model index.
+        let bad = r#"{"name":"x","models":["llama8b"],
+            "streams":[{"arrivals":{"kind":"poisson","rate":5},"count":10,"model":3}]}"#;
+        assert!(ScenarioSpec::parse(bad).is_err());
+        // Empty phased segments surface as an error, not a panic.
+        let bad2 = r#"{"name":"x","models":["llama8b"],
+            "streams":[{"arrivals":{"kind":"phased","segments":[]},"count":10}]}"#;
+        assert!(ScenarioSpec::parse(bad2).is_err());
+        // A burst before the stream's declared start would silently emit
+        // early requests.
+        let bad3 = r#"{"name":"x","models":["llama8b"],
+            "streams":[{"class":"batch","arrivals":{"kind":"burst","at":10},
+                        "count":5,"start":300}]}"#;
+        assert!(ScenarioSpec::parse(bad3).is_err());
+        // Parameterized length dists parse strictly — a misspelled field
+        // must not silently fall back to defaults.
+        let bad4 = r#"{"name":"x","models":["llama8b"],
+            "streams":[{"arrivals":{"kind":"poisson","rate":5},"count":10,
+                        "lengths":{"kind":"pareto-output","output_mean":200,"alpha":1.3}}]}"#;
+        assert!(ScenarioSpec::parse(bad4).is_err());
+        assert!(ScenarioSpec::parse(
+            r#"{"name":"x","models":["llama8b"],
+                "streams":[{"arrivals":{"kind":"poisson","rate":5},"count":10,
+                            "lengths":{"kind":"fixed","input":64}}]}"#
+        )
+        .is_err());
+    }
+}

@@ -201,15 +201,19 @@ mod tests {
         let mut rng = Rng::new(3);
         let t = TraceBuilder::new()
             .stream(workload_a(10.0, 50, 1))
+            .stream(workload_b_batch(25, 2.5, 0, 1234.5))
             .build(&mut rng);
         let j = t.to_json();
         let back = Trace::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(back.len(), t.len());
         for (a, b) in t.requests.iter().zip(&back.requests) {
             assert_eq!(a.id, b.id);
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.slo.ttft.to_bits(), b.slo.ttft.to_bits());
+            assert_eq!(a.slo.itl.to_bits(), b.slo.itl.to_bits());
             assert_eq!(a.input_tokens, b.input_tokens);
             assert_eq!(a.output_tokens, b.output_tokens);
-            assert!((a.arrival - b.arrival).abs() < 1e-9);
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits(), "arrivals must round-trip bit-exactly");
             assert_eq!(a.model, b.model);
         }
     }

@@ -1,0 +1,70 @@
+//! Shared helpers for the integration tests (not a test target itself —
+//! cargo only builds top-level files under `tests/` as test crates).
+
+// Each test crate includes this module and uses a subset of it.
+#![allow(dead_code)]
+
+use chiron::core::{Request, RequestOutcome};
+use chiron::sim::SimReport;
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+#[inline]
+fn eat(h: &mut u64, x: u64) {
+    for b in x.to_le_bytes() {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+}
+
+fn eat_outcome(h: &mut u64, o: &RequestOutcome) {
+    eat(h, o.id.0);
+    eat(h, o.class as u64);
+    eat(h, o.model as u64);
+    eat(h, o.slo.ttft.to_bits());
+    eat(h, o.slo.itl.to_bits());
+    eat(h, o.arrival.to_bits());
+    eat(h, o.first_token.to_bits());
+    eat(h, o.completion.to_bits());
+    eat(h, o.input_tokens as u64);
+    eat(h, o.output_tokens as u64);
+    eat(h, o.mean_itl.to_bits());
+    eat(h, o.max_itl.to_bits());
+    eat(h, o.preemptions as u64);
+}
+
+/// FNV-1a over every bit of a report that could diverge: outcome ids,
+/// classes, all latency timestamps (as raw f64 bits), token counts,
+/// preemptions, plus the aggregate counters.
+pub fn digest_report(report: &SimReport) -> u64 {
+    let mut h = FNV_OFFSET;
+    for o in &report.outcomes {
+        eat_outcome(&mut h, o);
+    }
+    eat(&mut h, report.outcomes.len() as u64);
+    eat(&mut h, report.scale_ups);
+    eat(&mut h, report.scale_downs);
+    eat(&mut h, report.gpu_seconds.to_bits());
+    eat(&mut h, report.end_time.to_bits());
+    eat(&mut h, report.total_requests as u64);
+    eat(&mut h, report.unfinished as u64);
+    eat(&mut h, report.total_tokens.to_bits());
+    h
+}
+
+/// FNV-1a over every field of a request sequence (f64s as raw bits).
+pub fn digest_requests<'a, I: IntoIterator<Item = &'a Request>>(reqs: I) -> u64 {
+    let mut h = FNV_OFFSET;
+    for r in reqs {
+        eat(&mut h, r.id.0);
+        eat(&mut h, r.class as u64);
+        eat(&mut h, r.slo.ttft.to_bits());
+        eat(&mut h, r.slo.itl.to_bits());
+        eat(&mut h, r.arrival.to_bits());
+        eat(&mut h, r.input_tokens as u64);
+        eat(&mut h, r.output_tokens as u64);
+        eat(&mut h, r.model as u64);
+    }
+    h
+}

@@ -3,52 +3,13 @@
 //! byte-identical grids at any `--jobs` setting (results are slotted by
 //! task index, never by completion order).
 
-use chiron::core::{ModelSpec, RequestClass, RequestOutcome};
+mod common;
+
+use chiron::core::{ModelSpec, RequestClass};
 use chiron::experiments::common::{make_policy, run_one, trace_wb, PolicyKind};
 use chiron::sim::SimReport;
 use chiron::util::parallel::run_grid_jobs;
-
-/// FNV-1a over every bit of a report that could diverge: outcome ids,
-/// classes, all latency timestamps (as raw f64 bits), token counts,
-/// preemptions, plus the aggregate counters.
-fn digest(report: &SimReport) -> u64 {
-    const OFFSET: u64 = 0xcbf29ce484222325;
-    const PRIME: u64 = 0x100000001b3;
-    let mut h = OFFSET;
-    let mut eat = |x: u64| {
-        for b in x.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(PRIME);
-        }
-    };
-    let eat_outcome = |eat: &mut dyn FnMut(u64), o: &RequestOutcome| {
-        eat(o.id.0);
-        eat(o.class as u64);
-        eat(o.model as u64);
-        eat(o.slo.ttft.to_bits());
-        eat(o.slo.itl.to_bits());
-        eat(o.arrival.to_bits());
-        eat(o.first_token.to_bits());
-        eat(o.completion.to_bits());
-        eat(o.input_tokens as u64);
-        eat(o.output_tokens as u64);
-        eat(o.mean_itl.to_bits());
-        eat(o.max_itl.to_bits());
-        eat(o.preemptions as u64);
-    };
-    for o in &report.outcomes {
-        eat_outcome(&mut eat, o);
-    }
-    eat(report.outcomes.len() as u64);
-    eat(report.scale_ups);
-    eat(report.scale_downs);
-    eat(report.gpu_seconds.to_bits());
-    eat(report.end_time.to_bits());
-    eat(report.total_requests as u64);
-    eat(report.unfinished as u64);
-    eat(report.total_tokens.to_bits());
-    h
-}
+use crate::common::digest_report as digest;
 
 fn models() -> Vec<ModelSpec> {
     vec![ModelSpec::llama8b()]
