@@ -4,11 +4,26 @@
 //! themselves print the same rows/series the paper reports and save JSON
 //! under results/. Use `cargo run --release -- experiment all` for
 //! full-scale runs.
+//!
+//! Each figure's wall time is appended to the `BENCH_hotpath.json`
+//! trajectory as `figures.<id>` (one timed pass per figure — these are
+//! multi-second macro benches, so variance is left unmeasured rather than
+//! paid for), letting PRs track end-to-end harness cost alongside the
+//! hot-path micro benches. Runs land as separate trajectory entries from
+//! the hotpath bench, and the CI gate ignores them (it pins specific bench
+//! names and skips runs that lack them).
 
 use chiron::experiments::{self, common::Scale};
+use chiron::util::bench::Bencher;
 
 fn main() {
+    // This bench always runs Scale::Quick, so label the trajectory entry
+    // accordingly regardless of how it was invoked — bench-gate's
+    // comparability rule (same quick flag) must never pair these timings
+    // with full-mode history.
+    std::env::set_var("CHIRON_BENCH_QUICK", "1");
     let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let mut b = Bencher::new();
     let mut total = 0.0;
     for id in experiments::ALL {
         if let Some(f) = &filter {
@@ -17,10 +32,16 @@ fn main() {
             }
         }
         let t0 = std::time::Instant::now();
-        experiments::run(id, Scale::Quick).expect("known id");
+        b.bench_once(&format!("figures.{id}"), None, || {
+            experiments::run(id, Scale::Quick).expect("known id");
+        });
         let dt = t0.elapsed().as_secs_f64();
         total += dt;
         println!("[bench {id}: {dt:.2}s]\n");
     }
     println!("== figures bench total: {total:.1}s ==");
+    b.report();
+    let out = std::env::var("CHIRON_BENCH_OUT")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json").into());
+    b.write_json(&out);
 }

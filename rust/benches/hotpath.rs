@@ -8,11 +8,15 @@
 
 use chiron::coordinator::groups::build_groups;
 use chiron::coordinator::waiting::WaitingTimeEstimator;
-use chiron::coordinator::{BootstrapSpec, Chiron, ChironConfig, LocalAutoscaler, LocalConfig};
+use chiron::coordinator::{
+    BootstrapSpec, Chiron, ChironConfig, ChironLocal, LocalAutoscaler, LocalConfig,
+};
 use chiron::core::{InstanceClass, InstanceId, ModelSpec, Request, RequestClass, RequestId, Slo};
 use chiron::experiments::common::{make_policy, PolicyKind};
-use chiron::sim::policy::{ClusterView, InstanceState, InstanceView, Policy, QueueStats, QueuedReq};
-use chiron::sim::{run_sim, SimConfig, SimInstance, WorkItem};
+use chiron::sim::policy::{
+    InstanceState, InstanceView, LocalPolicy, ModelView, QueuedReq,
+};
+use chiron::sim::{run_sim, run_sim_source, SimConfig, SimInstance, WorkItem};
 use chiron::util::bench::{black_box, Bencher};
 use chiron::util::parallel::run_grid_jobs;
 use chiron::util::rng::Rng;
@@ -72,11 +76,10 @@ fn main() {
         });
     }
 
-    // -- router ---------------------------------------------------------------
+    // -- router (the per-model local half) ----------------------------------
     {
         let insts = instances(50);
-        let queues = vec![QueueStats::default()];
-        let mut chiron = Chiron::new(ChironConfig::for_models(1), &models);
+        let mut local = ChironLocal::new(LocalConfig::default());
         let req = QueuedReq {
             id: RequestId(1),
             class: RequestClass::Interactive,
@@ -87,15 +90,12 @@ fn main() {
             input_tokens: 128,
         };
         b.bench_units("chiron.route interactive (50 inst)", Some(1.0), || {
-            let view = ClusterView {
+            let view = ModelView {
                 now: 0.0,
+                model: 0,
                 instances: &insts,
-                queues: &queues,
-                models: &models,
-                gpus_total: 50,
-                gpus_used: 50,
             };
-            black_box(chiron.route(&req, &view));
+            black_box(local.route(&req, &view));
         });
     }
 
@@ -215,6 +215,74 @@ fn main() {
             sim_cfg.max_sim_time = 4.0 * 3600.0;
             sim_cfg.timeline_every = 0;
             let r = run_sim(sim_cfg, mk(2000, 4000), &mut policy);
+            black_box(r.outcomes.len());
+        });
+    }
+
+    // -- sharded event loop: 4 independent models between tick barriers -----
+    // The same 4-model workload through the epoch driver at --shards 1 vs 4:
+    // the trajectory tracks the shard-parallel speedup over PRs (results are
+    // digest-identical either way — tests/sharding.rs proves it).
+    {
+        let models4 = vec![
+            ModelSpec::llama8b(),
+            ModelSpec::llama8b(),
+            ModelSpec::llama8b(),
+            ModelSpec::llama8b(),
+        ];
+        let mk = |models: &[ModelSpec]| {
+            let mut rng = Rng::new(21);
+            let mut tb = TraceBuilder::new();
+            for m in 0..models.len() {
+                tb = tb
+                    .stream(workload_a(20.0, 500, m))
+                    .stream(workload_b_batch(1000, 5.0, m, 1800.0));
+            }
+            tb.build(&mut rng)
+        };
+        // Built once, cloned per run: the timed region must be the event
+        // loop, not trace generation, or the shards=1 vs shards=4 ratio
+        // (the trajectory's speedup signal) is diluted by a constant.
+        let trace = mk(&models4);
+        let total = trace.len() as f64;
+        let run_shards = |models4: &Vec<ModelSpec>, trace: chiron::workload::Trace, workers: usize| {
+            let mut policy = Chiron::new(ChironConfig::for_models(4), models4);
+            let mut cfg = SimConfig::new(48, models4.clone());
+            cfg.max_sim_time = 4.0 * 3600.0;
+            cfg.timeline_every = 0;
+            cfg.shard_workers = workers;
+            let r = run_sim(cfg, trace, &mut policy);
+            black_box(r.outcomes.len());
+        };
+        b.bench_units("sim.shard_4models shards=1", Some(total), || {
+            run_shards(&models4, trace.clone(), 1)
+        });
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        if cores > 1 {
+            b.bench_units("sim.shard_4models shards=4", Some(total), || {
+                run_shards(&models4, trace.clone(), 4)
+            });
+        }
+    }
+
+    // -- the 1M-request batch backlog through the sharded path --------------
+    // Appendix A.2 at 1x scale: the acceptance macro-bench. One timed run
+    // (bench_once): the streaming source keeps trace-side memory O(streams)
+    // and the sharded engine drains the full million-request dump.
+    {
+        use chiron::workload::scenario::by_name;
+        let spec = by_name("batch-backlog").expect("catalog scenario");
+        let models_bb = spec.model_specs().expect("known models");
+        let total = spec.max_requests() as f64;
+        b.bench_once("sim.batch_backlog_1m", Some(total), || {
+            let mut cfg = SimConfig::new(spec.gpus, models_bb.clone());
+            cfg.max_sim_time = spec.max_time;
+            cfg.timeline_every = 0;
+            let mut policy = Chiron::new(ChironConfig::for_models(1), &models_bb);
+            let r = run_sim_source(cfg, Box::new(spec.source(1)), &mut policy);
+            assert_eq!(r.unfinished, 0, "backlog must drain completely");
             black_box(r.outcomes.len());
         });
     }

@@ -5,35 +5,28 @@
 //!   (and Llumnix routing — no instance classes or batch queuing).
 //! - **GlobalOnly** ("Global"): Chiron's global autoscaler, routing, and
 //!   request groups, but static batch sizes (no Algorithm 1).
+//!
+//! Both compose the split halves: the global trait delegates to the wrapped
+//! policy's autoscaler, and `make_local` assembles the ablated per-model
+//! half.
 
 use crate::core::{InstanceClass, ModelSpec, RequestClass, RequestOutcome, Time};
-use crate::coordinator::chiron::{Chiron, ChironConfig};
+use crate::coordinator::chiron::{Chiron, ChironConfig, ChironLocal};
 use crate::coordinator::local::{LocalAutoscaler, LocalConfig};
-use crate::sim::policy::{Action, ClusterView, InstanceView, Policy, QueuedReq, Route};
+use crate::sim::policy::{
+    Action, ClusterView, GlobalPolicy, InstanceView, LocalPolicy, ModelView, QueuedReq, Route,
+};
 
-use super::llumnix::{Llumnix, LlumnixConfig};
+use super::llumnix::{Llumnix, LlumnixConfig, LlumnixLocal};
 
-/// Chiron local autoscaler + Llumnix global/utilization autoscaler.
-pub struct LocalOnly {
-    llumnix: Llumnix,
+/// LocalOnly's per-model half: Llumnix routing + Chiron's Algorithm 1.
+pub struct LocalOnlyLocal {
+    llumnix: LlumnixLocal,
     local: LocalAutoscaler,
 }
 
-impl LocalOnly {
-    pub fn new(models: &[ModelSpec], llumnix_cfg: LlumnixConfig) -> Self {
-        LocalOnly {
-            llumnix: Llumnix::tuned(models, llumnix_cfg),
-            local: LocalAutoscaler::new(LocalConfig::default()),
-        }
-    }
-}
-
-impl Policy for LocalOnly {
-    fn name(&self) -> &str {
-        "local-only"
-    }
-
-    fn route(&mut self, req: &QueuedReq, view: &ClusterView) -> Route {
+impl LocalPolicy for LocalOnlyLocal {
+    fn route(&mut self, req: &QueuedReq, view: &ModelView) -> Route {
         self.llumnix.route(req, view)
     }
 
@@ -43,6 +36,32 @@ impl Policy for LocalOnly {
 
     fn on_step(&mut self, inst: &InstanceView, _now: Time) -> Option<u32> {
         self.local.on_step(inst)
+    }
+}
+
+/// Chiron local autoscaler + Llumnix global/utilization autoscaler.
+pub struct LocalOnly {
+    llumnix: Llumnix,
+}
+
+impl LocalOnly {
+    pub fn new(models: &[ModelSpec], llumnix_cfg: LlumnixConfig) -> Self {
+        LocalOnly {
+            llumnix: Llumnix::tuned(models, llumnix_cfg),
+        }
+    }
+}
+
+impl GlobalPolicy for LocalOnly {
+    fn name(&self) -> &str {
+        "local-only"
+    }
+
+    fn make_local(&self, _model: usize) -> Box<dyn LocalPolicy> {
+        Box::new(LocalOnlyLocal {
+            llumnix: LlumnixLocal,
+            local: LocalAutoscaler::new(LocalConfig::default()),
+        })
     }
 
     fn autoscale(&mut self, view: &ClusterView) -> Vec<Action> {
@@ -58,27 +77,13 @@ impl Policy for LocalOnly {
     }
 }
 
-/// Chiron global autoscaler + static batch sizes.
-pub struct GlobalOnly {
-    chiron: Chiron,
-    static_batch: u32,
+/// GlobalOnly's per-model half: Chiron routing, static batch sizes.
+pub struct GlobalOnlyLocal {
+    chiron: ChironLocal,
 }
 
-impl GlobalOnly {
-    pub fn new(models: &[ModelSpec], cfg: ChironConfig, static_batch: u32) -> Self {
-        GlobalOnly {
-            chiron: Chiron::new(cfg, models),
-            static_batch,
-        }
-    }
-}
-
-impl Policy for GlobalOnly {
-    fn name(&self) -> &str {
-        "global-only"
-    }
-
-    fn route(&mut self, req: &QueuedReq, view: &ClusterView) -> Route {
+impl LocalPolicy for GlobalOnlyLocal {
+    fn route(&mut self, req: &QueuedReq, view: &ModelView) -> Route {
         self.chiron.route(req, view)
     }
 
@@ -88,6 +93,36 @@ impl Policy for GlobalOnly {
 
     fn on_step(&mut self, _inst: &InstanceView, _now: Time) -> Option<u32> {
         None // static batch (the ablated component)
+    }
+}
+
+/// Chiron global autoscaler + static batch sizes.
+pub struct GlobalOnly {
+    chiron: Chiron,
+    local_cfg: LocalConfig,
+    static_batch: u32,
+}
+
+impl GlobalOnly {
+    pub fn new(models: &[ModelSpec], cfg: ChironConfig, static_batch: u32) -> Self {
+        let local_cfg = cfg.local;
+        GlobalOnly {
+            chiron: Chiron::new(cfg, models),
+            local_cfg,
+            static_batch,
+        }
+    }
+}
+
+impl GlobalPolicy for GlobalOnly {
+    fn name(&self) -> &str {
+        "global-only"
+    }
+
+    fn make_local(&self, _model: usize) -> Box<dyn LocalPolicy> {
+        Box::new(GlobalOnlyLocal {
+            chiron: ChironLocal::new(self.local_cfg),
+        })
     }
 
     fn autoscale(&mut self, view: &ClusterView) -> Vec<Action> {
@@ -111,23 +146,13 @@ impl Policy for GlobalOnly {
 mod tests {
     use super::*;
     use crate::core::InstanceId;
-    use crate::sim::policy::{InstanceState, QueueStats};
-
-    fn view<'a>(m: &'a [ModelSpec], q: &'a [QueueStats]) -> ClusterView<'a> {
-        ClusterView {
-            now: 0.0,
-            instances: &[],
-            queues: q,
-            models: m,
-            gpus_total: 50,
-            gpus_used: 0,
-        }
-    }
+    use crate::sim::policy::InstanceState;
 
     #[test]
     fn local_only_adapts_batch_but_uses_llumnix_scaling() {
         let m = vec![ModelSpec::llama8b()];
-        let mut p = LocalOnly::new(&m, LlumnixConfig::untuned());
+        let p = LocalOnly::new(&m, LlumnixConfig::untuned());
+        let mut local = p.make_local(0);
         let v = InstanceView {
             id: InstanceId(0),
             class: InstanceClass::Mixed,
@@ -147,9 +172,9 @@ mod tests {
         };
         let mut grew = false;
         for s in 1..6 {
-            let mut vv = v.clone();
+            let mut vv = v;
             vv.steps = s * 4;
-            if let Some(nb) = p.on_step(&vv, 0.0) {
+            if let Some(nb) = local.on_step(&vv, 0.0) {
                 grew = nb > 8;
             }
         }
@@ -159,7 +184,8 @@ mod tests {
     #[test]
     fn global_only_keeps_batch_static() {
         let m = vec![ModelSpec::llama8b()];
-        let mut p = GlobalOnly::new(&m, ChironConfig::for_models(1), 64);
+        let p = GlobalOnly::new(&m, ChironConfig::for_models(1), 64);
+        let mut local = p.make_local(0);
         let v = InstanceView {
             id: InstanceId(0),
             class: InstanceClass::Mixed,
@@ -177,15 +203,13 @@ mod tests {
             min_itl_slo: 0.2,
             steps: 100,
         };
-        assert_eq!(p.on_step(&v, 0.0), None);
+        assert_eq!(local.on_step(&v, 0.0), None);
         assert_eq!(p.initial_max_batch(&m[0], InstanceClass::Batch), 64);
     }
 
     #[test]
     fn names_are_distinct() {
         let m = vec![ModelSpec::llama8b()];
-        let q = vec![QueueStats::default()];
-        let _ = view(&m, &q);
         assert_eq!(LocalOnly::new(&m, LlumnixConfig::untuned()).name(), "local-only");
         assert_eq!(
             GlobalOnly::new(&m, ChironConfig::for_models(1), 64).name(),

@@ -14,7 +14,9 @@
 //!   `baselines::tune_llumnix` performs that sweep.
 
 use crate::core::{InstanceClass, ModelSpec, RequestClass, Time};
-use crate::sim::policy::{Action, ClusterView, InstanceView, Policy, QueuedReq, Route};
+use crate::sim::policy::{
+    Action, ClusterView, GlobalPolicy, InstanceView, LocalPolicy, ModelView, QueuedReq, Route,
+};
 
 /// Llumnix configuration knobs.
 #[derive(Debug, Clone, Copy)]
@@ -54,7 +56,36 @@ impl LlumnixConfig {
     }
 }
 
-/// The Llumnix-like policy.
+/// Llumnix's per-model half: immediate least-loaded dispatch, FCFS pulls,
+/// static batch size. Stateless — the baseline has no per-model learning.
+pub struct LlumnixLocal;
+
+impl LocalPolicy for LlumnixLocal {
+    fn route(&mut self, _req: &QueuedReq, view: &ModelView) -> Route {
+        // Immediate dispatch to the least-loaded instance (no SLO awareness,
+        // no queuing — the behavior Figure 1 (left) depicts).
+        let target = view
+            .instances
+            .iter()
+            .filter(|i| i.is_running())
+            .min_by_key(|i| (i.running + i.waiting, i.id.0));
+        match target {
+            Some(i) => Route::Dispatch(i.id),
+            None => Route::Queue, // nothing up yet; pulled when ready
+        }
+    }
+
+    fn pull_order(&self, _inst: &InstanceView) -> &'static [RequestClass] {
+        // FCFS across classes once capacity exists.
+        &[RequestClass::Interactive, RequestClass::Batch]
+    }
+
+    fn on_step(&mut self, _inst: &InstanceView, _now: Time) -> Option<u32> {
+        None // static batch size
+    }
+}
+
+/// The Llumnix-like policy (global half).
 pub struct Llumnix {
     pub cfg: LlumnixConfig,
     n_models: usize,
@@ -95,31 +126,13 @@ impl Llumnix {
     }
 }
 
-impl Policy for Llumnix {
+impl GlobalPolicy for Llumnix {
     fn name(&self) -> &str {
         &self.name
     }
 
-    fn route(&mut self, req: &QueuedReq, view: &ClusterView) -> Route {
-        // Immediate dispatch to the least-loaded instance (no SLO awareness,
-        // no queuing — the behavior Figure 1 (left) depicts).
-        let target = view
-            .instances_of(req.model)
-            .filter(|i| i.is_running())
-            .min_by_key(|i| (i.running + i.waiting, i.id.0));
-        match target {
-            Some(i) => Route::Dispatch(i.id),
-            None => Route::Queue, // nothing up yet; pulled when ready
-        }
-    }
-
-    fn pull_order(&self, _inst: &InstanceView) -> &'static [RequestClass] {
-        // FCFS across classes once capacity exists.
-        &[RequestClass::Interactive, RequestClass::Batch]
-    }
-
-    fn on_step(&mut self, _inst: &InstanceView, _now: Time) -> Option<u32> {
-        None // static batch size
+    fn make_local(&self, _model: usize) -> Box<dyn LocalPolicy> {
+        Box::new(LlumnixLocal)
     }
 
     fn autoscale(&mut self, view: &ClusterView) -> Vec<Action> {
@@ -230,10 +243,8 @@ mod tests {
 
     #[test]
     fn routes_to_least_loaded() {
-        let m = vec![ModelSpec::llama8b()];
-        let mut p = Llumnix::untuned(&m);
+        let mut p = LlumnixLocal;
         let insts = vec![inst(0, 10, 0, 100), inst(1, 2, 0, 100)];
-        let q = vec![QueueStats::default()];
         let r = p.route(
             &QueuedReq {
                 id: RequestId(1),
@@ -244,7 +255,11 @@ mod tests {
                 itl_slo: 2.0,
                 input_tokens: 10,
             },
-            &view(&insts, &q, &m),
+            &crate::sim::policy::ModelView {
+                now: 0.0,
+                model: 0,
+                instances: &insts,
+            },
         );
         assert_eq!(r, Route::Dispatch(InstanceId(1)));
     }
@@ -314,8 +329,9 @@ mod tests {
     #[test]
     fn static_batch_never_changes() {
         let m = vec![ModelSpec::llama8b()];
-        let mut p = Llumnix::untuned(&m);
-        assert_eq!(p.on_step(&inst(0, 64, 90, 100), 1.0), None);
+        let p = Llumnix::untuned(&m);
+        let mut local = p.make_local(0);
+        assert_eq!(local.on_step(&inst(0, 64, 90, 100), 1.0), None);
         assert_eq!(p.initial_max_batch(&m[0], InstanceClass::Mixed), 64);
     }
 }

@@ -4,9 +4,9 @@ pub mod ablation;
 pub mod llumnix;
 pub mod static_;
 
-pub use ablation::{GlobalOnly, LocalOnly};
-pub use llumnix::{Llumnix, LlumnixConfig};
-pub use static_::StaticPolicy;
+pub use ablation::{GlobalOnly, GlobalOnlyLocal, LocalOnly, LocalOnlyLocal};
+pub use llumnix::{Llumnix, LlumnixConfig, LlumnixLocal};
+pub use static_::{StaticLocal, StaticPolicy};
 
 use crate::core::ModelSpec;
 use crate::sim::{run_sim, SimConfig};

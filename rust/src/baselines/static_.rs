@@ -3,7 +3,40 @@
 //! 6) where the cluster must be held constant, and by simulator tests.
 
 use crate::core::{InstanceClass, ModelSpec, RequestClass, Time};
-use crate::sim::policy::{Action, ClusterView, InstanceView, Policy, QueuedReq, Route};
+use crate::sim::policy::{
+    Action, ClusterView, GlobalPolicy, InstanceView, LocalPolicy, ModelView, QueuedReq, Route,
+};
+
+/// The per-model half: least-loaded dispatch (optionally queuing batch
+/// work), FCFS pulls, static batch size.
+pub struct StaticLocal {
+    eager_dispatch: bool,
+}
+
+impl LocalPolicy for StaticLocal {
+    fn route(&mut self, req: &QueuedReq, view: &ModelView) -> Route {
+        if !self.eager_dispatch && req.class == RequestClass::Batch {
+            return Route::Queue;
+        }
+        match view
+            .instances
+            .iter()
+            .filter(|i| i.is_running())
+            .min_by_key(|i| (i.running + i.waiting, i.id.0))
+        {
+            Some(i) => Route::Dispatch(i.id),
+            None => Route::Queue,
+        }
+    }
+
+    fn pull_order(&self, _inst: &InstanceView) -> &'static [RequestClass] {
+        &[RequestClass::Interactive, RequestClass::Batch]
+    }
+
+    fn on_step(&mut self, _inst: &InstanceView, _now: Time) -> Option<u32> {
+        None
+    }
+}
 
 pub struct StaticPolicy {
     pub instances_per_model: Vec<u32>,
@@ -30,31 +63,15 @@ impl StaticPolicy {
     }
 }
 
-impl Policy for StaticPolicy {
+impl GlobalPolicy for StaticPolicy {
     fn name(&self) -> &str {
         &self.name
     }
 
-    fn route(&mut self, req: &QueuedReq, view: &ClusterView) -> Route {
-        if !self.eager_dispatch && req.class == RequestClass::Batch {
-            return Route::Queue;
-        }
-        match view
-            .instances_of(req.model)
-            .filter(|i| i.is_running())
-            .min_by_key(|i| (i.running + i.waiting, i.id.0))
-        {
-            Some(i) => Route::Dispatch(i.id),
-            None => Route::Queue,
-        }
-    }
-
-    fn pull_order(&self, _inst: &InstanceView) -> &'static [RequestClass] {
-        &[RequestClass::Interactive, RequestClass::Batch]
-    }
-
-    fn on_step(&mut self, _inst: &InstanceView, _now: Time) -> Option<u32> {
-        None
+    fn make_local(&self, _model: usize) -> Box<dyn LocalPolicy> {
+        Box::new(StaticLocal {
+            eager_dispatch: self.eager_dispatch,
+        })
     }
 
     fn autoscale(&mut self, _view: &ClusterView) -> Vec<Action> {

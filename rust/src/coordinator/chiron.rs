@@ -1,12 +1,15 @@
-//! The composed Chiron policy (paper Figure 7): preferential routing over
-//! three instance classes, the local batch-size autoscaler (Algorithm 1),
-//! and the global instance autoscaler (IBP + Algorithm 2).
+//! The composed Chiron policy (paper Figure 7), split along the paper's
+//! hierarchy: [`ChironLocal`] is the per-model half — preferential routing
+//! over three instance classes and the local batch-size autoscaler
+//! (Algorithm 1) — and [`Chiron`] is the global half — the instance
+//! autoscaler (IBP + Algorithm 2) plus the factory that manufactures one
+//! `ChironLocal` per model.
 
 use crate::core::{InstanceClass, ModelSpec, RequestClass, RequestOutcome, Time};
 use crate::coordinator::global::{GlobalAutoscaler, GlobalConfig};
 use crate::coordinator::local::{LocalAutoscaler, LocalConfig};
 use crate::sim::policy::{
-    Action, ClusterView, InstanceView, Policy, QueuedReq, Route,
+    Action, ClusterView, GlobalPolicy, InstanceView, LocalPolicy, ModelView, QueuedReq, Route,
 };
 
 /// Initial instances for one model at bootstrap.
@@ -50,38 +53,32 @@ impl ChironConfig {
     }
 }
 
-/// Chiron: the paper's hierarchical autoscaler.
-pub struct Chiron {
-    cfg: ChironConfig,
+/// Chiron's per-model half: preferential three-class routing plus one
+/// Algorithm-1 controller bank for this model's instances. Owns no
+/// cross-model state, so each model's event-loop shard runs it
+/// independently between ticks.
+pub struct ChironLocal {
     local: LocalAutoscaler,
-    global: GlobalAutoscaler,
 }
 
-impl Chiron {
-    pub fn new(cfg: ChironConfig, models: &[ModelSpec]) -> Self {
-        assert_eq!(cfg.bootstrap.len(), models.len());
-        Chiron {
-            local: LocalAutoscaler::new(cfg.local),
-            global: GlobalAutoscaler::new(cfg.global, models),
-            cfg,
+impl ChironLocal {
+    pub fn new(cfg: LocalConfig) -> Self {
+        ChironLocal {
+            local: LocalAutoscaler::new(cfg),
         }
     }
 
-    pub fn global(&self) -> &GlobalAutoscaler {
-        &self.global
-    }
-
-    pub fn local(&self) -> &LocalAutoscaler {
+    pub fn autoscaler(&self) -> &LocalAutoscaler {
         &self.local
     }
 
     /// Least-loaded Running instance among those passing `pred`.
     fn least_loaded<'a>(
-        view: &'a ClusterView,
-        model: usize,
+        insts: &'a [InstanceView],
         pred: impl Fn(&InstanceView) -> bool,
     ) -> Option<&'a InstanceView> {
-        view.instances_of(model)
+        insts
+            .iter()
             .filter(|i| i.is_running() && pred(i))
             .min_by_key(|i| (i.running + i.waiting, i.id.0))
     }
@@ -91,11 +88,11 @@ impl Chiron {
     /// interactive" signal reflects true demand and the remaining mixed
     /// instances stay as genuinely spare over-provisioned capacity.
     fn pack_target<'a>(
-        view: &'a ClusterView,
-        model: usize,
+        insts: &'a [InstanceView],
         pred: impl Fn(&InstanceView) -> bool,
     ) -> Option<&'a InstanceView> {
-        view.instances_of(model)
+        insts
+            .iter()
             .filter(|i| i.is_running() && pred(i))
             .max_by_key(|i| (i.running + i.waiting, std::cmp::Reverse(i.id.0)))
     }
@@ -108,32 +105,32 @@ impl Chiron {
         i.slot_headroom() > 0 && i.waiting == 0 && i.kv_headroom() >= input_tokens as u64
     }
 
-    fn route_interactive(&self, req: &QueuedReq, view: &ClusterView) -> Route {
-        let m = req.model;
+    fn route_interactive(&self, req: &QueuedReq, view: &ModelView) -> Route {
+        let insts = view.instances;
         // 1. Pack into interactive instances with real headroom.
-        if let Some(i) = Self::pack_target(view, m, |i| {
+        if let Some(i) = Self::pack_target(insts, |i| {
             i.class == InstanceClass::Interactive && Self::absorbs(i, req.input_tokens)
         }) {
             return Route::Dispatch(i.id);
         }
         // 2. Pack into mixed instances with headroom (prefer ones already
         //    serving interactive so spare instances stay spare).
-        if let Some(i) = Self::pack_target(view, m, |i| {
+        if let Some(i) = Self::pack_target(insts, |i| {
             i.class == InstanceClass::Mixed
                 && Self::absorbs(i, req.input_tokens)
                 && i.running_interactive > 0
         }) {
             return Route::Dispatch(i.id);
         }
-        if let Some(i) = Self::pack_target(view, m, |i| {
+        if let Some(i) = Self::pack_target(insts, |i| {
             i.class == InstanceClass::Mixed && Self::absorbs(i, req.input_tokens)
         }) {
             return Route::Dispatch(i.id);
         }
         // 3. Mixed instance holding evictable batch work (the cluster evicts
         //    batch requests back to the global queue on dispatch).
-        if let Some(i) = view
-            .instances_of(m)
+        if let Some(i) = insts
+            .iter()
             .filter(|i| {
                 i.is_running()
                     && i.class == InstanceClass::Mixed
@@ -145,7 +142,7 @@ impl Chiron {
         }
         // 4. Zero-queuing fallback: least-loaded interactive/mixed local
         //    queue (TTFT degrades but nothing strands in the global queue).
-        if let Some(i) = Self::least_loaded(view, m, |i| {
+        if let Some(i) = Self::least_loaded(insts, |i| {
             matches!(i.class, InstanceClass::Interactive | InstanceClass::Mixed)
         }) {
             return Route::Dispatch(i.id);
@@ -154,10 +151,10 @@ impl Chiron {
         Route::Queue
     }
 
-    fn route_batch(&self, req: &QueuedReq, view: &ClusterView) -> Route {
-        let m = req.model;
+    fn route_batch(&self, req: &QueuedReq, view: &ModelView) -> Route {
+        let insts = view.instances;
         // 1. Batch instance with headroom.
-        if let Some(i) = Self::least_loaded(view, m, |i| {
+        if let Some(i) = Self::least_loaded(insts, |i| {
             i.class == InstanceClass::Batch
                 && i.slot_headroom() > 0
                 && i.kv_headroom() >= req.input_tokens as u64
@@ -165,7 +162,7 @@ impl Chiron {
             return Route::Dispatch(i.id);
         }
         // 2. Spare capacity on mixed instances (multiplexing, §3).
-        if let Some(i) = Self::least_loaded(view, m, |i| {
+        if let Some(i) = Self::least_loaded(insts, |i| {
             i.class == InstanceClass::Mixed
                 && i.slot_headroom() > 0
                 && i.kv_headroom() >= req.input_tokens as u64
@@ -178,12 +175,8 @@ impl Chiron {
     }
 }
 
-impl Policy for Chiron {
-    fn name(&self) -> &str {
-        "chiron"
-    }
-
-    fn route(&mut self, req: &QueuedReq, view: &ClusterView) -> Route {
+impl LocalPolicy for ChironLocal {
+    fn route(&mut self, req: &QueuedReq, view: &ModelView) -> Route {
         match req.class {
             RequestClass::Interactive => self.route_interactive(req, view),
             RequestClass::Batch => self.route_batch(req, view),
@@ -200,6 +193,36 @@ impl Policy for Chiron {
 
     fn on_step(&mut self, inst: &InstanceView, _now: Time) -> Option<u32> {
         self.local.on_step(inst)
+    }
+}
+
+/// Chiron: the paper's hierarchical autoscaler (global half).
+pub struct Chiron {
+    cfg: ChironConfig,
+    global: GlobalAutoscaler,
+}
+
+impl Chiron {
+    pub fn new(cfg: ChironConfig, models: &[ModelSpec]) -> Self {
+        assert_eq!(cfg.bootstrap.len(), models.len());
+        Chiron {
+            global: GlobalAutoscaler::new(cfg.global, models),
+            cfg,
+        }
+    }
+
+    pub fn global(&self) -> &GlobalAutoscaler {
+        &self.global
+    }
+}
+
+impl GlobalPolicy for Chiron {
+    fn name(&self) -> &str {
+        "chiron"
+    }
+
+    fn make_local(&self, _model: usize) -> Box<dyn LocalPolicy> {
+        Box::new(ChironLocal::new(self.cfg.local))
     }
 
     fn autoscale(&mut self, view: &ClusterView) -> Vec<Action> {
@@ -284,28 +307,26 @@ mod tests {
         }
     }
 
-    fn mk(models: &[ModelSpec]) -> Chiron {
-        Chiron::new(ChironConfig::for_models(models.len()), models)
+    fn mv(insts: &[InstanceView]) -> ModelView {
+        ModelView {
+            now: 0.0,
+            model: 0,
+            instances: insts,
+        }
+    }
+
+    fn local() -> ChironLocal {
+        ChironLocal::new(LocalConfig::default())
     }
 
     #[test]
     fn interactive_prefers_interactive_instance() {
-        let models = vec![ModelSpec::llama8b()];
-        let mut c = mk(&models);
+        let mut c = local();
         let insts = vec![
             inst(0, InstanceClass::Mixed, 0, 0, 8),
             inst(1, InstanceClass::Interactive, 2, 2, 8),
         ];
-        let q = vec![QueueStats::default()];
-        let v = ClusterView {
-            now: 0.0,
-            instances: &insts,
-            queues: &q,
-            models: &models,
-            gpus_total: 50,
-            gpus_used: 2,
-        };
-        match c.route(&req(RequestClass::Interactive), &v) {
+        match c.route(&req(RequestClass::Interactive), &mv(&insts)) {
             Route::Dispatch(id) => assert_eq!(id, InstanceId(1)),
             r => panic!("unexpected {r:?}"),
         }
@@ -313,22 +334,12 @@ mod tests {
 
     #[test]
     fn interactive_overflows_to_mixed_when_interactive_full() {
-        let models = vec![ModelSpec::llama8b()];
-        let mut c = mk(&models);
+        let mut c = local();
         let insts = vec![
             inst(0, InstanceClass::Interactive, 8, 8, 8), // full
             inst(1, InstanceClass::Mixed, 1, 0, 8),
         ];
-        let q = vec![QueueStats::default()];
-        let v = ClusterView {
-            now: 0.0,
-            instances: &insts,
-            queues: &q,
-            models: &models,
-            gpus_total: 50,
-            gpus_used: 2,
-        };
-        match c.route(&req(RequestClass::Interactive), &v) {
+        match c.route(&req(RequestClass::Interactive), &mv(&insts)) {
             Route::Dispatch(id) => assert_eq!(id, InstanceId(1)),
             r => panic!("unexpected {r:?}"),
         }
@@ -336,23 +347,13 @@ mod tests {
 
     #[test]
     fn interactive_evicts_from_busiest_batch_mixed_when_all_full() {
-        let models = vec![ModelSpec::llama8b()];
-        let mut c = mk(&models);
+        let mut c = local();
         let insts = vec![
-            inst(0, InstanceClass::Mixed, 8, 8, 8),  // full of interactive
-            inst(1, InstanceClass::Mixed, 8, 2, 8),  // 6 evictable batch
-            inst(2, InstanceClass::Mixed, 8, 6, 8),  // 2 evictable
+            inst(0, InstanceClass::Mixed, 8, 8, 8), // full of interactive
+            inst(1, InstanceClass::Mixed, 8, 2, 8), // 6 evictable batch
+            inst(2, InstanceClass::Mixed, 8, 6, 8), // 2 evictable
         ];
-        let q = vec![QueueStats::default()];
-        let v = ClusterView {
-            now: 0.0,
-            instances: &insts,
-            queues: &q,
-            models: &models,
-            gpus_total: 50,
-            gpus_used: 3,
-        };
-        match c.route(&req(RequestClass::Interactive), &v) {
+        match c.route(&req(RequestClass::Interactive), &mv(&insts)) {
             Route::Dispatch(id) => assert_eq!(id, InstanceId(1)),
             r => panic!("unexpected {r:?}"),
         }
@@ -360,58 +361,28 @@ mod tests {
 
     #[test]
     fn batch_queues_when_no_capacity() {
-        let models = vec![ModelSpec::llama8b()];
-        let mut c = mk(&models);
+        let mut c = local();
         let insts = vec![inst(0, InstanceClass::Mixed, 8, 8, 8)];
-        let q = vec![QueueStats::default()];
-        let v = ClusterView {
-            now: 0.0,
-            instances: &insts,
-            queues: &q,
-            models: &models,
-            gpus_total: 50,
-            gpus_used: 1,
-        };
-        assert_eq!(c.route(&req(RequestClass::Batch), &v), Route::Queue);
+        assert_eq!(c.route(&req(RequestClass::Batch), &mv(&insts)), Route::Queue);
     }
 
     #[test]
     fn batch_multiplexes_onto_spare_mixed() {
-        let models = vec![ModelSpec::llama8b()];
-        let mut c = mk(&models);
+        let mut c = local();
         let insts = vec![inst(0, InstanceClass::Mixed, 2, 2, 8)];
-        let q = vec![QueueStats::default()];
-        let v = ClusterView {
-            now: 0.0,
-            instances: &insts,
-            queues: &q,
-            models: &models,
-            gpus_total: 50,
-            gpus_used: 1,
-        };
         assert_eq!(
-            c.route(&req(RequestClass::Batch), &v),
+            c.route(&req(RequestClass::Batch), &mv(&insts)),
             Route::Dispatch(InstanceId(0))
         );
     }
 
     #[test]
     fn interactive_never_left_in_global_queue_when_pool_exists() {
-        let models = vec![ModelSpec::llama8b()];
-        let mut c = mk(&models);
+        let mut c = local();
         // All instances are completely full — zero-queuing still dispatches.
         let insts = vec![inst(0, InstanceClass::Interactive, 8, 8, 8)];
-        let q = vec![QueueStats::default()];
-        let v = ClusterView {
-            now: 0.0,
-            instances: &insts,
-            queues: &q,
-            models: &models,
-            gpus_total: 50,
-            gpus_used: 1,
-        };
         assert!(matches!(
-            c.route(&req(RequestClass::Interactive), &v),
+            c.route(&req(RequestClass::Interactive), &mv(&insts)),
             Route::Dispatch(_)
         ));
     }
@@ -441,8 +412,7 @@ mod tests {
 
     #[test]
     fn pull_order_matches_class() {
-        let models = vec![ModelSpec::llama8b()];
-        let c = mk(&models);
+        let c = local();
         assert_eq!(
             c.pull_order(&inst(0, InstanceClass::Interactive, 0, 0, 8)),
             vec![RequestClass::Interactive]
@@ -455,5 +425,17 @@ mod tests {
             c.pull_order(&inst(0, InstanceClass::Mixed, 0, 0, 8)),
             vec![RequestClass::Interactive, RequestClass::Batch]
         );
+    }
+
+    #[test]
+    fn make_local_builds_independent_per_model_halves() {
+        let models = vec![ModelSpec::llama8b(), ModelSpec::llama70b()];
+        let c = Chiron::new(ChironConfig::for_models(2), &models);
+        let mut l0 = c.make_local(0);
+        let mut l1 = c.make_local(1);
+        // Same instance id on different models: state must not be shared.
+        let v = inst(7, InstanceClass::Mixed, 8, 0, 8);
+        let _ = l0.on_step(&v, 0.0);
+        let _ = l1.on_step(&v, 0.0);
     }
 }

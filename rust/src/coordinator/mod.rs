@@ -6,7 +6,8 @@
 //!   (IBP vs Θ) and Algorithm 2 batch scaling (BBP → 0).
 //! - `groups`: SHEPHERD-style request groups over TTFT deadlines.
 //! - `waiting`: the QLM waiting-time estimator (Eq. 1 + CLT margin).
-//! - `chiron`: the composed `Policy` with preferential three-class routing.
+//! - `chiron`: the composed policy pair — `ChironLocal` (per-model routing
+//!   + Algorithm 1) and `Chiron` (global autoscaler + local-half factory).
 
 pub mod chiron;
 pub mod global;
@@ -14,7 +15,7 @@ pub mod groups;
 pub mod local;
 pub mod waiting;
 
-pub use chiron::{BootstrapSpec, Chiron, ChironConfig};
+pub use chiron::{BootstrapSpec, Chiron, ChironConfig, ChironLocal};
 pub use global::{GlobalAutoscaler, GlobalConfig};
 pub use groups::{build_groups, RequestGroup};
 pub use local::{LocalAutoscaler, LocalConfig};

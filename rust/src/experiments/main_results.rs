@@ -1,13 +1,19 @@
 //! Headline evaluation: Figure 2 (GPU requirement / utilization), Figure 9
 //! (W_A interactive sweep), Figure 10 (W_B batch-queue sweep).
+//!
+//! All three run multi-seed replications (`compare_seeds`) and report every
+//! cell as mean ± sample std across seeds, so the headline figures carry
+//! error bars (ROADMAP item). Replications fan out through the same worker
+//! pool as the policy sweep itself.
 
 use crate::baselines::LlumnixConfig;
-use crate::metrics::PolicyRow;
+use crate::metrics::{MeanStd, PolicyRow};
+use crate::sim::SimReport;
 use crate::util::json::Json;
 
 use super::common::{
-    compare, models_large, models_mixed, models_small, print_series, print_table, save_result,
-    trace_wa, trace_wb, PolicyKind, Scale,
+    compare_seeds, models_large, models_mixed, models_small, print_series, save_result,
+    seed_list, trace_wa, trace_wb, PolicyKind, Scale,
 };
 
 fn kinds_headline() -> Vec<PolicyKind> {
@@ -18,6 +24,49 @@ fn kinds_headline() -> Vec<PolicyKind> {
         PolicyKind::LocalOnly,
         PolicyKind::GlobalOnly(64),
     ]
+}
+
+/// Replications per cell: enough for a std estimate, kept small because
+/// every (policy × x × seed) cell is an independent full simulation.
+fn headline_seeds(scale: Scale, base: u64) -> Vec<u64> {
+    seed_list(base, scale.n(2, 3))
+}
+
+/// Mean ± std of a `PolicyRow` field over one policy's per-seed cells —
+/// straight off the tuple slice, no row cloning.
+fn row_stat(
+    cells: &[(PolicyRow, SimReport)],
+    f: impl Fn(&PolicyRow) -> f64,
+) -> MeanStd {
+    MeanStd::of(cells, |(r, _)| f(r))
+}
+
+/// Per-policy mean ± std lines for a one-shot comparison table.
+fn print_mean_std_table(title: &str, per_policy: &[Vec<(PolicyRow, SimReport)>]) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<16} {:>6} {:>14} {:>14} {:>14} {:>14}",
+        "policy", "seeds", "slo%±std", "slo_b%±std", "GPUh±std", "req/s±std"
+    );
+    for cells in per_policy {
+        let slo = row_stat(cells, |r| r.slo_attainment);
+        let slo_b = row_stat(cells, |r| r.slo_batch);
+        let gpuh = row_stat(cells, |r| r.gpu_hours);
+        let thr = row_stat(cells, |r| r.request_throughput);
+        println!(
+            "{:<16} {:>6} {:>8.1}±{:<5.1} {:>8.1}±{:<5.1} {:>8.2}±{:<5.2} {:>8.2}±{:<5.2}",
+            cells[0].0.policy,
+            cells.len(),
+            slo.mean * 100.0,
+            slo.std * 100.0,
+            slo_b.mean * 100.0,
+            slo_b.std * 100.0,
+            gpuh.mean,
+            gpuh.std,
+            thr.mean,
+            thr.std
+        );
+    }
 }
 
 /// Figure 2: cluster-wide utilization and GPUs required when serving a mix
@@ -59,26 +108,54 @@ pub fn fig2(scale: Scale) -> Json {
         }
         tb.build(&mut rng)
     };
-    let rows = compare(&models, 50, mk, &kinds_headline(), 4.0 * 3600.0, 2);
-    let table: Vec<PolicyRow> = rows.iter().map(|(r, _)| r.clone()).collect();
-    print_table("Figure 2 — GPUs required / utilization (batch + interactive, 8B + 70B)", &table);
-    let chiron_gpuh = table[0].gpu_hours;
-    let llumnix_gpuh = table[1].gpu_hours;
+    let seeds = headline_seeds(scale, 2);
+    let per_policy = compare_seeds(&models, 50, mk, &kinds_headline(), 4.0 * 3600.0, &seeds);
+    print_mean_std_table(
+        "Figure 2 — GPUs required / utilization (batch + interactive, 8B + 70B), mean ± std",
+        &per_policy,
+    );
+    let chiron_gpuh = row_stat(&per_policy[0], |r| r.gpu_hours);
+    let llumnix_gpuh = row_stat(&per_policy[1], |r| r.gpu_hours);
     println!(
         "GPU savings vs llumnix: {:.0}% (paper: up to 70%)",
-        (1.0 - chiron_gpuh / llumnix_gpuh.max(1e-9)) * 100.0
+        (1.0 - chiron_gpuh.mean / llumnix_gpuh.mean.max(1e-9)) * 100.0
     );
-    let j = Json::arr(table.iter().map(|r| r.to_json()));
+    let j = Json::arr(per_policy.iter().map(|cells| {
+        let rows: Vec<PolicyRow> = cells.iter().map(|(r, _)| r.clone()).collect();
+        PolicyRow::aggregate_json(&rows)
+    }));
     save_result("fig2", &j);
     j
 }
 
+/// One (x, policy)-cell aggregate for the sweep figures: mean ± std of
+/// per-instance throughput, SLO attainment, and GPU consumption.
+fn sweep_cell_json(
+    cells: &[(PolicyRow, SimReport)],
+    gpus_per_instance: f64,
+) -> (Json, f64, f64) {
+    let thr = MeanStd::of(cells, |(_, rep)| rep.per_instance_throughput(gpus_per_instance));
+    let slo = row_stat(cells, |r| r.slo_attainment);
+    let j = Json::obj(vec![
+        ("policy", cells[0].0.policy.as_str().into()),
+        ("seeds", cells.len().into()),
+        ("per_instance_throughput", thr.to_json()),
+        ("slo", slo.to_json()),
+        ("slo_batch", row_stat(cells, |r| r.slo_batch).to_json()),
+        ("mean_gpus", row_stat(cells, |r| r.mean_gpus).to_json()),
+        ("gpu_hours", row_stat(cells, |r| r.gpu_hours).to_json()),
+    ]);
+    (j, thr.mean, slo.mean)
+}
+
 /// Figure 9: W_A (interactive-only) sweep over arrival rates for small,
 /// large, and mixed model configurations: per-instance request throughput
-/// and % SLOs met. Shape targets: Chiron ≥ Llumnix-tuned ≥ Llumnix-untuned;
-/// SLO cliff appears at higher rates for Chiron.
+/// and % SLOs met (mean ± std across seeds). Shape targets: Chiron ≥
+/// Llumnix-tuned ≥ Llumnix-untuned; SLO cliff appears at higher rates for
+/// Chiron.
 pub fn fig9(scale: Scale) -> Json {
     let count = scale.n(800, 3500);
+    let seeds = headline_seeds(scale, 9);
     let mut out = Vec::new();
     let configs: Vec<(&str, Vec<crate::core::ModelSpec>, Vec<f64>)> = vec![
         ("small (8B)", models_small(), vec![1.0]),
@@ -104,34 +181,24 @@ pub fn fig9(scale: Scale) -> Json {
         for &rate in &rates {
             let model_rates: Vec<f64> = split.iter().map(|s| s * rate).collect();
             let mk = |seed| trace_wa(&models, &model_rates, count, seed);
-            let rows = compare(&models, 50, mk, &kinds, 2.0 * 3600.0, 9);
+            let per_policy = compare_seeds(&models, 50, mk, &kinds, 2.0 * 3600.0, &seeds);
             let gpi = models[0].gpus_per_instance as f64;
             let mut vals = Vec::new();
-            for (r, rep) in &rows {
-                vals.push(rep.per_instance_throughput(gpi));
-                vals.push(r.slo_attainment * 100.0);
+            let mut policies = Vec::new();
+            for cells in &per_policy {
+                let (j, thr_mean, slo_mean) = sweep_cell_json(cells, gpi);
+                policies.push(j);
+                vals.push(thr_mean);
+                vals.push(slo_mean * 100.0);
             }
             json_points.push(Json::obj(vec![
                 ("rate", rate.into()),
-                (
-                    "policies",
-                    Json::arr(rows.iter().map(|(r, rep)| {
-                        Json::obj(vec![
-                            ("policy", r.policy.as_str().into()),
-                            (
-                                "per_instance_throughput",
-                                rep.per_instance_throughput(gpi).into(),
-                            ),
-                            ("slo", r.slo_attainment.into()),
-                            ("mean_gpus", r.mean_gpus.into()),
-                        ])
-                    })),
-                ),
+                ("policies", Json::arr(policies)),
             ]));
             series.push((rate, vals));
         }
         print_series(
-            &format!("Figure 9 — W_A {label}: per-instance req/s and %SLO"),
+            &format!("Figure 9 — W_A {label}: per-instance req/s and %SLO (seed means)"),
             "rate",
             &[
                 "chiron_thr",
@@ -145,6 +212,7 @@ pub fn fig9(scale: Scale) -> Json {
         );
         out.push(Json::obj(vec![
             ("config", label.into()),
+            ("seeds", seeds.len().into()),
             ("points", Json::arr(json_points)),
         ]));
     }
@@ -154,11 +222,12 @@ pub fn fig9(scale: Scale) -> Json {
 }
 
 /// Figure 10: W_B (interactive + batch) sweep over batch-queue size with a
-/// fixed interactive rate. Shape targets: Chiron sustains far larger batch
-/// queues with high SLO attainment; per-instance throughput higher
-/// throughout (≈50× batch sizes on batch instances).
+/// fixed interactive rate (mean ± std across seeds). Shape targets: Chiron
+/// sustains far larger batch queues with high SLO attainment; per-instance
+/// throughput higher throughout (≈50× batch sizes on batch instances).
 pub fn fig10(scale: Scale) -> Json {
     let inter_n = scale.n(500, 2000);
+    let seeds = headline_seeds(scale, 10);
     let mut out = Vec::new();
     let configs: Vec<(&str, Vec<crate::core::ModelSpec>, Vec<f64>, Vec<f64>)> = vec![
         (
@@ -198,35 +267,26 @@ pub fn fig10(scale: Scale) -> Json {
             let mk = |seed| {
                 trace_wb(&models, &inter_rates, inter_n, &per_model, 3600.0, 10.0, seed)
             };
-            let rows = compare(&models, 50, mk, &kinds, 6.0 * 3600.0, 10);
+            let per_policy = compare_seeds(&models, 50, mk, &kinds, 6.0 * 3600.0, &seeds);
             let gpi = models[0].gpus_per_instance as f64;
             let mut vals = Vec::new();
-            for (r, rep) in &rows {
-                vals.push(rep.per_instance_throughput(gpi));
-                vals.push(r.slo_attainment * 100.0);
+            let mut policies = Vec::new();
+            for cells in &per_policy {
+                let (j, thr_mean, slo_mean) = sweep_cell_json(cells, gpi);
+                policies.push(j);
+                vals.push(thr_mean);
+                vals.push(slo_mean * 100.0);
             }
             json_points.push(Json::obj(vec![
                 ("queue", q.into()),
-                (
-                    "policies",
-                    Json::arr(rows.iter().map(|(r, rep)| {
-                        Json::obj(vec![
-                            ("policy", r.policy.as_str().into()),
-                            (
-                                "per_instance_throughput",
-                                rep.per_instance_throughput(gpi).into(),
-                            ),
-                            ("slo", r.slo_attainment.into()),
-                            ("slo_batch", r.slo_batch.into()),
-                            ("gpu_hours", r.gpu_hours.into()),
-                        ])
-                    })),
-                ),
+                ("policies", Json::arr(policies)),
             ]));
             series.push((q, vals));
         }
         print_series(
-            &format!("Figure 10 — W_B {label}: per-instance req/s and %SLO vs batch queue"),
+            &format!(
+                "Figure 10 — W_B {label}: per-instance req/s and %SLO vs batch queue (seed means)"
+            ),
             "queue",
             &[
                 "chiron_thr",
@@ -240,6 +300,7 @@ pub fn fig10(scale: Scale) -> Json {
         );
         out.push(Json::obj(vec![
             ("config", label.into()),
+            ("seeds", seeds.len().into()),
             ("points", Json::arr(json_points)),
         ]));
     }

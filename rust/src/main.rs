@@ -85,12 +85,20 @@ fn cmd_experiment(argv: Vec<String>) {
             "0",
             "worker threads for sweep grids (0 = all cores; also CHIRON_JOBS)",
         )
+        .flag(
+            "shards",
+            "0",
+            "worker threads for per-model simulator shards between autoscaler \
+             ticks (0 = CHIRON_SHARDS, default 1; results are bit-identical \
+             at any setting)",
+        )
         .parse_from(argv)
         .unwrap_or_else(|m| {
             eprintln!("{m}");
             std::process::exit(2);
         });
     chiron::util::parallel::set_jobs(args.get_usize("jobs"));
+    chiron::util::parallel::set_shards(args.get_usize("shards"));
     let scale = Scale::from_flag(args.get_bool("quick"));
     let ids: Vec<String> = match args.positional().first().map(|s| s.as_str()) {
         Some("all") | None => experiments::ALL.iter().map(|s| s.to_string()).collect(),
@@ -229,6 +237,12 @@ fn cmd_scenario(argv: Vec<String>) {
         "0",
         "worker threads for the run/sweep grid (0 = all cores; also CHIRON_JOBS)",
     )
+    .flag(
+        "shards",
+        "0",
+        "worker threads for per-model simulator shards between autoscaler ticks \
+         (0 = CHIRON_SHARDS, default 1; bit-identical at any setting)",
+    )
     .flag("gpus", "0", "override the scenario's cluster size (0 = spec default)")
     .flag(
         "scale",
@@ -241,6 +255,7 @@ fn cmd_scenario(argv: Vec<String>) {
         std::process::exit(2);
     });
     chiron::util::parallel::set_jobs(args.get_usize("jobs"));
+    chiron::util::parallel::set_shards(args.get_usize("shards"));
     let scale = args.get_f64("scale");
     if !(scale.is_finite() && scale > 0.0) {
         eprintln!("--scale must be a positive number, got '{}'", args.get("scale"));
@@ -422,18 +437,22 @@ struct GateRun {
 }
 
 /// CI regression gate over the bench trajectory (`BENCH_hotpath.json`):
-/// compares the latest run's bench mean against the previous run with the
-/// same quick/full mode, failing on a > threshold regression. When both
-/// runs carry the `--baseline` calibration bench, means are normalized by
-/// it first — successive CI pushes land on shared runners whose absolute
-/// speed varies by tens of percent, so gating on the ratio *to a
-/// CPU-bound bench from the same run* is what makes a fixed threshold
-/// meaningful across machines. Skips (exit 0) when the trajectory holds
-/// fewer than two comparable runs.
+/// for each gated bench, compares the latest run's mean against the
+/// previous run with the same quick/full mode, failing on a > threshold
+/// regression. When both runs carry the `--baseline` calibration bench,
+/// means are normalized by it first — successive CI pushes land on shared
+/// runners whose absolute speed varies by tens of percent, so gating on
+/// the ratio *to a CPU-bound bench from the same run* is what makes a
+/// fixed threshold meaningful across machines. Skips (exit 0) when the
+/// trajectory holds fewer than two comparable runs.
 fn cmd_bench_gate(argv: Vec<String>) {
     let args = Args::new("chiron bench-gate")
         .flag("file", "BENCH_hotpath.json", "bench trajectory file")
-        .flag("bench", "sim.run", "bench name substring to gate on")
+        .flag(
+            "bench",
+            "sim.run",
+            "comma-separated bench name substrings to gate on",
+        )
         .flag(
             "baseline",
             "rng.u64",
@@ -453,7 +472,7 @@ fn cmd_bench_gate(argv: Vec<String>) {
             std::process::exit(2);
         });
     let path = args.get("file");
-    let bench = args.get("bench");
+    let benches = args.get_list("bench");
     let baseline = args.get("baseline");
     let threshold = args.get_f64("threshold");
     let require = args.get_bool("require-file");
@@ -464,6 +483,10 @@ fn cmd_bench_gate(argv: Vec<String>) {
         }
         println!("bench-gate: {msg}; skipping");
     };
+    if benches.is_empty() {
+        eprintln!("bench-gate: --bench needs at least one bench name");
+        std::process::exit(2);
+    }
     let text = match std::fs::read_to_string(path) {
         Ok(t) => t,
         Err(_) => {
@@ -484,71 +507,77 @@ fn cmd_bench_gate(argv: Vec<String>) {
             .find(|r| r.get("name").as_str().is_some_and(|n| n.contains(name)))
             .and_then(|r| r.get("mean_ns").as_f64())
     };
-    let runs: Vec<GateRun> = j
-        .get("runs")
-        .as_arr()
-        .unwrap_or(&[])
-        .iter()
-        .map(|run| {
-            let results = run.get("results").as_arr().unwrap_or(&[]);
-            GateRun {
-                quick: run.get("quick").as_bool().unwrap_or(false),
-                bench_mean: mean_of(results, bench),
-                baseline_mean: if baseline.is_empty() {
-                    None
-                } else {
-                    mean_of(results, baseline)
-                },
+    let mut failed = false;
+    for bench in &benches {
+        let runs: Vec<GateRun> = j
+            .get("runs")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|run| {
+                let results = run.get("results").as_arr().unwrap_or(&[]);
+                GateRun {
+                    quick: run.get("quick").as_bool().unwrap_or(false),
+                    bench_mean: mean_of(results, bench),
+                    baseline_mean: if baseline.is_empty() {
+                        None
+                    } else {
+                        mean_of(results, baseline)
+                    },
+                }
+            })
+            .collect();
+        // Gate on the LATEST run specifically — falling back to an older
+        // run that happens to contain the bench would silently compare
+        // stale history (e.g. after a bench rename or a typo'd --bench).
+        let Some(last) = runs.last() else {
+            // Under --require-file the bench step just ran, so an empty
+            // runs array means the append silently failed — fail, not skip.
+            skip_or_die("trajectory has no runs".to_string());
+            return;
+        };
+        let Some(last_mean) = last.bench_mean else {
+            skip_or_die(format!("latest run does not contain bench '{bench}'"));
+            continue;
+        };
+        let Some(prev) = runs[..runs.len() - 1]
+            .iter()
+            .rev()
+            .find(|r| r.quick == last.quick && r.bench_mean.is_some())
+        else {
+            println!("bench-gate: no previous comparable run for '{bench}'; skipping");
+            continue;
+        };
+        let prev_mean = prev.bench_mean.expect("filtered on is_some");
+        // Normalize by the calibration bench when both runs carry it.
+        let (ratio, normalized) = match (last.baseline_mean, prev.baseline_mean) {
+            (Some(lb), Some(pb)) if lb > 0.0 && pb > 0.0 => {
+                ((last_mean / lb) / (prev_mean / pb), true)
             }
-        })
-        .collect();
-    // Gate on the LATEST run specifically — falling back to an older run
-    // that happens to contain the bench would silently compare stale
-    // history (e.g. after a bench rename or a typo'd --bench).
-    let Some(last) = runs.last() else {
-        // Under --require-file the bench step just ran, so an empty runs
-        // array means the append silently failed — fail, don't skip.
-        skip_or_die("trajectory has no runs".to_string());
-        return;
-    };
-    let Some(last_mean) = last.bench_mean else {
-        skip_or_die(format!("latest run does not contain bench '{bench}'"));
-        return;
-    };
-    let Some(prev) = runs[..runs.len() - 1]
-        .iter()
-        .rev()
-        .find(|r| r.quick == last.quick && r.bench_mean.is_some())
-    else {
-        println!("bench-gate: no previous comparable run for '{bench}'; skipping");
-        return;
-    };
-    let prev_mean = prev.bench_mean.expect("filtered on is_some");
-    // Normalize by the calibration bench when both runs carry it.
-    let (ratio, normalized) = match (last.baseline_mean, prev.baseline_mean) {
-        (Some(lb), Some(pb)) if lb > 0.0 && pb > 0.0 => {
-            ((last_mean / lb) / (prev_mean / pb), true)
-        }
-        _ => (last_mean / prev_mean, false),
-    };
-    println!(
-        "bench-gate: '{bench}' mean {:.3} ms vs previous {:.3} ms — {}ratio {:.3} ({:+.1}%)",
-        last_mean / 1e6,
-        prev_mean / 1e6,
-        if normalized {
-            format!("'{baseline}'-normalized ")
-        } else {
-            String::new()
-        },
-        ratio,
-        (ratio - 1.0) * 100.0
-    );
-    if ratio > 1.0 + threshold {
-        eprintln!(
-            "bench-gate: FAIL — '{bench}' regressed {:.1}% (> {:.0}% allowed)",
-            (ratio - 1.0) * 100.0,
-            threshold * 100.0
+            _ => (last_mean / prev_mean, false),
+        };
+        println!(
+            "bench-gate: '{bench}' mean {:.3} ms vs previous {:.3} ms — {}ratio {:.3} ({:+.1}%)",
+            last_mean / 1e6,
+            prev_mean / 1e6,
+            if normalized {
+                format!("'{baseline}'-normalized ")
+            } else {
+                String::new()
+            },
+            ratio,
+            (ratio - 1.0) * 100.0
         );
+        if ratio > 1.0 + threshold {
+            eprintln!(
+                "bench-gate: FAIL — '{bench}' regressed {:.1}% (> {:.0}% allowed)",
+                (ratio - 1.0) * 100.0,
+                threshold * 100.0
+            );
+            failed = true;
+        }
+    }
+    if failed {
         std::process::exit(1);
     }
     println!("bench-gate: OK (threshold {:.0}%)", threshold * 100.0);

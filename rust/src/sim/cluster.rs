@@ -1,35 +1,28 @@
-//! The discrete-event cluster simulator: a GPU pool, serving-instance
-//! lifecycle (Loading → Running → Draining → Retired), a per-model global
-//! queue, and the event loop that drives an autoscaling `Policy` over a
-//! stream of request arrivals (a materialized `Trace` or any streaming
-//! `ArrivalSource`, e.g. a lazily generated scenario workload).
+//! The discrete-event cluster simulator, structured as the paper's
+//! hierarchy: per-model event-loop shards (`sim::shard::ModelShard`) driven
+//! between global-autoscaler tick *barriers* by the epoch driver in this
+//! module.
 //!
-//! Event types: request arrivals, engine-step completions, instance-ready
-//! (model load finished), and the periodic autoscaler tick. Determinism:
-//! events at equal timestamps are ordered by insertion sequence.
-
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+//! Each epoch the driver (1) demuxes the streaming `ArrivalSource` into
+//! per-model arrival FIFOs, (2) advances every shard through all of its
+//! events up to the barrier — concurrently on `util::parallel` scoped
+//! threads when `--shards`/`CHIRON_SHARDS` > 1, bit-identically either way,
+//! (3) replays shard completions into the global policy, merges shard
+//! snapshots into the `ClusterView`, runs `GlobalPolicy::autoscale`, and
+//! applies the returned `Action`s. Cross-model GPU-budget accounting
+//! changes **only at barriers**: mid-epoch retirements free their GPUs at
+//! the next barrier, with `gpu_seconds` credited back to the exact retire
+//! time. See `sim/README.md` for the design and determinism argument.
 
 use crate::core::{
-    InstanceClass, InstanceId, ModelSpec, Request, RequestClass, RequestOutcome, ServingConfig,
-    Time,
+    InstanceId, ModelSpec, Request, RequestClass, RequestOutcome, ServingConfig, Time,
 };
-use crate::sim::instance::{SimInstance, WorkItem};
-use crate::sim::policy::{
-    Action, ClusterView, InstanceState, InstanceView, Policy, QueueStats, QueuedReq, Route,
-};
+use crate::sim::instance::SimInstance;
+use crate::sim::policy::{Action, ClusterView, GlobalPolicy, InstanceView, QueueStats};
+use crate::sim::shard::ModelShard;
+pub use crate::sim::shard::MAX_BATCH_CLAMP;
+use crate::util::parallel;
 use crate::workload::{ArrivalSource, Trace, TraceSource};
-
-/// Hard clamp on policy-requested batch sizes (the paper's observed maximum
-/// useful batch is 4096; 16384 leaves room for sweep experiments).
-pub const MAX_BATCH_CLAMP: u32 = 16_384;
-
-/// Deadline-sample size exposed to policies for large batch queues.
-const QUEUE_SAMPLE: usize = 2_048;
-
-/// Slab sentinel: this `InstanceId` has no live slot.
-const SLOT_NONE: u32 = u32::MAX;
 
 /// Simulator configuration.
 #[derive(Debug, Clone)]
@@ -38,7 +31,7 @@ pub struct SimConfig {
     pub models: Vec<ModelSpec>,
     /// Per-model serving optimizations (prefix caching / spec decode).
     pub serving: Vec<ServingConfig>,
-    /// Global-autoscaler tick interval in seconds.
+    /// Global-autoscaler tick interval in seconds (the barrier period).
     pub tick_interval: Time,
     /// Safety cap on simulated time.
     pub max_sim_time: Time,
@@ -47,6 +40,14 @@ pub struct SimConfig {
     /// Skip model-load delay for bootstrap instances (warm start, as in the
     /// paper's experiments which begin from a provisioned cluster).
     pub warm_bootstrap: bool,
+    /// Worker threads for running per-model shards between barriers.
+    /// 0 = use the process-wide setting (`--shards N` / `CHIRON_SHARDS`,
+    /// default 1). Results are bit-identical at any value.
+    pub shard_workers: usize,
+    /// Record every cluster-level GPU-budget change as `(time, gpus_used)`
+    /// in `SimReport::gpu_trace` (test instrumentation for the
+    /// budget-only-changes-at-barriers invariant).
+    pub record_gpu_trace: bool,
 }
 
 impl SimConfig {
@@ -60,6 +61,8 @@ impl SimConfig {
             max_sim_time: 24.0 * 3600.0,
             timeline_every: 5,
             warm_bootstrap: true,
+            shard_workers: 0,
+            record_gpu_trace: false,
         }
     }
 
@@ -90,11 +93,14 @@ pub struct TimelinePoint {
 #[derive(Debug, Default)]
 pub struct SimReport {
     pub policy: String,
+    /// Completed requests, per-shard event order, shards concatenated in
+    /// model order (single-model runs: identical to completion order).
     pub outcomes: Vec<RequestOutcome>,
     pub timeline: Vec<TimelinePoint>,
     pub scale_ups: u64,
     pub scale_downs: u64,
-    /// Integrated GPU·seconds consumed.
+    /// Integrated GPU·seconds consumed (each instance charged exactly to
+    /// its retire time).
     pub gpu_seconds: f64,
     /// Simulated end time (all requests done or cap reached).
     pub end_time: Time,
@@ -102,6 +108,10 @@ pub struct SimReport {
     /// Requests still unfinished at end (cap reached).
     pub unfinished: usize,
     pub total_tokens: f64,
+    /// Cluster-level GPU-budget changes `(time, gpus_used)`; only populated
+    /// under `SimConfig::record_gpu_trace`. Every entry's time is a tick
+    /// barrier (or the t=0 bootstrap) by construction.
+    pub gpu_trace: Vec<(Time, u32)>,
 }
 
 impl SimReport {
@@ -185,103 +195,32 @@ impl SimReport {
     }
 }
 
-#[derive(Debug)]
-enum Ev {
-    /// The request in `Simulation::pending_arrival` arrives. Only one
-    /// arrival event is in flight at a time: popping it fetches the next
-    /// request from the arrival source (§Perf: preloading a 700k-request
-    /// trace made every heap op log-huge; streaming also lets scenario
-    /// sources synthesize multi-million-request workloads lazily).
-    Arrival,
-    StepDone { inst: InstanceId, duration: Time },
-    Ready(InstanceId),
-    Tick,
-}
-
-/// Build a `ClusterView` from a `Simulation`'s fields with disjoint borrows
-/// (so `self.policy` can be borrowed mutably alongside it).
-macro_rules! view_of {
-    ($s:expr) => {
-        ClusterView {
-            now: $s.now,
-            instances: &$s.views_cache,
-            queues: &$s.queue_stats,
-            models: &$s.cfg.models,
-            gpus_total: $s.cfg.gpus_total,
-            gpus_used: $s.gpus_used,
-        }
-    };
-}
-
-/// Heap entry: payload carried inline (§Perf: a side HashMap cost two hash
-/// operations per event). Ordered by (time, priority, sequence) so
-/// Ready/StepDone precede Ticks at equal timestamps and ties stay
-/// deterministic.
-struct HeapEv {
-    t: f64,
-    pri: u8,
-    seq: u64,
-    ev: Ev,
-}
-impl PartialEq for HeapEv {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.pri == other.pri && self.seq == other.seq
-    }
-}
-impl Eq for HeapEv {}
-impl PartialOrd for HeapEv {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for HeapEv {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.t
-            .partial_cmp(&other.t)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(self.pri.cmp(&other.pri))
-            .then(self.seq.cmp(&other.seq))
-    }
-}
-
-/// The cluster simulator.
+/// The cluster simulator: epoch driver over per-model shards.
 pub struct Simulation<'p> {
     cfg: SimConfig,
-    policy: &'p mut dyn Policy,
-    heap: BinaryHeap<Reverse<HeapEv>>,
-    seq: u64,
-    now: Time,
-    instances: Vec<SimInstance>,
-    /// Slab index keyed directly on `InstanceId.0` (ids are handed out
-    /// densely, so this stays a flat Vec): `slots[id] == SLOT_NONE` once the
-    /// instance retires. §Perf: replaced a `HashMap<InstanceId, usize>`
-    /// that cost two hash lookups per event.
-    slots: Vec<u32>,
+    policy: &'p mut dyn GlobalPolicy,
+    shards: Vec<ModelShard>,
+    /// Owning model per global instance id (index = `InstanceId.0`).
+    owner: Vec<u16>,
     next_instance: u32,
-    // Global queues per model.
-    q_batch: Vec<VecDeque<WorkItem>>,
-    q_inter: Vec<VecDeque<WorkItem>>,
+    /// Barrier clock (shard clocks advance within epochs).
+    now: Time,
     gpus_used: u32,
     gpu_seconds: f64,
     last_gpu_change: Time,
     report: SimReport,
-    completed: usize,
-    /// Cached per-instance views, index-aligned with `instances`.
-    views_cache: Vec<InstanceView>,
-    /// Indices whose cached view is stale (point-patched on refresh).
-    /// §Perf: a StepDone→arrival pair used to rebuild the whole cache;
-    /// now only the touched instance is rewritten.
-    views_dirty_idx: Vec<u32>,
-    /// Structural change (add/retire) pending: rebuild the whole cache.
-    views_all_dirty: bool,
+    /// Merged per-instance views for the barrier `ClusterView` (shards
+    /// concatenated in model order).
+    merged_views: Vec<InstanceView>,
+    /// Per-model queue summaries, rebuilt by each shard at barriers.
     queue_stats: Vec<QueueStats>,
-    /// Streaming arrival feed (a `TraceSource` for materialized traces, a
-    /// `ScenarioSource` for lazily generated scenario workloads).
+    /// Shard worker threads, resolved once at construction (`shards()`
+    /// reads an env var behind a process-wide lock — not per-epoch work).
+    shard_workers: usize,
+    /// Streaming arrival feed, demuxed per model each epoch.
     source: Box<dyn ArrivalSource>,
-    /// The request the in-flight `Ev::Arrival` will deliver.
+    /// Lookahead request not yet delivered to a shard.
     pending_arrival: Option<Request>,
-    /// Requests delivered so far.
-    arrived: usize,
     /// The source is exhausted (no pending arrival remains).
     arrivals_done: bool,
     /// Exact expected total when the source knows it up front.
@@ -290,31 +229,35 @@ pub struct Simulation<'p> {
 }
 
 impl<'p> Simulation<'p> {
-    pub fn new(cfg: SimConfig, trace: Trace, policy: &'p mut dyn Policy) -> Self {
+    pub fn new(cfg: SimConfig, trace: Trace, policy: &'p mut dyn GlobalPolicy) -> Self {
         Self::from_source(cfg, Box::new(TraceSource::new(trace)), policy)
     }
 
     /// Build a simulation fed by a streaming arrival source. Trace-side
     /// memory is whatever the source holds — O(streams) for scenario
-    /// sources — instead of a materialized request vector.
+    /// sources — plus at most one epoch's arrivals buffered in the shards.
     pub fn from_source(
         cfg: SimConfig,
         source: Box<dyn ArrivalSource>,
-        policy: &'p mut dyn Policy,
+        policy: &'p mut dyn GlobalPolicy,
     ) -> Self {
         let nm = cfg.models.len();
         let total_hint = source.total_hint();
+        let shards = (0..nm)
+            .map(|m| ModelShard::new(m, policy.make_local(m)))
+            .collect();
+        let shard_workers = if cfg.shard_workers > 0 {
+            cfg.shard_workers
+        } else {
+            parallel::shards()
+        };
         Simulation {
             cfg,
             policy,
-            heap: BinaryHeap::new(),
-            seq: 0,
-            now: 0.0,
-            instances: Vec::new(),
-            slots: Vec::new(),
+            shards,
+            owner: Vec::new(),
             next_instance: 0,
-            q_batch: vec![VecDeque::new(); nm],
-            q_inter: vec![VecDeque::new(); nm],
+            now: 0.0,
             gpus_used: 0,
             gpu_seconds: 0.0,
             last_gpu_change: 0.0,
@@ -322,122 +265,70 @@ impl<'p> Simulation<'p> {
                 total_requests: total_hint.unwrap_or(0),
                 ..Default::default()
             },
-            completed: 0,
-            views_cache: Vec::new(),
-            views_dirty_idx: Vec::new(),
-            views_all_dirty: true,
+            merged_views: Vec::new(),
             queue_stats: vec![QueueStats::default(); nm],
+            shard_workers,
             source,
             pending_arrival: None,
-            arrived: 0,
             arrivals_done: false,
             total_hint,
             ticks: 0,
         }
     }
 
-    /// Pull the next request from the source and schedule its arrival
-    /// event; flips `arrivals_done` at stream end.
-    fn schedule_next_arrival(&mut self) {
-        match self.source.next_request() {
-            Some(req) => {
-                let t = req.arrival;
-                self.pending_arrival = Some(req);
-                self.push_event(t, Ev::Arrival);
-            }
-            None => self.arrivals_done = true,
-        }
-    }
+    // ---- GPU-budget accounting (barrier-only) ---------------------------
 
-    /// All requests that will ever arrive have arrived and completed.
-    #[inline]
-    fn all_work_done(&self) -> bool {
-        self.arrivals_done && self.completed >= self.arrived
-    }
-
-    fn push_event(&mut self, t: Time, ev: Ev) {
-        let seq = self.seq;
-        self.seq += 1;
-        // priority class keeps Ready/StepDone before Tick at equal times
-        let pri = match ev {
-            Ev::Ready(_) => 0,
-            Ev::StepDone { .. } => 1,
-            Ev::Arrival => 2,
-            Ev::Tick => 3,
-        };
-        self.heap.push(Reverse(HeapEv { t, pri, seq, ev }));
-    }
-
-    /// Live slot for an instance id, if any.
-    #[inline]
-    fn slot_of(&self, id: InstanceId) -> Option<usize> {
-        match self.slots.get(id.0 as usize) {
-            Some(&s) if s != SLOT_NONE => Some(s as usize),
-            _ => None,
-        }
-    }
-
-    /// Mark one instance's cached view stale. Duplicate marks are fine —
-    /// refresh just rewrites the slot twice.
-    #[inline]
-    fn mark_view_dirty(&mut self, idx: usize) {
-        if !self.views_all_dirty {
-            self.views_dirty_idx.push(idx as u32);
-        }
-    }
-
-    /// Bring the cached views up to date. §Perf: the seed rebuilt the whole
-    /// cache on every arrival after any step completed; now per-event
-    /// changes patch only the dirty indices, and a full rebuild happens
-    /// only after structural changes (instance add/retire) — which occur at
-    /// tick frequency, not event frequency.
-    fn refresh_instance_views(&mut self) {
-        if self.views_all_dirty {
-            self.views_all_dirty = false;
-            self.views_dirty_idx.clear();
-            self.views_cache.clear();
-            self.views_cache
-                .extend(self.instances.iter().map(|i| i.view()));
-            return;
-        }
-        // Invariant: with no structural change pending, views_cache is
-        // index-aligned with instances, so dirty indices are in range.
-        for k in 0..self.views_dirty_idx.len() {
-            let i = self.views_dirty_idx[k] as usize;
-            self.instances[i].write_view(&mut self.views_cache[i]);
-        }
-        self.views_dirty_idx.clear();
-    }
-
-    /// Rebuild queue statistics (deadline samples). §Perf: only the global
-    /// autoscaler consumes these, so they refresh per tick, not per event.
-    fn refresh_queue_stats(&mut self) {
-        for (m, stats) in self.queue_stats.iter_mut().enumerate() {
-            let qb = &self.q_batch[m];
-            stats.batch_len = qb.len();
-            stats.interactive_len = self.q_inter[m].len();
-            stats.batch_oldest_arrival = qb.front().map(|w| w.req.arrival);
-            let stride = (qb.len() / QUEUE_SAMPLE).max(1);
-            stats.stride = stride;
-            stats.batch_deadline_sample.clear();
-            let mut i = 0;
-            while i < qb.len() {
-                stats
-                    .batch_deadline_sample
-                    .push(qb[i].req.ttft_deadline());
-                i += stride;
-            }
-        }
-    }
-
-    // NOTE: view construction is inlined via the `view_of!` macro at call
-    // sites so the borrow checker sees the (immutable views_cache / mutable
-    // policy) field borrows as disjoint.
-
+    /// Apply a budget change at the current barrier time.
     fn set_gpus(&mut self, delta: i64) {
         self.gpu_seconds += self.gpus_used as f64 * (self.now - self.last_gpu_change);
         self.last_gpu_change = self.now;
         self.gpus_used = (self.gpus_used as i64 + delta) as u32;
+        if self.cfg.record_gpu_trace {
+            self.report.gpu_trace.push((self.now, self.gpus_used));
+        }
+    }
+
+    /// Drain shard retirements: each frees its GPUs *now* (the barrier) but
+    /// is charged only to its true retire time — `gpu_seconds` stays the
+    /// exact occupancy integral while the budget is barrier-quantized.
+    fn apply_pending_retires(&mut self) {
+        for m in 0..self.shards.len() {
+            let gpi = self.cfg.models[m].gpus_per_instance;
+            // Drain without holding a borrow across set_gpus.
+            let retires = std::mem::take(&mut self.shards[m].pending_retires);
+            for t_retire in retires {
+                self.set_gpus(-(gpi as i64));
+                self.gpu_seconds -= gpi as f64 * (self.now - t_retire);
+            }
+        }
+    }
+
+    // ---- barrier machinery ----------------------------------------------
+
+    /// Replay completions that happened since the last barrier into the
+    /// global policy, in shard order (per-model completion order is the
+    /// shard's event order — exactly what the per-model estimators see in
+    /// the monolithic loop).
+    fn observe_completions(&mut self) {
+        for s in &mut self.shards {
+            for o in &s.outcomes[s.observed_upto..] {
+                self.policy.on_complete(o);
+            }
+            s.observed_upto = s.outcomes.len();
+        }
+    }
+
+    /// Rebuild the merged barrier snapshot (views + queue stats).
+    fn refresh_merged(&mut self) {
+        self.merged_views.clear();
+        for (m, s) in self.shards.iter_mut().enumerate() {
+            self.merged_views.extend_from_slice(s.barrier_views());
+            s.write_queue_stats(&mut self.queue_stats[m]);
+        }
+    }
+
+    fn owner_of(&self, id: InstanceId) -> Option<usize> {
+        self.owner.get(id.0 as usize).map(|&m| m as usize)
     }
 
     fn apply_actions(&mut self, actions: Vec<Action>, warm: bool) {
@@ -455,152 +346,48 @@ impl<'p> Simulation<'p> {
                         .policy
                         .initial_max_batch(spec, class)
                         .clamp(1, MAX_BATCH_CLAMP);
-                    let mut inst =
-                        SimInstance::new(id, class, model, profile, mb, self.now);
+                    let inst = SimInstance::new(id, class, model, profile, mb, self.now);
                     self.set_gpus(spec.gpus_per_instance as i64);
                     self.report.scale_ups += 1;
-                    // Ids are allocated densely, so the slab grows by
-                    // exactly one slot per instance ever created.
-                    debug_assert_eq!(self.slots.len(), id.0 as usize);
-                    if warm {
-                        inst.state = InstanceState::Running;
-                        self.slots.push(self.instances.len() as u32);
-                        self.instances.push(inst);
-                    } else {
-                        let ready = inst.ready_at().unwrap();
-                        self.slots.push(self.instances.len() as u32);
-                        self.instances.push(inst);
-                        self.push_event(ready, Ev::Ready(id));
-                    }
+                    debug_assert_eq!(self.owner.len(), id.0 as usize);
+                    self.owner.push(model as u16);
+                    self.shards[model].add_instance(inst, warm);
                 }
                 Action::RemoveInstance { id } => {
-                    if let Some(idx) = self.slot_of(id) {
-                        let inst = &mut self.instances[idx];
-                        if inst.state != InstanceState::Draining {
-                            inst.state = InstanceState::Draining;
+                    if let Some(m) = self.owner_of(id) {
+                        if self.shards[m].mark_draining(id) {
                             self.report.scale_downs += 1;
                         }
                     }
                 }
                 Action::SetClass { id, class } => {
-                    if let Some(idx) = self.slot_of(id) {
-                        self.instances[idx].class = class;
+                    if let Some(m) = self.owner_of(id) {
+                        self.shards[m].set_class(id, class);
                     }
                 }
             }
         }
-        // Retire any drained instances immediately.
-        self.retire_drained();
-        self.views_all_dirty = true;
+        // Retire any already-drained instances immediately (at the barrier,
+        // so the budget effect lands in this same barrier's drain below).
+        for s in &mut self.shards {
+            s.set_now(self.now);
+            s.retire_drained();
+        }
+        self.apply_pending_retires();
     }
 
-    fn retire_drained(&mut self) {
-        let mut i = 0;
-        while i < self.instances.len() {
-            let inst = &self.instances[i];
-            if inst.state == InstanceState::Draining && inst.is_idle() && !inst.step_in_flight {
-                let gpus = self.cfg.models[inst.model].gpus_per_instance;
-                let id = inst.id;
-                self.set_gpus(-(gpus as i64));
-                self.instances.swap_remove(i);
-                self.slots[id.0 as usize] = SLOT_NONE;
-                if i < self.instances.len() {
-                    let moved = self.instances[i].id;
-                    self.slots[moved.0 as usize] = i as u32;
-                }
-                // Cached views are now misaligned with `instances`.
-                self.views_all_dirty = true;
-                continue;
+    /// Advance every shard through its events up to `until`, on scoped
+    /// worker threads when configured. Shards share no state, so the
+    /// results are bit-identical at any worker count.
+    fn run_shards(&mut self, until: Time) {
+        let workers = self.shard_workers;
+        if workers <= 1 || self.shards.len() <= 1 {
+            for s in &mut self.shards {
+                s.run_epoch(until);
             }
-            i += 1;
-        }
-    }
-
-    /// Try to start a step on an idle instance. Draining instances keep
-    /// stepping (they must finish their running/queued work to retire).
-    fn kick(&mut self, idx: usize) {
-        let inst = &mut self.instances[idx];
-        if inst.step_in_flight
-            || matches!(inst.state, InstanceState::Loading { .. })
-        {
-            return;
-        }
-        if let Some(d) = inst.begin_step(self.now) {
-            let id = inst.id;
-            self.push_event(self.now + d, Ev::StepDone { inst: id, duration: d });
-        }
-    }
-
-    /// Instance pulls work from the global queues per the policy's order.
-    /// Zero-alloc: the view is a stack snapshot (O(1), heap-free) and
-    /// `pull_order` returns a static slice.
-    fn pull_for(&mut self, idx: usize) {
-        let view = self.instances[idx].view();
-        let order = self.policy.pull_order(&view);
-        let model = self.instances[idx].model;
-        for &class in order {
-            loop {
-                let inst = &mut self.instances[idx];
-                if inst.admission_headroom() == 0 {
-                    return;
-                }
-                let q = match class {
-                    RequestClass::Batch => &mut self.q_batch[model],
-                    RequestClass::Interactive => &mut self.q_inter[model],
-                };
-                let Some(front) = q.front() else { break };
-                if !inst.kv_admittable(front.req.input_tokens) {
-                    break;
-                }
-                let item = q.pop_front().unwrap();
-                inst.enqueue(item);
-            }
-        }
-    }
-
-    fn route_item(&mut self, item: WorkItem) {
-        self.refresh_instance_views();
-        let qr = QueuedReq::from_request(&item.req);
-        let view = view_of!(self);
-        let decision = self.policy.route(&qr, &view);
-        match decision {
-            Route::Dispatch(id) => {
-                if let Some(idx) = self.slot_of(id) {
-                    // Interactive dispatch to a full mixed instance evicts
-                    // batch requests back to the global queue (paper §3).
-                    if item.req.class == RequestClass::Interactive
-                        && self.instances[idx].class == InstanceClass::Mixed
-                        && self.instances[idx].admission_headroom() == 0
-                    {
-                        let kv = item.req.input_tokens as u64;
-                        let evicted =
-                            self.instances[idx].evict_batch_for_slots(1, kv, self.now);
-                        for e in evicted {
-                            let w = WorkItem::from_evicted(e);
-                            self.q_batch[w.req.model].push_front(w);
-                        }
-                    }
-                    self.instances[idx].enqueue(item);
-                    self.kick(idx);
-                    // Point-patch the touched instance's cached view so the
-                    // next route sees the updated load without a rebuild.
-                    if idx < self.views_cache.len() {
-                        self.instances[idx].write_view(&mut self.views_cache[idx]);
-                    }
-                } else {
-                    // Stale instance id: queue instead of dropping.
-                    self.queue_item(item);
-                }
-            }
-            Route::Queue => self.queue_item(item),
-        }
-    }
-
-    fn queue_item(&mut self, item: WorkItem) {
-        let m = item.req.model;
-        match item.req.class {
-            RequestClass::Batch => self.q_batch[m].push_back(item),
-            RequestClass::Interactive => self.q_inter[m].push_back(item),
+        } else {
+            let refs: Vec<&mut ModelShard> = self.shards.iter_mut().collect();
+            parallel::run_grid_jobs(workers, refs, |_, s| s.run_epoch(until));
         }
     }
 
@@ -610,21 +397,18 @@ impl<'p> Simulation<'p> {
         let mut mb_sum = 0.0;
         let mut kv_sum = 0.0;
         let mut n_run = 0u32;
-        for i in &self.instances {
-            let c = match i.class {
-                InstanceClass::Interactive => 0,
-                InstanceClass::Mixed => 1,
-                InstanceClass::Batch => 2,
-            };
-            by_class[c] += 1;
-            running += i.running_len() as u32;
-            if i.state == InstanceState::Running {
-                mb_sum += i.max_batch as f64;
-                kv_sum += i.kv_tokens() as f64 / i.profile.kv_capacity_tokens as f64;
-                n_run += 1;
+        let mut queued = 0usize;
+        for s in &self.shards {
+            let (bc, r, mb, kv, nr, q) = s.timeline_stats();
+            for k in 0..3 {
+                by_class[k] += bc[k];
             }
+            running += r;
+            mb_sum += mb;
+            kv_sum += kv;
+            n_run += nr;
+            queued += q;
         }
-        let queued: usize = self.q_batch.iter().map(|q| q.len()).sum();
         self.report.timeline.push(TimelinePoint {
             t: self.now,
             gpus_used: self.gpus_used,
@@ -638,133 +422,189 @@ impl<'p> Simulation<'p> {
         });
     }
 
+    /// Pull arrivals with `arrival <= horizon` from the source into their
+    /// model shards' epoch FIFOs.
+    fn demux_arrivals(&mut self, horizon: Time) {
+        if self.pending_arrival.is_none() && !self.arrivals_done {
+            self.pending_arrival = self.source.next_request();
+            if self.pending_arrival.is_none() {
+                self.arrivals_done = true;
+            }
+        }
+        while let Some(r) = &self.pending_arrival {
+            if r.arrival > horizon {
+                break;
+            }
+            let r = self.pending_arrival.take().unwrap();
+            self.shards[r.model].push_arrival(r);
+            self.pending_arrival = self.source.next_request();
+            if self.pending_arrival.is_none() {
+                self.arrivals_done = true;
+                break;
+            }
+        }
+    }
+
+    fn arrived(&self) -> usize {
+        self.shards.iter().map(|s| s.arrived).sum()
+    }
+
+    fn completed(&self) -> usize {
+        self.shards.iter().map(|s| s.completed).sum()
+    }
+
+    /// Every request that will ever arrive has been delivered and completed.
+    fn all_work_done(&self) -> bool {
+        self.arrivals_done
+            && self.pending_arrival.is_none()
+            && self.completed() >= self.arrived()
+    }
+
+    /// End-of-run settlement: replay any unobserved completions into the
+    /// policy, integrate GPU occupancy to `end` (crediting retirements that
+    /// happened during the final, broken-out-of epoch), and assemble the
+    /// report.
+    fn finish(mut self, end: Time) -> SimReport {
+        self.observe_completions();
+        self.gpu_seconds += self.gpus_used as f64 * (end - self.last_gpu_change);
+        for m in 0..self.shards.len() {
+            let gpi = self.cfg.models[m].gpus_per_instance;
+            let retires = std::mem::take(&mut self.shards[m].pending_retires);
+            for t_retire in retires {
+                self.gpu_seconds -= gpi as f64 * (end - t_retire);
+            }
+        }
+        let arrived = self.arrived();
+        let completed = self.completed();
+        for s in &mut self.shards {
+            self.report.outcomes.append(&mut s.outcomes);
+            self.report.total_tokens += s.total_tokens;
+        }
+        self.report.gpu_seconds = self.gpu_seconds;
+        self.report.end_time = end;
+        self.report.total_requests = self.total_hint.unwrap_or(arrived);
+        self.report.unfinished = self.report.total_requests - completed;
+        self.report.policy = self.policy.name().to_string();
+        self.report
+    }
+
+    /// Earliest unprocessed event across shards, the undelivered arrival,
+    /// and the upcoming tick — the event the monolithic loop would have
+    /// popped next (used for `end_time` when the time cap cuts a run short).
+    fn next_global_event(&self, next_tick: Time) -> Time {
+        let mut t = next_tick;
+        for s in &self.shards {
+            if let Some(ts) = s.next_event_time() {
+                t = t.min(ts);
+            }
+        }
+        if let Some(r) = &self.pending_arrival {
+            t = t.min(r.arrival);
+        }
+        t
+    }
+
     /// Run the simulation to completion.
     pub fn run(mut self) -> SimReport {
-        // Bootstrap the cluster.
-        self.views_all_dirty = true;
-        self.refresh_instance_views();
-        self.refresh_queue_stats();
-        let view = view_of!(self);
-        let boot = self.policy.bootstrap(&view);
+        // Bootstrap the cluster at t = 0.
+        self.refresh_merged();
+        let boot = {
+            let view = ClusterView {
+                now: self.now,
+                instances: &self.merged_views,
+                queues: &self.queue_stats,
+                models: &self.cfg.models,
+                gpus_total: self.cfg.gpus_total,
+                gpus_used: self.gpus_used,
+            };
+            self.policy.bootstrap(&view)
+        };
         let warm = self.cfg.warm_bootstrap;
         self.apply_actions(boot, warm);
 
-        // Stream arrivals: only the next arrival lives in the heap.
-        self.schedule_next_arrival();
-        self.push_event(self.cfg.tick_interval, Ev::Tick);
+        let cap = self.cfg.max_sim_time;
+        let mut next_tick = self.cfg.tick_interval;
+        loop {
+            // Epoch (prev_tick, next_tick]: deliver this window's arrivals
+            // (never past the cap — the monolithic loop stopped before
+            // processing any event beyond it) and advance every shard.
+            let run_until = next_tick.min(cap);
+            self.demux_arrivals(run_until);
+            let completed_before = self.completed();
+            self.run_shards(run_until);
 
-        while let Some(Reverse(HeapEv { t, ev, .. })) = self.heap.pop() {
-            self.now = t;
-            if self.now > self.cfg.max_sim_time {
-                break;
+            // All work finished mid-epoch: the monolithic loop broke at the
+            // final completing StepDone, before any tick at or after it.
+            if self.all_work_done() && self.completed() > completed_before {
+                let end = self
+                    .shards
+                    .iter()
+                    .map(|s| s.last_completion)
+                    .fold(f64::NEG_INFINITY, f64::max);
+                return self.finish(end);
             }
-            match ev {
-                Ev::Arrival => {
-                    let req = self
-                        .pending_arrival
-                        .take()
-                        .expect("an Arrival event always has a pending request");
-                    self.arrived += 1;
-                    self.schedule_next_arrival();
-                    self.route_item(WorkItem::fresh(req));
-                }
-                Ev::Ready(iid) => {
-                    if let Some(idx) = self.slot_of(iid) {
-                        if matches!(self.instances[idx].state, InstanceState::Loading { .. }) {
-                            self.instances[idx].state = InstanceState::Running;
-                        }
-                        self.pull_for(idx);
-                        self.kick(idx);
-                        self.mark_view_dirty(idx);
-                    }
-                }
-                Ev::StepDone { inst: iid, duration } => {
-                    let Some(idx) = self.slot_of(iid) else {
-                        continue;
-                    };
-                    let result = self.instances[idx].finish_step(self.now, duration);
-                    // Stale immediately: eviction re-routes below consult
-                    // the cached views through route_item.
-                    self.mark_view_dirty(idx);
-                    self.completed += result.completed.len();
-                    self.report.total_tokens += result.tokens_emitted;
-                    for o in &result.completed {
-                        self.policy.on_complete(o);
-                    }
-                    self.report.outcomes.extend(result.completed);
-                    // Evicted batch requests return to the global queue
-                    // head (FCFS); evicted interactive requests re-route
-                    // immediately (zero-queuing — they must not wait behind
-                    // the batch backlog).
-                    for e in result.evicted {
-                        let w = WorkItem::from_evicted(e);
-                        if w.req.class == RequestClass::Interactive {
-                            self.route_item(w);
-                        } else {
-                            self.q_batch[w.req.model].push_front(w);
-                        }
-                    }
-                    // Local autoscaler (stack-snapshot view; O(1)).
-                    let v = self.instances[idx].view();
-                    if let Some(mb) = self.policy.on_step(&v, self.now) {
-                        self.instances[idx].max_batch = mb.clamp(1, MAX_BATCH_CLAMP);
-                    }
-                    // Pull more work, continue stepping, or retire.
-                    self.pull_for(idx);
-                    self.kick(idx);
-                    // Mark again: pull/kick changed the load since the
-                    // eviction re-route refreshed this slot.
-                    self.mark_view_dirty(idx);
-                    self.retire_drained();
-                    if self.all_work_done() {
-                        break;
-                    }
-                }
-                Ev::Tick => {
-                    self.ticks += 1;
-                    // Idle instances with queued matching work pull on ticks.
-                    for idx in 0..self.instances.len() {
-                        if !self.instances[idx].step_in_flight
-                            && self.instances[idx].state == InstanceState::Running
-                        {
-                            self.pull_for(idx);
-                            self.kick(idx);
-                        }
-                    }
-                    self.views_all_dirty = true;
-                    self.refresh_instance_views();
-                    self.refresh_queue_stats();
-                    let view = view_of!(self);
-                    let actions = self.policy.autoscale(&view);
-                    self.apply_actions(actions, false);
-                    if self.cfg.timeline_every > 0
-                        && self.ticks % self.cfg.timeline_every as u64 == 0
-                    {
-                        self.sample_timeline();
-                    }
-                    if !self.all_work_done() {
-                        self.push_event(self.now + self.cfg.tick_interval, Ev::Tick);
-                    }
-                }
+
+            // Time cap reached before this barrier: end at the first event
+            // the monolithic loop would have popped past the cap.
+            if next_tick > cap {
+                let end = self.next_global_event(next_tick);
+                return self.finish(end);
             }
+
+            // ---- barrier: the global-autoscaler tick -------------------
+            self.now = next_tick;
+            self.ticks += 1;
+            let was_done = self.all_work_done();
+            self.observe_completions();
+            self.apply_pending_retires();
+            for s in &mut self.shards {
+                s.set_now(next_tick);
+                s.tick_pull_kick();
+            }
+            self.refresh_merged();
+            let actions = {
+                let view = ClusterView {
+                    now: self.now,
+                    instances: &self.merged_views,
+                    queues: &self.queue_stats,
+                    models: &self.cfg.models,
+                    gpus_total: self.cfg.gpus_total,
+                    gpus_used: self.gpus_used,
+                };
+                self.policy.autoscale(&view)
+            };
+            self.apply_actions(actions, false);
+            if self.cfg.timeline_every > 0
+                && self.ticks % self.cfg.timeline_every as u64 == 0
+            {
+                self.sample_timeline();
+            }
+
+            if was_done {
+                // Work was already complete when this tick fired (e.g. an
+                // empty workload): the monolithic loop processed this tick,
+                // did not reschedule it, then drained any straggler events
+                // (Ready from a cold add) before exiting.
+                let drain_until = cap;
+                self.run_shards(drain_until);
+                let mut end = self
+                    .shards
+                    .iter()
+                    .map(|s| s.last_event)
+                    .fold(self.now, f64::max);
+                let next = self.next_global_event(f64::INFINITY);
+                if next.is_finite() {
+                    end = next; // first event past the cap breaks the loop
+                }
+                return self.finish(end);
+            }
+            next_tick += self.cfg.tick_interval;
         }
-
-        // Final accounting. Sources without an exact up-front total (e.g.
-        // stop-truncated scenario streams) report the arrived count; a
-        // known total also counts never-arrived requests (time cap hit) as
-        // unfinished, matching the materialized-trace semantics.
-        self.gpu_seconds += self.gpus_used as f64 * (self.now - self.last_gpu_change);
-        self.report.gpu_seconds = self.gpu_seconds;
-        self.report.end_time = self.now;
-        self.report.total_requests = self.total_hint.unwrap_or(self.arrived);
-        self.report.unfinished = self.report.total_requests - self.completed;
-        self.report.policy = self.policy.name().to_string();
-        self.report
     }
 }
 
 /// Convenience: run a trace under a policy and config.
-pub fn run_sim(cfg: SimConfig, trace: Trace, policy: &mut dyn Policy) -> SimReport {
+pub fn run_sim(cfg: SimConfig, trace: Trace, policy: &mut dyn GlobalPolicy) -> SimReport {
     Simulation::new(cfg, trace, policy).run()
 }
 
@@ -772,7 +612,7 @@ pub fn run_sim(cfg: SimConfig, trace: Trace, policy: &mut dyn Policy) -> SimRepo
 pub fn run_sim_source(
     cfg: SimConfig,
     source: Box<dyn ArrivalSource>,
-    policy: &mut dyn Policy,
+    policy: &mut dyn GlobalPolicy,
 ) -> SimReport {
     Simulation::from_source(cfg, source, policy).run()
 }

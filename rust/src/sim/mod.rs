@@ -1,20 +1,27 @@
 //! Discrete-event cluster simulator substrate.
 //!
 //! The paper evaluates Chiron on a 50×A100 elastic cloud running vLLM; this
-//! module provides the equivalent substrate: simulated continuous-batching
-//! instances (`instance`), the GPU pool + event loop (`cluster`), and the
-//! policy interface (`policy`) that Chiron and every baseline implement.
-//! The same `Policy` objects also drive the real PJRT-backed engine in
-//! `crate::server`.
+//! module provides the equivalent substrate, structured as the paper's
+//! hierarchy: simulated continuous-batching instances (`instance`),
+//! per-model event-loop shards (`shard`), the epoch driver that advances
+//! shards between global-autoscaler tick barriers (`cluster`), and the
+//! split policy interface (`policy` — `LocalPolicy` per model,
+//! `GlobalPolicy` across models) that Chiron and every baseline implement.
+//! The same policy objects also drive the real PJRT-backed engine in
+//! `crate::server`. See `README.md` in this directory for the shard/barrier
+//! design and the determinism argument.
 
 pub mod cluster;
 pub mod instance;
 pub mod policy;
+pub mod shard;
 
 pub use cluster::{
     run_sim, run_sim_source, SimConfig, SimReport, Simulation, TimelinePoint, MAX_BATCH_CLAMP,
 };
 pub use instance::{Evicted, SimInstance, StepResult, WorkItem};
 pub use policy::{
-    Action, ClusterView, InstanceState, InstanceView, Policy, QueueStats, QueuedReq, Route,
+    Action, ClusterView, GlobalPolicy, InstanceState, InstanceView, LocalPolicy, ModelView,
+    Policy, QueueStats, QueuedReq, Route,
 };
+pub use shard::ModelShard;

@@ -1,12 +1,21 @@
 //! The autoscaling-policy interface the simulator (and the real server)
-//! drive. Chiron (`coordinator::chiron`) and all baselines
-//! (`baselines::*`) implement `Policy`.
+//! drive, split along the paper's hierarchy:
 //!
-//! The split mirrors the paper's hierarchy:
-//!  - `route` / `pull_order` — request placement (global queue vs instance);
-//!  - `on_step` — the *local* autoscaler (per-instance max batch size);
-//!  - `autoscale` — the *global* autoscaler (instance add/remove), invoked
-//!    on a periodic tick.
+//!  - [`LocalPolicy`] — the per-model half: request placement (`route` /
+//!    `pull_order`) and the per-instance batch-size autoscaler (`on_step`).
+//!    One instance exists per model, owns only per-model state, and runs
+//!    inside that model's event-loop shard (`sim::shard::ModelShard`) — so
+//!    it must be `Send` and must only read the [`ModelView`] it is handed.
+//!  - [`GlobalPolicy`] — the cross-model half: `bootstrap` and the periodic
+//!    `autoscale` over the merged [`ClusterView`], plus the completion
+//!    observations (`on_complete`) that feed its estimators. It runs only
+//!    at tick barriers on the driver thread and manufactures the local
+//!    halves via `make_local`.
+//!
+//! Chiron (`coordinator::chiron`) and all baselines (`baselines::*`)
+//! implement the pair. `Policy` remains as an alias for [`GlobalPolicy`] so
+//! `Box<dyn Policy>` call sites (experiments, config, examples) read
+//! unchanged.
 
 use crate::core::{InstanceClass, InstanceId, ModelSpec, Request, RequestClass, Time};
 
@@ -114,7 +123,23 @@ pub struct QueueStats {
     pub stride: usize,
 }
 
-/// Read-only cluster snapshot.
+/// Read-only snapshot of one model's slice of the cluster, handed to
+/// [`LocalPolicy`] calls between tick barriers. `instances` holds only this
+/// model's instances, so per-event routing never observes (or depends on)
+/// other shards' mid-epoch state — the structural guarantee that makes
+/// shard parallelism bit-identical to a sequential run.
+#[derive(Debug)]
+pub struct ModelView<'a> {
+    pub now: Time,
+    /// The model index this view covers.
+    pub model: usize,
+    /// This model's instances (every view's `model` equals `self.model`).
+    pub instances: &'a [InstanceView],
+}
+
+/// Read-only cluster snapshot. Only materialized at tick barriers, where
+/// the epoch driver merges every shard's instance views and queue summaries
+/// for the global autoscaler.
 #[derive(Debug)]
 pub struct ClusterView<'a> {
     pub now: Time,
@@ -165,37 +190,56 @@ pub enum Route {
     Queue,
 }
 
-/// An autoscaling policy under evaluation.
-pub trait Policy {
-    fn name(&self) -> &str;
-
+/// The per-model (local) half of an autoscaling policy. Owned by one
+/// model's event-loop shard and driven between tick barriers; `Send` so
+/// shards can run on scoped worker threads.
+pub trait LocalPolicy: Send {
     /// Route a request at arrival (or when re-queued after eviction).
-    fn route(&mut self, req: &QueuedReq, view: &ClusterView) -> Route;
+    /// Sees only its own model's instances.
+    fn route(&mut self, req: &QueuedReq, view: &ModelView) -> Route;
 
     /// Which global queues may `inst` pull from when it has headroom, in
     /// priority order. Returns a static slice: this runs after every engine
     /// step, and per-call `Vec`s were measurable allocator traffic.
     fn pull_order(&self, inst: &InstanceView) -> &'static [RequestClass];
 
-    /// Local autoscaler: called after each engine step of `inst`; returns
-    /// the new max batch size if it should change.
+    /// Local autoscaler (paper Algorithm 1): called after each engine step
+    /// of `inst`; returns the new max batch size if it should change.
     fn on_step(&mut self, inst: &InstanceView, now: Time) -> Option<u32>;
+}
+
+/// The cross-model (global) half of an autoscaling policy: bootstrap and
+/// the periodic instance autoscaler, invoked only at tick barriers over the
+/// merged cluster snapshot.
+pub trait GlobalPolicy {
+    fn name(&self) -> &str;
+
+    /// Build the per-model local half. Called once per model when a
+    /// simulation (or server) starts; all per-model routing/batch state
+    /// lives in the returned object.
+    fn make_local(&self, model: usize) -> Box<dyn LocalPolicy>;
 
     /// Global autoscaler: called on each tick; returns scaling actions.
     fn autoscale(&mut self, view: &ClusterView) -> Vec<Action>;
+
+    /// Initial cluster composition before the trace starts.
+    fn bootstrap(&mut self, view: &ClusterView) -> Vec<Action>;
 
     /// Initial max batch size for a newly added instance.
     fn initial_max_batch(&self, _model: &ModelSpec, _class: InstanceClass) -> u32 {
         8
     }
 
-    /// Initial cluster composition before the trace starts.
-    fn bootstrap(&mut self, view: &ClusterView) -> Vec<Action>;
-
-    /// Completion callback: lets estimators fit output-length statistics
+    /// Completion observation: lets estimators fit output-length statistics
     /// from observed completions (QLM-style), never from ground truth.
+    /// Shards record completions as they happen; the driver replays them
+    /// here — per-model order preserved — before each `autoscale` call.
     fn on_complete(&mut self, _outcome: &crate::core::RequestOutcome) {}
 }
+
+/// Compat alias: the pre-split trait name. `Box<dyn Policy>` is the global
+/// half (which carries the `make_local` factory for the rest).
+pub use self::GlobalPolicy as Policy;
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,546 @@
+//! `ModelShard` — one model's slice of the cluster simulation: its own
+//! event heap, instance slab, global request queues, cached policy views,
+//! and the per-model [`LocalPolicy`] that routes and batch-scales it.
+//!
+//! Chiron's hierarchy makes models independent between global-autoscaler
+//! ticks: routing, engine steps, evictions, and local batch-size decisions
+//! for model *m* read and write only model *m*'s state. The shard encodes
+//! that independence structurally — it holds no reference to any other
+//! model — so the epoch driver (`sim::cluster`) can advance all shards to
+//! the next tick barrier concurrently, with results bit-identical to a
+//! sequential pass (see `sim/README.md` for the determinism argument).
+//!
+//! Event ordering within a shard replicates the monolithic loop exactly:
+//! events are ordered by `(time, priority, sequence)` with Ready(0) <
+//! StepDone(1) < Arrival(2) < barrier-Tick(3). Arrivals are not heap
+//! entries: the driver demuxes the streaming `ArrivalSource` into a
+//! per-shard FIFO for each epoch, and the shard merges that FIFO with its
+//! heap (heap events win time ties because their priorities are lower).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::core::{InstanceClass, InstanceId, Request, RequestClass, RequestOutcome, Time};
+use crate::sim::instance::{SimInstance, WorkItem};
+use crate::sim::policy::{
+    InstanceState, InstanceView, LocalPolicy, ModelView, QueueStats, QueuedReq, Route,
+};
+
+/// Hard clamp on policy-requested batch sizes (the paper's observed maximum
+/// useful batch is 4096; 16384 leaves room for sweep experiments).
+pub const MAX_BATCH_CLAMP: u32 = 16_384;
+
+/// Deadline-sample size exposed to policies for large batch queues.
+const QUEUE_SAMPLE: usize = 2_048;
+
+/// Slab sentinel: this `InstanceId` has no live slot in this shard.
+const SLOT_NONE: u32 = u32::MAX;
+
+/// Shard-local event. The periodic autoscaler tick is not an event here —
+/// it is the epoch boundary the driver advances every shard to.
+#[derive(Debug)]
+enum Ev {
+    StepDone { inst: InstanceId, duration: Time },
+    Ready(InstanceId),
+}
+
+/// Heap entry: payload carried inline, ordered by (time, priority,
+/// sequence) so Ready precedes StepDone at equal timestamps and ties stay
+/// deterministic (sequence = shard-local insertion order).
+struct HeapEv {
+    t: f64,
+    pri: u8,
+    seq: u64,
+    ev: Ev,
+}
+impl PartialEq for HeapEv {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.pri == other.pri && self.seq == other.seq
+    }
+}
+impl Eq for HeapEv {}
+impl PartialOrd for HeapEv {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEv {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t
+            .partial_cmp(&other.t)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.pri.cmp(&other.pri))
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Event priority of arrivals relative to heap events (Ready=0, StepDone=1).
+const PRI_ARRIVAL: u8 = 2;
+
+/// One model's event-loop shard.
+pub struct ModelShard {
+    pub model: usize,
+    heap: BinaryHeap<Reverse<HeapEv>>,
+    seq: u64,
+    now: Time,
+    instances: Vec<SimInstance>,
+    /// Slab keyed on the *global* `InstanceId.0` (ids are allocated by the
+    /// driver across all shards, so this is sparse: other models' ids stay
+    /// `SLOT_NONE`). One u32 per instance ever created is trivial memory
+    /// and keeps the O(1) id→slot lookup of the monolithic loop.
+    slots: Vec<u32>,
+    // This model's global queues.
+    q_batch: VecDeque<WorkItem>,
+    q_inter: VecDeque<WorkItem>,
+    /// The per-model half of the policy hierarchy.
+    local: Box<dyn LocalPolicy>,
+    /// Cached per-instance views, index-aligned with `instances`.
+    views_cache: Vec<InstanceView>,
+    views_dirty_idx: Vec<u32>,
+    views_all_dirty: bool,
+    /// Epoch arrival FIFO, demuxed from the streaming source by the driver.
+    /// Every request in it arrives before (or at) the next barrier.
+    arrivals: VecDeque<Request>,
+    /// Completions in shard-event order. The driver replays the suffix past
+    /// `observed_upto` into the global policy at each barrier.
+    pub outcomes: Vec<RequestOutcome>,
+    pub observed_upto: usize,
+    pub arrived: usize,
+    pub completed: usize,
+    pub total_tokens: f64,
+    /// Time of the most recent completion (−∞ before any).
+    pub last_completion: Time,
+    /// Time of the most recent processed event (−∞ before any).
+    pub last_event: Time,
+    /// Mid-epoch retirements: one entry per retired instance, carrying the
+    /// exact retire time. The cluster-level GPU budget only changes at
+    /// barriers, so the driver drains these there — decrementing the budget
+    /// and crediting `gpu_seconds` back to the true retire time.
+    pub pending_retires: Vec<Time>,
+}
+
+impl ModelShard {
+    pub fn new(model: usize, local: Box<dyn LocalPolicy>) -> Self {
+        ModelShard {
+            model,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+            instances: Vec::new(),
+            slots: Vec::new(),
+            q_batch: VecDeque::new(),
+            q_inter: VecDeque::new(),
+            local,
+            views_cache: Vec::new(),
+            views_dirty_idx: Vec::new(),
+            views_all_dirty: true,
+            arrivals: VecDeque::new(),
+            outcomes: Vec::new(),
+            observed_upto: 0,
+            arrived: 0,
+            completed: 0,
+            total_tokens: 0.0,
+            last_completion: f64::NEG_INFINITY,
+            last_event: f64::NEG_INFINITY,
+            pending_retires: Vec::new(),
+        }
+    }
+
+    // ---- event plumbing --------------------------------------------------
+
+    fn push_event(&mut self, t: Time, ev: Ev) {
+        let seq = self.seq;
+        self.seq += 1;
+        let pri = match ev {
+            Ev::Ready(_) => 0,
+            Ev::StepDone { .. } => 1,
+        };
+        self.heap.push(Reverse(HeapEv { t, pri, seq, ev }));
+    }
+
+    /// Deliver one epoch arrival (driver-side demux; must be time-ordered).
+    pub fn push_arrival(&mut self, req: Request) {
+        debug_assert!(self.arrivals.back().map_or(true, |b| b.arrival <= req.arrival));
+        self.arrivals.push_back(req);
+    }
+
+    /// Timestamp of the next unprocessed event, if any (end-time candidate
+    /// when the simulated-time cap cuts an epoch short).
+    pub fn next_event_time(&self) -> Option<Time> {
+        let heap_t = self.heap.peek().map(|Reverse(e)| e.t);
+        let arr_t = self.arrivals.front().map(|r| r.arrival);
+        match (heap_t, arr_t) {
+            (Some(h), Some(a)) => Some(h.min(a)),
+            (h, a) => h.or(a),
+        }
+    }
+
+    /// Advance this shard's event loop through every event with `t <=
+    /// until` (the next barrier, or the simulated-time cap if that comes
+    /// first). Touches only shard-local state — safe to run concurrently
+    /// with other shards.
+    pub fn run_epoch(&mut self, until: Time) {
+        loop {
+            let heap_key = self.heap.peek().map(|Reverse(e)| (e.t, e.pri));
+            let arr_t = self.arrivals.front().map(|r| r.arrival);
+            let take_arrival = match (arr_t, heap_key) {
+                (None, None) => break,
+                (Some(ta), None) => {
+                    if ta > until {
+                        break;
+                    }
+                    true
+                }
+                (None, Some((th, _))) => {
+                    if th > until {
+                        break;
+                    }
+                    false
+                }
+                (Some(ta), Some((th, _))) => {
+                    if ta.min(th) > until {
+                        break;
+                    }
+                    // Heap events (pri 0/1) beat arrivals (pri 2) on ties —
+                    // identical to the monolithic loop's priority order.
+                    debug_assert!(PRI_ARRIVAL > 1);
+                    ta < th
+                }
+            };
+            if take_arrival {
+                let req = self.arrivals.pop_front().unwrap();
+                self.now = req.arrival;
+                self.last_event = self.now;
+                self.arrived += 1;
+                self.route_item(WorkItem::fresh(req));
+            } else {
+                let Reverse(HeapEv { t, ev, .. }) = self.heap.pop().unwrap();
+                self.now = t;
+                self.last_event = t;
+                match ev {
+                    Ev::Ready(iid) => self.on_ready(iid),
+                    Ev::StepDone { inst, duration } => self.on_step_done(inst, duration),
+                }
+            }
+        }
+    }
+
+    fn on_ready(&mut self, iid: InstanceId) {
+        if let Some(idx) = self.slot_of(iid) {
+            if matches!(self.instances[idx].state, InstanceState::Loading { .. }) {
+                self.instances[idx].state = InstanceState::Running;
+            }
+            self.pull_for(idx);
+            self.kick(idx);
+            self.mark_view_dirty(idx);
+        }
+    }
+
+    fn on_step_done(&mut self, iid: InstanceId, duration: Time) {
+        let Some(idx) = self.slot_of(iid) else {
+            return;
+        };
+        let result = self.instances[idx].finish_step(self.now, duration);
+        // Stale immediately: eviction re-routes below consult the cached
+        // views through route_item.
+        self.mark_view_dirty(idx);
+        self.completed += result.completed.len();
+        self.total_tokens += result.tokens_emitted;
+        if !result.completed.is_empty() {
+            self.last_completion = self.now;
+        }
+        // The global policy's completion observations are replayed by the
+        // driver at the next barrier (per-model order preserved — the
+        // estimators are per-model and only read at barriers, so deferring
+        // is observation-equivalent to the monolithic loop).
+        self.outcomes.extend(result.completed);
+        // Evicted batch requests return to the global queue head (FCFS);
+        // evicted interactive requests re-route immediately (zero-queuing —
+        // they must not wait behind the batch backlog).
+        for e in result.evicted {
+            let w = WorkItem::from_evicted(e);
+            if w.req.class == RequestClass::Interactive {
+                self.route_item(w);
+            } else {
+                self.q_batch.push_front(w);
+            }
+        }
+        // Local autoscaler (stack-snapshot view; O(1)).
+        let v = self.instances[idx].view();
+        if let Some(mb) = self.local.on_step(&v, self.now) {
+            self.instances[idx].max_batch = mb.clamp(1, MAX_BATCH_CLAMP);
+        }
+        // Pull more work, continue stepping, or retire.
+        self.pull_for(idx);
+        self.kick(idx);
+        self.mark_view_dirty(idx);
+        self.retire_drained();
+    }
+
+    // ---- instance slab + views ------------------------------------------
+
+    #[inline]
+    fn slot_of(&self, id: InstanceId) -> Option<usize> {
+        match self.slots.get(id.0 as usize) {
+            Some(&s) if s != SLOT_NONE => Some(s as usize),
+            _ => None,
+        }
+    }
+
+    fn slot_insert(&mut self, id: InstanceId, idx: usize) {
+        let k = id.0 as usize;
+        if self.slots.len() <= k {
+            self.slots.resize(k + 1, SLOT_NONE);
+        }
+        self.slots[k] = idx as u32;
+    }
+
+    #[inline]
+    fn mark_view_dirty(&mut self, idx: usize) {
+        if !self.views_all_dirty {
+            self.views_dirty_idx.push(idx as u32);
+        }
+    }
+
+    /// Bring the cached views up to date: point-patch dirty indices, full
+    /// rebuild only after structural changes (add/retire).
+    fn refresh_instance_views(&mut self) {
+        if self.views_all_dirty {
+            self.views_all_dirty = false;
+            self.views_dirty_idx.clear();
+            self.views_cache.clear();
+            self.views_cache
+                .extend(self.instances.iter().map(|i| i.view()));
+            return;
+        }
+        for k in 0..self.views_dirty_idx.len() {
+            let i = self.views_dirty_idx[k] as usize;
+            self.instances[i].write_view(&mut self.views_cache[i]);
+        }
+        self.views_dirty_idx.clear();
+    }
+
+    /// Full refresh + read access for the driver's barrier-time merge.
+    pub fn barrier_views(&mut self) -> &[InstanceView] {
+        self.views_all_dirty = true;
+        self.refresh_instance_views();
+        &self.views_cache
+    }
+
+    /// Rebuild this model's queue statistics into the driver-owned slot
+    /// (barrier-time only: only the global autoscaler consumes these).
+    pub fn write_queue_stats(&self, stats: &mut QueueStats) {
+        let qb = &self.q_batch;
+        stats.batch_len = qb.len();
+        stats.interactive_len = self.q_inter.len();
+        stats.batch_oldest_arrival = qb.front().map(|w| w.req.arrival);
+        let stride = (qb.len() / QUEUE_SAMPLE).max(1);
+        stats.stride = stride;
+        stats.batch_deadline_sample.clear();
+        let mut i = 0;
+        while i < qb.len() {
+            stats.batch_deadline_sample.push(qb[i].req.ttft_deadline());
+            i += stride;
+        }
+    }
+
+    // ---- driver-applied structural changes (barrier only) ----------------
+
+    /// Install a driver-built instance; schedules its Ready event unless
+    /// the bootstrap is warm.
+    pub fn add_instance(&mut self, mut inst: SimInstance, warm: bool) {
+        let id = inst.id;
+        if warm {
+            inst.state = InstanceState::Running;
+            self.slot_insert(id, self.instances.len());
+            self.instances.push(inst);
+        } else {
+            let ready = inst.ready_at().expect("fresh instances are Loading");
+            self.slot_insert(id, self.instances.len());
+            self.instances.push(inst);
+            self.push_event(ready, Ev::Ready(id));
+        }
+        self.views_all_dirty = true;
+    }
+
+    /// Graceful removal; returns true when the instance newly drains (the
+    /// driver counts it as a scale-down).
+    pub fn mark_draining(&mut self, id: InstanceId) -> bool {
+        if let Some(idx) = self.slot_of(id) {
+            let inst = &mut self.instances[idx];
+            if inst.state != InstanceState::Draining {
+                inst.state = InstanceState::Draining;
+                self.views_all_dirty = true;
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn set_class(&mut self, id: InstanceId, class: InstanceClass) {
+        if let Some(idx) = self.slot_of(id) {
+            self.instances[idx].class = class;
+            self.views_all_dirty = true;
+        }
+    }
+
+    /// Retire drained instances. Instance state updates immediately (the
+    /// slot frees and the instance stops existing for routing), but the
+    /// GPU-budget effect is recorded in `pending_retires` for the driver to
+    /// apply at the next barrier — between barriers the cluster-level
+    /// budget is frozen.
+    pub fn retire_drained(&mut self) {
+        let mut i = 0;
+        while i < self.instances.len() {
+            let inst = &self.instances[i];
+            if inst.state == InstanceState::Draining && inst.is_idle() && !inst.step_in_flight {
+                let id = inst.id;
+                self.instances.swap_remove(i);
+                self.slots[id.0 as usize] = SLOT_NONE;
+                if i < self.instances.len() {
+                    let moved = self.instances[i].id;
+                    self.slots[moved.0 as usize] = i as u32;
+                }
+                self.views_all_dirty = true;
+                self.pending_retires.push(self.now);
+                continue;
+            }
+            i += 1;
+        }
+    }
+
+    /// The per-tick idle-instance pull: instances with queued matching work
+    /// pull and kick at the barrier (monolithic `Ev::Tick` behavior).
+    pub fn tick_pull_kick(&mut self) {
+        for idx in 0..self.instances.len() {
+            if !self.instances[idx].step_in_flight
+                && self.instances[idx].state == InstanceState::Running
+            {
+                self.pull_for(idx);
+                self.kick(idx);
+            }
+        }
+    }
+
+    /// Set the shard clock (the driver aligns shards to the barrier time
+    /// before applying actions, so Ready events and retire stamps created
+    /// at the barrier carry the right time).
+    pub fn set_now(&mut self, now: Time) {
+        self.now = now;
+    }
+
+    /// Timeline-sample contribution: (per-class counts, running requests,
+    /// Σ max_batch, Σ kv-utilization, running-instance count, queued batch).
+    pub fn timeline_stats(&self) -> ([u32; 3], u32, f64, f64, u32, usize) {
+        let mut by_class = [0u32; 3];
+        let mut running = 0u32;
+        let mut mb_sum = 0.0;
+        let mut kv_sum = 0.0;
+        let mut n_run = 0u32;
+        for i in &self.instances {
+            let c = match i.class {
+                InstanceClass::Interactive => 0,
+                InstanceClass::Mixed => 1,
+                InstanceClass::Batch => 2,
+            };
+            by_class[c] += 1;
+            running += i.running_len() as u32;
+            if i.state == InstanceState::Running {
+                mb_sum += i.max_batch as f64;
+                kv_sum += i.kv_tokens() as f64 / i.profile.kv_capacity_tokens as f64;
+                n_run += 1;
+            }
+        }
+        (by_class, running, mb_sum, kv_sum, n_run, self.q_batch.len())
+    }
+
+    // ---- work movement ---------------------------------------------------
+
+    /// Try to start a step on an idle instance. Draining instances keep
+    /// stepping (they must finish their running/queued work to retire).
+    fn kick(&mut self, idx: usize) {
+        let inst = &mut self.instances[idx];
+        if inst.step_in_flight || matches!(inst.state, InstanceState::Loading { .. }) {
+            return;
+        }
+        if let Some(d) = inst.begin_step(self.now) {
+            let id = inst.id;
+            self.push_event(self.now + d, Ev::StepDone { inst: id, duration: d });
+        }
+    }
+
+    /// Instance pulls work from this model's global queues per the local
+    /// policy's order. Zero-alloc: the view is a stack snapshot and
+    /// `pull_order` returns a static slice.
+    fn pull_for(&mut self, idx: usize) {
+        let view = self.instances[idx].view();
+        let order = self.local.pull_order(&view);
+        for &class in order {
+            loop {
+                let inst = &mut self.instances[idx];
+                if inst.admission_headroom() == 0 {
+                    return;
+                }
+                let q = match class {
+                    RequestClass::Batch => &mut self.q_batch,
+                    RequestClass::Interactive => &mut self.q_inter,
+                };
+                let Some(front) = q.front() else { break };
+                if !inst.kv_admittable(front.req.input_tokens) {
+                    break;
+                }
+                let item = q.pop_front().unwrap();
+                inst.enqueue(item);
+            }
+        }
+    }
+
+    fn route_item(&mut self, item: WorkItem) {
+        self.refresh_instance_views();
+        let qr = QueuedReq::from_request(&item.req);
+        let view = ModelView {
+            now: self.now,
+            model: self.model,
+            instances: &self.views_cache,
+        };
+        let decision = self.local.route(&qr, &view);
+        match decision {
+            Route::Dispatch(id) => {
+                if let Some(idx) = self.slot_of(id) {
+                    // Interactive dispatch to a full mixed instance evicts
+                    // batch requests back to the global queue (paper §3).
+                    if item.req.class == RequestClass::Interactive
+                        && self.instances[idx].class == InstanceClass::Mixed
+                        && self.instances[idx].admission_headroom() == 0
+                    {
+                        let kv = item.req.input_tokens as u64;
+                        let evicted =
+                            self.instances[idx].evict_batch_for_slots(1, kv, self.now);
+                        for e in evicted {
+                            let w = WorkItem::from_evicted(e);
+                            self.q_batch.push_front(w);
+                        }
+                    }
+                    self.instances[idx].enqueue(item);
+                    self.kick(idx);
+                    // Point-patch the touched instance's cached view so the
+                    // next route sees the updated load without a rebuild.
+                    if idx < self.views_cache.len() {
+                        self.instances[idx].write_view(&mut self.views_cache[idx]);
+                    }
+                } else {
+                    // Stale instance id: queue instead of dropping.
+                    self.queue_item(item);
+                }
+            }
+            Route::Queue => self.queue_item(item),
+        }
+    }
+
+    fn queue_item(&mut self, item: WorkItem) {
+        match item.req.class {
+            RequestClass::Batch => self.q_batch.push_back(item),
+            RequestClass::Interactive => self.q_inter.push_back(item),
+        }
+    }
+}

@@ -159,7 +159,7 @@ impl Bencher {
         }
         samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let n = samples_ns.len();
-        let m = Measurement {
+        Some(self.record(Measurement {
             name: name.to_string(),
             iters: n as u64,
             mean_ns: samples_ns.iter().sum::<f64>() / n as f64,
@@ -167,7 +167,11 @@ impl Bencher {
             p50_ns: samples_ns[n / 2],
             p99_ns: samples_ns[(n as f64 * 0.99) as usize % n],
             units_per_iter,
-        };
+        }))
+    }
+
+    /// Print one measurement line and retain it for the report/trajectory.
+    fn record(&mut self, m: Measurement) -> Measurement {
         println!(
             "{:<44} {:>10} iters  mean {:>10}  min {:>10}  p99 {:>10}{}",
             m.name,
@@ -180,7 +184,34 @@ impl Bencher {
                 .unwrap_or_default()
         );
         self.results.push(m.clone());
-        Some(m)
+        m
+    }
+
+    /// Time a single execution of `f` — no warmup, exactly one sample.
+    /// For macro-benches (whole multi-minute simulations) where the
+    /// repeated-sampling harness would multiply the cost; the trajectory
+    /// entry records `iters: 1` so readers know the variance is unmeasured.
+    pub fn bench_once<F: FnOnce()>(
+        &mut self,
+        name: &str,
+        units_per_iter: Option<f64>,
+        f: F,
+    ) -> Option<Measurement> {
+        if self.skip(name) {
+            return None;
+        }
+        let t = Instant::now();
+        f();
+        let ns = t.elapsed().as_nanos() as f64;
+        Some(self.record(Measurement {
+            name: name.to_string(),
+            iters: 1,
+            mean_ns: ns,
+            min_ns: ns,
+            p50_ns: ns,
+            p99_ns: ns,
+            units_per_iter,
+        }))
     }
 
     /// Print the final summary table.

@@ -20,10 +20,41 @@ use std::sync::Mutex;
 /// Process-wide override; 0 means "auto".
 static JOBS: AtomicUsize = AtomicUsize::new(0);
 
+/// Process-wide shard-worker override for the simulator's per-model event
+/// loops; 0 means "unset" (fall back to `CHIRON_SHARDS`, then 1).
+static SHARDS: AtomicUsize = AtomicUsize::new(0);
+
 /// Set the worker count for subsequent `run_grid` / `join` calls
 /// (0 restores auto-detection).
 pub fn set_jobs(n: usize) {
     JOBS.store(n, Ordering::SeqCst);
+}
+
+/// Set the worker count used to run per-model simulator shards between
+/// autoscaler ticks (the CLI's `--shards N`; 0 restores the
+/// `CHIRON_SHARDS`-then-1 default).
+pub fn set_shards(n: usize) {
+    SHARDS.store(n, Ordering::SeqCst);
+}
+
+/// Effective shard-worker count. Unlike [`jobs`], the default is **1**
+/// (sequential): shard parallelism nests inside sims that are themselves
+/// often fanned out by `run_grid`, so it is opt-in via `--shards` or
+/// `CHIRON_SHARDS` to avoid silently oversubscribing the machine. Results
+/// are bit-identical at any setting.
+pub fn shards() -> usize {
+    let s = SHARDS.load(Ordering::SeqCst);
+    if s > 0 {
+        return s;
+    }
+    if let Ok(v) = std::env::var("CHIRON_SHARDS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    1
 }
 
 /// Effective worker count.
@@ -182,5 +213,15 @@ mod tests {
     #[test]
     fn jobs_floor_is_one() {
         assert!(jobs() >= 1);
+    }
+
+    #[test]
+    fn shards_override_and_floor() {
+        // Process-global, so assert the override wins, then restore the
+        // default resolution (env/1) and only check the floor.
+        set_shards(3);
+        assert_eq!(shards(), 3);
+        set_shards(0);
+        assert!(shards() >= 1);
     }
 }

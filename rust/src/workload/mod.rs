@@ -12,7 +12,7 @@ pub mod source;
 pub mod trace;
 
 pub use arrivals::{ArrivalClock, ArrivalProcess, SpikeTrain};
-pub use scenario::{LengthDist, ScenarioSource, ScenarioSpec, StreamSpec};
+pub use scenario::{LengthDist, ScenarioSource, ScenarioSpec, StreamKind, StreamSpec};
 pub use sharegpt::ShareGptSampler;
 pub use source::{ArrivalSource, TraceSource};
 pub use trace::{Trace, TraceBuilder, WorkloadSpec};

@@ -31,6 +31,60 @@ use super::sharegpt::ShareGptSampler;
 use super::source::ArrivalSource;
 use super::trace::Trace;
 
+/// How a stream produces its requests.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamKind {
+    /// Synthesize requests from `arrivals` × `lengths` (the default).
+    Synthetic,
+    /// Replay a trace JSON file (the `Trace::to_json` format, as written by
+    /// `chiron trace-gen`): each request's class, SLO, model, and token
+    /// lengths come from the file; arrival times are shifted by the
+    /// stream's `start`; ids are reassigned densely so they stay unique
+    /// across the scenario. `count` caps the number replayed (0 = the whole
+    /// file) and `stop` truncates by absolute time as usual. The spec-level
+    /// `class`/`slo`/`arrivals`/`lengths`/`model` fields are inert
+    /// placeholders for replay streams.
+    Replay { path: String },
+}
+
+/// Load and sanity-check a replay trace file. Parsed files are cached for
+/// the process lifetime (keyed by path): a sweep instantiates one
+/// `StreamGen` per (policy × seed) grid cell — several concurrently on
+/// worker threads — and re-reading a large production trace for each would
+/// multiply startup I/O for identical bytes. `validate()` shares the same
+/// cache, so its up-front check is not a wasted parse.
+fn load_replay(path: &str) -> anyhow::Result<std::sync::Arc<Vec<Request>>> {
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex, OnceLock};
+    static CACHE: OnceLock<Mutex<HashMap<String, Arc<Vec<Request>>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(hit) = cache.lock().unwrap().get(path) {
+        return Ok(hit.clone());
+    }
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading replay trace '{path}': {e}"))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("replay trace '{path}': {e}"))?;
+    let trace = Trace::from_json(&j)
+        .map_err(|e| e.context(format!("replay trace '{path}'")))?;
+    anyhow::ensure!(
+        !trace.requests.is_empty(),
+        "replay trace '{path}' holds no requests"
+    );
+    anyhow::ensure!(
+        trace
+            .requests
+            .windows(2)
+            .all(|w| w[0].arrival <= w[1].arrival),
+        "replay trace '{path}' must be time-ordered"
+    );
+    let loaded = Arc::new(trace.requests);
+    cache
+        .lock()
+        .unwrap()
+        .insert(path.to_string(), loaded.clone());
+    Ok(loaded)
+}
+
 /// Token-length distribution for one stream.
 #[derive(Debug, Clone, PartialEq)]
 pub enum LengthDist {
@@ -200,10 +254,12 @@ impl LengthSampler {
 pub struct StreamSpec {
     /// Label used in docs and `scenario show`.
     pub name: String,
+    pub kind: StreamKind,
     pub class: RequestClass,
     pub slo: Slo,
     pub arrivals: ArrivalProcess,
-    /// Cap on the number of requests this stream emits.
+    /// Cap on the number of requests this stream emits (replay streams:
+    /// 0 = the whole file).
     pub count: usize,
     /// Model index into the scenario's `models`.
     pub model: usize,
@@ -216,9 +272,10 @@ pub struct StreamSpec {
 
 impl StreamSpec {
     /// True when this stream is guaranteed to emit exactly `count`
-    /// requests (no stop-time truncation, no zero-rate phased tail).
+    /// requests (no stop-time truncation, no zero-rate phased tail, and
+    /// not a replay — whose length would need file IO to know).
     pub fn exact_count(&self) -> bool {
-        if self.stop.is_some() {
+        if self.stop.is_some() || self.kind != StreamKind::Synthetic {
             return false;
         }
         match &self.arrivals {
@@ -230,6 +287,19 @@ impl StreamSpec {
     }
 
     pub fn to_json(&self) -> Json {
+        if let StreamKind::Replay { path } = &self.kind {
+            // Replay streams serialize only their meaningful fields; the
+            // parser reconstructs the same inert placeholders, so the
+            // round-trip is exact.
+            return Json::obj(vec![
+                ("name", self.name.as_str().into()),
+                ("kind", "replay".into()),
+                ("path", path.as_str().into()),
+                ("count", self.count.into()),
+                ("start", self.start.into()),
+                ("stop", self.stop.map(Json::Num).unwrap_or(Json::Null)),
+            ]);
+        }
         Json::obj(vec![
             ("name", self.name.as_str().into()),
             ("class", self.class.as_str().into()),
@@ -253,6 +323,38 @@ impl StreamSpec {
     }
 
     pub fn from_json(j: &Json, idx: usize) -> anyhow::Result<StreamSpec> {
+        match j.get("kind").as_str() {
+            Some("replay") => {
+                let path = j
+                    .get("path")
+                    .as_str()
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("stream {idx}: replay streams need a 'path'")
+                    })?
+                    .to_string();
+                let start = j.get("start").as_f64().unwrap_or(0.0);
+                return Ok(StreamSpec {
+                    name: j
+                        .get("name")
+                        .as_str()
+                        .map(str::to_string)
+                        .unwrap_or_else(|| format!("stream{idx}")),
+                    kind: StreamKind::Replay { path },
+                    // Inert placeholders (per-request fields come from the
+                    // file); deterministic so to_json/from_json round-trips.
+                    class: RequestClass::Interactive,
+                    slo: Slo::interactive_default(),
+                    arrivals: ArrivalProcess::Burst { at: start },
+                    count: j.get("count").as_u64().unwrap_or(0) as usize,
+                    model: 0,
+                    start,
+                    stop: j.get("stop").as_f64(),
+                    lengths: LengthDist::ShareGpt,
+                });
+            }
+            Some("synthetic") | None => {}
+            Some(other) => anyhow::bail!("stream {idx}: unknown stream kind {other:?}"),
+        }
         let class = match j.get("class").as_str() {
             Some("interactive") | None => RequestClass::Interactive,
             Some("batch") => RequestClass::Batch,
@@ -280,6 +382,7 @@ impl StreamSpec {
                 .as_str()
                 .map(str::to_string)
                 .unwrap_or_else(|| format!("stream{idx}")),
+            kind: StreamKind::Synthetic,
             class,
             slo,
             arrivals,
@@ -325,6 +428,34 @@ impl ScenarioSpec {
             );
         }
         for (i, s) in self.streams.iter().enumerate() {
+            if let StreamKind::Replay { path } = &s.kind {
+                // Replay: the file must load now (so the CLI fails with a
+                // clear error instead of the generator panicking later) and
+                // every replayed request must target a model this scenario
+                // declares.
+                let reqs = load_replay(path)
+                    .map_err(|e| e.context(format!("scenario '{}' stream {i}", self.name)))?;
+                for r in reqs.iter() {
+                    anyhow::ensure!(
+                        r.model < self.models.len(),
+                        "scenario '{}' stream {i}: replay trace '{path}' targets model {} \
+                         but the scenario declares only {} model(s)",
+                        self.name,
+                        r.model,
+                        self.models.len()
+                    );
+                }
+                if let Some(stop) = s.stop {
+                    anyhow::ensure!(
+                        stop > s.start,
+                        "scenario '{}' stream {i}: stop {} must be after start {}",
+                        self.name,
+                        stop,
+                        s.start
+                    );
+                }
+                continue;
+            }
             anyhow::ensure!(
                 s.model < self.models.len(),
                 "scenario '{}' stream {i}: model index {} out of range (have {})",
@@ -392,9 +523,20 @@ impl ScenarioSpec {
         }
     }
 
-    /// Upper bound on emitted requests (streams may end early).
+    /// Upper bound on emitted requests (streams may end early). Whole-file
+    /// replay streams (`count == 0`) resolve through the replay cache —
+    /// free after `validate()` has loaded the file; an unloadable file
+    /// contributes 0 (validation is where that becomes an error).
     pub fn max_requests(&self) -> usize {
-        self.streams.iter().map(|s| s.count).sum()
+        self.streams
+            .iter()
+            .map(|s| match &s.kind {
+                StreamKind::Replay { path } if s.count == 0 => {
+                    load_replay(path).map(|r| r.len()).unwrap_or(0)
+                }
+                _ => s.count,
+            })
+            .sum()
     }
 
     /// Scale every stream's request cap by `f` (counts round up, min 1) —
@@ -405,7 +547,11 @@ impl ScenarioSpec {
             return s;
         }
         for st in &mut s.streams {
-            st.count = ((st.count as f64 * f).ceil() as usize).max(1);
+            // Replay streams with count == 0 mean "the whole file" — there
+            // is no cap to scale.
+            if st.count > 0 {
+                st.count = ((st.count as f64 * f).ceil() as usize).max(1);
+            }
         }
         s
     }
@@ -419,6 +565,9 @@ impl ScenarioSpec {
     /// [`ScenarioSpec::source`] with the same seed (per-stream generation
     /// is shared; the stable sort here matches the merge's stream-index
     /// tie-break).
+    ///
+    /// Panics if a replay stream's file is unreadable — call
+    /// [`ScenarioSpec::validate`] first for a recoverable error.
     pub fn trace(&self, seed: u64) -> Trace {
         let mut root = Rng::new(seed);
         let mut requests = Vec::new();
@@ -426,10 +575,10 @@ impl ScenarioSpec {
         for spec in &self.streams {
             let rng = root.fork();
             let mut g = StreamGen::new(spec, id_base, rng);
+            id_base += g.id_span;
             while let Some(r) = g.next_req() {
                 requests.push(r);
             }
-            id_base += spec.count as u64;
         }
         requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
         Trace { requests }
@@ -499,34 +648,83 @@ impl ScenarioSpec {
     }
 }
 
-/// Lazy per-stream request generator: O(1) state (arrival clock, RNG,
-/// counters). Ids are `id_base + k` for the stream's k-th request, so the
-/// streaming merge and the materialized sort assign identical ids.
+/// Per-stream generation state: synthetic streams hold O(1) state (arrival
+/// clock + RNG); replay streams hold the loaded, time-shifted file.
+#[derive(Debug, Clone)]
+enum GenSource {
+    Synthetic {
+        sampler: LengthSampler,
+        clock: ArrivalClock,
+    },
+    Replay {
+        /// Shared parsed file (see `load_replay`'s process-wide cache).
+        reqs: std::sync::Arc<Vec<Request>>,
+        idx: usize,
+        /// Arrival-time shift (the stream's `start`), applied at read time
+        /// since the file is shared.
+        shift: Time,
+    },
+}
+
+/// Lazy per-stream request generator. Ids are `id_base + k` for the
+/// stream's k-th request, so the streaming merge and the materialized sort
+/// assign identical ids.
 #[derive(Debug, Clone)]
 struct StreamGen {
     class: RequestClass,
     slo: Slo,
     model: usize,
-    sampler: LengthSampler,
-    clock: ArrivalClock,
+    src: GenSource,
     rng: Rng,
     stop: Option<Time>,
     next_id: u64,
     remaining: usize,
+    /// Ids this stream reserves (`count` for synthetic; the replayed
+    /// request count for replay) — the next stream's `id_base` offset.
+    id_span: u64,
 }
 
 impl StreamGen {
+    /// Panics if a replay file is unreadable (validate() reports the same
+    /// failure as a recoverable error first).
     fn new(spec: &StreamSpec, id_base: u64, rng: Rng) -> StreamGen {
+        let (src, remaining) = match &spec.kind {
+            StreamKind::Synthetic => (
+                GenSource::Synthetic {
+                    sampler: spec.lengths.sampler(),
+                    clock: ArrivalClock::new(spec.arrivals.clone(), spec.start),
+                },
+                spec.count,
+            ),
+            StreamKind::Replay { path } => {
+                let reqs = load_replay(path).unwrap_or_else(|e| {
+                    panic!("scenario stream '{}': {e:#}", spec.name)
+                });
+                let n = if spec.count == 0 {
+                    reqs.len()
+                } else {
+                    spec.count.min(reqs.len())
+                };
+                (
+                    GenSource::Replay {
+                        reqs,
+                        idx: 0,
+                        shift: spec.start,
+                    },
+                    n,
+                )
+            }
+        };
         StreamGen {
             class: spec.class,
             slo: spec.slo,
             model: spec.model,
-            sampler: spec.lengths.sampler(),
-            clock: ArrivalClock::new(spec.arrivals.clone(), spec.start),
+            src,
             rng,
             stop: spec.stop,
             next_id: id_base,
-            remaining: spec.count,
+            remaining,
+            id_span: remaining as u64,
         }
     }
 
@@ -534,25 +732,42 @@ impl StreamGen {
         if self.remaining == 0 {
             return None;
         }
-        let t = self.clock.next(&mut self.rng)?;
-        if let Some(stop) = self.stop {
-            if t > stop {
-                self.remaining = 0;
-                return None;
+        let (t, class, slo, model, input, output) = match &mut self.src {
+            GenSource::Synthetic { sampler, clock } => {
+                let t = clock.next(&mut self.rng)?;
+                if let Some(stop) = self.stop {
+                    if t > stop {
+                        self.remaining = 0;
+                        return None;
+                    }
+                }
+                let (input, output) = sampler.sample(&mut self.rng);
+                (t, self.class, self.slo, self.model, input, output)
             }
-        }
-        let (input, output) = self.sampler.sample(&mut self.rng);
+            GenSource::Replay { reqs, idx, shift } => {
+                let r = &reqs[*idx];
+                let t = r.arrival + *shift;
+                if let Some(stop) = self.stop {
+                    if t > stop {
+                        self.remaining = 0;
+                        return None;
+                    }
+                }
+                *idx += 1;
+                (t, r.class, r.slo, r.model, r.input_tokens, r.output_tokens)
+            }
+        };
         let id = self.next_id;
         self.next_id += 1;
         self.remaining -= 1;
         Some(Request {
             id: RequestId(id),
-            class: self.class,
-            slo: self.slo,
+            class,
+            slo,
             arrival: t,
             input_tokens: input,
             output_tokens: output,
-            model: self.model,
+            model,
         })
     }
 }
@@ -576,8 +791,9 @@ impl ScenarioSource {
         let mut id_base = 0u64;
         for s in &spec.streams {
             let rng = root.fork();
-            streams.push(StreamGen::new(s, id_base, rng));
-            id_base += s.count as u64;
+            let g = StreamGen::new(s, id_base, rng);
+            id_base += g.id_span;
+            streams.push(g);
         }
         let heads: Vec<Option<Request>> =
             streams.iter_mut().map(StreamGen::next_req).collect();
@@ -632,6 +848,7 @@ fn stream(
 ) -> StreamSpec {
     StreamSpec {
         name: name.to_string(),
+        kind: StreamKind::Synthetic,
         class,
         slo,
         arrivals,
@@ -1023,6 +1240,128 @@ mod tests {
         let spec = by_name("paper-wb").unwrap().scaled(0.1);
         assert_eq!(spec.max_requests(), 3_000);
         assert!(spec.validate().is_ok());
+    }
+
+    fn replay_fixture() -> (std::path::PathBuf, Trace) {
+        use crate::workload::trace::{workload_a, workload_b_batch, TraceBuilder};
+        let mut rng = Rng::new(77);
+        let trace = TraceBuilder::new()
+            .stream(workload_a(20.0, 40, 0))
+            .stream(workload_b_batch(20, 1.5, 0, 1234.5))
+            .build(&mut rng);
+        let path = std::env::temp_dir().join(format!(
+            "chiron-replay-{}-{:x}.json",
+            std::process::id(),
+            &trace as *const _ as usize
+        ));
+        std::fs::write(&path, trace.to_json().to_string()).unwrap();
+        (path, trace)
+    }
+
+    #[test]
+    fn replay_stream_round_trips_and_replays_the_file() {
+        let (path, original) = replay_fixture();
+        let text = format!(
+            r#"{{"name":"replay-test","models":["llama8b"],
+                "streams":[{{"kind":"replay","path":{:?},"start":100.0}}]}}"#,
+            path.to_str().unwrap()
+        );
+        let spec = ScenarioSpec::parse(&text).unwrap();
+        assert_eq!(
+            spec.streams[0].kind,
+            StreamKind::Replay {
+                path: path.to_str().unwrap().to_string()
+            }
+        );
+        // Spec JSON round-trip is exact.
+        let back = ScenarioSpec::parse(&spec.to_json().to_string()).unwrap();
+        assert_eq!(spec, back, "replay spec must round-trip");
+        // Replay total is unknown without IO.
+        assert_eq!(spec.total_requests(), None);
+
+        // Streaming and materialized replay agree and reproduce the file:
+        // same per-request fields, arrivals shifted by start, dense ids.
+        let trace = spec.trace(1);
+        let mut src = spec.source(1);
+        let mut streamed = Vec::new();
+        while let Some(r) = src.next_request() {
+            streamed.push(r);
+        }
+        assert_eq!(trace.len(), original.len());
+        assert_eq!(streamed.len(), original.len());
+        for (k, (got, want)) in streamed.iter().zip(&original.requests).enumerate() {
+            assert_eq!(got.id.0, k as u64, "ids are reassigned densely");
+            assert_eq!(got.class, want.class);
+            assert_eq!(got.model, want.model);
+            assert_eq!(got.slo.ttft.to_bits(), want.slo.ttft.to_bits());
+            assert_eq!(got.slo.itl.to_bits(), want.slo.itl.to_bits());
+            assert_eq!(got.input_tokens, want.input_tokens);
+            assert_eq!(got.output_tokens, want.output_tokens);
+            assert_eq!(
+                got.arrival.to_bits(),
+                (want.arrival + 100.0).to_bits(),
+                "arrivals shift by start"
+            );
+        }
+        for (a, b) in trace.requests.iter().zip(&streamed) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn replay_count_caps_and_missing_file_errors() {
+        let (path, original) = replay_fixture();
+        let text = format!(
+            r#"{{"name":"replay-cap","models":["llama8b"],
+                "streams":[{{"kind":"replay","path":{:?},"count":7}}]}}"#,
+            path.to_str().unwrap()
+        );
+        let spec = ScenarioSpec::parse(&text).unwrap();
+        let trace = spec.trace(1);
+        assert_eq!(trace.len(), 7);
+        assert_eq!(
+            trace.requests[0].arrival.to_bits(),
+            original.requests[0].arrival.to_bits(),
+            "start defaults to 0: no shift"
+        );
+        // Scaling must not resurrect a 0 (= whole file) cap.
+        let whole = ScenarioSpec::parse(&format!(
+            r#"{{"name":"replay-whole","models":["llama8b"],
+                "streams":[{{"kind":"replay","path":{:?}}}]}}"#,
+            path.to_str().unwrap()
+        ))
+        .unwrap()
+        .scaled(0.1);
+        assert_eq!(whole.streams[0].count, 0);
+        std::fs::remove_file(&path).ok();
+        // A never-loaded missing path fails validation cleanly (no panic).
+        // (The just-deleted path stays servable from the process-wide
+        // replay cache — deliberate: sweeps re-instantiate generators.)
+        let missing = std::env::temp_dir().join("chiron-replay-definitely-missing.json");
+        let bad_path = ScenarioSpec::parse(&format!(
+            r#"{{"name":"replay-missing","models":["llama8b"],
+                "streams":[{{"kind":"replay","path":{:?}}}]}}"#,
+            missing.to_str().unwrap()
+        ));
+        assert!(bad_path.is_err());
+        // A replay trace targeting a model the scenario lacks is rejected.
+        use crate::workload::trace::{workload_a, TraceBuilder};
+        let mut rng = Rng::new(5);
+        let t2 = TraceBuilder::new().stream(workload_a(10.0, 10, 1)).build(&mut rng);
+        let path2 = std::env::temp_dir().join(format!(
+            "chiron-replay-m1-{}.json",
+            std::process::id()
+        ));
+        std::fs::write(&path2, t2.to_json().to_string()).unwrap();
+        let bad = ScenarioSpec::parse(&format!(
+            r#"{{"name":"replay-bad","models":["llama8b"],
+                "streams":[{{"kind":"replay","path":{:?}}}]}}"#,
+            path2.to_str().unwrap()
+        ));
+        assert!(bad.is_err(), "file targets model 1, scenario has 1 model");
+        std::fs::remove_file(&path2).ok();
     }
 
     #[test]
