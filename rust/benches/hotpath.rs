@@ -13,6 +13,7 @@ use chiron::coordinator::{
 };
 use chiron::core::{InstanceClass, InstanceId, ModelSpec, Request, RequestClass, RequestId, Slo};
 use chiron::experiments::common::{make_policy, PolicyKind};
+use chiron::forecast::{ForecasterKind, RateForecaster};
 use chiron::sim::policy::{
     InstanceState, InstanceView, LocalPolicy, ModelView, QueuedReq,
 };
@@ -216,6 +217,42 @@ fn main() {
             sim_cfg.timeline_every = 0;
             let r = run_sim(sim_cfg, mk(2000, 4000), &mut policy);
             black_box(r.outcomes.len());
+        });
+        // The same workload through the predictive decorator: the delta vs
+        // `sim.run` is the forecast plane's whole overhead (per-barrier
+        // observation + estimator update + injected-action scan). The bench
+        // gate prefers exact/word-boundary name matches, so "sim.run" pins
+        // the bench above regardless of registration order.
+        b.bench_units("sim.run_forecast chiron+hw 6k requests", Some(total), || {
+            let kind = PolicyKind::Chiron.with_forecast(
+                ForecasterKind::parse("holt-winters").expect("known estimator"),
+                45.0,
+            );
+            let mut policy = make_policy(&kind, &models);
+            let mut sim_cfg = SimConfig::new(50, models.clone());
+            sim_cfg.max_sim_time = 4.0 * 3600.0;
+            sim_cfg.timeline_every = 0;
+            let r = run_sim(sim_cfg, mk(2000, 4000), policy.as_mut());
+            black_box(r.outcomes.len());
+        });
+    }
+
+    // -- forecast estimator update (the per-barrier hot path) ---------------
+    // One Holt–Winters observe + lead-time forecast per autoscaler tick per
+    // model; must stay trivially cheap next to the event loop.
+    {
+        let mut hw = ForecasterKind::parse("holt-winters")
+            .expect("known estimator")
+            .build();
+        let mut k = 0u64;
+        b.bench_units("forecast.hw_update x1000", Some(1000.0), || {
+            let mut acc = 0.0;
+            for _ in 0..1000 {
+                k += 1;
+                hw.observe(10.0 + (k % 60) as f64 * 0.25, 1.0);
+                acc += hw.forecast(60.0).unwrap_or(0.0);
+            }
+            black_box(acc);
         });
     }
 

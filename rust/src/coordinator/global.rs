@@ -334,10 +334,10 @@ mod tests {
         let n = batch_len / stride;
         vec![QueueStats {
             batch_len,
-            interactive_len: 0,
             batch_oldest_arrival: Some(0.0),
             batch_deadline_sample: vec![deadline; n],
             stride,
+            ..Default::default()
         }]
     }
 

@@ -4,6 +4,7 @@
 use crate::baselines::{GlobalOnly, Llumnix, LlumnixConfig, LocalOnly};
 use crate::coordinator::{BootstrapSpec, Chiron, ChironConfig};
 use crate::core::{ModelSpec, RequestClass, Slo};
+use crate::forecast::{ForecasterKind, PredictiveScaler};
 use crate::metrics::PolicyRow;
 use crate::sim::{run_sim, Policy, SimConfig, SimReport};
 use crate::util::json::Json;
@@ -89,11 +90,27 @@ pub enum PolicyKind {
     LlumnixTuned(LlumnixConfig),
     LocalOnly,
     GlobalOnly(u32),
+    /// Any policy wrapped in the proactive `forecast::PredictiveScaler`:
+    /// `est` forecasts each model's interactive arrival rate `lead_time`
+    /// seconds ahead and injects pre-provisioning/consolidation around the
+    /// inner policy's own actions.
+    Forecast {
+        inner: Box<PolicyKind>,
+        est: ForecasterKind,
+        lead_time: f64,
+    },
 }
+
+/// Default lead time for the `+forecast` CLI shorthands: one llama70b model
+/// load (the paper's upper bound, §2.3) so pre-provisioned instances of
+/// either evaluation model are Running when the forecast demand lands.
+pub const DEFAULT_LEAD_TIME: f64 = 60.0;
 
 impl PolicyKind {
     /// Parse a CLI policy name. `llumnix-tuned` uses the headline-figure
-    /// tuned configuration.
+    /// tuned configuration; `<policy>+forecast` wraps the policy in a
+    /// Holt–Winters `PredictiveScaler` at the default lead time (the
+    /// `--forecast`/`--lead-time` scenario flags pick other estimators).
     pub fn parse(name: &str) -> Option<PolicyKind> {
         match name {
             "chiron" => Some(PolicyKind::Chiron),
@@ -101,17 +118,41 @@ impl PolicyKind {
             "llumnix-tuned" => Some(PolicyKind::LlumnixTuned(LlumnixConfig::tuned_headline())),
             "local-only" => Some(PolicyKind::LocalOnly),
             "global-only" => Some(PolicyKind::GlobalOnly(64)),
-            _ => None,
+            _ => name.strip_suffix("+forecast").and_then(|base| {
+                let inner = PolicyKind::parse(base)?;
+                // One decorator layer only: a repeated "+forecast+forecast"
+                // would stack two scalers that both inject scaling actions.
+                if matches!(inner, PolicyKind::Forecast { .. }) {
+                    return None;
+                }
+                Some(PolicyKind::Forecast {
+                    inner: Box::new(inner),
+                    est: ForecasterKind::parse("holt-winters").expect("known estimator"),
+                    lead_time: DEFAULT_LEAD_TIME,
+                })
+            }),
         }
     }
 
-    /// Names accepted by [`PolicyKind::parse`].
+    /// Wrap this kind in a predictive scaler with the given estimator.
+    pub fn with_forecast(self, est: ForecasterKind, lead_time: f64) -> PolicyKind {
+        PolicyKind::Forecast {
+            inner: Box::new(self),
+            est,
+            lead_time,
+        }
+    }
+
+    /// Names accepted by [`PolicyKind::parse`] (the `+forecast` suffix also
+    /// composes with every base name).
     pub const NAMES: &'static [&'static str] = &[
         "chiron",
         "llumnix",
         "llumnix-tuned",
         "local-only",
         "global-only",
+        "chiron+forecast",
+        "llumnix+forecast",
     ];
 }
 
@@ -125,6 +166,16 @@ pub fn make_policy(kind: &PolicyKind, models: &[ModelSpec]) -> Box<dyn Policy> {
             models,
             ChironConfig::for_models(models.len()),
             *mb,
+        )),
+        PolicyKind::Forecast {
+            inner,
+            est,
+            lead_time,
+        } => Box::new(PredictiveScaler::new(
+            make_policy(inner, models),
+            est.clone(),
+            *lead_time,
+            models.len(),
         )),
     }
 }

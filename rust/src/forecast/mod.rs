@@ -1,0 +1,579 @@
+//! The forecast plane: online per-model arrival-rate estimation and the
+//! proactive global-scaling decorator that hides model-load delay.
+//!
+//! Chiron's global autoscaler (paper §5) is purely reactive: it provisions
+//! only after queue/SLO backpressure materializes, paying the full
+//! model-load delay (15 s – 1 min, §2.3) on every demand ramp. This module
+//! adds the missing predictive half, SageServe-style (PAPERS.md):
+//!
+//! - [`RateForecaster`] — an online arrival-rate estimator fed one
+//!   observation per autoscaler tick (the epoch's arrival count), able to
+//!   extrapolate the rate `horizon` seconds ahead.
+//! - Three estimators, all deterministic and allocation-light:
+//!   [`WindowMean`] (sliding-window mean), [`EwmaRate`] (exponentially
+//!   weighted moving average), and [`HoltWinters`] (double-exponential
+//!   level+trend smoothing with an optional additive seasonal period).
+//! - [`ForecasterKind`] — the JSON-configurable description of an
+//!   estimator (`{"kind":"holt-winters","alpha":0.35,...}`), also parsed
+//!   from CLI names (`window` | `ewma` | `holt-winters`).
+//! - [`PredictiveScaler`] (`scaler` submodule) — a decorator that wraps any
+//!   [`GlobalPolicy`](crate::sim::policy::GlobalPolicy) and injects
+//!   pre-provisioning ahead of forecast ramps and consolidation ahead of
+//!   troughs, always within the cluster GPU budget.
+//! - [`ForecastScore`] — per-model forecast accuracy (R² and MAPE of the
+//!   lead-time-ahead predictions against the rates later observed),
+//!   surfaced through `SimReport`/`metrics::Summary` so sweeps quantify
+//!   estimator quality, not just its downstream SLO effect.
+//!
+//! Determinism: estimators are pure f64 recurrences over the barrier-time
+//! observation sequence; the scaler reads only the merged `ClusterView`
+//! (identical at any `--shards`/`--jobs` setting) and mutates its state
+//! only on the driver thread at tick barriers — so decorated policies stay
+//! FNV-digest bit-identical at any worker count (see `tests/forecast.rs`).
+
+mod scaler;
+
+pub use scaler::PredictiveScaler;
+
+use std::collections::VecDeque;
+
+use crate::core::Time;
+use crate::util::json::Json;
+
+/// An online arrival-rate estimator.
+///
+/// `observe` is called once per autoscaler tick with the number of arrivals
+/// in the epoch that just ended and the epoch length; `forecast(h)` returns
+/// the estimated arrival rate (requests/second) `h` seconds past the most
+/// recent observation. Estimators never see ground-truth future arrivals.
+pub trait RateForecaster: Send {
+    fn name(&self) -> &'static str;
+
+    /// Feed one epoch: `count` arrivals over the `dt`-second window that
+    /// just closed. `dt` must be positive.
+    fn observe(&mut self, count: f64, dt: Time);
+
+    /// Estimated arrival rate `horizon` seconds ahead of the last
+    /// observation (never negative), or `None` before any observation.
+    fn forecast(&self, horizon: Time) -> Option<f64>;
+
+    /// The smoothed current rate — the horizon-0 forecast.
+    fn level(&self) -> Option<f64> {
+        self.forecast(0.0)
+    }
+}
+
+/// Sliding-window mean rate: total arrivals over the trailing `window`
+/// seconds divided by the observed span. No trend — the forecast is flat —
+/// so it adapts within one window but always lags ramps.
+#[derive(Debug)]
+pub struct WindowMean {
+    window: Time,
+    /// Per-epoch (count, dt) samples inside the window.
+    buf: VecDeque<(f64, Time)>,
+    sum_count: f64,
+    sum_dt: Time,
+}
+
+impl WindowMean {
+    pub fn new(window: Time) -> Self {
+        assert!(window > 0.0, "window must be positive");
+        WindowMean {
+            window,
+            buf: VecDeque::new(),
+            sum_count: 0.0,
+            sum_dt: 0.0,
+        }
+    }
+}
+
+impl RateForecaster for WindowMean {
+    fn name(&self) -> &'static str {
+        "window"
+    }
+
+    fn observe(&mut self, count: f64, dt: Time) {
+        debug_assert!(dt > 0.0);
+        self.buf.push_back((count, dt));
+        self.sum_count += count;
+        self.sum_dt += dt;
+        // Evict whole epochs that no longer overlap the trailing window
+        // (keep at least the newest sample).
+        while self.buf.len() > 1 {
+            let (c0, d0) = self.buf[0];
+            if self.sum_dt - d0 < self.window {
+                break;
+            }
+            self.buf.pop_front();
+            self.sum_count -= c0;
+            self.sum_dt -= d0;
+        }
+    }
+
+    fn forecast(&self, _horizon: Time) -> Option<f64> {
+        if self.sum_dt > 0.0 {
+            Some((self.sum_count / self.sum_dt).max(0.0))
+        } else {
+            None
+        }
+    }
+}
+
+/// EWMA of the per-epoch rate with smoothing factor `alpha` (weight of the
+/// newest observation). Flat forecast, exponential memory. Thin wrapper
+/// over [`crate::util::stats::Ewma`] so the smoothing recurrence lives in
+/// exactly one place.
+#[derive(Debug)]
+pub struct EwmaRate {
+    ewma: crate::util::stats::Ewma,
+}
+
+impl EwmaRate {
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
+        EwmaRate {
+            ewma: crate::util::stats::Ewma::new(alpha),
+        }
+    }
+}
+
+impl RateForecaster for EwmaRate {
+    fn name(&self) -> &'static str {
+        "ewma"
+    }
+
+    fn observe(&mut self, count: f64, dt: Time) {
+        debug_assert!(dt > 0.0);
+        self.ewma.push(count / dt);
+    }
+
+    fn forecast(&self, _horizon: Time) -> Option<f64> {
+        self.ewma.get().map(|v| v.max(0.0))
+    }
+}
+
+/// Holt–Winters double-exponential smoothing: a level plus a per-second
+/// trend, with an optional additive seasonal component of period `period`
+/// seconds (0 disables it). The trend is what lets the forecast lead a
+/// ramp instead of lagging it; the seasonal bank captures diurnal cycles
+/// once a full period has been observed.
+#[derive(Debug)]
+pub struct HoltWinters {
+    alpha: f64,
+    beta: f64,
+    gamma: f64,
+    period: Time,
+    level: f64,
+    /// Rate change per second.
+    trend: f64,
+    /// Additive seasonal offsets, one slot per observation of a period;
+    /// sized lazily from the first observation's `dt`.
+    seasonal: Vec<f64>,
+    /// Next seasonal slot to use/update.
+    idx: usize,
+    last_dt: Time,
+    n: u64,
+}
+
+impl HoltWinters {
+    pub fn new(alpha: f64, beta: f64, gamma: f64, period: Time) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
+        assert!((0.0..=1.0).contains(&beta), "beta must be in [0, 1]");
+        assert!((0.0..=1.0).contains(&gamma), "gamma must be in [0, 1]");
+        assert!(period >= 0.0 && period.is_finite(), "period must be >= 0");
+        HoltWinters {
+            alpha,
+            beta,
+            gamma,
+            period,
+            level: 0.0,
+            trend: 0.0,
+            seasonal: Vec::new(),
+            idx: 0,
+            last_dt: 1.0,
+            n: 0,
+        }
+    }
+
+    /// Seasonality is applied only after one full period of observations.
+    fn seasonal_ready(&self) -> bool {
+        !self.seasonal.is_empty() && self.n as usize > self.seasonal.len()
+    }
+}
+
+impl RateForecaster for HoltWinters {
+    fn name(&self) -> &'static str {
+        "holt-winters"
+    }
+
+    fn observe(&mut self, count: f64, dt: Time) {
+        debug_assert!(dt > 0.0);
+        let x = count / dt;
+        self.last_dt = dt;
+        if self.n == 0 {
+            self.level = x;
+            self.trend = 0.0;
+            if self.period > 0.0 {
+                let slots = (self.period / dt).round().max(1.0) as usize;
+                self.seasonal = vec![0.0; slots];
+            }
+        } else {
+            let s = if self.seasonal.is_empty() {
+                0.0
+            } else {
+                self.seasonal[self.idx]
+            };
+            let prev_level = self.level;
+            self.level =
+                self.alpha * (x - s) + (1.0 - self.alpha) * (self.level + self.trend * dt);
+            self.trend =
+                self.beta * ((self.level - prev_level) / dt) + (1.0 - self.beta) * self.trend;
+            if !self.seasonal.is_empty() {
+                self.seasonal[self.idx] = self.gamma * (x - self.level) + (1.0 - self.gamma) * s;
+            }
+        }
+        if !self.seasonal.is_empty() {
+            self.idx = (self.idx + 1) % self.seasonal.len();
+        }
+        self.n += 1;
+    }
+
+    fn forecast(&self, horizon: Time) -> Option<f64> {
+        if self.n == 0 {
+            return None;
+        }
+        let mut v = self.level + self.trend * horizon;
+        if self.seasonal_ready() {
+            // A maturity-`horizon` prediction is scored against the epoch
+            // ending at the first barrier at or after `now + horizon` —
+            // `⌈horizon/dt⌉` epochs past the most recent observation, whose
+            // slot is `idx − 1` (`idx` already points one past it). Using
+            // ceil (not round) keeps the slot aligned with the scorer for
+            // lead times that are not epoch multiples.
+            let steps = (horizon / self.last_dt).ceil().max(0.0) as usize;
+            let len = self.seasonal.len();
+            v += self.seasonal[(self.idx + len - 1 + steps) % len];
+        }
+        Some(v.max(0.0))
+    }
+}
+
+/// Declarative, JSON-round-trippable estimator configuration — the factory
+/// `PolicyKind::Forecast` and the `--forecast` CLI flag carry.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ForecasterKind {
+    /// Sliding-window mean over the trailing `window` seconds.
+    Window { window: Time },
+    /// EWMA of the per-epoch rate with smoothing factor `alpha`.
+    Ewma { alpha: f64 },
+    /// Holt–Winters level+trend smoothing; `period` > 0 adds an additive
+    /// seasonal bank of that many seconds (0 = trend-only).
+    HoltWinters {
+        alpha: f64,
+        beta: f64,
+        gamma: f64,
+        period: Time,
+    },
+}
+
+impl ForecasterKind {
+    /// Parse a CLI estimator name with the default parameters.
+    pub fn parse(name: &str) -> Option<ForecasterKind> {
+        match name {
+            "window" => Some(ForecasterKind::Window { window: 120.0 }),
+            "ewma" => Some(ForecasterKind::Ewma { alpha: 0.3 }),
+            "holt-winters" | "hw" => Some(ForecasterKind::HoltWinters {
+                alpha: 0.35,
+                beta: 0.15,
+                gamma: 0.25,
+                period: 0.0,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Names accepted by [`ForecasterKind::parse`].
+    pub const NAMES: &'static [&'static str] = &["window", "ewma", "holt-winters"];
+
+    /// Compact label used in policy names and accuracy reports.
+    pub fn short_name(&self) -> &'static str {
+        match self {
+            ForecasterKind::Window { .. } => "win",
+            ForecasterKind::Ewma { .. } => "ewma",
+            ForecasterKind::HoltWinters { .. } => "hw",
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match self {
+            ForecasterKind::Window { window } => {
+                anyhow::ensure!(
+                    window.is_finite() && *window > 0.0,
+                    "window forecaster needs a positive 'window', got {window}"
+                );
+            }
+            ForecasterKind::Ewma { alpha } => {
+                anyhow::ensure!(
+                    alpha.is_finite() && *alpha > 0.0 && *alpha <= 1.0,
+                    "ewma forecaster needs alpha in (0, 1], got {alpha}"
+                );
+            }
+            ForecasterKind::HoltWinters {
+                alpha,
+                beta,
+                gamma,
+                period,
+            } => {
+                anyhow::ensure!(
+                    alpha.is_finite() && *alpha > 0.0 && *alpha <= 1.0,
+                    "holt-winters alpha must be in (0, 1], got {alpha}"
+                );
+                anyhow::ensure!(
+                    beta.is_finite() && (0.0..=1.0).contains(beta),
+                    "holt-winters beta must be in [0, 1], got {beta}"
+                );
+                anyhow::ensure!(
+                    gamma.is_finite() && (0.0..=1.0).contains(gamma),
+                    "holt-winters gamma must be in [0, 1], got {gamma}"
+                );
+                anyhow::ensure!(
+                    period.is_finite() && *period >= 0.0,
+                    "holt-winters period must be >= 0, got {period}"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Build the estimator this kind describes.
+    pub fn build(&self) -> Box<dyn RateForecaster> {
+        match self {
+            ForecasterKind::Window { window } => Box::new(WindowMean::new(*window)),
+            ForecasterKind::Ewma { alpha } => Box::new(EwmaRate::new(*alpha)),
+            ForecasterKind::HoltWinters {
+                alpha,
+                beta,
+                gamma,
+                period,
+            } => Box::new(HoltWinters::new(*alpha, *beta, *gamma, *period)),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            ForecasterKind::Window { window } => Json::obj(vec![
+                ("kind", "window".into()),
+                ("window", (*window).into()),
+            ]),
+            ForecasterKind::Ewma { alpha } => {
+                Json::obj(vec![("kind", "ewma".into()), ("alpha", (*alpha).into())])
+            }
+            ForecasterKind::HoltWinters {
+                alpha,
+                beta,
+                gamma,
+                period,
+            } => Json::obj(vec![
+                ("kind", "holt-winters".into()),
+                ("alpha", (*alpha).into()),
+                ("beta", (*beta).into()),
+                ("gamma", (*gamma).into()),
+                ("period", (*period).into()),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ForecasterKind> {
+        let kind = match j.get("kind").as_str() {
+            Some(name) => {
+                // Start from the named default, then apply overrides so
+                // partial configs stay usable.
+                let mut k = Self::parse(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown forecaster kind {name:?}"))?;
+                match &mut k {
+                    ForecasterKind::Window { window } => {
+                        if let Some(w) = j.get("window").as_f64() {
+                            *window = w;
+                        }
+                    }
+                    ForecasterKind::Ewma { alpha } => {
+                        if let Some(a) = j.get("alpha").as_f64() {
+                            *alpha = a;
+                        }
+                    }
+                    ForecasterKind::HoltWinters {
+                        alpha,
+                        beta,
+                        gamma,
+                        period,
+                    } => {
+                        if let Some(a) = j.get("alpha").as_f64() {
+                            *alpha = a;
+                        }
+                        if let Some(b) = j.get("beta").as_f64() {
+                            *beta = b;
+                        }
+                        if let Some(g) = j.get("gamma").as_f64() {
+                            *gamma = g;
+                        }
+                        if let Some(p) = j.get("period").as_f64() {
+                            *period = p;
+                        }
+                    }
+                }
+                k
+            }
+            None => anyhow::bail!("forecaster config needs a 'kind'"),
+        };
+        kind.validate()?;
+        Ok(kind)
+    }
+}
+
+/// Per-model forecast accuracy of one predictive run: R² (reusing
+/// [`crate::util::stats::r_squared`]) and MAPE of the lead-time-ahead rate
+/// predictions against the epoch rates later observed at maturity. MAPE
+/// averages only epochs with a non-zero observed rate (the relative error
+/// is undefined at zero); `n` counts all matured prediction pairs.
+#[derive(Debug, Clone)]
+pub struct ForecastScore {
+    pub model: usize,
+    pub estimator: String,
+    /// Matured (observed, predicted) pairs.
+    pub n: usize,
+    pub r2: f64,
+    /// Mean absolute percentage error, in percent.
+    pub mape: f64,
+}
+
+impl ForecastScore {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", self.model.into()),
+            ("estimator", self.estimator.as_str().into()),
+            ("n", self.n.into()),
+            ("r2", self.r2.into()),
+            ("mape", self.mape.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Noisy-stream convergence (constant + phased Poisson) lives in
+    // `tests/forecast.rs`; the unit tests here pin the deterministic
+    // behaviors each estimator is *for*.
+
+    #[test]
+    fn empty_estimators_forecast_none() {
+        for name in ForecasterKind::NAMES {
+            let f = ForecasterKind::parse(name).unwrap().build();
+            assert!(f.forecast(0.0).is_none(), "{name}: empty");
+            assert!(f.level().is_none(), "{name}: empty level");
+        }
+    }
+
+    #[test]
+    fn holt_winters_trend_leads_a_ramp() {
+        // Deterministic ramp: rate climbs 0.5 req/s per tick. The trend
+        // estimator must extrapolate ahead while flat estimators lag.
+        let mut hw = HoltWinters::new(0.35, 0.15, 0.25, 0.0);
+        let mut ew = EwmaRate::new(0.3);
+        for k in 0..200 {
+            let rate = 5.0 + 0.5 * k as f64;
+            hw.observe(rate, 1.0);
+            ew.observe(rate, 1.0);
+        }
+        // True rate 30 ticks ahead: 5 + 0.5*229 = 119.5.
+        let truth = 5.0 + 0.5 * 229.0;
+        let hw_fut = hw.forecast(30.0).unwrap();
+        let ew_fut = ew.forecast(30.0).unwrap();
+        assert!(
+            (hw_fut - truth).abs() < 8.0,
+            "hw 30s-ahead {hw_fut} vs truth {truth}"
+        );
+        assert!(
+            truth - ew_fut > 10.0,
+            "flat ewma must lag the ramp: {ew_fut} vs {truth}"
+        );
+    }
+
+    #[test]
+    fn window_adapts_after_step_change() {
+        let mut w = WindowMean::new(30.0);
+        for _ in 0..100 {
+            w.observe(5.0, 1.0);
+        }
+        for _ in 0..40 {
+            w.observe(25.0, 1.0);
+        }
+        // 40 ticks past the step with a 30 s window: old rate fully evicted.
+        let lvl = w.level().unwrap();
+        assert!((lvl - 25.0).abs() < 1e-9, "window level {lvl}");
+    }
+
+    #[test]
+    fn holt_winters_seasonal_captures_a_cycle() {
+        // Square-wave rate with period 20 ticks: after several cycles the
+        // seasonal forecast half a period ahead should be closer to the
+        // upcoming phase than the trend-only one. The scoring convention
+        // (matching `PredictiveScaler`): a horizon-k forecast targets the
+        // k-th epoch after the last observed one, i.e. observation index
+        // 399 + k here.
+        let mut hw = HoltWinters::new(0.3, 0.05, 0.4, 20.0);
+        let mut flat = HoltWinters::new(0.3, 0.05, 0.0, 0.0);
+        let phase_rate = |k: usize| if (k / 10) % 2 == 0 { 4.0 } else { 20.0 };
+        for k in 0..400 {
+            hw.observe(phase_rate(k), 1.0);
+            flat.observe(phase_rate(k), 1.0);
+        }
+        for horizon in [5.0, 11.0, 15.0] {
+            let truth = phase_rate(399 + horizon as usize);
+            let seasonal = hw.forecast(horizon).unwrap();
+            let trend_only = flat.forecast(horizon).unwrap();
+            assert!(
+                (seasonal - truth).abs() < (trend_only - truth).abs(),
+                "h={horizon}: seasonal {seasonal} should beat trend-only \
+                 {trend_only} (truth {truth})"
+            );
+        }
+    }
+
+    #[test]
+    fn forecast_never_negative() {
+        let mut hw = HoltWinters::new(0.5, 0.5, 0.0, 0.0);
+        for k in 0..50 {
+            hw.observe((50.0 - k as f64).max(0.0), 1.0); // steep decline
+        }
+        assert!(hw.forecast(600.0).unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn kind_json_roundtrip_and_validation() {
+        for name in ForecasterKind::NAMES {
+            let k = ForecasterKind::parse(name).unwrap();
+            assert!(k.validate().is_ok());
+            let back = ForecasterKind::from_json(&Json::parse(&k.to_json().to_string()).unwrap())
+                .unwrap();
+            assert_eq!(k, back, "{name} must round-trip");
+        }
+        // Overrides apply on top of named defaults.
+        let j = Json::parse(r#"{"kind":"holt-winters","alpha":0.5,"period":1800}"#).unwrap();
+        match ForecasterKind::from_json(&j).unwrap() {
+            ForecasterKind::HoltWinters { alpha, period, .. } => {
+                assert_eq!(alpha, 0.5);
+                assert_eq!(period, 1800.0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(ForecasterKind::from_json(&Json::parse(r#"{"kind":"nope"}"#).unwrap()).is_err());
+        assert!(
+            ForecasterKind::from_json(&Json::parse(r#"{"kind":"ewma","alpha":1.5}"#).unwrap())
+                .is_err()
+        );
+        assert!(ForecasterKind::parse("hw").is_some(), "hw alias");
+        assert!(ForecasterKind::parse("prophet").is_none());
+    }
+}

@@ -1,0 +1,611 @@
+//! [`PredictiveScaler`] — the proactive decorator over any
+//! [`GlobalPolicy`]: it observes per-model arrival counts at each tick
+//! barrier (via the `QueueStats` cumulative counters the shards surface),
+//! forecasts the interactive arrival rate `lead_time` seconds ahead, and
+//! injects pre-provisioning ahead of ramps (so instances finish their
+//! model load before the demand arrives) and consolidation ahead of
+//! troughs — without disturbing the wrapped policy's own actions.
+//!
+//! Capacity model: the scaler learns the per-busy-instance interactive
+//! service rate `κ` online (EWMA of epoch interactive completions per
+//! second per busy pool instance) and converts a forecast rate `r̂` into
+//! the instance count needed to *serve* it, `n = ⌈r̂/κ⌉`. Anchoring on
+//! busy instances (not the whole pool) keeps the loop stable: the scaler's
+//! own idle pre-provisioned instances never inflate the estimate, so
+//! repeated ticks converge instead of compounding.
+//!
+//! Action rules, applied after (and deduplicated against) the wrapped
+//! policy's actions each tick:
+//! - **Ramp** (`r̂ > (1+margin)·r_now` and `n > pool`): add Mixed
+//!   instances up to the deficit, never past the GPU budget remaining
+//!   after the wrapped policy's own adds. If the budget runs out, idle
+//!   Batch-class instances are reclassified to Mixed instead (`SetClass`)
+//!   — capacity conversion is free where provisioning is not.
+//! - **Trough** (`r̂ < (1−margin)·r_now`): retire idle Mixed instances
+//!   down to `⌈KEEP_FACTOR · n⌉` — the pool a Θ = 1/3 over-provisioning
+//!   policy would still want at the forecast rate — and never below the
+//!   current busy count, so consolidation cannot strand live work.
+//!
+//! Determinism: state mutates only in `autoscale`/`on_complete`, both
+//! invoked by the epoch driver single-threaded at barriers over the merged
+//! `ClusterView`, which is bit-identical at any `--shards`/`--jobs`
+//! setting — so the decorated policy digests identically too.
+
+use std::collections::VecDeque;
+
+use crate::core::{InstanceClass, ModelSpec, RequestClass, RequestOutcome, Time};
+use crate::sim::policy::{Action, ClusterView, GlobalPolicy, InstanceState, LocalPolicy};
+use crate::util::stats::{r_squared, Ewma};
+
+use super::{ForecastScore, ForecasterKind, RateForecaster};
+
+/// Ramp detection threshold: act only when the forecast rate exceeds the
+/// current smoothed rate by this fraction.
+const RAMP_MARGIN: f64 = 0.15;
+
+/// Trough detection threshold (more conservative than ramps: releasing
+/// capacity too early is the costlier mistake).
+const TROUGH_MARGIN: f64 = 0.25;
+
+/// Consolidation floor multiplier on the forecast serving need — matches a
+/// Θ = 1/3 over-provisioning appetite so the scaler never fights the
+/// wrapped policy's own pool target.
+const KEEP_FACTOR: f64 = 3.0;
+
+/// EWMA smoothing for the per-busy-instance service-rate estimate κ.
+const KAPPA_ALPHA: f64 = 0.3;
+
+/// Per-model forecaster state.
+struct PerModel {
+    forecaster: Box<dyn RateForecaster>,
+    /// Cumulative interactive arrivals as of the previous barrier.
+    last_arrived: u64,
+    /// Cumulative interactive completions (fed by `on_complete`).
+    completed: u64,
+    last_completed: u64,
+    /// Per-busy-instance interactive service rate (req/s/instance).
+    kappa: Ewma,
+    /// Outstanding predictions: (maturity time, predicted rate).
+    pending: VecDeque<(Time, f64)>,
+    /// Matured pairs for accuracy scoring.
+    observed: Vec<f64>,
+    predicted: Vec<f64>,
+}
+
+/// Proactive-scaling decorator over any global policy. See the module docs
+/// for the capacity model and action rules.
+pub struct PredictiveScaler {
+    inner: Box<dyn GlobalPolicy>,
+    name: String,
+    kind: ForecasterKind,
+    lead_time: Time,
+    models: Vec<PerModel>,
+    last_now: Time,
+}
+
+impl PredictiveScaler {
+    /// Wrap `inner`, forecasting each of `n_models` models' interactive
+    /// arrival rate `lead_time` seconds ahead with a fresh `kind`
+    /// estimator. `lead_time` should be at least the model-load delay so
+    /// pre-provisioned instances are Running when the ramp lands.
+    pub fn new(
+        inner: Box<dyn GlobalPolicy>,
+        kind: ForecasterKind,
+        lead_time: Time,
+        n_models: usize,
+    ) -> Self {
+        assert!(lead_time > 0.0, "lead_time must be positive");
+        let name = format!("{}+{}", inner.name(), kind.short_name());
+        let models = (0..n_models)
+            .map(|_| PerModel {
+                forecaster: kind.build(),
+                last_arrived: 0,
+                completed: 0,
+                last_completed: 0,
+                kappa: Ewma::new(KAPPA_ALPHA),
+                pending: VecDeque::new(),
+                observed: Vec::new(),
+                predicted: Vec::new(),
+            })
+            .collect();
+        PredictiveScaler {
+            inner,
+            name,
+            kind,
+            lead_time,
+            models,
+            last_now: 0.0,
+        }
+    }
+
+    pub fn lead_time(&self) -> Time {
+        self.lead_time
+    }
+
+    pub fn estimator_kind(&self) -> &ForecasterKind {
+        &self.kind
+    }
+}
+
+/// Interactive-serving pool membership: Interactive/Mixed class, not
+/// retiring. Loading instances count — an in-flight scale-up is capacity
+/// that will exist within the lead time.
+fn in_pool(i: &crate::sim::policy::InstanceView) -> bool {
+    matches!(i.class, InstanceClass::Interactive | InstanceClass::Mixed)
+        && i.state != InstanceState::Draining
+}
+
+impl GlobalPolicy for PredictiveScaler {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn make_local(&self, model: usize) -> Box<dyn LocalPolicy> {
+        self.inner.make_local(model)
+    }
+
+    fn bootstrap(&mut self, view: &ClusterView) -> Vec<Action> {
+        self.inner.bootstrap(view)
+    }
+
+    fn initial_max_batch(&self, model: &ModelSpec, class: InstanceClass) -> u32 {
+        self.inner.initial_max_batch(model, class)
+    }
+
+    fn on_complete(&mut self, outcome: &RequestOutcome) {
+        if outcome.class == RequestClass::Interactive {
+            if let Some(st) = self.models.get_mut(outcome.model) {
+                st.completed += 1;
+            }
+        }
+        self.inner.on_complete(outcome);
+    }
+
+    fn forecast_scores(&self) -> Vec<ForecastScore> {
+        self.models
+            .iter()
+            .enumerate()
+            // A model whose matured epochs are all zero-rate (no interactive
+            // traffic) carries no information: all-zero observed vs all-zero
+            // predicted would score a vacuous r2 = 1 / mape = 0 and inflate
+            // the cross-model means, so it reports nothing instead.
+            .filter(|(_, st)| st.observed.iter().any(|&o| o > 1e-9))
+            .map(|(m, st)| {
+                let r2 = r_squared(&st.observed, &st.predicted);
+                let mut acc = 0.0;
+                let mut n_rel = 0usize;
+                for (o, p) in st.observed.iter().zip(&st.predicted) {
+                    if *o > 1e-9 {
+                        acc += ((p - o) / o).abs();
+                        n_rel += 1;
+                    }
+                }
+                let mape = if n_rel > 0 {
+                    100.0 * acc / n_rel as f64
+                } else {
+                    0.0
+                };
+                ForecastScore {
+                    model: m,
+                    estimator: self.kind.short_name().to_string(),
+                    n: st.observed.len(),
+                    r2,
+                    mape,
+                }
+            })
+            .collect()
+    }
+
+    fn autoscale(&mut self, view: &ClusterView) -> Vec<Action> {
+        // The wrapped policy acts first; its actions pass through untouched.
+        let mut actions = self.inner.autoscale(view);
+        let dt = view.now - self.last_now;
+        if dt <= 0.0 {
+            return actions;
+        }
+        self.last_now = view.now;
+
+        // Instances the wrapped policy already acted on this tick — never
+        // countermand (double-Remove or reclassify) them.
+        let mut touched: Vec<u32> = actions
+            .iter()
+            .filter_map(|a| match a {
+                Action::RemoveInstance { id } | Action::SetClass { id, .. } => Some(id.0),
+                _ => None,
+            })
+            .collect();
+        touched.sort_unstable();
+
+        // GPU budget remaining after the wrapped policy's own adds: every
+        // injected add stays within `gpus_total` by construction.
+        let mut committed: u32 = actions
+            .iter()
+            .filter_map(|a| match a {
+                Action::AddInstance { model, .. } => Some(view.models[*model].gpus_per_instance),
+                _ => None,
+            })
+            .sum();
+
+        for m in 0..view.models.len().min(self.models.len()) {
+            // ---- observe this epoch -------------------------------------
+            let st = &mut self.models[m];
+            let arrived = view.queues[m].arrived_interactive;
+            let delta = arrived.saturating_sub(st.last_arrived) as f64;
+            st.last_arrived = arrived;
+            let x = delta / dt; // raw epoch arrival rate
+            // Resolve matured predictions against the raw epoch rate.
+            while st
+                .pending
+                .front()
+                .is_some_and(|&(t, _)| t <= view.now + 1e-9)
+            {
+                let (_, pred) = st.pending.pop_front().unwrap();
+                st.observed.push(x);
+                st.predicted.push(pred);
+            }
+            let comp_delta = st.completed - st.last_completed;
+            st.last_completed = st.completed;
+
+            let mut busy = 0u32;
+            let mut pool = 0u32;
+            for i in view.instances_of(m) {
+                if in_pool(i) {
+                    pool += 1;
+                    if i.running_interactive > 0 {
+                        busy += 1;
+                    }
+                }
+            }
+            if comp_delta > 0 && busy > 0 {
+                st.kappa.push(comp_delta as f64 / dt / busy as f64);
+            }
+            st.forecaster.observe(delta, dt);
+            let Some(r_now) = st.forecaster.level() else {
+                continue;
+            };
+            let Some(r_fut) = st.forecaster.forecast(self.lead_time) else {
+                continue;
+            };
+            st.pending.push_back((view.now + self.lead_time, r_fut));
+            let Some(kappa) = st.kappa.get().filter(|k| *k > 1e-9) else {
+                continue; // no service observations yet: leave it reactive
+            };
+
+            // ---- act on the forecast ------------------------------------
+            // Count the wrapped policy's own interactive-pool adds for this
+            // model toward the pool so we only fill the remaining deficit.
+            let inner_adds = actions
+                .iter()
+                .filter(|a| {
+                    matches!(a, Action::AddInstance { model, class }
+                        if *model == m && *class != InstanceClass::Batch)
+                })
+                .count() as u32;
+            let pool_eff = pool + inner_adds;
+            let n_fut = (r_fut / kappa).ceil().max(0.0) as u32;
+            let gpi = view.models[m].gpus_per_instance;
+
+            if r_fut > r_now * (1.0 + RAMP_MARGIN) && n_fut > pool_eff {
+                let mut deficit = n_fut - pool_eff;
+                while deficit > 0 && view.gpus_free().saturating_sub(committed) >= gpi {
+                    actions.push(Action::AddInstance {
+                        model: m,
+                        class: InstanceClass::Mixed,
+                    });
+                    committed += gpi;
+                    deficit -= 1;
+                }
+                if deficit > 0 {
+                    // Budget exhausted: convert idle batch capacity instead.
+                    let mut idle_batch: Vec<u32> = view
+                        .instances_of(m)
+                        .filter(|i| {
+                            i.class == InstanceClass::Batch
+                                && i.is_running()
+                                && i.running == 0
+                                && i.waiting == 0
+                                && touched.binary_search(&i.id.0).is_err()
+                        })
+                        .map(|i| i.id.0)
+                        .collect();
+                    idle_batch.sort_unstable();
+                    for id in idle_batch.into_iter().take(deficit as usize) {
+                        actions.push(Action::SetClass {
+                            id: crate::core::InstanceId(id),
+                            class: InstanceClass::Mixed,
+                        });
+                    }
+                }
+            } else if r_fut < r_now * (1.0 - TROUGH_MARGIN) {
+                let keep = ((n_fut as f64) * KEEP_FACTOR).ceil().max(1.0) as u32;
+                let keep = keep.max(busy);
+                if pool_eff > keep {
+                    let mut surplus = pool_eff - keep;
+                    let mut idle_mixed: Vec<u32> = view
+                        .instances_of(m)
+                        .filter(|i| {
+                            i.class == InstanceClass::Mixed
+                                && i.is_running()
+                                && i.running == 0
+                                && i.waiting == 0
+                                && touched.binary_search(&i.id.0).is_err()
+                        })
+                        .map(|i| i.id.0)
+                        .collect();
+                    idle_mixed.sort_unstable();
+                    for id in idle_mixed {
+                        if surplus == 0 {
+                            break;
+                        }
+                        actions.push(Action::RemoveInstance {
+                            id: crate::core::InstanceId(id),
+                        });
+                        surplus -= 1;
+                    }
+                }
+            }
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{InstanceId, ModelSpec, RequestId, Slo};
+    use crate::sim::policy::{InstanceView, ModelView, QueueStats, QueuedReq, Route};
+
+    /// Inert wrapped policy: no actions, no local behavior — isolates the
+    /// decorator's own injections.
+    struct Inert;
+    struct InertLocal;
+
+    impl LocalPolicy for InertLocal {
+        fn route(&mut self, _req: &QueuedReq, _view: &ModelView) -> Route {
+            Route::Queue
+        }
+        fn pull_order(&self, _inst: &InstanceView) -> &'static [RequestClass] {
+            &[]
+        }
+        fn on_step(&mut self, _inst: &InstanceView, _now: Time) -> Option<u32> {
+            None
+        }
+    }
+
+    impl GlobalPolicy for Inert {
+        fn name(&self) -> &str {
+            "inert"
+        }
+        fn make_local(&self, _model: usize) -> Box<dyn LocalPolicy> {
+            Box::new(InertLocal)
+        }
+        fn autoscale(&mut self, _view: &ClusterView) -> Vec<Action> {
+            Vec::new()
+        }
+        fn bootstrap(&mut self, _view: &ClusterView) -> Vec<Action> {
+            Vec::new()
+        }
+    }
+
+    fn inst(id: u32, class: InstanceClass, running_interactive: u32) -> InstanceView {
+        InstanceView {
+            id: InstanceId(id),
+            class,
+            model: 0,
+            state: InstanceState::Running,
+            running: running_interactive,
+            running_interactive,
+            waiting: 0,
+            max_batch: 8,
+            kv_tokens: 0,
+            kv_capacity: 100_000,
+            last_step_time: 0.05,
+            last_decode_time: 0.05,
+            throughput_tokens: 500.0,
+            min_itl_slo: 0.2,
+            steps: 10,
+        }
+    }
+
+    fn outcome() -> RequestOutcome {
+        RequestOutcome {
+            id: RequestId(0),
+            class: RequestClass::Interactive,
+            slo: Slo::interactive_default(),
+            model: 0,
+            arrival: 0.0,
+            first_token: 0.5,
+            completion: 1.0,
+            input_tokens: 10,
+            output_tokens: 20,
+            mean_itl: 0.05,
+            max_itl: 0.05,
+            preemptions: 0,
+        }
+    }
+
+    fn scaler(lead: f64) -> PredictiveScaler {
+        PredictiveScaler::new(
+            Box::new(Inert),
+            ForecasterKind::parse("holt-winters").unwrap(),
+            lead,
+            1,
+        )
+    }
+
+    /// Drive one tick: `arrived` is the cumulative interactive arrival
+    /// count surfaced in QueueStats; `comps` completions are observed first.
+    fn tick(
+        p: &mut PredictiveScaler,
+        now: f64,
+        arrived: u64,
+        comps: usize,
+        insts: &[InstanceView],
+        gpus_total: u32,
+    ) -> Vec<Action> {
+        for _ in 0..comps {
+            p.on_complete(&outcome());
+        }
+        let models = vec![ModelSpec::llama8b()];
+        let queues = vec![QueueStats {
+            arrived_total: arrived,
+            arrived_interactive: arrived,
+            ..Default::default()
+        }];
+        let gpus_used = insts
+            .iter()
+            .map(|i| models[i.model].gpus_per_instance)
+            .sum();
+        let view = ClusterView {
+            now,
+            instances: insts,
+            queues: &queues,
+            models: &models,
+            gpus_total,
+            gpus_used,
+        };
+        p.autoscale(&view)
+    }
+
+    #[test]
+    fn ramp_preprovisions_before_backpressure() {
+        let mut p = scaler(45.0);
+        // Warm-up: 2 busy instances serving a steady 2 req/s (κ ≈ 1/s per
+        // busy instance), then a steep observed ramp. The decorator must
+        // add instances while the pool is still keeping up (no queue).
+        let insts = vec![inst(0, InstanceClass::Mixed, 2), inst(1, InstanceClass::Mixed, 2)];
+        let mut arrived = 0u64;
+        for k in 1..=60 {
+            arrived += 2;
+            let a = tick(&mut p, k as f64, arrived, 2, &insts, 50);
+            assert!(a.is_empty(), "steady state must stay quiet, got {a:?} at {k}");
+        }
+        // Ramp: arrivals jump to 12/s for a few ticks.
+        let mut adds = 0;
+        for k in 61..=75 {
+            arrived += 12;
+            let a = tick(&mut p, k as f64, arrived, 2, &insts, 50);
+            adds += a
+                .iter()
+                .filter(|x| matches!(x, Action::AddInstance { .. }))
+                .count();
+        }
+        assert!(adds >= 4, "expected proactive adds during the ramp, got {adds}");
+    }
+
+    #[test]
+    fn preprovisioning_respects_gpu_budget() {
+        let mut p = scaler(45.0);
+        let insts = vec![inst(0, InstanceClass::Mixed, 2), inst(1, InstanceClass::Mixed, 2)];
+        let gpus_total = 3; // 2 used by the pool → only 1 instance of headroom
+        let mut arrived = 0u64;
+        for k in 1..=60 {
+            arrived += 2;
+            tick(&mut p, k as f64, arrived, 2, &insts, gpus_total);
+        }
+        for k in 61..=75 {
+            arrived += 20;
+            let a = tick(&mut p, k as f64, arrived, 2, &insts, gpus_total);
+            let add_gpus: u32 = a
+                .iter()
+                .filter(|x| matches!(x, Action::AddInstance { .. }))
+                .count() as u32;
+            assert!(
+                2 + add_gpus <= gpus_total,
+                "tick {k}: adds {add_gpus} exceed free budget"
+            );
+        }
+    }
+
+    #[test]
+    fn budget_exhausted_converts_idle_batch_instances() {
+        let mut p = scaler(45.0);
+        let mut insts = vec![inst(0, InstanceClass::Mixed, 2), inst(1, InstanceClass::Mixed, 2)];
+        insts.push(inst(2, InstanceClass::Batch, 0)); // idle batch instance
+        let gpus_total = 3; // zero headroom: all 3 GPUs in use
+        let mut arrived = 0u64;
+        for k in 1..=60 {
+            arrived += 2;
+            tick(&mut p, k as f64, arrived, 2, &insts, gpus_total);
+        }
+        let mut converted = false;
+        for k in 61..=75 {
+            arrived += 20;
+            let a = tick(&mut p, k as f64, arrived, 2, &insts, gpus_total);
+            assert!(
+                !a.iter().any(|x| matches!(x, Action::AddInstance { .. })),
+                "no budget for adds"
+            );
+            if a.iter().any(|x| {
+                matches!(x, Action::SetClass { id, class }
+                    if *id == InstanceId(2) && *class == InstanceClass::Mixed)
+            }) {
+                converted = true;
+            }
+        }
+        assert!(converted, "idle batch instance should be reclassified");
+    }
+
+    #[test]
+    fn trough_consolidates_idle_mixed_but_keeps_floor() {
+        let mut p = scaler(45.0);
+        // Large pool, little work: 1 busy + 7 idle mixed.
+        let mut insts = vec![inst(0, InstanceClass::Interactive, 2)];
+        for i in 1..8 {
+            insts.push(inst(i, InstanceClass::Mixed, 0));
+        }
+        let mut arrived = 0u64;
+        // Declining rate: 8/s shrinking toward zero.
+        let mut removed = std::collections::BTreeSet::new();
+        for k in 1..=120 {
+            let rate = (8.0 - 0.1 * k as f64).max(0.2);
+            arrived += rate.round() as u64;
+            let a = tick(&mut p, k as f64, arrived, 2, &insts, 50);
+            for x in &a {
+                if let Action::RemoveInstance { id } = x {
+                    removed.insert(id.0);
+                }
+            }
+        }
+        assert!(!removed.is_empty(), "trough should consolidate idle instances");
+        assert!(
+            !removed.contains(&0),
+            "the busy instance must never be removed"
+        );
+        assert!(
+            removed.len() < insts.len(),
+            "consolidation must keep a serving floor"
+        );
+    }
+
+    #[test]
+    fn accuracy_scores_accumulate() {
+        let mut p = scaler(5.0);
+        let insts = vec![inst(0, InstanceClass::Mixed, 2)];
+        let mut arrived = 0u64;
+        for k in 1..=50 {
+            arrived += 3;
+            tick(&mut p, k as f64, arrived, 1, &insts, 50);
+        }
+        let scores = p.forecast_scores();
+        assert_eq!(scores.len(), 1);
+        let s = &scores[0];
+        assert_eq!(s.model, 0);
+        assert_eq!(s.estimator, "hw");
+        assert!(s.n >= 40, "matured pairs: {}", s.n);
+        assert!(s.r2 <= 1.0 + 1e-9);
+        assert!(s.mape >= 0.0 && s.mape < 50.0, "constant stream mape {}", s.mape);
+    }
+
+    #[test]
+    fn name_composes_inner_and_estimator() {
+        assert_eq!(scaler(30.0).name(), "inert+hw");
+        let p = PredictiveScaler::new(
+            Box::new(Inert),
+            ForecasterKind::parse("window").unwrap(),
+            30.0,
+            1,
+        );
+        assert_eq!(p.name(), "inert+win");
+    }
+}

@@ -27,6 +27,7 @@ pub mod coordinator;
 pub mod core;
 pub mod engine;
 pub mod experiments;
+pub mod forecast;
 pub mod metrics;
 pub mod perf;
 pub mod runtime;

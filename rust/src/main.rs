@@ -65,9 +65,11 @@ fn help() {
          \u{20}                                  sweeps fan out over N worker threads (default: all cores)\n\
          \u{20}  scenario list                   list the built-in workload catalog\n\
          \u{20}  scenario show <name|file>       print a scenario spec as JSON\n\
-         \u{20}  scenario run <name|file> [--policy P --seeds N --jobs J --scale F]\n\
-         \u{20}                                  run a scenario (streaming trace), per-seed + mean±std JSON\n\
-         \u{20}  scenario sweep [--scenarios A,B --policies P,Q --seeds N]\n\
+         \u{20}  scenario run <name|file> [--policy P --seeds N --jobs J --scale F\n\
+         \u{20}                            --forecast E --lead-time S]\n\
+         \u{20}                                  run a scenario (streaming trace), per-seed + mean±std JSON;\n\
+         \u{20}                                  --forecast wraps the policy in a predictive scaler\n\
+         \u{20}  scenario sweep [--scenarios A,B --policies P,Q --seeds N --forecast E]\n\
          \u{20}                                  (policy × scenario × seed) grid over the worker pool\n\
          \u{20}  simulate --config <file>        run a simulation described by a JSON config\n\
          \u{20}  trace-gen [flags]               generate a workload trace (JSON to stdout)\n\
@@ -163,10 +165,68 @@ fn run_scenario_cell(
     let report = run_sim_source(cfg, Box::new(spec.source(seed)), policy.as_mut());
     CellResult {
         row: PolicyRow::from_report(&report),
-        summary: Summary::of(&report.outcomes),
+        summary: Summary::of_report(&report),
         total_requests: report.total_requests,
         unfinished: report.unfinished,
     }
+}
+
+/// Apply the `--forecast`/`--lead-time` scenario flags: wrap `kind` in a
+/// `PredictiveScaler` and return the wrapped kind plus its display label.
+/// Warns when the lead time cannot cover a model's load delay (the
+/// pre-provisioned instances would still be Loading when demand lands).
+fn wrap_forecast(
+    kind: PolicyKind,
+    label: &str,
+    forecast: &str,
+    lead_time: f64,
+    models: &[ModelSpec],
+) -> (PolicyKind, String) {
+    // `--forecast` overrides a `+forecast` policy-name suffix instead of
+    // stacking a second scaler (two nested forecasters would both inject
+    // scaling actions and the results would compare against nothing); a
+    // suffix without `--forecast` keeps its parsed estimator but still
+    // honors `--lead-time` and the load-delay check below.
+    let explicit = if forecast.is_empty() {
+        None
+    } else {
+        Some(
+            chiron::forecast::ForecasterKind::parse(forecast).unwrap_or_else(|| {
+                eprintln!(
+                    "unknown forecaster '{forecast}' (one of: {})",
+                    chiron::forecast::ForecasterKind::NAMES.join(", ")
+                );
+                std::process::exit(2);
+            }),
+        )
+    };
+    let (base, base_label, est) = match kind {
+        PolicyKind::Forecast { inner, est, .. } => (
+            *inner,
+            label.strip_suffix("+forecast").unwrap_or(label),
+            explicit.unwrap_or(est),
+        ),
+        k => match explicit {
+            Some(e) => (k, label, e),
+            None => return (k, label.to_string()),
+        },
+    };
+    if !(lead_time.is_finite() && lead_time > 0.0) {
+        eprintln!("--lead-time must be a positive number of seconds, got {lead_time}");
+        std::process::exit(2);
+    }
+    for m in models {
+        if lead_time < m.profile.load_time {
+            eprintln!(
+                "warning: --lead-time {lead_time}s is shorter than {}'s {}s model-load \
+                 delay; pre-provisioned instances will still be loading when the \
+                 forecast demand arrives",
+                m.name, m.profile.load_time
+            );
+        }
+    }
+    let label = format!("{base_label}+{}", est.short_name());
+    (base.with_forecast(est, lead_time), label)
 }
 
 /// Per-seed + aggregate JSON for one (scenario, policy) pair.
@@ -214,12 +274,26 @@ fn cmd_scenario(argv: Vec<String>) {
     .flag(
         "policy",
         "chiron",
-        "policy for `run` (chiron|llumnix|llumnix-tuned|local-only|global-only)",
+        "policy for `run` (chiron|llumnix|llumnix-tuned|local-only|global-only;\n\
+         \u{20}                           a '+forecast' suffix wraps it in the default\n\
+         \u{20}                           Holt-Winters predictive scaler)",
     )
     .flag(
         "policies",
         "chiron,llumnix",
         "comma-separated policies for `sweep`",
+    )
+    .flag(
+        "forecast",
+        "",
+        "wrap every policy in a predictive scaler using this estimator \
+         (window|ewma|holt-winters; empty = reactive)",
+    )
+    .flag(
+        "lead-time",
+        "60",
+        "forecast lead time in seconds for --forecast (should be >= the \
+         model-load delay so pre-provisioned instances are ready in time)",
     )
     .flag(
         "scenarios",
@@ -273,7 +347,7 @@ fn cmd_scenario(argv: Vec<String>) {
     match action.as_str() {
         "list" => {
             println!(
-                "{:<14} {:>7} {:>9} {:>6}  {}",
+                "{:<16} {:>7} {:>9} {:>6}  {}",
                 "name", "streams", "requests", "gpus", "description"
             );
             for spec in scenario::catalog() {
@@ -282,7 +356,7 @@ fn cmd_scenario(argv: Vec<String>) {
                     None => format!("<={}", spec.max_requests()),
                 };
                 println!(
-                    "{:<14} {:>7} {:>9} {:>6}  {}",
+                    "{:<16} {:>7} {:>9} {:>6}  {}",
                     spec.name,
                     spec.streams.len(),
                     reqs,
@@ -317,6 +391,13 @@ fn cmd_scenario(argv: Vec<String>) {
                 );
                 std::process::exit(2);
             });
+            let (kind, policy_name) = wrap_forecast(
+                kind,
+                &policy_name,
+                args.get("forecast"),
+                args.get_f64("lead-time"),
+                &models,
+            );
             let gpus = effective_gpus(&spec);
             let seeds = seed_list(args.get_u64("seed"), args.get_usize("seeds").max(1));
             println!(
@@ -366,6 +447,13 @@ fn cmd_scenario(argv: Vec<String>) {
                         );
                         std::process::exit(2);
                     });
+                    let (kind, pname) = wrap_forecast(
+                        kind,
+                        &pname,
+                        args.get("forecast"),
+                        args.get_f64("lead-time"),
+                        &models,
+                    );
                     cells.push((spec.clone(), models.clone(), pname, kind, gpus));
                 }
             }
@@ -391,7 +479,7 @@ fn cmd_scenario(argv: Vec<String>) {
             let mut it = flat.into_iter();
             let mut out = Vec::with_capacity(cells.len());
             println!(
-                "{:<14} {:<14} {:>10} {:>12} {:>12}",
+                "{:<16} {:<14} {:>10} {:>12} {:>12}",
                 "scenario", "policy", "slo%±std", "GPUh±std", "p99ttft±std"
             );
             for (spec, _, pname, _, gpus) in &cells {
@@ -405,7 +493,7 @@ fn cmd_scenario(argv: Vec<String>) {
                 let gpuh = chiron::metrics::MeanStd::of(&rows, |r| r.gpu_hours);
                 let p99 = chiron::metrics::MeanStd::of(&summaries, |s| s.ttft_p99);
                 println!(
-                    "{:<14} {:<14} {:>5.1}±{:<4.1} {:>7.2}±{:<4.2} {:>7.2}±{:<4.2}",
+                    "{:<16} {:<14} {:>5.1}±{:<4.1} {:>7.2}±{:<4.2} {:>7.2}±{:<4.2}",
                     spec.name,
                     pname,
                     slo.mean * 100.0,
@@ -502,10 +590,24 @@ fn cmd_bench_gate(argv: Vec<String>) {
         }
     };
     let mean_of = |results: &[Json], name: &str| -> Option<f64> {
-        results
+        // Prefer an exact or word-boundary match ("sim.run" must pin
+        // "sim.run chiron 6k requests", never "sim.run_forecast ...",
+        // regardless of bench registration order); fall back to the first
+        // substring hit for patterns that only occur mid-name.
+        let word = format!("{name} ");
+        let matched = results
             .iter()
-            .find(|r| r.get("name").as_str().is_some_and(|n| n.contains(name)))
-            .and_then(|r| r.get("mean_ns").as_f64())
+            .find(|r| {
+                r.get("name")
+                    .as_str()
+                    .is_some_and(|n| n == name || n.starts_with(&word))
+            })
+            .or_else(|| {
+                results
+                    .iter()
+                    .find(|r| r.get("name").as_str().is_some_and(|n| n.contains(name)))
+            });
+        matched.and_then(|r| r.get("mean_ns").as_f64())
     };
     let mut failed = false;
     for bench in &benches {

@@ -3,6 +3,7 @@
 //! and multi-seed mean ± std aggregates for replicated runs.
 
 use crate::core::{RequestClass, RequestOutcome};
+use crate::forecast::ForecastScore;
 use crate::sim::SimReport;
 use crate::util::json::Json;
 use crate::util::stats::{Percentiles, Welford};
@@ -18,6 +19,9 @@ pub struct Summary {
     pub itl_p99: f64,
     pub preemptions_per_request: f64,
     pub mean_output_tokens: f64,
+    /// Per-model forecast accuracy (only populated for predictive-policy
+    /// runs summarized via [`Summary::of_report`]).
+    pub forecast: Vec<ForecastScore>,
 }
 
 impl Summary {
@@ -46,6 +50,16 @@ impl Summary {
             itl_p99: itl.pct(99.0),
             preemptions_per_request: if n == 0 { 0.0 } else { preempt as f64 / n as f64 },
             mean_output_tokens: if n == 0 { 0.0 } else { out_tokens as f64 / n as f64 },
+            forecast: Vec::new(),
+        }
+    }
+
+    /// Summarize a full report: outcome metrics plus the per-model forecast
+    /// accuracy a predictive policy recorded (empty for reactive runs).
+    pub fn of_report(report: &SimReport) -> Summary {
+        Summary {
+            forecast: report.forecast.clone(),
+            ..Summary::of(&report.outcomes)
         }
     }
 
@@ -59,7 +73,7 @@ impl Summary {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("count", self.count.into()),
             ("slo_attainment", self.slo_attainment.into()),
             ("ttft_p50", self.ttft_p50.into()),
@@ -71,7 +85,30 @@ impl Summary {
                 self.preemptions_per_request.into(),
             ),
             ("mean_output_tokens", self.mean_output_tokens.into()),
-        ])
+        ];
+        if !self.forecast.is_empty() {
+            fields.push((
+                "forecast",
+                Json::arr(self.forecast.iter().map(|f| f.to_json())),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    /// Mean forecast R² across models, if any scores exist.
+    pub fn forecast_r2(&self) -> Option<f64> {
+        if self.forecast.is_empty() {
+            return None;
+        }
+        Some(self.forecast.iter().map(|f| f.r2).sum::<f64>() / self.forecast.len() as f64)
+    }
+
+    /// Mean forecast MAPE across models, if any scores exist.
+    pub fn forecast_mape(&self) -> Option<f64> {
+        if self.forecast.is_empty() {
+            return None;
+        }
+        Some(self.forecast.iter().map(|f| f.mape).sum::<f64>() / self.forecast.len() as f64)
     }
 }
 
@@ -121,10 +158,16 @@ pub struct SummaryStats {
     pub itl_p99: MeanStd,
     pub preemptions_per_request: MeanStd,
     pub mean_output_tokens: MeanStd,
+    /// Forecast accuracy over the seeds that carried scores (model-mean R²
+    /// and MAPE per seed); `n = 0` for reactive runs.
+    pub forecast_r2: MeanStd,
+    pub forecast_mape: MeanStd,
 }
 
 impl SummaryStats {
     pub fn of(summaries: &[Summary]) -> SummaryStats {
+        let r2s: Vec<f64> = summaries.iter().filter_map(Summary::forecast_r2).collect();
+        let mapes: Vec<f64> = summaries.iter().filter_map(Summary::forecast_mape).collect();
         SummaryStats {
             seeds: summaries.len(),
             count: MeanStd::of(summaries, |s| s.count as f64),
@@ -135,11 +178,13 @@ impl SummaryStats {
             itl_p99: MeanStd::of(summaries, |s| s.itl_p99),
             preemptions_per_request: MeanStd::of(summaries, |s| s.preemptions_per_request),
             mean_output_tokens: MeanStd::of(summaries, |s| s.mean_output_tokens),
+            forecast_r2: MeanStd::of(&r2s, |&x| x),
+            forecast_mape: MeanStd::of(&mapes, |&x| x),
         }
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("seeds", self.seeds.into()),
             ("count", self.count.to_json()),
             ("slo_attainment", self.slo_attainment.to_json()),
@@ -152,7 +197,12 @@ impl SummaryStats {
                 self.preemptions_per_request.to_json(),
             ),
             ("mean_output_tokens", self.mean_output_tokens.to_json()),
-        ])
+        ];
+        if self.forecast_r2.n > 0 {
+            fields.push(("forecast_r2", self.forecast_r2.to_json()));
+            fields.push(("forecast_mape", self.forecast_mape.to_json()));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -336,6 +386,35 @@ mod tests {
         // A single replication has no spread estimate.
         let one = MeanStd::of(&[5.0f64], |&x| x);
         assert_eq!((one.mean, one.std), (5.0, 0.0));
+    }
+
+    #[test]
+    fn summary_forecast_fields_flow_through_json() {
+        use crate::forecast::ForecastScore;
+        let mut a = Summary::of(&[outcome(1.0, 0.1, RequestClass::Interactive)]);
+        a.forecast = vec![ForecastScore {
+            model: 0,
+            estimator: "hw".into(),
+            n: 10,
+            r2: 0.9,
+            mape: 12.0,
+        }];
+        let b = Summary::of(&[outcome(1.0, 0.1, RequestClass::Interactive)]);
+        // Reactive summaries omit the forecast block entirely.
+        assert!(b.to_json().get("forecast").as_arr().is_none());
+        assert!(b.forecast_r2().is_none());
+        let j = a.to_json();
+        let scores = j.get("forecast").as_arr().unwrap();
+        assert!((scores[0].get("r2").as_f64().unwrap() - 0.9).abs() < 1e-12);
+        assert!((scores[0].get("mape").as_f64().unwrap() - 12.0).abs() < 1e-12);
+        let stats = SummaryStats::of(&[a.clone(), a]);
+        assert_eq!(stats.forecast_r2.n, 2);
+        let sj = stats.to_json();
+        assert!((sj.get("forecast_r2").get("mean").as_f64().unwrap() - 0.9).abs() < 1e-12);
+        // All-reactive aggregates omit the accuracy fields.
+        let stats2 = SummaryStats::of(&[b]);
+        assert_eq!(stats2.forecast_r2.n, 0);
+        assert!(stats2.to_json().get("forecast_r2").get("mean").as_f64().is_none());
     }
 
     #[test]

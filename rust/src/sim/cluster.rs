@@ -112,6 +112,10 @@ pub struct SimReport {
     /// under `SimConfig::record_gpu_trace`. Every entry's time is a tick
     /// barrier (or the t=0 bootstrap) by construction.
     pub gpu_trace: Vec<(Time, u32)>,
+    /// Per-model forecast accuracy (R²/MAPE of lead-time-ahead rate
+    /// predictions). Empty unless the policy is predictive
+    /// (`forecast::PredictiveScaler`).
+    pub forecast: Vec<crate::forecast::ForecastScore>,
 }
 
 impl SimReport {
@@ -485,6 +489,7 @@ impl<'p> Simulation<'p> {
         self.report.total_requests = self.total_hint.unwrap_or(arrived);
         self.report.unfinished = self.report.total_requests - completed;
         self.report.policy = self.policy.name().to_string();
+        self.report.forecast = self.policy.forecast_scores();
         self.report
     }
 

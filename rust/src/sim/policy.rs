@@ -121,6 +121,13 @@ pub struct QueueStats {
     pub batch_deadline_sample: Vec<Time>,
     /// Each sampled deadline represents `stride` queued requests.
     pub stride: usize,
+    /// Cumulative arrivals this model has received as of the barrier (all
+    /// classes). Predictive policies difference successive barriers to
+    /// recover per-epoch arrival counts — the observation stream online
+    /// rate forecasters (`crate::forecast`) are fed with.
+    pub arrived_total: u64,
+    /// Of which interactive-class arrivals.
+    pub arrived_interactive: u64,
 }
 
 /// Read-only snapshot of one model's slice of the cluster, handed to
@@ -235,6 +242,13 @@ pub trait GlobalPolicy {
     /// Shards record completions as they happen; the driver replays them
     /// here — per-model order preserved — before each `autoscale` call.
     fn on_complete(&mut self, _outcome: &crate::core::RequestOutcome) {}
+
+    /// Per-model forecast-accuracy scores. Only predictive policies
+    /// (`crate::forecast::PredictiveScaler`) return entries; the simulator
+    /// collects them into `SimReport::forecast` at the end of a run.
+    fn forecast_scores(&self) -> Vec<crate::forecast::ForecastScore> {
+        Vec::new()
+    }
 }
 
 /// Compat alias: the pre-split trait name. `Box<dyn Policy>` is the global

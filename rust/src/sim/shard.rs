@@ -106,6 +106,9 @@ pub struct ModelShard {
     pub outcomes: Vec<RequestOutcome>,
     pub observed_upto: usize,
     pub arrived: usize,
+    /// Of `arrived`, the interactive-class requests (surfaced per barrier
+    /// in `QueueStats` for the forecast plane).
+    pub arrived_interactive: usize,
     pub completed: usize,
     pub total_tokens: f64,
     /// Time of the most recent completion (−∞ before any).
@@ -138,6 +141,7 @@ impl ModelShard {
             outcomes: Vec::new(),
             observed_upto: 0,
             arrived: 0,
+            arrived_interactive: 0,
             completed: 0,
             total_tokens: 0.0,
             last_completion: f64::NEG_INFINITY,
@@ -212,6 +216,9 @@ impl ModelShard {
                 self.now = req.arrival;
                 self.last_event = self.now;
                 self.arrived += 1;
+                if req.class == RequestClass::Interactive {
+                    self.arrived_interactive += 1;
+                }
                 self.route_item(WorkItem::fresh(req));
             } else {
                 let Reverse(HeapEv { t, ev, .. }) = self.heap.pop().unwrap();
@@ -336,6 +343,8 @@ impl ModelShard {
         stats.batch_oldest_arrival = qb.front().map(|w| w.req.arrival);
         let stride = (qb.len() / QUEUE_SAMPLE).max(1);
         stats.stride = stride;
+        stats.arrived_total = self.arrived as u64;
+        stats.arrived_interactive = self.arrived_interactive as u64;
         stats.batch_deadline_sample.clear();
         let mut i = 0;
         while i < qb.len() {

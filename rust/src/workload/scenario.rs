@@ -867,6 +867,107 @@ fn batch_slo(ttft: Time) -> Slo {
     }
 }
 
+/// Requests in the generated `diurnal-replay` trace file (4500 interactive
+/// along one phased diurnal cycle + a 500-request batch dump at t = 600 s).
+const DIURNAL_REPLAY_COUNT: usize = 5_000;
+
+/// The synthetic generator behind the `diurnal-replay` trace file: one
+/// diurnal cycle (the `diurnal` scenario's 12-segment sinusoid at quarter
+/// rate, ending on a small positive tail so the request cap is exact) plus
+/// a mid-cycle batch dump. Kept private — the catalog consumes it only
+/// through the written trace JSON, exercising the replay path end to end.
+fn diurnal_replay_generator() -> ScenarioSpec {
+    let inter = stream(
+        "diurnal-day",
+        RequestClass::Interactive,
+        Slo::interactive_default(),
+        ArrivalProcess::Phased {
+            segments: vec![
+                (0.0, 0.75),
+                (150.0, 1.25),
+                (300.0, 2.0),
+                (450.0, 3.0),
+                (600.0, 3.75),
+                (750.0, 4.5),
+                (900.0, 4.75),
+                (1050.0, 4.5),
+                (1200.0, 3.75),
+                (1350.0, 3.0),
+                (1500.0, 2.0),
+                (1650.0, 1.25),
+                (1800.0, 0.75),
+            ],
+        },
+        DIURNAL_REPLAY_COUNT - 500,
+        0,
+        0.0,
+    );
+    ScenarioSpec {
+        name: "diurnal-replay-generator".into(),
+        description: "generator for the diurnal-replay trace file".into(),
+        models: vec!["llama8b".into()],
+        gpus: 50,
+        max_time: 2.0 * 3600.0,
+        streams: vec![
+            inter,
+            stream(
+                "overnight-batch",
+                RequestClass::Batch,
+                batch_slo(1800.0),
+                ArrivalProcess::Burst { at: 600.0 },
+                500,
+                0,
+                600.0,
+            ),
+        ],
+    }
+}
+
+/// Path to the trace JSON backing the `diurnal-replay` catalog entry —
+/// a diurnal cycle expressed as a trace file and consumed through the
+/// `{"kind":"replay"}` source, the same pipeline a converted production
+/// trace (SageServe-style) would use. Generated deterministically once per
+/// process into the temp directory: the bytes are a pure function of the
+/// generator spec and a fixed seed, and the write is atomic (temp file +
+/// rename), so concurrent test binaries agree on the content. The `-v1`
+/// suffix versions the generator — bump it if the generation ever changes
+/// so stale files from older builds cannot be replayed.
+///
+/// This runs eagerly from `catalog()` (the entry must embed the path, and
+/// a path whose file only appears when the scenario is *run* would leave
+/// `validate()` failing for everyone else). The cost is one ~5k-request
+/// generation + ~600 KB write per temp-dir lifetime, a few milliseconds —
+/// accepted over coupling the generic replay loader to this one entry.
+fn diurnal_replay_path() -> String {
+    use std::sync::OnceLock;
+    static PATH: OnceLock<String> = OnceLock::new();
+    PATH.get_or_init(|| {
+        let dir = std::env::temp_dir();
+        let path = dir.join("chiron-diurnal-replay-v1.json");
+        if !path.exists() {
+            let trace = diurnal_replay_generator().trace(7701);
+            debug_assert_eq!(trace.len(), DIURNAL_REPLAY_COUNT);
+            let tmp = dir.join(format!(
+                "chiron-diurnal-replay-v1.{}.tmp",
+                std::process::id()
+            ));
+            // Failures surface immediately (the spec would otherwise embed
+            // a dangling path that only errors at replay-validation time).
+            let wrote = std::fs::write(&tmp, trace.to_json().to_string())
+                .and_then(|()| std::fs::rename(&tmp, &path));
+            if let Err(e) = wrote {
+                eprintln!(
+                    "warning: could not write diurnal-replay trace {}: {e} \
+                     (the diurnal-replay scenario will fail validation)",
+                    path.display()
+                );
+            }
+        }
+        path.to_string_lossy().into_owned()
+    })
+    .clone()
+}
+
 /// The built-in scenario registry.
 pub fn catalog() -> Vec<ScenarioSpec> {
     let i_slo = Slo::interactive_default();
@@ -1108,6 +1209,127 @@ pub fn catalog() -> Vec<ScenarioSpec> {
                 ),
             ],
         },
+        ScenarioSpec {
+            name: "spike-correlated".into(),
+            description:
+                "Correlated flash crowds: four streams across two models spiking at the same onsets"
+                    .into(),
+            models: vec!["llama8b".into(), "llama70b".into()],
+            gpus: 80,
+            max_time: 2.0 * 3600.0,
+            streams: vec![
+                // Baseline caps cover ~1875 s at the nominal rates, so the
+                // steady streams outlive the second spike at t = 1500 s.
+                stream(
+                    "tenant0-baseline",
+                    RequestClass::Interactive,
+                    i_slo,
+                    ArrivalProcess::Poisson { rate: 8.0 },
+                    15_000,
+                    0,
+                    0.0,
+                ),
+                stream(
+                    "tenant1-baseline",
+                    RequestClass::Interactive,
+                    i_slo,
+                    ArrivalProcess::Poisson { rate: 2.5 },
+                    4_700,
+                    1,
+                    0.0,
+                ),
+                // The correlated part: three spike streams (two on model 0,
+                // one on model 1) whose onsets are the SAME instants — the
+                // flash-crowd regime where independent per-model reactions
+                // all pay the model-load delay at once, and a shared ramp
+                // forecast pays for itself.
+                stream(
+                    "tenant0-spike-a",
+                    RequestClass::Interactive,
+                    i_slo,
+                    ArrivalProcess::Phased {
+                        segments: vec![
+                            (0.0, 0.0),
+                            (600.0, 60.0),
+                            (690.0, 0.0),
+                            (1500.0, 90.0),
+                            (1590.0, 0.0),
+                        ],
+                    },
+                    14_000,
+                    0,
+                    0.0,
+                ),
+                stream(
+                    "tenant0-spike-b",
+                    RequestClass::Interactive,
+                    i_slo,
+                    ArrivalProcess::Phased {
+                        segments: vec![
+                            (0.0, 0.0),
+                            (600.0, 30.0),
+                            (690.0, 0.0),
+                            (1500.0, 45.0),
+                            (1590.0, 0.0),
+                        ],
+                    },
+                    7_000,
+                    0,
+                    0.0,
+                ),
+                stream(
+                    "tenant1-spike",
+                    RequestClass::Interactive,
+                    i_slo,
+                    ArrivalProcess::Phased {
+                        segments: vec![
+                            (0.0, 0.0),
+                            (600.0, 10.0),
+                            (690.0, 0.0),
+                            (1500.0, 15.0),
+                            (1590.0, 0.0),
+                        ],
+                    },
+                    2_400,
+                    1,
+                    0.0,
+                ),
+                stream(
+                    "batch-floor",
+                    RequestClass::Batch,
+                    batch_slo(1800.0),
+                    ArrivalProcess::Burst { at: 120.0 },
+                    2_000,
+                    0,
+                    120.0,
+                ),
+            ],
+        },
+        ScenarioSpec {
+            name: "diurnal-replay".into(),
+            description:
+                "A diurnal cycle replayed from a generated trace JSON through the replay source"
+                    .into(),
+            models: vec!["llama8b".into()],
+            gpus: 50,
+            max_time: 2.0 * 3600.0,
+            streams: vec![StreamSpec {
+                name: "replayed-day".into(),
+                kind: StreamKind::Replay {
+                    path: diurnal_replay_path(),
+                },
+                // Inert placeholders, matching what the replay parser
+                // reconstructs so the catalog entry round-trips exactly.
+                class: RequestClass::Interactive,
+                slo: Slo::interactive_default(),
+                arrivals: ArrivalProcess::Burst { at: 0.0 },
+                count: DIURNAL_REPLAY_COUNT,
+                model: 0,
+                start: 0.0,
+                stop: None,
+                lengths: LengthDist::ShareGpt,
+            }],
+        },
     ]
 }
 
@@ -1139,9 +1361,107 @@ mod tests {
             "multi-tenant",
             "heavy-tail",
             "batch-backlog",
+            "spike-correlated",
+            "diurnal-replay",
         ] {
             assert!(by_name(required).is_some(), "missing catalog entry {required}");
         }
+    }
+
+    /// Catalog growth part 2: the correlated-spike and diurnal-replay
+    /// entries must round-trip (covered for every entry by
+    /// `catalog_json_roundtrip`) and stream byte-identically to their
+    /// materialized traces.
+    #[test]
+    fn new_catalog_entries_stream_equals_materialized() {
+        for (name, frac) in [("spike-correlated", 0.02), ("diurnal-replay", 0.1)] {
+            let spec = by_name(name).unwrap().scaled(frac);
+            for seed in [3u64, 19] {
+                let trace = spec.trace(seed);
+                assert!(!trace.requests.is_empty(), "{name}");
+                let mut src = spec.source(seed);
+                let mut streamed = Vec::new();
+                while let Some(r) = src.next_request() {
+                    streamed.push(r);
+                }
+                assert_eq!(trace.len(), streamed.len(), "{name} seed {seed}");
+                for (a, b) in trace.requests.iter().zip(&streamed) {
+                    assert_eq!(a.id, b.id, "{name} seed {seed}");
+                    assert_eq!(a.arrival.to_bits(), b.arrival.to_bits(), "{name} seed {seed}");
+                    assert_eq!(a.class, b.class);
+                    assert_eq!(a.model, b.model);
+                    assert_eq!(a.input_tokens, b.input_tokens);
+                    assert_eq!(a.output_tokens, b.output_tokens);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spike_correlated_onsets_are_correlated() {
+        // Every spike stream must ramp at the same onsets (600 s, 1500 s):
+        // the per-window arrival count across the whole scenario should
+        // jump by far more than the baseline at those instants.
+        let spec = by_name("spike-correlated").unwrap();
+        let trace = spec.trace(11);
+        let in_window = |a: f64, b: f64| {
+            trace
+                .requests
+                .iter()
+                .filter(|r| r.class == RequestClass::Interactive && r.arrival >= a && r.arrival < b)
+                .count() as f64
+        };
+        let pre = in_window(500.0, 590.0) / 90.0;
+        let spike1 = in_window(600.0, 690.0) / 90.0;
+        let spike2 = in_window(1500.0, 1590.0) / 90.0;
+        assert!(spike1 > 5.0 * pre, "onset 600: {spike1}/s vs baseline {pre}/s");
+        assert!(spike2 > 5.0 * pre, "onset 1500: {spike2}/s vs baseline {pre}/s");
+        // Both models spike simultaneously (the correlated part).
+        let m1_spike = trace
+            .requests
+            .iter()
+            .filter(|r| r.model == 1 && (600.0..690.0).contains(&r.arrival))
+            .count();
+        assert!(m1_spike > 200, "model 1 must join the flash crowd: {m1_spike}");
+    }
+
+    #[test]
+    fn diurnal_replay_file_is_deterministic_and_diurnal() {
+        let spec = by_name("diurnal-replay").unwrap();
+        // Replay source: the file exists, loads, and its request count
+        // matches the catalog cap exactly.
+        let trace = spec.trace(1);
+        assert_eq!(trace.len(), DIURNAL_REPLAY_COUNT);
+        // Same bytes on repeated generation (the OnceLock path is stable).
+        assert_eq!(diurnal_replay_path(), diurnal_replay_path());
+        // The replayed day actually cycles: the midday peak outpaces the
+        // edges by roughly the generator's rate ratio.
+        let inter: Vec<&Request> = trace
+            .requests
+            .iter()
+            .filter(|r| r.class == RequestClass::Interactive)
+            .collect();
+        let count_in = |a: f64, b: f64| {
+            inter
+                .iter()
+                .filter(|r| r.arrival >= a && r.arrival < b)
+                .count() as f64
+        };
+        let night = count_in(0.0, 300.0);
+        let midday = count_in(750.0, 1050.0);
+        assert!(
+            midday > 2.0 * night,
+            "diurnal shape lost in replay: night {night}, midday {midday}"
+        );
+        // And the batch dump rode along with its class preserved.
+        assert_eq!(
+            trace
+                .requests
+                .iter()
+                .filter(|r| r.class == RequestClass::Batch)
+                .count(),
+            500
+        );
     }
 
     #[test]

@@ -1,0 +1,232 @@
+//! Forecast-plane integration tests.
+//!
+//! Three contracts:
+//!  1. **Estimator convergence** — the online estimators recover the true
+//!     rate of synthetic constant and phased Poisson streams.
+//!  2. **Digest determinism** — `PredictiveScaler`-decorated policies are
+//!     FNV-digest bit-identical at `shard_workers` 1 vs 4 and `--jobs`
+//!     1 vs 4 across the scenario catalog, same as the reactive policies
+//!     (tests/sharding.rs): the decorator reads only the merged barrier
+//!     `ClusterView` and mutates state on the driver thread.
+//!  3. **Budget safety** — pre-provisioning never pushes `gpus_used` past
+//!     `gpus_total`, even on a cluster with almost no headroom.
+
+mod common;
+
+use chiron::experiments::common::{make_policy, PolicyKind};
+use chiron::forecast::{ForecasterKind, RateForecaster};
+use chiron::sim::{run_sim_source, SimConfig, SimReport};
+use chiron::util::parallel::run_grid_jobs;
+use chiron::util::rng::Rng;
+use chiron::workload::scenario::{catalog, by_name, ScenarioSpec};
+
+use crate::common::digest_report;
+
+fn predictive_chiron(lead: f64) -> PolicyKind {
+    PolicyKind::Chiron.with_forecast(
+        ForecasterKind::parse("holt-winters").unwrap(),
+        lead,
+    )
+}
+
+fn run_spec(
+    spec: &ScenarioSpec,
+    kind: &PolicyKind,
+    seed: u64,
+    shard_workers: usize,
+    gpus: Option<u32>,
+    record: bool,
+) -> SimReport {
+    let models = spec.model_specs().unwrap();
+    let mut cfg = SimConfig::new(gpus.unwrap_or(spec.gpus), models.clone());
+    cfg.max_sim_time = spec.max_time;
+    cfg.shard_workers = shard_workers;
+    cfg.record_gpu_trace = record;
+    let mut p = make_policy(kind, &models);
+    run_sim_source(cfg, Box::new(spec.source(seed)), p.as_mut())
+}
+
+/// Poisson counts per 1-second tick at `rate`, fed straight to a forecaster.
+fn feed_poisson_ticks(f: &mut dyn RateForecaster, rate: f64, ticks: usize, rng: &mut Rng) {
+    for _ in 0..ticks {
+        let mut n = 0.0;
+        let mut t = 0.0;
+        loop {
+            t += rng.exp(rate);
+            if t > 1.0 {
+                break;
+            }
+            n += 1.0;
+        }
+        f.observe(n, 1.0);
+    }
+}
+
+#[test]
+fn estimators_converge_on_constant_poisson() {
+    let mut rng = Rng::new(5);
+    for name in ForecasterKind::NAMES {
+        let mut f = ForecasterKind::parse(name).unwrap().build();
+        feed_poisson_ticks(f.as_mut(), 24.0, 900, &mut rng);
+        // The window mean averages ~120 ticks (tight); EWMA/HW weight the
+        // recent past, so per-tick Poisson noise leaves a wider band.
+        let lvl_tol = if *name == "window" { 1.5 } else { 5.0 };
+        let lvl = f.level().unwrap();
+        assert!(
+            (lvl - 24.0).abs() < lvl_tol,
+            "{name}: level {lvl} should approach the true rate 24"
+        );
+        // Wider band for Holt–Winters: the trend term amplifies sampling
+        // noise over the 45 s horizon (flat estimators forecast the level).
+        let tol = if *name == "holt-winters" { 12.0 } else { 5.0 };
+        let fut = f.forecast(45.0).unwrap();
+        assert!(
+            (fut - 24.0).abs() < tol,
+            "{name}: constant-rate 45s forecast {fut} should stay near 24"
+        );
+    }
+}
+
+#[test]
+fn estimators_track_phased_poisson_step() {
+    // A phased stream: 6/s for 400 ticks, then 30/s. Every estimator must
+    // re-converge after the step; Holt–Winters must overshoot ahead during
+    // the transient (trend > 0), which is exactly what buys lead time.
+    let mut rng = Rng::new(9);
+    for name in ForecasterKind::NAMES {
+        let mut f = ForecasterKind::parse(name).unwrap().build();
+        feed_poisson_ticks(f.as_mut(), 6.0, 400, &mut rng);
+        let before = f.level().unwrap();
+        assert!((before - 6.0).abs() < 3.0, "{name}: pre-step level {before}");
+        feed_poisson_ticks(f.as_mut(), 30.0, 400, &mut rng);
+        let after = f.level().unwrap();
+        assert!(
+            (after - 30.0).abs() < 7.0,
+            "{name}: post-step level {after} should approach 30"
+        );
+    }
+}
+
+#[test]
+fn predictive_digest_identical_across_shard_workers_whole_catalog() {
+    let kind = predictive_chiron(45.0);
+    for spec in catalog() {
+        let spec = spec.scaled(0.004);
+        let mono = run_spec(&spec, &kind, 11, 1, None, false);
+        let sharded = run_spec(&spec, &kind, 11, 4, None, false);
+        assert!(
+            !mono.outcomes.is_empty(),
+            "{}: scenario must complete work",
+            spec.name
+        );
+        assert_eq!(
+            digest_report(&mono),
+            digest_report(&sharded),
+            "{}: chiron+hw must be byte-identical at shards 1 vs 4",
+            spec.name
+        );
+    }
+}
+
+#[test]
+fn predictive_baseline_digest_identical_across_shard_workers() {
+    // The decorator must stay deterministic over a baseline too, and with
+    // every estimator kind (not just Holt–Winters).
+    let spec = by_name("spike-correlated").unwrap().scaled(0.02);
+    for est in ForecasterKind::NAMES {
+        let kind = PolicyKind::LlumnixUntuned
+            .with_forecast(ForecasterKind::parse(est).unwrap(), 60.0);
+        let a = run_spec(&spec, &kind, 7, 1, None, false);
+        let b = run_spec(&spec, &kind, 7, 4, None, false);
+        assert_eq!(
+            digest_report(&a),
+            digest_report(&b),
+            "llumnix+{est}: shards 1 vs 4"
+        );
+    }
+}
+
+#[test]
+fn predictive_digest_identical_across_jobs() {
+    // (seed) grid fanned over 1 vs 4 workers: per-cell digests must match
+    // slot for slot (the scaler is built per worker, so nothing shared).
+    let spec = by_name("flash-crowd").unwrap().scaled(0.02);
+    let kind = predictive_chiron(45.0);
+    let digests = |jobs: usize| -> Vec<u64> {
+        let seeds: Vec<u64> = vec![1, 2, 3, 4, 5, 6];
+        run_grid_jobs(jobs, seeds, |_, seed| {
+            digest_report(&run_spec(&spec, &kind, seed, 1, None, false))
+        })
+    };
+    assert_eq!(digests(1), digests(4), "jobs 1 vs 4 must agree per seed");
+}
+
+#[test]
+fn preprovisioning_never_exceeds_gpu_budget() {
+    // Property over the whole correlated-spike run on a nearly full
+    // cluster: the recorded cluster-level budget trace must never cross
+    // gpus_total, at either worker count. (The scaler also self-limits —
+    // unit-tested in forecast::scaler — this pins the end-to-end result.)
+    let spec = by_name("spike-correlated").unwrap().scaled(0.05);
+    for workers in [1usize, 4] {
+        for gpus in [8u32, 16] {
+            let report = run_spec(
+                &spec,
+                &predictive_chiron(45.0),
+                3,
+                workers,
+                Some(gpus),
+                true,
+            );
+            assert!(
+                !report.gpu_trace.is_empty(),
+                "expected budget history (workers={workers}, gpus={gpus})"
+            );
+            for &(t, used) in &report.gpu_trace {
+                assert!(
+                    used <= gpus,
+                    "budget violated at t={t}: {used} > {gpus} (workers={workers})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn predictive_run_reports_forecast_accuracy_and_reactive_does_not() {
+    let spec = by_name("diurnal").unwrap().scaled(0.05);
+    let predictive = run_spec(&spec, &predictive_chiron(45.0), 4, 1, None, false);
+    assert!(
+        !predictive.forecast.is_empty(),
+        "predictive run must carry per-model forecast scores"
+    );
+    let s = &predictive.forecast[0];
+    assert_eq!(s.model, 0);
+    assert_eq!(s.estimator, "hw");
+    assert!(s.n > 10, "matured pairs: {}", s.n);
+    assert!(s.r2 <= 1.0 + 1e-9, "r2 {}", s.r2);
+    assert!(s.mape >= 0.0, "mape {}", s.mape);
+    assert!(
+        predictive.policy.ends_with("+hw"),
+        "policy name {}",
+        predictive.policy
+    );
+
+    let reactive = run_spec(&spec, &PolicyKind::Chiron, 4, 1, None, false);
+    assert!(reactive.forecast.is_empty(), "reactive runs carry no scores");
+}
+
+#[test]
+fn policy_kind_parses_forecast_suffix() {
+    for name in ["chiron+forecast", "llumnix+forecast"] {
+        let kind = PolicyKind::parse(name).unwrap_or_else(|| panic!("{name} must parse"));
+        match kind {
+            PolicyKind::Forecast { lead_time, .. } => assert!(lead_time > 0.0),
+            other => panic!("{name} parsed to {other:?}"),
+        }
+    }
+    assert!(PolicyKind::parse("nope+forecast").is_none());
+    // One decorator layer only: repeated suffixes must not stack scalers.
+    assert!(PolicyKind::parse("chiron+forecast+forecast").is_none());
+    assert!(PolicyKind::NAMES.contains(&"chiron+forecast"));
+}
