@@ -11,15 +11,18 @@ use chiron::coordinator::waiting::WaitingTimeEstimator;
 use chiron::coordinator::{
     BootstrapSpec, Chiron, ChironConfig, ChironLocal, LocalAutoscaler, LocalConfig,
 };
-use chiron::core::{InstanceClass, InstanceId, ModelSpec, Request, RequestClass, RequestId, Slo};
+use chiron::core::{
+    InstanceClass, InstanceId, ModelSpec, Request, RequestClass, RequestId, RequestOutcome, Slo,
+};
 use chiron::experiments::common::{make_policy, PolicyKind};
 use chiron::forecast::{ForecasterKind, RateForecaster};
 use chiron::sim::policy::{
     InstanceState, InstanceView, LocalPolicy, ModelView, QueuedReq,
 };
 use chiron::sim::{run_sim, run_sim_source, SimConfig, SimInstance, WorkItem};
+use chiron::metrics::{Summary, SummaryAccum};
 use chiron::util::bench::{black_box, Bencher};
-use chiron::util::parallel::run_grid_jobs;
+use chiron::util::parallel::{for_each_mut, run_grid_jobs};
 use chiron::util::rng::Rng;
 use chiron::workload::trace::{workload_a, workload_b_batch};
 use chiron::workload::{ShareGptSampler, TraceBuilder};
@@ -256,6 +259,86 @@ fn main() {
         });
     }
 
+    // -- worker-pool epoch overhead: the per-barrier fan-out cost -----------
+    // The epoch driver publishes one pool job per tick barrier. This
+    // isolates that per-barrier cost at shards=4 (100 barriers per
+    // iteration, trivial per-shard work) and keeps the scoped-spawn
+    // variant it replaced alongside, so the trajectory shows the win and
+    // would expose a pool regression.
+    // Registered unconditionally (unlike the core-gated shard benches):
+    // this pair is on the CI gate's --require-file list, and both paths
+    // degrade gracefully on a single-core runner.
+    {
+        let mut shards = [0u64; 4];
+        let step = |i: usize, s: &mut u64| {
+            *s = s
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(i as u64 + 1);
+        };
+        b.bench_units("parallel.pool_epoch shards=4 x100", Some(100.0), || {
+            for _ in 0..100 {
+                for_each_mut(4, &mut shards, step);
+            }
+            black_box(&shards);
+        });
+        b.bench_units("parallel.scoped_epoch shards=4 x100", Some(100.0), || {
+            for _ in 0..100 {
+                std::thread::scope(|scope| {
+                    for (i, s) in shards.iter_mut().enumerate() {
+                        scope.spawn(move || step(i, s));
+                    }
+                });
+            }
+            black_box(&shards);
+        });
+    }
+
+    // -- streaming vs buffered summarization over 1M outcomes ---------------
+    // The metrics half of the flat-memory hot path: folding completions
+    // into `SummaryAccum` (what every run now does) against the buffered
+    // `Summary::of` scan it must stay bit-identical to.
+    {
+        let outs: Vec<RequestOutcome> = (0..1_000_000u64)
+            .map(|i| {
+                let interactive = i % 3 != 0;
+                let ttft = 0.2 + (i % 97) as f64 * 0.05;
+                let itl = 0.02 + (i % 13) as f64 * 0.01;
+                RequestOutcome {
+                    id: RequestId(i),
+                    class: if interactive {
+                        RequestClass::Interactive
+                    } else {
+                        RequestClass::Batch
+                    },
+                    slo: if interactive {
+                        Slo::interactive_default()
+                    } else {
+                        Slo::batch_default()
+                    },
+                    model: 0,
+                    arrival: i as f64 * 1e-3,
+                    first_token: i as f64 * 1e-3 + ttft,
+                    completion: i as f64 * 1e-3 + ttft + itl * 100.0,
+                    input_tokens: 128,
+                    output_tokens: 100,
+                    mean_itl: itl,
+                    max_itl: itl * 2.0,
+                    preemptions: (i % 11 == 0) as u32,
+                }
+            })
+            .collect();
+        b.bench_units("metrics.summary_1m buffered", Some(1e6), || {
+            black_box(Summary::of(&outs).count);
+        });
+        b.bench_units("metrics.summary_1m streaming", Some(1e6), || {
+            let mut acc = SummaryAccum::default();
+            for o in &outs {
+                acc.push(o);
+            }
+            black_box(acc.summary().count);
+        });
+    }
+
     // -- sharded event loop: 4 independent models between tick barriers -----
     // The same 4-model workload through the epoch driver at --shards 1 vs 4:
     // the trajectory tracks the shard-parallel speedup over PRs (results are
@@ -317,10 +400,15 @@ fn main() {
             let mut cfg = SimConfig::new(spec.gpus, models_bb.clone());
             cfg.max_sim_time = spec.max_time;
             cfg.timeline_every = 0;
+            // Streaming-summary mode: the million-request dump must not
+            // materialize a million `RequestOutcome`s (the summary
+            // accumulators are bit-identical to the buffered path).
+            cfg.keep_outcomes = false;
             let mut policy = Chiron::new(ChironConfig::for_models(1), &models_bb);
             let r = run_sim_source(cfg, Box::new(spec.source(1)), &mut policy);
             assert_eq!(r.unfinished, 0, "backlog must drain completely");
-            black_box(r.outcomes.len());
+            assert!(r.outcomes.is_empty(), "streaming mode keeps no outcome buffer");
+            black_box(r.stats.count());
         });
     }
 

@@ -57,6 +57,10 @@ impl GlobalPolicy for LocalOnly {
         "local-only"
     }
 
+    fn static_name(&self) -> Option<&'static str> {
+        Some("local-only")
+    }
+
     fn make_local(&self, _model: usize) -> Box<dyn LocalPolicy> {
         Box::new(LocalOnlyLocal {
             llumnix: LlumnixLocal,
@@ -117,6 +121,10 @@ impl GlobalOnly {
 impl GlobalPolicy for GlobalOnly {
     fn name(&self) -> &str {
         "global-only"
+    }
+
+    fn static_name(&self) -> Option<&'static str> {
+        Some("global-only")
     }
 
     fn make_local(&self, _model: usize) -> Box<dyn LocalPolicy> {

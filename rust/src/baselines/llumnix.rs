@@ -89,7 +89,7 @@ impl LocalPolicy for LlumnixLocal {
 pub struct Llumnix {
     pub cfg: LlumnixConfig,
     n_models: usize,
-    name: String,
+    name: &'static str,
 }
 
 impl Llumnix {
@@ -97,7 +97,7 @@ impl Llumnix {
         Llumnix {
             cfg: LlumnixConfig::untuned(),
             n_models: models.len(),
-            name: "llumnix".into(),
+            name: "llumnix",
         }
     }
 
@@ -105,7 +105,7 @@ impl Llumnix {
         Llumnix {
             cfg,
             n_models: models.len(),
-            name: "llumnix-tuned".into(),
+            name: "llumnix-tuned",
         }
     }
 
@@ -128,7 +128,11 @@ impl Llumnix {
 
 impl GlobalPolicy for Llumnix {
     fn name(&self) -> &str {
-        &self.name
+        self.name
+    }
+
+    fn static_name(&self) -> Option<&'static str> {
+        Some(self.name)
     }
 
     fn make_local(&self, _model: usize) -> Box<dyn LocalPolicy> {

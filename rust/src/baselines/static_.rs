@@ -44,7 +44,7 @@ pub struct StaticPolicy {
     /// If false, batch requests wait in the global queue and are pulled
     /// (models a work-conserving queue); if true they dispatch immediately.
     pub eager_dispatch: bool,
-    name: String,
+    name: &'static str,
 }
 
 impl StaticPolicy {
@@ -53,7 +53,7 @@ impl StaticPolicy {
             instances_per_model,
             max_batch,
             eager_dispatch: true,
-            name: "static".into(),
+            name: "static",
         }
     }
 
@@ -65,7 +65,11 @@ impl StaticPolicy {
 
 impl GlobalPolicy for StaticPolicy {
     fn name(&self) -> &str {
-        &self.name
+        self.name
+    }
+
+    fn static_name(&self) -> Option<&'static str> {
+        Some(self.name)
     }
 
     fn make_local(&self, _model: usize) -> Box<dyn LocalPolicy> {

@@ -221,6 +221,10 @@ impl GlobalPolicy for Chiron {
         "chiron"
     }
 
+    fn static_name(&self) -> Option<&'static str> {
+        Some("chiron")
+    }
+
     fn make_local(&self, _model: usize) -> Box<dyn LocalPolicy> {
         Box::new(ChironLocal::new(self.cfg.local))
     }

@@ -44,12 +44,12 @@ impl ServingConfig {
         }
     }
 
-    pub fn label(&self) -> String {
+    pub fn label(&self) -> &'static str {
         match (self.prefix_caching, self.speculative_decoding) {
-            (false, false) => "base".into(),
-            (true, false) => "prefix-cache".into(),
-            (false, true) => "spec-decode".into(),
-            (true, true) => "prefix+spec".into(),
+            (false, false) => "base",
+            (true, false) => "prefix-cache",
+            (false, true) => "spec-decode",
+            (true, true) => "prefix+spec",
         }
     }
 }

@@ -258,7 +258,8 @@ pub fn run_one(
 /// Run the comparison set and return one row per policy.
 ///
 /// Policies are independent simulations over the same (re-generated) trace,
-/// so they fan out across the worker pool (`util::parallel`); results come
+/// so they fan out across the persistent worker pool (`util::parallel` —
+/// long-lived parked workers, one pool for the whole process); results come
 /// back in `kinds` order, so output is identical at any `--jobs` setting.
 pub fn compare(
     models: &[ModelSpec],
@@ -275,10 +276,13 @@ pub fn compare(
 }
 
 /// Multi-seed replication of [`compare`]: every (policy × seed) pair is an
-/// independent simulation fanned through `run_grid`, so replication
-/// parallelizes exactly like the policy sweep. Results are grouped per
-/// policy (in `kinds` order), seeds in `seeds` order within each group —
-/// deterministic at any `--jobs` setting. Aggregate with
+/// independent simulation fanned through `run_grid` onto the persistent
+/// pool, so replication parallelizes exactly like the policy sweep.
+/// Results are grouped per policy (in `kinds` order), seeds in `seeds`
+/// order within each group — deterministic at any `--jobs` setting.
+/// Reports keep their outcome buffers (`SimConfig::keep_outcomes`
+/// default): several figures read per-request records; memory-bound sweeps
+/// (the scenario CLI) stream summaries instead. Aggregate with
 /// [`PolicyRow::aggregate_json`] for mean ± std error bars.
 pub fn compare_seeds(
     models: &[ModelSpec],

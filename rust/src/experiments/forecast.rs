@@ -108,7 +108,7 @@ pub fn fig20(scale: Scale) -> Json {
                     ("scenario", name.into()),
                     ("load_delay", delay.into()),
                     ("lead_time", lead.into()),
-                    ("policy", policy.as_str().into()),
+                    ("policy", policy.as_ref().into()),
                     ("seeds", seeds.len().into()),
                     ("slo_attainment", slo.to_json()),
                     ("gpu_hours", gpuh.to_json()),

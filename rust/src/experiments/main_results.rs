@@ -137,7 +137,7 @@ fn sweep_cell_json(
     let thr = MeanStd::of(cells, |(_, rep)| rep.per_instance_throughput(gpus_per_instance));
     let slo = row_stat(cells, |r| r.slo_attainment);
     let j = Json::obj(vec![
-        ("policy", cells[0].0.policy.as_str().into()),
+        ("policy", cells[0].0.policy.as_ref().into()),
         ("seeds", cells.len().into()),
         ("per_instance_throughput", thr.to_json()),
         ("slo", slo.to_json()),

@@ -1,6 +1,15 @@
 //! Metrics aggregation over request outcomes and sim reports: SLO
 //! attainment, latency percentiles, throughput, GPU efficiency, hysteresis,
 //! and multi-seed mean ± std aggregates for replicated runs.
+//!
+//! Summaries are computed through the streaming [`SummaryAccum`] /
+//! [`ClassAccum`] accumulators: the simulator folds each completion in as
+//! it happens (per shard, merged in model order at the end), so a run can
+//! drop its per-request `RequestOutcome` buffer entirely
+//! (`SimConfig::keep_outcomes = false`) and still report a `Summary` that
+//! is field-for-field bit-identical to summarizing the buffered outcomes.
+
+use std::borrow::Cow;
 
 use crate::core::{RequestClass, RequestOutcome};
 use crate::forecast::ForecastScore;
@@ -26,50 +35,34 @@ pub struct Summary {
 
 impl Summary {
     pub fn of(outcomes: &[RequestOutcome]) -> Summary {
-        let mut ttft = Percentiles::new();
-        let mut itl = Percentiles::new();
-        let mut met = 0usize;
-        let mut preempt = 0u64;
-        let mut out_tokens = 0u64;
+        let mut acc = ClassAccum::default();
         for o in outcomes {
-            ttft.push(o.ttft());
-            itl.push(o.mean_itl);
-            if o.slo_met() {
-                met += 1;
-            }
-            preempt += o.preemptions as u64;
-            out_tokens += o.output_tokens as u64;
+            acc.push(o);
         }
-        let n = outcomes.len();
-        Summary {
-            count: n,
-            slo_attainment: if n == 0 { 1.0 } else { met as f64 / n as f64 },
-            ttft_p50: ttft.pct(50.0),
-            ttft_p99: ttft.pct(99.0),
-            itl_mean: itl.mean(),
-            itl_p99: itl.pct(99.0),
-            preemptions_per_request: if n == 0 { 0.0 } else { preempt as f64 / n as f64 },
-            mean_output_tokens: if n == 0 { 0.0 } else { out_tokens as f64 / n as f64 },
-            forecast: Vec::new(),
-        }
+        acc.into_summary()
     }
 
-    /// Summarize a full report: outcome metrics plus the per-model forecast
-    /// accuracy a predictive policy recorded (empty for reactive runs).
+    /// Summarize a full report from its streaming accumulator: outcome
+    /// metrics plus the per-model forecast accuracy a predictive policy
+    /// recorded (empty for reactive runs). Works whether or not the run
+    /// kept its outcome buffer (`SimConfig::keep_outcomes`) — the
+    /// accumulator is always populated, in the exact order the buffered
+    /// path would have summarized.
     pub fn of_report(report: &SimReport) -> Summary {
         Summary {
             forecast: report.forecast.clone(),
-            ..Summary::of(&report.outcomes)
+            ..report.stats.summary()
         }
     }
 
+    /// One pass over the outcomes, folding only the matching class into an
+    /// accumulator — no filtered clone of the outcome records.
     pub fn of_class(outcomes: &[RequestOutcome], class: RequestClass) -> Summary {
-        let filtered: Vec<RequestOutcome> = outcomes
-            .iter()
-            .filter(|o| o.class == class)
-            .cloned()
-            .collect();
-        Summary::of(&filtered)
+        let mut acc = ClassAccum::default();
+        for o in outcomes.iter().filter(|o| o.class == class) {
+            acc.push(o);
+        }
+        acc.into_summary()
     }
 
     pub fn to_json(&self) -> Json {
@@ -109,6 +102,160 @@ impl Summary {
             return None;
         }
         Some(self.forecast.iter().map(|f| f.mape).sum::<f64>() / self.forecast.len() as f64)
+    }
+}
+
+/// Streaming accumulator behind [`Summary`]: exact integer counters plus
+/// the ttft / mean-ITL sample series as compact `f64` vectors (16 bytes per
+/// outcome vs ~100 for a full `RequestOutcome`). Percentiles stay *exact*
+/// — the series is the percentile state — and `summary()` performs the
+/// same arithmetic, over the same series order, as summarizing a buffer of
+/// outcomes pushed in the same order, so the two paths are bit-identical
+/// field by field.
+#[derive(Debug, Clone, Default)]
+pub struct ClassAccum {
+    count: usize,
+    met: usize,
+    preemptions: u64,
+    output_tokens: u64,
+    ttft: Percentiles,
+    itl: Percentiles,
+}
+
+impl ClassAccum {
+    /// Fold one completion in.
+    pub fn push(&mut self, o: &RequestOutcome) {
+        self.ttft.push(o.ttft());
+        self.itl.push(o.mean_itl);
+        if o.slo_met() {
+            self.met += 1;
+        }
+        self.preemptions += o.preemptions as u64;
+        self.output_tokens += o.output_tokens as u64;
+        self.count += 1;
+    }
+
+    /// Append `other` after this accumulator, preserving series order —
+    /// merging per-shard accumulators in model order reproduces exactly
+    /// the series a model-order outcome concatenation would have built.
+    /// Must run before any percentile query sorts a series in place.
+    pub fn merge(&mut self, other: &ClassAccum) {
+        self.count += other.count;
+        self.met += other.met;
+        self.preemptions += other.preemptions;
+        self.output_tokens += other.output_tokens;
+        self.ttft.extend(other.ttft.values().iter().copied());
+        self.itl.extend(other.itl.values().iter().copied());
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Completions that met both SLO components.
+    pub fn met(&self) -> usize {
+        self.met
+    }
+
+    /// Distill to a [`Summary`] without consuming the accumulator. Clones
+    /// the percentile state so the accumulator's series order survives for
+    /// later merges/queries — use [`into_summary`](Self::into_summary) for
+    /// one-shot accumulators to skip the copy.
+    pub fn summary(&self) -> Summary {
+        self.clone().into_summary()
+    }
+
+    /// Consuming variant of [`summary`](Self::summary): sorts the series
+    /// in place (no clone) — what `Summary::of`/`of_class` use for their
+    /// throwaway accumulators. The field computation order (sorting ttft,
+    /// then the *insertion-order* ITL mean, then the ITL percentile)
+    /// mirrors the historical buffered implementation exactly.
+    pub fn into_summary(self) -> Summary {
+        let Self {
+            count: n,
+            met,
+            preemptions,
+            output_tokens,
+            mut ttft,
+            mut itl,
+        } = self;
+        Summary {
+            count: n,
+            slo_attainment: if n == 0 { 1.0 } else { met as f64 / n as f64 },
+            ttft_p50: ttft.pct(50.0),
+            ttft_p99: ttft.pct(99.0),
+            itl_mean: itl.mean(),
+            itl_p99: itl.pct(99.0),
+            preemptions_per_request: if n == 0 {
+                0.0
+            } else {
+                preemptions as f64 / n as f64
+            },
+            mean_output_tokens: if n == 0 {
+                0.0
+            } else {
+                output_tokens as f64 / n as f64
+            },
+            forecast: Vec::new(),
+        }
+    }
+}
+
+/// Per-class streaming summary state for one simulation: an overall
+/// accumulator plus one per request class. The overall accumulator is kept
+/// separately (not derived from the class buckets) because the overall
+/// series order — arrival-interleaved across classes — is part of the
+/// bit-exactness contract with the buffered path.
+#[derive(Debug, Clone, Default)]
+pub struct SummaryAccum {
+    all: ClassAccum,
+    interactive: ClassAccum,
+    batch: ClassAccum,
+}
+
+impl SummaryAccum {
+    pub fn push(&mut self, o: &RequestOutcome) {
+        self.all.push(o);
+        match o.class {
+            RequestClass::Interactive => self.interactive.push(o),
+            RequestClass::Batch => self.batch.push(o),
+        }
+    }
+
+    /// Append `other` after this accumulator (order-exact; see
+    /// [`ClassAccum::merge`]).
+    pub fn merge(&mut self, other: &SummaryAccum) {
+        self.all.merge(&other.all);
+        self.interactive.merge(&other.interactive);
+        self.batch.merge(&other.batch);
+    }
+
+    pub fn class(&self, class: RequestClass) -> &ClassAccum {
+        match class {
+            RequestClass::Interactive => &self.interactive,
+            RequestClass::Batch => &self.batch,
+        }
+    }
+
+    /// Completed requests folded in so far.
+    pub fn count(&self) -> usize {
+        self.all.count()
+    }
+
+    /// Of those, how many met both SLO components.
+    pub fn met(&self) -> usize {
+        self.all.met()
+    }
+
+    /// Overall summary — bit-identical to `Summary::of` over the same
+    /// outcomes in the same order.
+    pub fn summary(&self) -> Summary {
+        self.all.summary()
+    }
+
+    /// Per-class summary — bit-identical to `Summary::of_class`.
+    pub fn summary_class(&self, class: RequestClass) -> Summary {
+        self.class(class).summary()
     }
 }
 
@@ -207,9 +354,12 @@ impl SummaryStats {
 }
 
 /// One comparison row for the experiment tables (a policy's run).
+/// `policy` borrows the `&'static` name when the policy has one
+/// (`GlobalPolicy::static_name`), so building rows for grid cells does not
+/// re-allocate the name per run.
 #[derive(Debug, Clone)]
 pub struct PolicyRow {
-    pub policy: String,
+    pub policy: Cow<'static, str>,
     pub slo_attainment: f64,
     pub slo_interactive: f64,
     pub slo_batch: f64,
@@ -271,7 +421,7 @@ impl PolicyRow {
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
-            ("policy", self.policy.as_str().into()),
+            ("policy", self.policy.as_ref().into()),
             ("slo_attainment", self.slo_attainment.into()),
             ("slo_interactive", self.slo_interactive.into()),
             ("slo_batch", self.slo_batch.into()),
@@ -289,7 +439,7 @@ impl PolicyRow {
         Json::obj(vec![
             (
                 "policy",
-                rows.first().map(|r| r.policy.as_str()).unwrap_or("").into(),
+                rows.first().map(|r| r.policy.as_ref()).unwrap_or("").into(),
             ),
             ("seeds", rows.len().into()),
             (
@@ -369,6 +519,73 @@ mod tests {
             outcome(1.0, 0.1, RequestClass::Batch),
         ];
         assert_eq!(Summary::of_class(&outs, RequestClass::Batch).count, 1);
+    }
+
+    fn assert_summary_bits_eq(a: &Summary, b: &Summary) {
+        assert_eq!(a.count, b.count);
+        for (name, x, y) in [
+            ("slo_attainment", a.slo_attainment, b.slo_attainment),
+            ("ttft_p50", a.ttft_p50, b.ttft_p50),
+            ("ttft_p99", a.ttft_p99, b.ttft_p99),
+            ("itl_mean", a.itl_mean, b.itl_mean),
+            ("itl_p99", a.itl_p99, b.itl_p99),
+            (
+                "preemptions_per_request",
+                a.preemptions_per_request,
+                b.preemptions_per_request,
+            ),
+            ("mean_output_tokens", a.mean_output_tokens, b.mean_output_tokens),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits(), "{name}: {x} != {y}");
+        }
+    }
+
+    #[test]
+    fn accumulator_matches_buffered_summary_bit_for_bit() {
+        // A spread of values whose summation is order-sensitive in the last
+        // bits — the accumulator must reproduce the buffered insertion
+        // order exactly, overall and per class.
+        let outs: Vec<RequestOutcome> = (0..257)
+            .map(|i| {
+                let class = if i % 3 == 0 {
+                    RequestClass::Batch
+                } else {
+                    RequestClass::Interactive
+                };
+                outcome(0.1 + (i as f64) * 0.37, 1e-3 + (i as f64).sin().abs(), class)
+            })
+            .collect();
+        let mut acc = SummaryAccum::default();
+        for o in &outs {
+            acc.push(o);
+        }
+        assert_summary_bits_eq(&Summary::of(&outs), &acc.summary());
+        for class in [RequestClass::Interactive, RequestClass::Batch] {
+            assert_summary_bits_eq(
+                &Summary::of_class(&outs, class),
+                &acc.summary_class(class),
+            );
+        }
+        // summary() must not mutate series order: asking twice is identical.
+        assert_summary_bits_eq(&acc.summary(), &acc.summary());
+    }
+
+    #[test]
+    fn accumulator_merge_is_order_exact_concatenation() {
+        let outs: Vec<RequestOutcome> = (0..100)
+            .map(|i| outcome(1.0 + i as f64 * 0.1, 0.01 * (i % 7) as f64, RequestClass::Interactive))
+            .collect();
+        let (head, tail) = outs.split_at(37);
+        let (mut a, mut b) = (SummaryAccum::default(), SummaryAccum::default());
+        for o in head {
+            a.push(o);
+        }
+        for o in tail {
+            b.push(o);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), outs.len());
+        assert_summary_bits_eq(&Summary::of(&outs), &a.summary());
     }
 
     #[test]

@@ -5,8 +5,9 @@
 //!
 //! Each epoch the driver (1) demuxes the streaming `ArrivalSource` into
 //! per-model arrival FIFOs, (2) advances every shard through all of its
-//! events up to the barrier — concurrently on `util::parallel` scoped
-//! threads when `--shards`/`CHIRON_SHARDS` > 1, bit-identically either way,
+//! events up to the barrier — concurrently on the persistent
+//! `util::parallel` worker pool when `--shards`/`CHIRON_SHARDS` > 1,
+//! bit-identically either way,
 //! (3) replays shard completions into the global policy, merges shard
 //! snapshots into the `ClusterView`, runs `GlobalPolicy::autoscale`, and
 //! applies the returned `Action`s. Cross-model GPU-budget accounting
@@ -14,9 +15,12 @@
 //! the next barrier, with `gpu_seconds` credited back to the exact retire
 //! time. See `sim/README.md` for the design and determinism argument.
 
+use std::borrow::Cow;
+
 use crate::core::{
     InstanceId, ModelSpec, Request, RequestClass, RequestOutcome, ServingConfig, Time,
 };
+use crate::metrics::SummaryAccum;
 use crate::sim::instance::SimInstance;
 use crate::sim::policy::{Action, ClusterView, GlobalPolicy, InstanceView, QueueStats};
 use crate::sim::shard::ModelShard;
@@ -48,6 +52,17 @@ pub struct SimConfig {
     /// in `SimReport::gpu_trace` (test instrumentation for the
     /// budget-only-changes-at-barriers invariant).
     pub record_gpu_trace: bool,
+    /// Keep the per-request `SimReport::outcomes` buffer (default). When
+    /// false, shard outcome buffers are drained at every barrier after the
+    /// global policy has observed them: per-request state shrinks from a
+    /// full `RequestOutcome` record (~100 B plus buffer churn) to the
+    /// ~32 B of exact-percentile f64 samples `SimReport::stats` retains —
+    /// still O(requests), but a ~3× smaller constant and no record
+    /// materialization; the 1M-request batch-backlog sweeps and benches
+    /// run with this off. The streaming summaries are bit-identical to
+    /// summarizing the buffer (digest tests keep this on to compare raw
+    /// outcomes).
+    pub keep_outcomes: bool,
 }
 
 impl SimConfig {
@@ -63,6 +78,7 @@ impl SimConfig {
             warm_bootstrap: true,
             shard_workers: 0,
             record_gpu_trace: false,
+            keep_outcomes: true,
         }
     }
 
@@ -90,12 +106,21 @@ pub struct TimelinePoint {
 }
 
 /// Simulation output.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct SimReport {
-    pub policy: String,
+    /// Policy display name; borrows the `&'static` name when the policy
+    /// has one (`GlobalPolicy::static_name`).
+    pub policy: Cow<'static, str>,
     /// Completed requests, per-shard event order, shards concatenated in
     /// model order (single-model runs: identical to completion order).
+    /// Empty when the run streamed its summaries instead
+    /// (`SimConfig::keep_outcomes = false`).
     pub outcomes: Vec<RequestOutcome>,
+    /// Streaming per-class summary accumulators, always populated — fed at
+    /// completion time inside each shard and merged in model order, so
+    /// `stats.summary()` is bit-identical to `Summary::of(&outcomes)`
+    /// whenever the buffer was kept.
+    pub stats: SummaryAccum,
     pub timeline: Vec<TimelinePoint>,
     pub scale_ups: u64,
     pub scale_downs: u64,
@@ -118,32 +143,44 @@ pub struct SimReport {
     pub forecast: Vec<crate::forecast::ForecastScore>,
 }
 
+impl Default for SimReport {
+    fn default() -> Self {
+        SimReport {
+            policy: Cow::Borrowed(""),
+            outcomes: Vec::new(),
+            stats: SummaryAccum::default(),
+            timeline: Vec::new(),
+            scale_ups: 0,
+            scale_downs: 0,
+            gpu_seconds: 0.0,
+            end_time: 0.0,
+            total_requests: 0,
+            unfinished: 0,
+            total_tokens: 0.0,
+            gpu_trace: Vec::new(),
+            forecast: Vec::new(),
+        }
+    }
+}
+
 impl SimReport {
-    /// Fraction of requests meeting both SLO components.
+    /// Fraction of requests meeting both SLO components. Reads the
+    /// streaming accumulators, so it works with or without the outcome
+    /// buffer (the counts are exact integers either way).
     pub fn slo_attainment(&self) -> f64 {
         // Unfinished requests count as violations.
         if self.total_requests == 0 {
             return 1.0;
         }
-        let met = self.outcomes.iter().filter(|o| o.slo_met()).count();
-        met as f64 / self.total_requests as f64
+        self.stats.met() as f64 / self.total_requests as f64
     }
 
     pub fn slo_attainment_class(&self, class: RequestClass) -> f64 {
-        let total = self
-            .outcomes
-            .iter()
-            .filter(|o| o.class == class)
-            .count();
-        if total == 0 {
+        let acc = self.stats.class(class);
+        if acc.count() == 0 {
             return 1.0;
         }
-        let met = self
-            .outcomes
-            .iter()
-            .filter(|o| o.class == class && o.slo_met())
-            .count();
-        met as f64 / total as f64
+        acc.met() as f64 / acc.count() as f64
     }
 
     /// Completed-request throughput over the active duration.
@@ -151,7 +188,7 @@ impl SimReport {
         if self.end_time <= 0.0 {
             return 0.0;
         }
-        self.outcomes.len() as f64 / self.end_time
+        self.stats.count() as f64 / self.end_time
     }
 
     /// Completed requests per GPU·hour consumed (efficiency headline).
@@ -159,7 +196,7 @@ impl SimReport {
         if self.gpu_seconds <= 0.0 {
             return 0.0;
         }
-        self.outcomes.len() as f64 / (self.gpu_seconds / 3600.0)
+        self.stats.count() as f64 / (self.gpu_seconds / 3600.0)
     }
 
     /// Mean per-instance request throughput (requests/s divided by the mean
@@ -218,8 +255,9 @@ pub struct Simulation<'p> {
     merged_views: Vec<InstanceView>,
     /// Per-model queue summaries, rebuilt by each shard at barriers.
     queue_stats: Vec<QueueStats>,
-    /// Shard worker threads, resolved once at construction (`shards()`
+    /// Shard worker count, resolved once at construction (`shards()`
     /// reads an env var behind a process-wide lock — not per-epoch work).
+    /// Workers come from the persistent `util::parallel` pool.
     shard_workers: usize,
     /// Streaming arrival feed, demuxed per model each epoch.
     source: Box<dyn ArrivalSource>,
@@ -314,11 +352,19 @@ impl<'p> Simulation<'p> {
     /// shard's event order — exactly what the per-model estimators see in
     /// the monolithic loop).
     fn observe_completions(&mut self) {
+        let keep = self.cfg.keep_outcomes;
         for s in &mut self.shards {
             for o in &s.outcomes[s.observed_upto..] {
                 self.policy.on_complete(o);
             }
-            s.observed_upto = s.outcomes.len();
+            if keep {
+                s.observed_upto = s.outcomes.len();
+            } else {
+                // Streaming mode: the shard's stats accumulator already
+                // folded these in at completion time; nothing else needs
+                // the records, so drop them at the barrier.
+                s.drain_observed();
+            }
         }
     }
 
@@ -380,9 +426,11 @@ impl<'p> Simulation<'p> {
         self.apply_pending_retires();
     }
 
-    /// Advance every shard through its events up to `until`, on scoped
-    /// worker threads when configured. Shards share no state, so the
-    /// results are bit-identical at any worker count.
+    /// Advance every shard through its events up to `until`, on the
+    /// persistent worker pool when configured. Shards share no state, so
+    /// the results are bit-identical at any worker count; the pool path
+    /// publishes one job descriptor per barrier (no per-epoch thread
+    /// spawn, no per-epoch allocation beyond the job control block).
     fn run_shards(&mut self, until: Time) {
         let workers = self.shard_workers;
         if workers <= 1 || self.shards.len() <= 1 {
@@ -390,8 +438,7 @@ impl<'p> Simulation<'p> {
                 s.run_epoch(until);
             }
         } else {
-            let refs: Vec<&mut ModelShard> = self.shards.iter_mut().collect();
-            parallel::run_grid_jobs(workers, refs, |_, s| s.run_epoch(until));
+            parallel::for_each_mut(workers, &mut self.shards, |_, s| s.run_epoch(until));
         }
     }
 
@@ -481,14 +528,22 @@ impl<'p> Simulation<'p> {
         let arrived = self.arrived();
         let completed = self.completed();
         for s in &mut self.shards {
-            self.report.outcomes.append(&mut s.outcomes);
+            // Model-order merge: reproduces exactly the series order of the
+            // model-order outcome concatenation below.
+            self.report.stats.merge(&s.stats);
+            if self.cfg.keep_outcomes {
+                self.report.outcomes.append(&mut s.outcomes);
+            }
             self.report.total_tokens += s.total_tokens;
         }
         self.report.gpu_seconds = self.gpu_seconds;
         self.report.end_time = end;
         self.report.total_requests = self.total_hint.unwrap_or(arrived);
         self.report.unfinished = self.report.total_requests - completed;
-        self.report.policy = self.policy.name().to_string();
+        self.report.policy = match self.policy.static_name() {
+            Some(name) => Cow::Borrowed(name),
+            None => Cow::Owned(self.policy.name().to_string()),
+        };
         self.report.forecast = self.policy.forecast_scores();
         self.report
     }

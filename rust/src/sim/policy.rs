@@ -199,7 +199,7 @@ pub enum Route {
 
 /// The per-model (local) half of an autoscaling policy. Owned by one
 /// model's event-loop shard and driven between tick barriers; `Send` so
-/// shards can run on scoped worker threads.
+/// shards can run on the persistent worker pool.
 pub trait LocalPolicy: Send {
     /// Route a request at arrival (or when re-queued after eviction).
     /// Sees only its own model's instances.
@@ -220,6 +220,14 @@ pub trait LocalPolicy: Send {
 /// merged cluster snapshot.
 pub trait GlobalPolicy {
     fn name(&self) -> &str;
+
+    /// The fixed `&'static` form of [`name`](Self::name), when the policy
+    /// has one. `SimReport::finish` borrows it instead of re-allocating the
+    /// name per run; policies with composed names (e.g. the predictive
+    /// scaler's `inner+estimator`) keep the owned fallback.
+    fn static_name(&self) -> Option<&'static str> {
+        None
+    }
 
     /// Build the per-model local half. Called once per model when a
     /// simulation (or server) starts; all per-model routing/batch state

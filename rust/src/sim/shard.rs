@@ -21,6 +21,7 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
 use crate::core::{InstanceClass, InstanceId, Request, RequestClass, RequestOutcome, Time};
+use crate::metrics::SummaryAccum;
 use crate::sim::instance::{SimInstance, WorkItem};
 use crate::sim::policy::{
     InstanceState, InstanceView, LocalPolicy, ModelView, QueueStats, QueuedReq, Route,
@@ -102,9 +103,17 @@ pub struct ModelShard {
     /// Every request in it arrives before (or at) the next barrier.
     arrivals: VecDeque<Request>,
     /// Completions in shard-event order. The driver replays the suffix past
-    /// `observed_upto` into the global policy at each barrier.
+    /// `observed_upto` into the global policy at each barrier — and, when
+    /// the run is not keeping outcomes (`SimConfig::keep_outcomes =
+    /// false`), drains the buffer right after, so it never holds more than
+    /// one epoch's completions.
     pub outcomes: Vec<RequestOutcome>,
     pub observed_upto: usize,
+    /// Streaming summary state, fed at completion time in shard-event
+    /// order. Merging shard accumulators in model order reproduces the
+    /// exact series a model-order outcome concatenation would build, so
+    /// summaries are bit-identical with or without the outcome buffer.
+    pub stats: SummaryAccum,
     pub arrived: usize,
     /// Of `arrived`, the interactive-class requests (surfaced per barrier
     /// in `QueueStats` for the forecast plane).
@@ -140,6 +149,7 @@ impl ModelShard {
             arrivals: VecDeque::new(),
             outcomes: Vec::new(),
             observed_upto: 0,
+            stats: SummaryAccum::default(),
             arrived: 0,
             arrived_interactive: 0,
             completed: 0,
@@ -166,6 +176,14 @@ impl ModelShard {
     pub fn push_arrival(&mut self, req: Request) {
         debug_assert!(self.arrivals.back().map_or(true, |b| b.arrival <= req.arrival));
         self.arrivals.push_back(req);
+    }
+
+    /// Drop already-replayed outcomes (streaming-summary mode): the stats
+    /// accumulator has folded them in and the global policy has observed
+    /// them, so the per-request records are dead weight.
+    pub fn drain_observed(&mut self) {
+        self.outcomes.clear();
+        self.observed_upto = 0;
     }
 
     /// Timestamp of the next unprocessed event, if any (end-time candidate
@@ -260,6 +278,9 @@ impl ModelShard {
         // driver at the next barrier (per-model order preserved — the
         // estimators are per-model and only read at barriers, so deferring
         // is observation-equivalent to the monolithic loop).
+        for o in &result.completed {
+            self.stats.push(o);
+        }
         self.outcomes.extend(result.completed);
         // Evicted batch requests return to the global queue head (FCFS);
         // evicted interactive requests re-route immediately (zero-queuing —

@@ -1,21 +1,61 @@
-//! Std-only scoped-thread pool for embarrassingly parallel experiment
-//! grids.
+//! Persistent parking worker pool for the simulator's two parallel layers.
 //!
-//! Chiron's evaluation is a grid of *independent* simulations — policies ×
-//! workloads × seeds × rates (paper Figs. 7–13). `run_grid` fans those runs
-//! across cores with work stealing (an atomic next-task cursor) while
-//! keeping **deterministic result ordering**: results land in the same slot
-//! order as the input tasks regardless of which worker ran them or when, so
-//! `--jobs 1` and `--jobs N` produce byte-identical output. Policies are
-//! constructed inside the worker (thread-local), so `Policy` impls never
-//! need to be `Send`.
+//! Chiron's evaluation is wall-clock-bound by two fan-outs:
+//!
+//!  1. **Experiment grids** — independent simulations (policies × workloads ×
+//!     seeds × rates, paper Figs. 7–13) fanned out by [`run_grid`] /
+//!     [`run_grid_jobs`].
+//!  2. **Epoch shards** — the per-model event loops the epoch driver
+//!     (`sim::cluster`) advances between autoscaler tick barriers via
+//!     [`for_each_mut`], thousands of times per simulated run.
+//!
+//! Both layers execute on one process-wide pool of **long-lived workers
+//! parked on a condvar between uses**. Earlier revisions spawned scoped
+//! threads per call; that was fine for grids (one spawn per multi-second
+//! simulation) but dominated the sharded event loop, which hit a
+//! spawn/join cycle at *every* tick barrier (~3600 per simulated hour).
+//! With the pool, a run performs one lazy pool setup and then only
+//! publishes a job descriptor per barrier: an atomic task cursor, a
+//! completion counter, and a wakeup.
+//!
+//! ## Lifecycle
+//!
+//! The pool is created lazily on first parallel call and lives for the
+//! process. Helpers are spawned on demand up to the largest `workers - 1`
+//! ever requested (the caller always participates, so a `--jobs 4` grid
+//! needs 3 helpers) and are never torn down — parked helpers cost one
+//! blocked thread each. Every job carries `workers - 1` *helper tickets*;
+//! a helper must claim a ticket before touching the task cursor, so a job
+//! never runs on more threads than its caller asked for even when the pool
+//! is larger.
+//!
+//! ## Nesting (grid pool vs shard pool)
+//!
+//! A grid task may itself fan out its simulator shards (`--jobs` ×
+//! `--shards`). Both layers share this pool: the nested call publishes its
+//! own job and the publishing thread — a pool helper — works it to
+//! completion itself, borrowing idle helpers only if any exist. Progress
+//! never depends on helper availability (the caller drains the cursor too),
+//! so nesting cannot deadlock, and total live threads stay bounded by the
+//! helpers spawned for the outermost layer — no multiplicative
+//! oversubscription. The shard default of 1 (see [`shards`]) keeps the
+//! inner layer opt-in regardless.
+//!
+//! ## Determinism
+//!
+//! Tasks are claimed from an atomic cursor in any order, but every result
+//! lands in the slot of its *task index*, so output order is input order
+//! regardless of which worker ran what or when: `--jobs 1` (inline, no
+//! pool) and `--jobs N` are byte-identical, and the epoch driver is
+//! digest-identical at any `--shards` setting (`tests/sharding.rs`).
 //!
 //! The worker count comes from, in priority order: `set_jobs` (the CLI's
 //! `--jobs N`), the `CHIRON_JOBS` environment variable, then
 //! `available_parallelism`.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Process-wide override; 0 means "auto".
 static JOBS: AtomicUsize = AtomicUsize::new(0);
@@ -75,6 +115,189 @@ pub fn jobs() -> usize {
         .unwrap_or(1)
 }
 
+// ---- the pool runtime ---------------------------------------------------
+
+/// One published fan-out: a type-erased task runner plus the claim/completion
+/// state workers need. Lives in an `Arc` so stragglers that observe the job
+/// *after* its caller returned only ever touch this control block — never
+/// the caller's (by then dead) stack frame.
+struct JobCtrl {
+    /// Caller-stack context (task slots, result slots, the closure).
+    /// Dereferenced only for claimed indices `< n`; see safety note below.
+    ctx: *const (),
+    /// Monomorphized runner: executes task `i` against `ctx`.
+    run: unsafe fn(*const (), usize),
+    /// Total task count.
+    n: usize,
+    /// Next unclaimed task index (claims are `fetch_add`, each index is
+    /// handed out exactly once).
+    cursor: AtomicUsize,
+    /// Tasks finished. The caller returns only once this reaches `n`.
+    completed: AtomicUsize,
+    /// Helper slots remaining. The caller participates itself, so a job
+    /// wanting `workers` executors publishes `workers - 1` tickets; pool
+    /// helpers beyond that skip the job entirely.
+    tickets: AtomicUsize,
+    done_mx: Mutex<()>,
+    done_cv: Condvar,
+    /// First task panic, re-thrown on the caller's thread.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+// Safety: `ctx` points into the publishing caller's stack frame. It is
+// dereferenced only while executing a claimed task index `i < n`, and the
+// caller blocks until `completed == n` — i.e. until every claimed task has
+// finished — before that frame dies. Workers that claim `i >= n` never touch
+// `ctx`. The monomorphized entry points below require `T: Send`, `R: Send`,
+// `F: Sync`, which is exactly what makes the shared context sound to use
+// from other threads.
+unsafe impl Send for JobCtrl {}
+unsafe impl Sync for JobCtrl {}
+
+struct PoolState {
+    /// Jobs with potentially unclaimed work. The publishing caller removes
+    /// its own entry after completion.
+    jobs: Vec<Arc<JobCtrl>>,
+    /// Helper threads spawned so far (they are never torn down).
+    helpers: usize,
+}
+
+struct Pool {
+    state: Mutex<PoolState>,
+    /// Parked helpers wait here; publishing a job notifies it.
+    work_cv: Condvar,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        state: Mutex::new(PoolState {
+            jobs: Vec::new(),
+            helpers: 0,
+        }),
+        work_cv: Condvar::new(),
+    })
+}
+
+/// Claim-and-run loop shared by the caller and helpers: drain the cursor,
+/// executing each claimed task, until the job is exhausted.
+fn work_on(job: &JobCtrl) {
+    loop {
+        let i = job.cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n {
+            break;
+        }
+        // Safety: `i < n` was claimed exactly once, and the publishing
+        // caller keeps `ctx` alive until `completed == n` (see `JobCtrl`).
+        let result = catch_unwind(AssertUnwindSafe(|| unsafe { (job.run)(job.ctx, i) }));
+        if let Err(payload) = result {
+            let mut slot = job.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        // Release pairs with the caller's Acquire: result-slot writes are
+        // visible before the caller observes the final count. Notify under
+        // the mutex so the caller cannot observe completion, free the job,
+        // and leave a worker signalling a dead condvar (the Arc also keeps
+        // the control block alive for exactly this straggler case).
+        let done = job.completed.fetch_add(1, Ordering::AcqRel) + 1 == job.n;
+        if done {
+            let _guard = job.done_mx.lock().unwrap();
+            job.done_cv.notify_all();
+        }
+    }
+}
+
+/// A pool helper: park until a job with free helper tickets appears, claim
+/// a ticket, work the job's cursor dry, repeat. Panics inside tasks are
+/// captured per-job, so helpers never die.
+fn worker_loop(pool: &'static Pool) {
+    let mut state = pool.state.lock().unwrap();
+    loop {
+        let mut claimed = None;
+        for job in &state.jobs {
+            if job.cursor.load(Ordering::Relaxed) >= job.n {
+                continue; // exhausted; caller will unlist it
+            }
+            let ticket = job
+                .tickets
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |t| t.checked_sub(1));
+            if ticket.is_ok() {
+                claimed = Some(Arc::clone(job));
+                break;
+            }
+        }
+        match claimed {
+            Some(job) => {
+                drop(state);
+                work_on(&job);
+                state = pool.state.lock().unwrap();
+            }
+            None => state = pool.work_cv.wait(state).unwrap(),
+        }
+    }
+}
+
+/// Publish a job of `n` tasks to the persistent pool and work it to
+/// completion with up to `workers` concurrent executors (this thread plus
+/// `workers - 1` pool helpers). Returns once every task has finished;
+/// re-throws the first task panic.
+///
+/// Safety contract (internal): `run(ctx, i)` must be safe to call once per
+/// index from any thread, and `ctx` must stay valid until this returns —
+/// which it does, because this function only returns at `completed == n`.
+fn execute_erased(workers: usize, n: usize, ctx: *const (), run: unsafe fn(*const (), usize)) {
+    debug_assert!(workers >= 2 && n >= 2);
+    let job = Arc::new(JobCtrl {
+        ctx,
+        run,
+        n,
+        cursor: AtomicUsize::new(0),
+        completed: AtomicUsize::new(0),
+        tickets: AtomicUsize::new(workers - 1),
+        done_mx: Mutex::new(()),
+        done_cv: Condvar::new(),
+        panic: Mutex::new(None),
+    });
+    let pool = pool();
+    {
+        let mut state = pool.state.lock().unwrap();
+        // Grow (never shrink) the helper set toward this job's demand. A
+        // failed spawn is tolerated: the caller still completes all work.
+        while state.helpers < workers - 1 {
+            let name = format!("chiron-pool-{}", state.helpers);
+            let ok = std::thread::Builder::new()
+                .name(name)
+                .spawn(|| worker_loop(pool()))
+                .is_ok();
+            if !ok {
+                break;
+            }
+            state.helpers += 1;
+        }
+        state.jobs.push(Arc::clone(&job));
+        pool.work_cv.notify_all();
+    }
+    // The caller is executor #0 — progress never depends on helpers.
+    work_on(&job);
+    // Wait for helpers to finish the tasks they claimed. Completion is
+    // signalled under `done_mx`, so the Acquire load here cannot miss it.
+    {
+        let mut guard = job.done_mx.lock().unwrap();
+        while job.completed.load(Ordering::Acquire) < n {
+            guard = job.done_cv.wait(guard).unwrap();
+        }
+    }
+    {
+        let mut state = pool.state.lock().unwrap();
+        state.jobs.retain(|j| !Arc::ptr_eq(j, &job));
+    }
+    if let Some(payload) = job.panic.lock().unwrap().take() {
+        resume_unwind(payload);
+    }
+}
+
 /// Run `f` over every task using the configured worker count; results come
 /// back in task order. See `run_grid_jobs`.
 pub fn run_grid<T, R, F>(tasks: Vec<T>, f: F) -> Vec<R>
@@ -86,11 +309,12 @@ where
     run_grid_jobs(jobs(), tasks, f)
 }
 
-/// Run `f(index, task)` for every task on up to `jobs` scoped worker
-/// threads. Results are returned in input order. With `jobs <= 1` (or a
-/// single task) everything runs inline on the caller's thread — the
-/// sequential and parallel paths produce identical results because tasks
-/// never share mutable state.
+/// Run `f(index, task)` for every task on the persistent worker pool with
+/// up to `jobs` concurrent executors. Results are returned in input order.
+/// With `jobs <= 1` (or a single task) everything runs inline on the
+/// caller's thread — the inline and pooled paths produce identical results
+/// because tasks never share mutable state and results are slotted by task
+/// index.
 pub fn run_grid_jobs<T, R, F>(jobs: usize, tasks: Vec<T>, f: F) -> Vec<R>
 where
     T: Send,
@@ -107,44 +331,94 @@ where
             .collect();
     }
 
-    // Per-slot mutexes rather than one queue lock: task grains here are
-    // whole simulations (milliseconds to minutes), so contention is nil and
-    // the result slots double as the ordered output buffer.
-    let task_slots: Vec<Mutex<Option<T>>> =
-        tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
-    let result_slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    let next = AtomicUsize::new(0);
+    // Slot-per-task storage: the atomic cursor hands each index to exactly
+    // one executor, which takes the task from — and writes the result to —
+    // its own slot. No per-slot locks needed; the job's completion count
+    // (Release/Acquire) publishes the writes back to this thread.
+    let mut task_slots: Vec<Option<T>> = tasks.into_iter().map(Some).collect();
+    let mut result_slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
 
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let task = task_slots[i]
-                    .lock()
-                    .unwrap()
-                    .take()
-                    .expect("each task is claimed exactly once");
-                let r = f(i, task);
-                *result_slots[i].lock().unwrap() = Some(r);
-            });
-        }
-    });
+    struct Ctx<T, R, F> {
+        tasks: *mut Option<T>,
+        results: *mut Option<R>,
+        f: F,
+    }
+    /// Safety: called exactly once per `i < n`, from one thread at a time
+    /// per index (cursor claim), while both slot buffers outlive the job.
+    unsafe fn run_one<T, R, F: Fn(usize, T) -> R>(ctx: *const (), i: usize) {
+        let ctx = &*(ctx as *const Ctx<T, R, F>);
+        let task = (*ctx.tasks.add(i))
+            .take()
+            .expect("each task index is claimed exactly once");
+        let r = (ctx.f)(i, task);
+        *ctx.results.add(i) = Some(r);
+    }
 
+    let ctx = Ctx {
+        tasks: task_slots.as_mut_ptr(),
+        results: result_slots.as_mut_ptr(),
+        f,
+    };
+    execute_erased(
+        workers,
+        n,
+        &ctx as *const Ctx<T, R, F> as *const (),
+        run_one::<T, R, F>,
+    );
+    drop(task_slots);
     result_slots
         .into_iter()
-        .map(|m| {
-            m.into_inner()
-                .unwrap()
-                .expect("scope joined all workers, so every slot is filled")
-        })
+        .map(|r| r.expect("every claimed task writes its result slot"))
         .collect()
 }
 
+/// Run `f(index, &mut item)` for every slice element on the persistent
+/// pool with up to `workers` concurrent executors — the epoch driver's
+/// per-barrier primitive (`Simulation::run_shards`). Allocation-free apart
+/// from the job control block: no task vector, no result slots, no thread
+/// spawn. Each index is claimed exactly once, so the `&mut` accesses are
+/// disjoint. With `workers <= 1` (or one item) it runs inline.
+pub fn for_each_mut<T, F>(workers: usize, items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    let workers = workers.max(1).min(n);
+    if workers <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+
+    struct Ctx<T, F> {
+        items: *mut T,
+        f: F,
+    }
+    /// Safety: each `i < n` is claimed exactly once (cursor), so the
+    /// derived `&mut` references are disjoint; the slice outlives the job.
+    unsafe fn run_one<T, F: Fn(usize, &mut T)>(ctx: *const (), i: usize) {
+        let ctx = &*(ctx as *const Ctx<T, F>);
+        (ctx.f)(i, &mut *ctx.items.add(i));
+    }
+
+    let ctx = Ctx {
+        items: items.as_mut_ptr(),
+        f,
+    };
+    execute_erased(
+        workers,
+        n,
+        &ctx as *const Ctx<T, F> as *const (),
+        run_one::<T, F>,
+    );
+}
+
 /// Run two independent closures, the second on a scoped thread when more
-/// than one worker is configured.
+/// than one worker is configured. (Cold path — used by a couple of
+/// two-sided experiment comparisons, not the epoch loop — so it keeps the
+/// simple scoped-spawn form rather than the pool's type-erased machinery.)
 pub fn join<A, B, FA, FB>(fa: FA, fb: FB) -> (A, B)
 where
     A: Send,
@@ -202,6 +476,70 @@ mod tests {
         let empty: Vec<u32> = Vec::new();
         assert!(run_grid_jobs(4, empty, |_, t: u32| t).is_empty());
         assert_eq!(run_grid_jobs(4, vec![9u32], |i, t| (i, t)), vec![(0, 9)]);
+    }
+
+    #[test]
+    fn pool_is_reused_across_many_calls() {
+        // The epoch-driver pattern: thousands of small fan-outs. Mostly a
+        // liveness/correctness test — every call must complete with every
+        // slot written, with the helpers parked in between.
+        let mut acc: Vec<u64> = vec![0; 4];
+        for epoch in 0..2000u64 {
+            for_each_mut(4, &mut acc, |i, v| {
+                *v = v.wrapping_add(epoch ^ i as u64);
+            });
+        }
+        let expect: Vec<u64> = (0..4u64)
+            .map(|i| (0..2000u64).fold(0u64, |a, e| a.wrapping_add(e ^ i)))
+            .collect();
+        assert_eq!(acc, expect);
+    }
+
+    #[test]
+    fn for_each_mut_touches_every_item_exactly_once() {
+        let mut items: Vec<u32> = (0..97).collect();
+        for_each_mut(5, &mut items, |i, v| {
+            assert_eq!(*v, i as u32);
+            *v += 1;
+        });
+        assert!(items.iter().enumerate().all(|(i, &v)| v == i as u32 + 1));
+        // Inline path (workers = 1) produces the same state transition.
+        let mut inline: Vec<u32> = (0..97).collect();
+        for_each_mut(1, &mut inline, |_, v| *v += 1);
+        assert_eq!(items, inline);
+    }
+
+    #[test]
+    fn nested_jobs_share_the_pool_without_deadlock() {
+        // Grid-over-shards: each outer task publishes its own inner job.
+        // Callers always participate, so this completes even if every
+        // helper is busy on the outer layer.
+        let outer: Vec<u64> = (0..6).collect();
+        let got = run_grid_jobs(3, outer, |_, t| {
+            let mut inner: Vec<u64> = vec![t; 4];
+            for_each_mut(4, &mut inner, |i, v| *v = *v * 10 + i as u64);
+            inner.iter().sum::<u64>()
+        });
+        let expect: Vec<u64> = (0..6u64)
+            .map(|t| (0..4u64).map(|i| t * 10 + i).sum())
+            .collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn task_panic_propagates_to_caller() {
+        let result = std::panic::catch_unwind(|| {
+            run_grid_jobs(4, (0..16u32).collect::<Vec<_>>(), |_, t| {
+                if t == 11 {
+                    panic!("task 11 exploded");
+                }
+                t
+            })
+        });
+        assert!(result.is_err(), "the task panic must reach the caller");
+        // And the pool must still be usable afterwards (helpers survive).
+        let ok = run_grid_jobs(4, (0..16u32).collect::<Vec<_>>(), |_, t| t + 1);
+        assert_eq!(ok, (1..17u32).collect::<Vec<_>>());
     }
 
     #[test]

@@ -142,6 +142,14 @@ impl Percentiles {
         self.xs.len()
     }
 
+    /// The raw sample series. Insertion order is preserved until a
+    /// percentile call sorts in place — callers that rely on the order
+    /// (e.g. order-exact merges of streaming accumulators) must read it
+    /// before querying percentiles.
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+
     fn ensure_sorted(&mut self) {
         if !self.sorted {
             self.xs

@@ -1,0 +1,186 @@
+//! Streaming-metrics equivalence tests.
+//!
+//! The simulator folds every completion into `SimReport::stats`
+//! (`metrics::SummaryAccum`) as it happens; the per-request outcome buffer
+//! is optional (`SimConfig::keep_outcomes`). These tests pin the contract
+//! that makes that safe to rely on:
+//!
+//!  1. **Accumulator == buffered summary, bit for bit** — on a run that
+//!     kept its outcomes, `report.stats.summary()` equals
+//!     `Summary::of(&report.outcomes)` field-exactly (same f64 bits),
+//!     overall and per class, including multi-model runs where shard
+//!     accumulators merge in model order.
+//!  2. **`keep_outcomes = false` changes memory, not results** — outcomes
+//!     come back empty while the `Summary`, `PolicyRow`, and every
+//!     aggregate report field match the buffered run exactly.
+
+use chiron::core::{ModelSpec, RequestClass};
+use chiron::experiments::common::{make_policy, trace_wb, PolicyKind};
+use chiron::metrics::{PolicyRow, Summary};
+use chiron::sim::{run_sim, SimConfig, SimReport};
+use chiron::workload::trace::{workload_a, workload_b_batch};
+
+fn assert_summary_bits_eq(ctx: &str, a: &Summary, b: &Summary) {
+    assert_eq!(a.count, b.count, "{ctx}: count");
+    for (name, x, y) in [
+        ("slo_attainment", a.slo_attainment, b.slo_attainment),
+        ("ttft_p50", a.ttft_p50, b.ttft_p50),
+        ("ttft_p99", a.ttft_p99, b.ttft_p99),
+        ("itl_mean", a.itl_mean, b.itl_mean),
+        ("itl_p99", a.itl_p99, b.itl_p99),
+        (
+            "preemptions_per_request",
+            a.preemptions_per_request,
+            b.preemptions_per_request,
+        ),
+        ("mean_output_tokens", a.mean_output_tokens, b.mean_output_tokens),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {name}: {x} != {y}");
+    }
+}
+
+/// A ~10k-request multi-class run: 3k interactive at 30 req/s plus a 7k
+/// batch dump at t = 5 s.
+fn run_10k(keep_outcomes: bool, shard_workers: usize) -> SimReport {
+    let models = vec![ModelSpec::llama8b()];
+    let trace = trace_wb(&models, &[30.0], 3_000, &[7_000], 1800.0, 5.0, 97);
+    let mut cfg = SimConfig::new(50, models.clone());
+    cfg.max_sim_time = 4.0 * 3600.0;
+    cfg.keep_outcomes = keep_outcomes;
+    cfg.shard_workers = shard_workers;
+    let mut p = make_policy(&PolicyKind::Chiron, &models);
+    run_sim(cfg, trace, p.as_mut())
+}
+
+/// A 4-model run so the accumulator's model-order merge is exercised.
+fn run_multi_model(keep_outcomes: bool, shard_workers: usize) -> SimReport {
+    let models = vec![
+        ModelSpec::llama8b(),
+        ModelSpec::llama8b(),
+        ModelSpec::llama8b(),
+        ModelSpec::llama70b(),
+    ];
+    let mut rng = chiron::util::rng::Rng::new(13);
+    let mut tb = chiron::workload::TraceBuilder::new();
+    for m in 0..4 {
+        tb = tb
+            .stream(workload_a(10.0, 200, m))
+            .stream(workload_b_batch(300, 5.0 + m as f64, m, 1800.0));
+    }
+    let trace = tb.build(&mut rng);
+    let mut cfg = SimConfig::new(60, models.clone());
+    cfg.max_sim_time = 4.0 * 3600.0;
+    cfg.keep_outcomes = keep_outcomes;
+    cfg.shard_workers = shard_workers;
+    let mut p = make_policy(&PolicyKind::Chiron, &models);
+    run_sim(cfg, trace, p.as_mut())
+}
+
+#[test]
+fn accumulator_matches_buffered_summary_on_10k_multi_class_run() {
+    let report = run_10k(true, 1);
+    assert!(
+        report.outcomes.len() > 9_000,
+        "expected ~10k completions, got {}",
+        report.outcomes.len()
+    );
+    let classes = report
+        .outcomes
+        .iter()
+        .map(|o| o.class)
+        .collect::<std::collections::HashSet<_>>();
+    assert_eq!(classes.len(), 2, "run must complete both request classes");
+    assert_summary_bits_eq(
+        "overall",
+        &Summary::of(&report.outcomes),
+        &report.stats.summary(),
+    );
+    for class in [RequestClass::Interactive, RequestClass::Batch] {
+        assert_summary_bits_eq(
+            &format!("{class:?}"),
+            &Summary::of_class(&report.outcomes, class),
+            &report.stats.summary_class(class),
+        );
+    }
+}
+
+#[test]
+fn accumulator_merge_order_matches_buffer_on_multi_model_run() {
+    // Shard accumulators merge in model order; the outcome buffer
+    // concatenates in model order — the two must stay bit-identical, with
+    // the shards advanced inline or on the pool.
+    for workers in [1usize, 2] {
+        let report = run_multi_model(true, workers);
+        assert!(!report.outcomes.is_empty());
+        assert_summary_bits_eq(
+            &format!("workers={workers}"),
+            &Summary::of(&report.outcomes),
+            &report.stats.summary(),
+        );
+    }
+}
+
+#[test]
+fn streaming_mode_drops_outcomes_but_matches_buffered_results() {
+    for workers in [1usize, 4] {
+        let buffered = run_10k(true, workers);
+        let streaming = run_10k(false, workers);
+        assert!(
+            streaming.outcomes.is_empty(),
+            "keep_outcomes = false must not retain per-request records"
+        );
+        assert!(!buffered.outcomes.is_empty());
+
+        // Summaries and rows are bit-identical.
+        assert_summary_bits_eq(
+            &format!("of_report workers={workers}"),
+            &Summary::of_report(&buffered),
+            &Summary::of_report(&streaming),
+        );
+        let (rb, rs) = (
+            PolicyRow::from_report(&buffered),
+            PolicyRow::from_report(&streaming),
+        );
+        assert_eq!(rb.line(), rs.line(), "PolicyRow must match exactly");
+        assert_eq!(rb.to_json().to_string(), rs.to_json().to_string());
+
+        // Every aggregate report field matches.
+        assert_eq!(buffered.policy, streaming.policy);
+        assert_eq!(buffered.scale_ups, streaming.scale_ups);
+        assert_eq!(buffered.scale_downs, streaming.scale_downs);
+        assert_eq!(
+            buffered.gpu_seconds.to_bits(),
+            streaming.gpu_seconds.to_bits()
+        );
+        assert_eq!(buffered.end_time.to_bits(), streaming.end_time.to_bits());
+        assert_eq!(buffered.total_requests, streaming.total_requests);
+        assert_eq!(buffered.unfinished, streaming.unfinished);
+        assert_eq!(
+            buffered.total_tokens.to_bits(),
+            streaming.total_tokens.to_bits()
+        );
+        assert_eq!(buffered.stats.count(), streaming.stats.count());
+        assert_eq!(buffered.stats.met(), streaming.stats.met());
+        assert_eq!(
+            buffered.outcomes.len(),
+            streaming.stats.count(),
+            "streaming accumulator must have folded every completion"
+        );
+    }
+}
+
+#[test]
+fn streaming_multi_model_matches_buffered_on_pool() {
+    let buffered = run_multi_model(true, 4);
+    let streaming = run_multi_model(false, 4);
+    assert!(streaming.outcomes.is_empty());
+    assert_summary_bits_eq(
+        "multi-model",
+        &Summary::of(&buffered.outcomes),
+        &streaming.stats.summary(),
+    );
+    assert_eq!(
+        buffered.gpu_seconds.to_bits(),
+        streaming.gpu_seconds.to_bits()
+    );
+}

@@ -240,3 +240,25 @@ fn deterministic_across_identical_runs() {
         assert_eq!(run(), run());
     });
 }
+
+#[test]
+fn static_names_agree_with_dynamic_names() {
+    // `GlobalPolicy::static_name` is a borrow-only duplicate of `name()`
+    // (it lets `SimReport::finish` skip an allocation); the two must never
+    // drift apart, or reports would silently carry a stale label. Covers
+    // every CLI-reachable policy plus the `+forecast` decorator (which
+    // composes its name dynamically and must NOT claim a static one).
+    use chiron::experiments::common::{make_policy, PolicyKind};
+    let models = vec![ModelSpec::llama8b()];
+    for name in PolicyKind::NAMES {
+        let kind = PolicyKind::parse(name).expect("catalog name parses");
+        let policy = make_policy(&kind, &models);
+        match policy.static_name() {
+            Some(s) => assert_eq!(s, policy.name(), "{name}: static_name drifted"),
+            None => assert!(
+                matches!(kind, PolicyKind::Forecast { .. }),
+                "{name}: fixed-name policies should provide static_name"
+            ),
+        }
+    }
+}

@@ -35,28 +35,30 @@ fn run_spec(spec: &ScenarioSpec, seed: u64, shard_workers: usize, record: bool) 
 
 #[test]
 fn whole_catalog_digest_identical_across_shard_workers() {
-    // Acceptance: for every catalog scenario, the parallel sharded run is
-    // byte-identical (FNV digest) to the monolithic pass — i.e. the same
-    // engine advancing all shards sequentially on one thread
-    // (shard_workers = 1). Equivalence to the *pre-refactor* single-heap
-    // loop is argued, not digest-pinned, in sim/README.md: exact for
-    // single-model runs, report-accumulation-order-different for
-    // multi-model ones.
+    // Acceptance: for every catalog scenario, runs through the persistent
+    // worker pool (shard_workers ∈ {2, 4}) are byte-identical (FNV digest)
+    // to the inline pass — the same engine advancing all shards
+    // sequentially on the caller's thread (shard_workers = 1, no pool).
+    // Equivalence to the *pre-refactor* single-heap loop is argued, not
+    // digest-pinned, in sim/README.md: exact for single-model runs,
+    // report-accumulation-order-different for multi-model ones.
     for spec in catalog() {
         let spec = spec.scaled(0.005);
-        let mono = run_spec(&spec, 11, 1, false);
-        let sharded = run_spec(&spec, 11, 4, false);
+        let inline = run_spec(&spec, 11, 1, false);
         assert!(
-            !mono.outcomes.is_empty(),
+            !inline.outcomes.is_empty(),
             "{}: scenario must complete work",
             spec.name
         );
-        assert_eq!(
-            digest_report(&mono),
-            digest_report(&sharded),
-            "{}: --shards 1 and --shards 4 must be byte-identical",
-            spec.name
-        );
+        for workers in [2usize, 4] {
+            let pooled = run_spec(&spec, 11, workers, false);
+            assert_eq!(
+                digest_report(&inline),
+                digest_report(&pooled),
+                "{}: --shards 1 (inline) and --shards {workers} (pool) must be byte-identical",
+                spec.name
+            );
+        }
     }
 }
 
