@@ -240,6 +240,32 @@ fn main() {
         });
     }
 
+    // -- the fault plane under load -----------------------------------------
+    // crash-midrush's FaultSpec (three scheduled crashes, MTBF churn, flaky
+    // loads) through the streaming source at quarter scale. The delta vs
+    // `sim.run` bounds the fault plane's whole overhead: crash eviction +
+    // re-queue, retry accounting, and the per-event fault checks (fault-free
+    // runs skip them entirely — inert `ModelFaults` short-circuits).
+    {
+        use chiron::workload::scenario::by_name;
+        let spec = by_name("crash-midrush")
+            .expect("catalog scenario")
+            .scaled(0.25);
+        let models_f = spec.model_specs().expect("known models");
+        let total = spec.max_requests() as f64;
+        b.bench_units("sim.run_faults crash-midrush 4.5k requests", Some(total), || {
+            let mut cfg = SimConfig::new(spec.gpus, models_f.clone());
+            cfg.max_sim_time = spec.max_time;
+            cfg.timeline_every = 0;
+            cfg.keep_outcomes = false;
+            cfg.faults = spec.faults.clone();
+            let mut policy = make_policy(&PolicyKind::Chiron, &models_f);
+            let r = run_sim_source(cfg, Box::new(spec.source(3)), policy.as_mut());
+            assert_eq!(r.unfinished, 0, "fault run must account every request");
+            black_box(r.stats.count());
+        });
+    }
+
     // -- forecast estimator update (the per-barrier hot path) ---------------
     // One Holt–Winters observe + lead-time forecast per autoscaler tick per
     // model; must stay trivially cheap next to the event loop.

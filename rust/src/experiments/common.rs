@@ -6,11 +6,13 @@ use crate::coordinator::{BootstrapSpec, Chiron, ChironConfig};
 use crate::core::{ModelSpec, RequestClass, Slo};
 use crate::forecast::{ForecasterKind, PredictiveScaler};
 use crate::metrics::PolicyRow;
-use crate::sim::{run_sim, Policy, SimConfig, SimReport};
+use crate::sim::{run_sim, run_sim_source, Policy, SimConfig, SimReport};
 use crate::util::json::Json;
 use crate::util::parallel::run_grid;
 use crate::util::rng::Rng;
-use crate::workload::{ArrivalProcess, ShareGptSampler, Trace, TraceBuilder, WorkloadSpec};
+use crate::workload::{
+    ArrivalProcess, ScenarioSpec, ShareGptSampler, Trace, TraceBuilder, WorkloadSpec,
+};
 
 /// Experiment scale: quick mode shrinks request counts ~8× so the full
 /// suite regenerates in minutes; full mode approximates paper scale.
@@ -299,6 +301,40 @@ pub fn compare_seeds(
     let flat = run_grid(tasks, |_, (kind, seed)| {
         let mut p = make_policy(kind, models);
         let report = run_one(models, gpus, mk_trace(seed), p.as_mut(), max_time);
+        (PolicyRow::from_report(&report), report)
+    });
+    let mut it = flat.into_iter();
+    kinds
+        .iter()
+        .map(|_| {
+            seeds
+                .iter()
+                .map(|_| it.next().expect("one grid result per (policy, seed) task"))
+                .collect()
+        })
+        .collect()
+}
+
+/// Multi-seed comparison over a full scenario spec: like [`compare_seeds`],
+/// but the simulation carries the spec's GPU budget, time cap, and —
+/// crucially — its fault-injection plan, which plain trace-based runs
+/// don't see. The fault-ablation figure (`fig21`) runs through this.
+pub fn compare_seeds_spec(
+    spec: &ScenarioSpec,
+    kinds: &[PolicyKind],
+    seeds: &[u64],
+) -> Vec<Vec<(PolicyRow, SimReport)>> {
+    let models = spec.model_specs().expect("catalog specs name known models");
+    let tasks: Vec<(&PolicyKind, u64)> = kinds
+        .iter()
+        .flat_map(|k| seeds.iter().map(move |&s| (k, s)))
+        .collect();
+    let flat = run_grid(tasks, |_, (kind, seed)| {
+        let mut p = make_policy(kind, &models);
+        let mut cfg = SimConfig::new(spec.gpus, models.clone());
+        cfg.max_sim_time = spec.max_time;
+        cfg.faults = spec.faults.clone();
+        let report = run_sim_source(cfg, Box::new(spec.source(seed)), p.as_mut());
         (PolicyRow::from_report(&report), report)
     });
     let mut it = flat.into_iter();

@@ -1,0 +1,77 @@
+//! Fault-plane ablation (beyond the paper's figure set): Chiron vs the
+//! baselines under deterministic failure injection — instance crashes,
+//! spot-capacity reclamation, and stragglers — measuring how gracefully
+//! each policy degrades (SLO attainment, recovery time, terminal failures)
+//! and what the faults cost in GPU-hours.
+
+use crate::metrics::{MeanStd, PolicyRow};
+use crate::util::json::Json;
+use crate::workload::scenario::by_name;
+
+use super::common::{compare_seeds_spec, save_result, seed_list, PolicyKind, Scale};
+
+/// Figure 21 (new): fault ablation over the three fault catalog scenarios
+/// (`crash-midrush`, `spot-reclaim`, `straggler-tail`), Chiron vs Llumnix /
+/// local-only / global-only, mean ± std over seeds. Reported per cell: SLO
+/// attainment, MTTR (longest sub-0.9-attainment span, 10 s bins), terminal
+/// failures + shed arrivals, and GPU-hours. Every run carries the
+/// scenario's `FaultSpec`, so the same seeds reproduce the same crashes
+/// under every policy — the comparison isolates the recovery behavior.
+pub fn fig21(scale: Scale) -> Json {
+    let frac = match scale {
+        Scale::Quick => 0.2,
+        Scale::Full => 1.0,
+    };
+    let seeds = seed_list(21, scale.n(2, 3));
+    let kinds = vec![
+        PolicyKind::Chiron,
+        PolicyKind::LlumnixUntuned,
+        PolicyKind::LocalOnly,
+        PolicyKind::GlobalOnly(64),
+    ];
+    let mut cells = Vec::new();
+    println!("\n=== Figure 21 (new) — fault ablation: graceful degradation under injected failures ===");
+    println!(
+        "{:<16} {:<14} {:>12} {:>10} {:>8} {:>8} {:>12}",
+        "scenario", "policy", "slo%±std", "mttr±std", "failed", "shed", "GPUh±std"
+    );
+    for name in ["crash-midrush", "spot-reclaim", "straggler-tail"] {
+        let spec = by_name(name).expect("catalog scenario").scaled(frac);
+        let grouped = compare_seeds_spec(&spec, &kinds, &seeds);
+        for per_seed in &grouped {
+            let rows: Vec<PolicyRow> = per_seed.iter().map(|(r, _)| r.clone()).collect();
+            let slo = MeanStd::of(&rows, |r| r.slo_attainment);
+            let mttr = MeanStd::of(&rows, |r| r.mttr);
+            let failed = MeanStd::of(&rows, |r| r.failed as f64);
+            let shed = MeanStd::of(&rows, |r| r.shed as f64);
+            let gpuh = MeanStd::of(&rows, |r| r.gpu_hours);
+            let policy = rows[0].policy.clone();
+            println!(
+                "{:<16} {:<14} {:>5.1}±{:<5.1} {:>5.0}±{:<3.0} {:>8.1} {:>8.1} {:>6.2}±{:<4.2}",
+                name,
+                policy,
+                slo.mean * 100.0,
+                slo.std * 100.0,
+                mttr.mean,
+                mttr.std,
+                failed.mean,
+                shed.mean,
+                gpuh.mean,
+                gpuh.std,
+            );
+            cells.push(Json::obj(vec![
+                ("scenario", name.into()),
+                ("policy", policy.as_ref().into()),
+                ("seeds", seeds.len().into()),
+                ("slo_attainment", slo.to_json()),
+                ("mttr", mttr.to_json()),
+                ("failed", failed.to_json()),
+                ("shed", shed.to_json()),
+                ("gpu_hours", gpuh.to_json()),
+            ]));
+        }
+    }
+    let j = Json::arr(cells);
+    save_result("fig21", &j);
+    j
+}

@@ -6,6 +6,7 @@
 pub mod ablation;
 pub mod characterization;
 pub mod common;
+pub mod faults;
 pub mod forecast;
 pub mod main_results;
 pub mod robustness;
@@ -13,11 +14,12 @@ pub mod robustness;
 use crate::util::json::Json;
 use common::Scale;
 
-/// All experiment ids in run order. `fig20` is this reproduction's own
-/// forecast-plane ablation, not a paper figure.
+/// All experiment ids in run order. `fig20` (forecast-plane ablation) and
+/// `fig21` (fault-plane ablation) are this reproduction's own additions,
+/// not paper figures.
 pub const ALL: &[&str] = &[
     "fig2", "fig3", "fig4", "fig5", "fig6", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
-    "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
+    "fig15", "fig16", "fig17", "fig18", "fig19", "fig20", "fig21",
 ];
 
 /// Run one experiment by id.
@@ -40,6 +42,7 @@ pub fn run(id: &str, scale: Scale) -> Option<Json> {
         "fig18" => ablation::fig18(scale),
         "fig19" => ablation::fig19(scale),
         "fig20" => forecast::fig20(scale),
+        "fig21" => faults::fig21(scale),
         _ => return None,
     };
     Some(j)

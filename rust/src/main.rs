@@ -34,7 +34,9 @@ fn main() {
     } else {
         argv.remove(0)
     };
-    match cmd.as_str() {
+    // Subcommands return Err for usage-level problems (bad flag values,
+    // unknown names); runtime failures keep their own exit codes inside.
+    let result = match cmd.as_str() {
         "experiment" => cmd_experiment(argv),
         "scenario" => cmd_scenario(argv),
         "simulate" => cmd_simulate(argv),
@@ -45,13 +47,21 @@ fn main() {
             for id in experiments::ALL {
                 println!("{id}");
             }
+            Ok(())
         }
-        "help" | "--help" | "-h" => help(),
+        "help" | "--help" | "-h" => {
+            help();
+            Ok(())
+        }
         other => {
             eprintln!("unknown subcommand '{other}'\n");
             help();
             std::process::exit(2);
         }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(2);
     }
 }
 
@@ -79,7 +89,7 @@ fn help() {
     );
 }
 
-fn cmd_experiment(argv: Vec<String>) {
+fn cmd_experiment(argv: Vec<String>) -> anyhow::Result<()> {
     let args = Args::new("chiron experiment <id|all>")
         .switch("quick", "reduced request counts (~minutes for the full suite)")
         .flag(
@@ -99,9 +109,9 @@ fn cmd_experiment(argv: Vec<String>) {
             eprintln!("{m}");
             std::process::exit(2);
         });
-    chiron::util::parallel::set_jobs(args.get_usize("jobs"));
-    chiron::util::parallel::set_shards(args.get_usize("shards"));
-    let scale = Scale::from_flag(args.get_bool("quick"));
+    chiron::util::parallel::set_jobs(args.get_usize("jobs")?);
+    chiron::util::parallel::set_shards(args.get_usize("shards")?);
+    let scale = Scale::from_flag(args.get_bool("quick")?);
     let ids: Vec<String> = match args.positional().first().map(|s| s.as_str()) {
         Some("all") | None => experiments::ALL.iter().map(|s| s.to_string()).collect(),
         Some(id) => vec![id.to_string()],
@@ -110,12 +120,10 @@ fn cmd_experiment(argv: Vec<String>) {
         let t0 = std::time::Instant::now();
         match experiments::run(id, scale) {
             Some(_) => println!("[{id} done in {:.1}s]", t0.elapsed().as_secs_f64()),
-            None => {
-                eprintln!("unknown experiment '{id}' (try `chiron list`)");
-                std::process::exit(2);
-            }
+            None => anyhow::bail!("unknown experiment '{id}' (try `chiron list`)"),
         }
     }
+    Ok(())
 }
 
 fn scenario_fail(e: anyhow::Error) -> ! {
@@ -166,6 +174,7 @@ fn run_scenario_cell(
     let mut cfg = SimConfig::new(gpus, models.to_vec());
     cfg.max_sim_time = spec.max_time;
     cfg.keep_outcomes = keep_outcomes;
+    cfg.faults = spec.faults.clone();
     let mut policy = make_policy(kind, models);
     let report = run_sim_source(cfg, Box::new(spec.source(seed)), policy.as_mut());
     CellResult {
@@ -269,7 +278,7 @@ fn scenario_result_json(
     ])
 }
 
-fn cmd_scenario(argv: Vec<String>) {
+fn cmd_scenario(argv: Vec<String>) -> anyhow::Result<()> {
     let args = Args::new(
         "chiron scenario <list|show|run|sweep> [name|file.json]\n\n\
          Declarative workload catalog with streaming (O(streams)-memory) trace\n\
@@ -340,15 +349,14 @@ fn cmd_scenario(argv: Vec<String>) {
         eprintln!("{m}");
         std::process::exit(2);
     });
-    chiron::util::parallel::set_jobs(args.get_usize("jobs"));
-    chiron::util::parallel::set_shards(args.get_usize("shards"));
-    let scale = args.get_f64("scale");
+    chiron::util::parallel::set_jobs(args.get_usize("jobs")?);
+    chiron::util::parallel::set_shards(args.get_usize("shards")?);
+    let scale = args.get_f64("scale")?;
     if !(scale.is_finite() && scale > 0.0) {
-        eprintln!("--scale must be a positive number, got '{}'", args.get("scale"));
-        std::process::exit(2);
+        anyhow::bail!("--scale must be a positive number, got '{}'", args.get("scale")?);
     }
     // `--gpus 0` (the default) defers to the scenario's own cluster size.
-    let gpus_flag = args.get_usize("gpus") as u32;
+    let gpus_flag = args.get_usize("gpus")? as u32;
     let effective_gpus = |spec: &ScenarioSpec| if gpus_flag == 0 { spec.gpus } else { gpus_flag };
     let action = args
         .positional()
@@ -378,40 +386,39 @@ fn cmd_scenario(argv: Vec<String>) {
             }
         }
         "show" => {
-            let name = args.positional().get(1).cloned().unwrap_or_else(|| {
-                eprintln!("usage: chiron scenario show <name|file.json>");
-                std::process::exit(2);
-            });
+            let name = args
+                .positional()
+                .get(1)
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("usage: chiron scenario show <name|file.json>"))?;
             let spec = load_scenario(&name).unwrap_or_else(|e| scenario_fail(e));
             println!("{}", spec.to_json());
         }
         "run" => {
-            let name = args.positional().get(1).cloned().unwrap_or_else(|| {
-                eprintln!("usage: chiron scenario run <name|file.json> [flags]");
-                std::process::exit(2);
-            });
+            let name = args.positional().get(1).cloned().ok_or_else(|| {
+                anyhow::anyhow!("usage: chiron scenario run <name|file.json> [flags]")
+            })?;
             let spec = load_scenario(&name)
                 .map(|s| s.scaled(scale))
                 .unwrap_or_else(|e| scenario_fail(e));
             spec.validate().unwrap_or_else(|e| scenario_fail(e));
             let models = spec.model_specs().unwrap_or_else(|e| scenario_fail(e));
-            let policy_name = args.get("policy").to_string();
-            let kind = PolicyKind::parse(&policy_name).unwrap_or_else(|| {
-                eprintln!(
+            let policy_name = args.get("policy")?.to_string();
+            let kind = PolicyKind::parse(&policy_name).ok_or_else(|| {
+                anyhow::anyhow!(
                     "unknown policy '{policy_name}' (one of: {})",
                     PolicyKind::NAMES.join(", ")
-                );
-                std::process::exit(2);
-            });
+                )
+            })?;
             let (kind, policy_name) = wrap_forecast(
                 kind,
                 &policy_name,
-                args.get("forecast"),
-                args.get_f64("lead-time"),
+                args.get("forecast")?,
+                args.get_f64("lead-time")?,
                 &models,
             );
             let gpus = effective_gpus(&spec);
-            let seeds = seed_list(args.get_u64("seed"), args.get_usize("seeds").max(1));
+            let seeds = seed_list(args.get_u64("seed")?, args.get_usize("seeds")?.max(1));
             println!(
                 "running scenario '{}' under {policy_name}: {} stream(s), {} seed(s), {} GPUs",
                 spec.name,
@@ -419,7 +426,7 @@ fn cmd_scenario(argv: Vec<String>) {
                 seeds.len(),
                 gpus
             );
-            let keep = args.get_bool("keep-outcomes");
+            let keep = args.get_bool("keep-outcomes")?;
             let t0 = std::time::Instant::now();
             let results = chiron::util::parallel::run_grid(seeds.clone(), |_, seed| {
                 (seed, run_scenario_cell(&spec, &models, &kind, gpus, seed, keep))
@@ -434,7 +441,7 @@ fn cmd_scenario(argv: Vec<String>) {
             save_result(&format!("scenario_{}_{policy_name}", spec.name), &j);
         }
         "sweep" => {
-            let scenario_names = args.get_list("scenarios");
+            let scenario_names = args.get_list("scenarios")?;
             let specs: Vec<ScenarioSpec> = if scenario_names.is_empty() {
                 scenario::catalog()
             } else {
@@ -452,25 +459,24 @@ fn cmd_scenario(argv: Vec<String>) {
                 spec.validate().unwrap_or_else(|e| scenario_fail(e));
                 let models = spec.model_specs().unwrap_or_else(|e| scenario_fail(e));
                 let gpus = effective_gpus(spec);
-                for pname in args.get_list("policies") {
-                    let kind = PolicyKind::parse(&pname).unwrap_or_else(|| {
-                        eprintln!(
+                for pname in args.get_list("policies")? {
+                    let kind = PolicyKind::parse(&pname).ok_or_else(|| {
+                        anyhow::anyhow!(
                             "unknown policy '{pname}' (one of: {})",
                             PolicyKind::NAMES.join(", ")
-                        );
-                        std::process::exit(2);
-                    });
+                        )
+                    })?;
                     let (kind, pname) = wrap_forecast(
                         kind,
                         &pname,
-                        args.get("forecast"),
-                        args.get_f64("lead-time"),
+                        args.get("forecast")?,
+                        args.get_f64("lead-time")?,
                         &models,
                     );
                     cells.push((spec.clone(), models.clone(), pname, kind, gpus));
                 }
             }
-            let seeds = seed_list(args.get_u64("seed"), args.get_usize("seeds").max(1));
+            let seeds = seed_list(args.get_u64("seed")?, args.get_usize("seeds")?.max(1));
             // One flat (cell × seed) grid so replication parallelizes with
             // the sweep itself; results regroup deterministically below.
             let tasks: Vec<(usize, u64)> = (0..cells.len())
@@ -483,7 +489,7 @@ fn cmd_scenario(argv: Vec<String>) {
                 seeds.len(),
                 tasks.len()
             );
-            let keep = args.get_bool("keep-outcomes");
+            let keep = args.get_bool("keep-outcomes")?;
             let t0 = std::time::Instant::now();
             let flat = chiron::util::parallel::run_grid(tasks, |_, (c, seed)| {
                 let (spec, models, _, kind, gpus) = &cells[c];
@@ -522,11 +528,9 @@ fn cmd_scenario(argv: Vec<String>) {
             let j = Json::arr(out);
             save_result("scenario_sweep", &j);
         }
-        other => {
-            eprintln!("unknown scenario action '{other}' (list|show|run|sweep)");
-            std::process::exit(2);
-        }
+        other => anyhow::bail!("unknown scenario action '{other}' (list|show|run|sweep)"),
     }
+    Ok(())
 }
 
 /// One trajectory entry as the gate sees it.
@@ -547,7 +551,7 @@ struct GateRun {
 /// the ratio *to a CPU-bound bench from the same run* is what makes a
 /// fixed threshold meaningful across machines. Skips (exit 0) when the
 /// trajectory holds fewer than two comparable runs.
-fn cmd_bench_gate(argv: Vec<String>) {
+fn cmd_bench_gate(argv: Vec<String>) -> anyhow::Result<()> {
     let args = Args::new("chiron bench-gate")
         .flag("file", "BENCH_hotpath.json", "bench trajectory file")
         .flag(
@@ -573,11 +577,11 @@ fn cmd_bench_gate(argv: Vec<String>) {
             eprintln!("{m}");
             std::process::exit(2);
         });
-    let path = args.get("file");
-    let benches = args.get_list("bench");
-    let baseline = args.get("baseline");
-    let threshold = args.get_f64("threshold");
-    let require = args.get_bool("require-file");
+    let path = args.get("file")?;
+    let benches = args.get_list("bench")?;
+    let baseline = args.get("baseline")?;
+    let threshold = args.get_f64("threshold")?;
+    let require = args.get_bool("require-file")?;
     let skip_or_die = |msg: String| {
         if require {
             eprintln!("bench-gate: FAIL — {msg} (and --require-file is set)");
@@ -586,21 +590,20 @@ fn cmd_bench_gate(argv: Vec<String>) {
         println!("bench-gate: {msg}; skipping");
     };
     if benches.is_empty() {
-        eprintln!("bench-gate: --bench needs at least one bench name");
-        std::process::exit(2);
+        anyhow::bail!("bench-gate: --bench needs at least one bench name");
     }
     let text = match std::fs::read_to_string(path) {
         Ok(t) => t,
         Err(_) => {
             skip_or_die(format!("no trajectory at {path}"));
-            return;
+            return Ok(());
         }
     };
     let j = match Json::parse(&text) {
         Ok(j) => j,
         Err(e) => {
             skip_or_die(format!("unreadable trajectory at {path} ({e})"));
-            return;
+            return Ok(());
         }
     };
     let mean_of = |results: &[Json], name: &str| -> Option<f64> {
@@ -656,7 +659,7 @@ fn cmd_bench_gate(argv: Vec<String>) {
                 // run lands; nothing to compare against yet.
                 println!("bench-gate: no baseline yet — gate skipped (trajectory has zero runs)");
             }
-            return;
+            return Ok(());
         };
         let Some(last_mean) = last.bench_mean else {
             skip_or_die(format!("latest run does not contain bench '{bench}'"));
@@ -706,9 +709,10 @@ fn cmd_bench_gate(argv: Vec<String>) {
         std::process::exit(1);
     }
     println!("bench-gate: OK (threshold {:.0}%)", threshold * 100.0);
+    Ok(())
 }
 
-fn cmd_simulate(argv: Vec<String>) {
+fn cmd_simulate(argv: Vec<String>) -> anyhow::Result<()> {
     let args = Args::new("chiron simulate")
         .flag("config", "configs/quickstart.json", "experiment config JSON")
         .parse_from(argv)
@@ -716,7 +720,7 @@ fn cmd_simulate(argv: Vec<String>) {
             eprintln!("{m}");
             std::process::exit(2);
         });
-    let cfg = match ExperimentConfig::load(args.get("config")) {
+    let cfg = match ExperimentConfig::load(args.get("config")?) {
         Ok(c) => c,
         Err(e) => {
             eprintln!("config error: {e:#}");
@@ -736,9 +740,10 @@ fn cmd_simulate(argv: Vec<String>) {
     println!("{}", PolicyRow::header());
     println!("{}", row.line());
     println!("{}", row.to_json());
+    Ok(())
 }
 
-fn cmd_trace_gen(argv: Vec<String>) {
+fn cmd_trace_gen(argv: Vec<String>) -> anyhow::Result<()> {
     let args = Args::new("chiron trace-gen")
         .flag("rate", "20", "interactive arrival rate (req/s)")
         .flag("count", "1000", "interactive request count")
@@ -751,27 +756,28 @@ fn cmd_trace_gen(argv: Vec<String>) {
             eprintln!("{m}");
             std::process::exit(2);
         });
-    let mut rng = Rng::new(args.get_u64("seed"));
+    let mut rng = Rng::new(args.get_u64("seed")?);
     let mut tb = TraceBuilder::new().stream(workload_a(
-        args.get_f64("rate"),
-        args.get_usize("count"),
+        args.get_f64("rate")?,
+        args.get_usize("count")?,
         0,
     ));
-    if args.get_usize("batch") > 0 {
+    if args.get_usize("batch")? > 0 {
         tb = tb.stream(workload_b_batch(
-            args.get_usize("batch"),
-            args.get_f64("batch-at"),
+            args.get_usize("batch")?,
+            args.get_f64("batch-at")?,
             0,
-            args.get_f64("batch-slo"),
+            args.get_f64("batch-slo")?,
         ));
     }
     let trace = tb.build(&mut rng);
     println!("{}", trace.to_json());
+    Ok(())
 }
 
 /// End-to-end real serving: load artifacts, serve synthetic prompts through
 /// the engine with the Chiron local autoscaler controlling batch size.
-fn cmd_serve(argv: Vec<String>) {
+fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
     let args = Args::new("chiron serve")
         .flag("artifacts", "artifacts", "AOT artifacts directory")
         .flag("requests", "32", "number of synthetic requests")
@@ -784,13 +790,13 @@ fn cmd_serve(argv: Vec<String>) {
             eprintln!("{m}");
             std::process::exit(2);
         });
-    let artifacts = args.get("artifacts").to_string();
+    let artifacts = args.get("artifacts")?.to_string();
     // Fail fast with a clear message before spawning the worker.
     if let Err(e) = chiron::runtime::Manifest::load(&artifacts) {
         eprintln!("failed to load artifacts: {e:#}\nrun `make artifacts` first");
         std::process::exit(1);
     }
-    let max_batch = args.get_usize("max-batch");
+    let max_batch = args.get_usize("max-batch")?;
     let factory = {
         let artifacts = artifacts.clone();
         move || -> anyhow::Result<LlmEngine> {
@@ -808,7 +814,7 @@ fn cmd_serve(argv: Vec<String>) {
 
     // The same Algorithm-1 controller that drives the simulator, wired to
     // the real engine's observed step times.
-    let controller: Option<chiron::server::BatchController> = if args.get_bool("no-autoscale") {
+    let controller: Option<chiron::server::BatchController> = if args.get_bool("no-autoscale")? {
         None
     } else {
         let mut la = LocalAutoscaler::new(LocalConfig {
@@ -842,20 +848,19 @@ fn cmd_serve(argv: Vec<String>) {
     };
 
     let front = ServingFrontend::start(factory, controller);
-    let mut rng = Rng::new(args.get_u64("seed"));
-    let n = args.get_usize("requests");
+    let mut rng = Rng::new(args.get_u64("seed")?);
+    let n = args.get_usize("requests")?;
+    let max_new_tokens = args.get_usize("max-new-tokens")?;
     let t0 = std::time::Instant::now();
     for i in 0..n {
         let plen = 4 + rng.index(24);
         let prompt: Vec<i32> = (0..plen).map(|_| rng.index(255) as i32 + 1).collect();
-        front
-            .submit(EngineRequest {
-                id: i as u64,
-                prompt,
-                max_new_tokens: args.get_usize("max-new-tokens"),
-                arrival: None,
-            })
-            .expect("submit");
+        front.submit(EngineRequest {
+            id: i as u64,
+            prompt,
+            max_new_tokens,
+            arrival: None,
+        })?;
     }
     let outcomes = front.wait_for(n, std::time::Duration::from_secs(600));
     let wall = t0.elapsed().as_secs_f64();
@@ -873,5 +878,6 @@ fn cmd_serve(argv: Vec<String>) {
         mean_ttft * 1000.0,
         mean_itl * 1000.0
     );
-    front.shutdown().expect("engine shutdown");
+    front.shutdown()?;
+    Ok(())
 }

@@ -17,6 +17,11 @@ use crate::sim::SimReport;
 use crate::util::json::Json;
 use crate::util::stats::{Percentiles, Welford};
 
+/// Completion-time bin width (seconds) for the MTTR recovery metric.
+const MTTR_BIN: f64 = 10.0;
+/// Per-bin SLO-attainment target under which a bin counts as degraded.
+const MTTR_TARGET: f64 = 0.9;
+
 /// Aggregated serving metrics for a set of outcomes.
 #[derive(Debug, Clone)]
 pub struct Summary {
@@ -28,6 +33,18 @@ pub struct Summary {
     pub itl_p99: f64,
     pub preemptions_per_request: f64,
     pub mean_output_tokens: f64,
+    /// Terminal failures (retry budget exhausted). Only populated via
+    /// [`Summary::of_report`]; zero in fault-free runs.
+    pub failed: usize,
+    /// Arrivals shed by the overload knob (report-level; zero without it).
+    pub shed: usize,
+    /// Crash-eviction re-queues across the run (report-level).
+    pub retries: u64,
+    /// Mean-time-to-recovery: the longest contiguous span of 10 s
+    /// completion-time bins whose SLO attainment fell below 0.9 (bins with
+    /// no completions at all count as degraded), in seconds. Report-level;
+    /// see [`SummaryAccum::mttr`].
+    pub mttr: f64,
     /// Per-model forecast accuracy (only populated for predictive-policy
     /// runs summarized via [`Summary::of_report`]).
     pub forecast: Vec<ForecastScore>,
@@ -51,6 +68,10 @@ impl Summary {
     pub fn of_report(report: &SimReport) -> Summary {
         Summary {
             forecast: report.forecast.clone(),
+            failed: report.failed,
+            shed: report.shed,
+            retries: report.retries,
+            mttr: report.stats.mttr(),
             ..report.stats.summary()
         }
     }
@@ -79,6 +100,14 @@ impl Summary {
             ),
             ("mean_output_tokens", self.mean_output_tokens.into()),
         ];
+        // Fault-plane fields only appear when the run actually degraded —
+        // fault-free output stays byte-stable.
+        if self.failed > 0 || self.shed > 0 || self.retries > 0 || self.mttr > 0.0 {
+            fields.push(("failed", self.failed.into()));
+            fields.push(("shed", self.shed.into()));
+            fields.push(("retries", self.retries.into()));
+            fields.push(("mttr", self.mttr.into()));
+        }
         if !self.forecast.is_empty() {
             fields.push((
                 "forecast",
@@ -196,6 +225,10 @@ impl ClassAccum {
             } else {
                 output_tokens as f64 / n as f64
             },
+            failed: 0,
+            shed: 0,
+            retries: 0,
+            mttr: 0.0,
             forecast: Vec::new(),
         }
     }
@@ -211,6 +244,10 @@ pub struct SummaryAccum {
     all: ClassAccum,
     interactive: ClassAccum,
     batch: ClassAccum,
+    /// `(completions, slo-met)` per 10 s completion-time bin — the MTTR
+    /// state. Integer counters, so per-shard accumulation merged in any
+    /// order is exactly the monolithic series.
+    bins: Vec<(u32, u32)>,
 }
 
 impl SummaryAccum {
@@ -220,14 +257,54 @@ impl SummaryAccum {
             RequestClass::Interactive => self.interactive.push(o),
             RequestClass::Batch => self.batch.push(o),
         }
+        let b = (o.completion / MTTR_BIN) as usize;
+        if self.bins.len() <= b {
+            self.bins.resize(b + 1, (0, 0));
+        }
+        self.bins[b].0 += 1;
+        if o.slo_met() {
+            self.bins[b].1 += 1;
+        }
     }
 
     /// Append `other` after this accumulator (order-exact; see
-    /// [`ClassAccum::merge`]).
+    /// [`ClassAccum::merge`]). MTTR bins add elementwise.
     pub fn merge(&mut self, other: &SummaryAccum) {
         self.all.merge(&other.all);
         self.interactive.merge(&other.interactive);
         self.batch.merge(&other.batch);
+        if self.bins.len() < other.bins.len() {
+            self.bins.resize(other.bins.len(), (0, 0));
+        }
+        for (i, &(c, m)) in other.bins.iter().enumerate() {
+            self.bins[i].0 += c;
+            self.bins[i].1 += m;
+        }
+    }
+
+    /// Mean-time-to-recovery in seconds: the longest contiguous run of
+    /// degraded 10 s completion-time bins between the first and last bin
+    /// that saw any completion. A bin is degraded when its SLO attainment
+    /// is below 0.9 — or when it has no completions at all (a dead span
+    /// mid-run means the service was down, not healthy).
+    pub fn mttr(&self) -> f64 {
+        let first = self.bins.iter().position(|b| b.0 > 0);
+        let last = self.bins.iter().rposition(|b| b.0 > 0);
+        let (Some(first), Some(last)) = (first, last) else {
+            return 0.0;
+        };
+        let mut worst = 0usize;
+        let mut run = 0usize;
+        for b in &self.bins[first..=last] {
+            let degraded = b.0 == 0 || (b.1 as f64) < MTTR_TARGET * b.0 as f64;
+            if degraded {
+                run += 1;
+                worst = worst.max(run);
+            } else {
+                run = 0;
+            }
+        }
+        worst as f64 * MTTR_BIN
     }
 
     pub fn class(&self, class: RequestClass) -> &ClassAccum {
@@ -305,6 +382,10 @@ pub struct SummaryStats {
     pub itl_p99: MeanStd,
     pub preemptions_per_request: MeanStd,
     pub mean_output_tokens: MeanStd,
+    /// Fault-plane aggregates (all-zero for fault-free runs).
+    pub failed: MeanStd,
+    pub shed: MeanStd,
+    pub mttr: MeanStd,
     /// Forecast accuracy over the seeds that carried scores (model-mean R²
     /// and MAPE per seed); `n = 0` for reactive runs.
     pub forecast_r2: MeanStd,
@@ -325,6 +406,9 @@ impl SummaryStats {
             itl_p99: MeanStd::of(summaries, |s| s.itl_p99),
             preemptions_per_request: MeanStd::of(summaries, |s| s.preemptions_per_request),
             mean_output_tokens: MeanStd::of(summaries, |s| s.mean_output_tokens),
+            failed: MeanStd::of(summaries, |s| s.failed as f64),
+            shed: MeanStd::of(summaries, |s| s.shed as f64),
+            mttr: MeanStd::of(summaries, |s| s.mttr),
             forecast_r2: MeanStd::of(&r2s, |&x| x),
             forecast_mape: MeanStd::of(&mapes, |&x| x),
         }
@@ -345,6 +429,11 @@ impl SummaryStats {
             ),
             ("mean_output_tokens", self.mean_output_tokens.to_json()),
         ];
+        if self.failed.mean > 0.0 || self.shed.mean > 0.0 || self.mttr.mean > 0.0 {
+            fields.push(("failed", self.failed.to_json()));
+            fields.push(("shed", self.shed.to_json()));
+            fields.push(("mttr", self.mttr.to_json()));
+        }
         if self.forecast_r2.n > 0 {
             fields.push(("forecast_r2", self.forecast_r2.to_json()));
             fields.push(("forecast_mape", self.forecast_mape.to_json()));
@@ -369,6 +458,12 @@ pub struct PolicyRow {
     pub gpu_hours: f64,
     pub hysteresis: f64,
     pub unfinished: usize,
+    /// Terminal failures (crash retry budget exhausted).
+    pub failed: usize,
+    /// Arrivals shed by the overload knob.
+    pub shed: usize,
+    /// Recovery time under faults, seconds (see [`SummaryAccum::mttr`]).
+    pub mttr: f64,
 }
 
 impl PolicyRow {
@@ -384,12 +479,15 @@ impl PolicyRow {
             gpu_hours: r.gpu_seconds / 3600.0,
             hysteresis: r.hysteresis(),
             unfinished: r.unfinished,
+            failed: r.failed,
+            shed: r.shed,
+            mttr: r.stats.mttr(),
         }
     }
 
     pub fn header() -> String {
         format!(
-            "{:<16} {:>8} {:>8} {:>8} {:>9} {:>9} {:>9} {:>9} {:>10} {:>6}",
+            "{:<16} {:>8} {:>8} {:>8} {:>9} {:>9} {:>9} {:>9} {:>10} {:>6} {:>6} {:>6} {:>7}",
             "policy",
             "slo%",
             "slo_i%",
@@ -399,13 +497,16 @@ impl PolicyRow {
             "peakGPU",
             "GPUh",
             "hysteresis",
-            "unfin"
+            "unfin",
+            "failed",
+            "shed",
+            "mttr"
         )
     }
 
     pub fn line(&self) -> String {
         format!(
-            "{:<16} {:>8.1} {:>8.1} {:>8.1} {:>9.2} {:>9.1} {:>9} {:>9.2} {:>10.2} {:>6}",
+            "{:<16} {:>8.1} {:>8.1} {:>8.1} {:>9.2} {:>9.1} {:>9} {:>9.2} {:>10.2} {:>6} {:>6} {:>6} {:>7.0}",
             self.policy,
             self.slo_attainment * 100.0,
             self.slo_interactive * 100.0,
@@ -415,7 +516,10 @@ impl PolicyRow {
             self.peak_gpus,
             self.gpu_hours,
             self.hysteresis,
-            self.unfinished
+            self.unfinished,
+            self.failed,
+            self.shed,
+            self.mttr
         )
     }
 
@@ -431,6 +535,9 @@ impl PolicyRow {
             ("gpu_hours", self.gpu_hours.into()),
             ("hysteresis", self.hysteresis.into()),
             ("unfinished", self.unfinished.into()),
+            ("failed", self.failed.into()),
+            ("shed", self.shed.into()),
+            ("mttr", self.mttr.into()),
         ])
     }
 
@@ -466,6 +573,9 @@ impl PolicyRow {
                 "unfinished",
                 MeanStd::of(rows, |r| r.unfinished as f64).to_json(),
             ),
+            ("failed", MeanStd::of(rows, |r| r.failed as f64).to_json()),
+            ("shed", MeanStd::of(rows, |r| r.shed as f64).to_json()),
+            ("mttr", MeanStd::of(rows, |r| r.mttr).to_json()),
         ])
     }
 }
@@ -586,6 +696,48 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), outs.len());
         assert_summary_bits_eq(&Summary::of(&outs), &a.summary());
+    }
+
+    fn outcome_bin(completion: f64, met: bool) -> RequestOutcome {
+        let mut o = outcome(
+            if met { 1.0 } else { 20.0 },
+            0.1,
+            RequestClass::Interactive,
+        );
+        o.completion = completion;
+        o
+    }
+
+    #[test]
+    fn mttr_longest_degraded_span() {
+        let mut acc = SummaryAccum::default();
+        assert_eq!(acc.mttr(), 0.0);
+        let series = [(5.0, true), (15.0, false), (25.0, false), (35.0, true)];
+        for (t, met) in series {
+            acc.push(&outcome_bin(t, met));
+        }
+        // Bins 1 and 2 degraded, bins 0 and 3 healthy → 20 s outage.
+        assert_eq!(acc.mttr(), 20.0);
+
+        // Silent mid-run gaps count as degraded (no completions = down);
+        // leading/trailing empty bins do not.
+        let mut gap = SummaryAccum::default();
+        gap.push(&outcome_bin(5.0, true));
+        gap.push(&outcome_bin(45.0, true));
+        assert_eq!(gap.mttr(), 30.0);
+
+        // Merge is elementwise: two shards' bins reproduce the monolithic
+        // accumulator exactly.
+        let (mut a, mut b) = (SummaryAccum::default(), SummaryAccum::default());
+        for (i, (t, met)) in series.into_iter().enumerate() {
+            if i % 2 == 0 {
+                a.push(&outcome_bin(t, met));
+            } else {
+                b.push(&outcome_bin(t, met));
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.mttr(), 20.0);
     }
 
     #[test]

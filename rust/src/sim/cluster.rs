@@ -26,7 +26,7 @@ use crate::sim::policy::{Action, ClusterView, GlobalPolicy, InstanceView, QueueS
 use crate::sim::shard::ModelShard;
 pub use crate::sim::shard::MAX_BATCH_CLAMP;
 use crate::util::parallel;
-use crate::workload::{ArrivalSource, Trace, TraceSource};
+use crate::workload::{ArrivalSource, FaultSpec, Trace, TraceSource};
 
 /// Simulator configuration.
 #[derive(Debug, Clone)]
@@ -63,6 +63,10 @@ pub struct SimConfig {
     /// summarizing the buffer (digest tests keep this on to compare raw
     /// outcomes).
     pub keep_outcomes: bool,
+    /// Deterministic fault-injection plan (default: inert). Per-model
+    /// pieces are forked to the shards at construction; capacity
+    /// reclamations are applied by the driver at tick barriers.
+    pub faults: FaultSpec,
 }
 
 impl SimConfig {
@@ -79,6 +83,7 @@ impl SimConfig {
             shard_workers: 0,
             record_gpu_trace: false,
             keep_outcomes: true,
+            faults: FaultSpec::default(),
         }
     }
 
@@ -133,6 +138,14 @@ pub struct SimReport {
     /// Requests still unfinished at end (cap reached).
     pub unfinished: usize,
     pub total_tokens: f64,
+    /// Crash-evicted requests that exhausted their retry budget (terminal
+    /// failures; zero in fault-free runs). Counted in `total_requests`,
+    /// never in `outcomes`.
+    pub failed: usize,
+    /// Batch arrivals shed by the overload knob (zero in fault-free runs).
+    pub shed: usize,
+    /// Total crash-eviction re-queues across the run.
+    pub retries: u64,
     /// Cluster-level GPU-budget changes `(time, gpus_used)`; only populated
     /// under `SimConfig::record_gpu_trace`. Every entry's time is a tick
     /// barrier (or the t=0 bootstrap) by construction.
@@ -157,6 +170,9 @@ impl Default for SimReport {
             total_requests: 0,
             unfinished: 0,
             total_tokens: 0.0,
+            failed: 0,
+            shed: 0,
+            retries: 0,
             gpu_trace: Vec::new(),
             forecast: Vec::new(),
         }
@@ -285,9 +301,16 @@ impl<'p> Simulation<'p> {
     ) -> Self {
         let nm = cfg.models.len();
         let total_hint = source.total_hint();
-        let shards = (0..nm)
+        let mut shards: Vec<ModelShard> = (0..nm)
             .map(|m| ModelShard::new(m, policy.make_local(m)))
             .collect();
+        if !cfg.faults.is_default() {
+            // Fork the fault plan per model, in model order (the RNG fork
+            // sequence is part of the determinism contract).
+            for (s, f) in shards.iter_mut().zip(cfg.faults.model_plans(nm)) {
+                s.set_faults(f);
+            }
+        }
         let shard_workers = if cfg.shard_workers > 0 {
             cfg.shard_workers
         } else {
@@ -345,6 +368,39 @@ impl<'p> Simulation<'p> {
         }
     }
 
+    /// The GPU budget visible right now: the configured total minus any
+    /// active capacity reclamation (spot/preemptible dips). Equal to the
+    /// configured total in fault-free runs.
+    fn effective_gpus_total(&self) -> u32 {
+        self.cfg
+            .gpus_total
+            .saturating_sub(self.cfg.faults.reclaimed_at(self.now))
+    }
+
+    /// Capacity reclamation (barrier-only): while usage exceeds the dipped
+    /// budget, force-crash the highest-id live instance — the provider
+    /// takes back the most recently granted capacity — and free its GPUs
+    /// at this barrier. Victim order is deterministic (global instance ids
+    /// are allocated by the driver), so reclamation is bit-identical at any
+    /// shard/worker count.
+    fn apply_reclamation(&mut self) {
+        if self.cfg.faults.reclamations.is_empty() {
+            return;
+        }
+        let effective = self.effective_gpus_total();
+        while self.gpus_used > effective {
+            let victim = self
+                .shards
+                .iter()
+                .filter_map(|s| s.highest_instance_id())
+                .max_by_key(|id| id.0);
+            let Some(id) = victim else { break };
+            let m = self.owner_of(id).expect("live instance has an owner");
+            self.shards[m].force_crash(id);
+            self.apply_pending_retires();
+        }
+    }
+
     // ---- barrier machinery ----------------------------------------------
 
     /// Replay completions that happened since the last barrier into the
@@ -386,8 +442,8 @@ impl<'p> Simulation<'p> {
             match a {
                 Action::AddInstance { model, class } => {
                     let spec = &self.cfg.models[model];
-                    if self.gpus_used + spec.gpus_per_instance > self.cfg.gpus_total {
-                        continue; // out of GPU budget
+                    if self.gpus_used + spec.gpus_per_instance > self.effective_gpus_total() {
+                        continue; // out of (possibly reclaimed) GPU budget
                     }
                     let id = InstanceId(self.next_instance);
                     self.next_instance += 1;
@@ -504,11 +560,22 @@ impl<'p> Simulation<'p> {
         self.shards.iter().map(|s| s.completed).sum()
     }
 
-    /// Every request that will ever arrive has been delivered and completed.
+    /// Arrivals with a terminal disposition: completed, terminally failed,
+    /// or shed. Conservation invariant: every arrival ends in exactly one
+    /// of these (or is still in flight).
+    fn accounted(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.completed + s.failed + s.shed)
+            .sum()
+    }
+
+    /// Every request that will ever arrive has been delivered and reached a
+    /// terminal disposition (completed, failed, or shed).
     fn all_work_done(&self) -> bool {
         self.arrivals_done
             && self.pending_arrival.is_none()
-            && self.completed() >= self.arrived()
+            && self.accounted() >= self.arrived()
     }
 
     /// End-of-run settlement: replay any unobserved completions into the
@@ -535,11 +602,19 @@ impl<'p> Simulation<'p> {
                 self.report.outcomes.append(&mut s.outcomes);
             }
             self.report.total_tokens += s.total_tokens;
+            self.report.failed += s.failed;
+            self.report.shed += s.shed;
+            self.report.retries += s.retries_total;
         }
         self.report.gpu_seconds = self.gpu_seconds;
         self.report.end_time = end;
         self.report.total_requests = self.total_hint.unwrap_or(arrived);
-        self.report.unfinished = self.report.total_requests - completed;
+        // Conservation: total = completed + failed + shed + unfinished —
+        // every arrival has exactly one disposition, none silently dropped.
+        self.report.unfinished = self
+            .report
+            .total_requests
+            .saturating_sub(completed + self.report.failed + self.report.shed);
         self.report.policy = match self.policy.static_name() {
             Some(name) => Cow::Borrowed(name),
             None => Cow::Owned(self.policy.name().to_string()),
@@ -574,7 +649,7 @@ impl<'p> Simulation<'p> {
                 instances: &self.merged_views,
                 queues: &self.queue_stats,
                 models: &self.cfg.models,
-                gpus_total: self.cfg.gpus_total,
+                gpus_total: self.effective_gpus_total(),
                 gpus_used: self.gpus_used,
             };
             self.policy.bootstrap(&view)
@@ -619,6 +694,11 @@ impl<'p> Simulation<'p> {
             self.apply_pending_retires();
             for s in &mut self.shards {
                 s.set_now(next_tick);
+            }
+            // Capacity reclamation fires before the pull/kick so survivors
+            // immediately pick up the crashed instances' re-queued work.
+            self.apply_reclamation();
+            for s in &mut self.shards {
                 s.tick_pull_kick();
             }
             self.refresh_merged();
@@ -628,7 +708,9 @@ impl<'p> Simulation<'p> {
                     instances: &self.merged_views,
                     queues: &self.queue_stats,
                     models: &self.cfg.models,
-                    gpus_total: self.cfg.gpus_total,
+                    // The dipped total: policies see reclamations as a
+                    // shrunken cluster and must not scale into the gap.
+                    gpus_total: self.effective_gpus_total(),
                     gpus_used: self.gpus_used,
                 };
                 self.policy.autoscale(&view)

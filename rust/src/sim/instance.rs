@@ -35,6 +35,8 @@ struct Running {
     last_emit: Time,
     max_gap: Time,
     preemptions: u32,
+    /// Crash-eviction re-queues so far (fault plane; 0 in fault-free runs).
+    retries: u32,
     /// Tokens that must be prefilled (prompt) or restored before decoding.
     pending_prefill: u32,
     /// True if the pending prefill is a CPU-KV restore (cheap) rather than
@@ -52,6 +54,9 @@ pub struct Evicted {
     pub last_emit: Time,
     pub max_gap: Time,
     pub preemptions: u32,
+    /// Crash-eviction re-queues so far (the shard bumps this when the
+    /// eviction came from a crash and checks it against the retry budget).
+    pub retries: u32,
     /// KV saved to CPU (mixed-instance fast restart)?
     pub kv_saved: bool,
 }
@@ -67,6 +72,7 @@ pub struct WorkItem {
     pub last_emit: Time,
     pub max_gap: Time,
     pub preemptions: u32,
+    pub retries: u32,
     pub kv_saved: bool,
 }
 
@@ -81,6 +87,7 @@ impl WorkItem {
             last_emit: arrival,
             max_gap: 0.0,
             preemptions: 0,
+            retries: 0,
             kv_saved: false,
         }
     }
@@ -94,6 +101,7 @@ impl WorkItem {
             last_emit: e.last_emit,
             max_gap: e.max_gap,
             preemptions: e.preemptions,
+            retries: e.retries,
             kv_saved: e.kv_saved,
         }
     }
@@ -284,6 +292,7 @@ impl SimInstance {
                 last_emit: item.last_emit,
                 max_gap: item.max_gap,
                 preemptions: item.preemptions,
+                retries: item.retries,
                 pending_prefill: pending,
                 restore: item.kv_saved,
                 req: item.req,
@@ -428,9 +437,32 @@ impl SimInstance {
             last_emit: now,
             max_gap: r.max_gap,
             preemptions: r.preemptions + 1,
+            retries: r.retries,
             kv_saved,
             req: r.req,
         }
+    }
+
+    /// Fault injection: the instance dies at `now`. Every running request
+    /// is evicted with KV lost — `kv_saved` is forced false, so the retry
+    /// pays a full re-prefill even on mixed instances — the local queue is
+    /// drained for re-routing, and the state becomes `Failed`. The shard
+    /// retires the carcass and the driver frees its GPUs at the next tick
+    /// barrier, charged only up to `now`.
+    pub fn crash(&mut self, now: Time) -> (Vec<Evicted>, Vec<WorkItem>) {
+        let mut evicted = Vec::with_capacity(self.running.len());
+        while !self.running.is_empty() {
+            // Oldest first, preserving admission order in the re-queue.
+            let mut e = self.evict_index(0, now);
+            e.kv_saved = false;
+            evicted.push(e);
+        }
+        let queued = self.take_local_queue();
+        // Any in-flight step dies with the instance; its StepDone event is
+        // stale and the shard drops it (the instance is gone by then).
+        self.step_in_flight = false;
+        self.state = InstanceState::Failed { at: now };
+        (evicted, queued)
     }
 
     fn evict_until_fits(&mut self, cap: u64, now: Time) -> Vec<Evicted> {
@@ -738,6 +770,33 @@ mod tests {
         let mut inst = instance(8);
         inst.state = InstanceState::Draining;
         assert_eq!(inst.admission_headroom(), 0);
+    }
+
+    #[test]
+    fn crash_evicts_everything_with_kv_lost() {
+        let mut inst = instance(2);
+        inst.enqueue(WorkItem::fresh(req(1, RequestClass::Interactive, 16, 100)));
+        inst.enqueue(WorkItem::fresh(req(2, RequestClass::Batch, 16, 100)));
+        inst.enqueue(WorkItem::fresh(req(3, RequestClass::Batch, 16, 100)));
+        let d = inst.begin_step(0.0).unwrap();
+        inst.finish_step(d, d);
+        assert_eq!(inst.running_len(), 2);
+        assert_eq!(inst.queued_len(), 1);
+
+        let (evicted, queued) = inst.crash(d);
+        assert_eq!(evicted.len(), 2);
+        // Mixed instances normally save KV to CPU on preemption; a crash
+        // loses it — retries pay a full re-prefill.
+        assert!(evicted.iter().all(|e| !e.kv_saved));
+        assert!(evicted.iter().all(|e| e.preemptions == 1 && e.retries == 0));
+        assert_eq!(evicted[0].req.id.0, 1, "oldest (admission order) first");
+        assert_eq!(queued.len(), 1);
+        assert_eq!(queued[0].req.id.0, 3);
+        assert_eq!(inst.kv_tokens(), 0);
+        assert!(inst.is_idle());
+        assert!(matches!(inst.state, InstanceState::Failed { .. }));
+        assert_eq!(inst.admission_headroom(), 0, "a carcass admits nothing");
+        assert_eq!(inst.ready_at(), None);
     }
 
     #[test]

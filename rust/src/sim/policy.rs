@@ -27,6 +27,10 @@ pub enum InstanceState {
     Running,
     /// No new admissions; retires when the running set drains.
     Draining,
+    /// Crashed at `at` (fault injection): all in-flight work was evicted
+    /// with KV lost; the shard retires the instance and the driver frees
+    /// its GPUs at the next tick barrier, charged only up to `at`.
+    Failed { at: Time },
 }
 
 /// Read-only per-instance snapshot handed to policies. Plain scalar data —
@@ -128,6 +132,15 @@ pub struct QueueStats {
     pub arrived_total: u64,
     /// Of which interactive-class arrivals.
     pub arrived_interactive: u64,
+    /// Cumulative crash-evicted requests that exhausted their retry budget
+    /// (terminal failures). Zero in fault-free runs.
+    pub failed_total: u64,
+    /// Cumulative batch arrivals shed by the overload knob
+    /// (`FaultSpec::shed_queue_len`). Zero in fault-free runs.
+    pub shed_total: u64,
+    /// Cumulative crash-eviction re-queues (each bumps one request's retry
+    /// count). Zero in fault-free runs.
+    pub retried_total: u64,
 }
 
 /// Read-only snapshot of one model's slice of the cluster, handed to

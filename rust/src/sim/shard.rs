@@ -11,11 +11,14 @@
 //! sequential pass (see `sim/README.md` for the determinism argument).
 //!
 //! Event ordering within a shard replicates the monolithic loop exactly:
-//! events are ordered by `(time, priority, sequence)` with Ready(0) <
-//! StepDone(1) < Arrival(2) < barrier-Tick(3). Arrivals are not heap
-//! entries: the driver demuxes the streaming `ArrivalSource` into a
+//! events are ordered by `(time, priority, sequence)` with Crash(0) <
+//! Ready(1) < StepDone(2) < Arrival(3) < barrier-Tick(4). Arrivals are not
+//! heap entries: the driver demuxes the streaming `ArrivalSource` into a
 //! per-shard FIFO for each epoch, and the shard merges that FIFO with its
 //! heap (heap events win time ties because their priorities are lower).
+//! Crashes outrank everything at a timestamp so a failure at time t is
+//! visible to every same-instant routing/step decision — the rule that
+//! keeps fault runs bit-identical at any shard/job count.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
@@ -26,6 +29,7 @@ use crate::sim::instance::{SimInstance, WorkItem};
 use crate::sim::policy::{
     InstanceState, InstanceView, LocalPolicy, ModelView, QueueStats, QueuedReq, Route,
 };
+use crate::workload::ModelFaults;
 
 /// Hard clamp on policy-requested batch sizes (the paper's observed maximum
 /// useful batch is 4096; 16384 leaves room for sweep experiments).
@@ -43,11 +47,17 @@ const SLOT_NONE: u32 = u32::MAX;
 enum Ev {
     StepDone { inst: InstanceId, duration: Time },
     Ready(InstanceId),
+    /// Fault injection. `Some(id)`: an MTBF-sampled lifetime expiry — fires
+    /// only if that instance still exists and is Running. `None`: a
+    /// scheduled [`CrashEvent`](crate::workload::CrashEvent) — the victim
+    /// (lowest-id Running instance, falling back to Draining) is chosen at
+    /// fire time.
+    Crash { inst: Option<InstanceId> },
 }
 
 /// Heap entry: payload carried inline, ordered by (time, priority,
-/// sequence) so Ready precedes StepDone at equal timestamps and ties stay
-/// deterministic (sequence = shard-local insertion order).
+/// sequence) so Crash precedes Ready precedes StepDone at equal timestamps
+/// and ties stay deterministic (sequence = shard-local insertion order).
 struct HeapEv {
     t: f64,
     pri: u8,
@@ -75,8 +85,9 @@ impl Ord for HeapEv {
     }
 }
 
-/// Event priority of arrivals relative to heap events (Ready=0, StepDone=1).
-const PRI_ARRIVAL: u8 = 2;
+/// Event priority of arrivals relative to heap events (Crash=0, Ready=1,
+/// StepDone=2).
+const PRI_ARRIVAL: u8 = 3;
 
 /// One model's event-loop shard.
 pub struct ModelShard {
@@ -129,6 +140,19 @@ pub struct ModelShard {
     /// barriers, so the driver drains these there — decrementing the budget
     /// and crediting `gpu_seconds` back to the true retire time.
     pub pending_retires: Vec<Time>,
+    /// This model's fault-injection plan (inert by default — every fault
+    /// path is unreachable and no RNG draws happen in fault-free runs).
+    faults: ModelFaults,
+    /// Per-instance-id model-load retry attempts (sparse, keyed like
+    /// `slots`). Drives the capped exponential load-retry backoff.
+    load_attempts: Vec<u32>,
+    /// Crash-evicted requests that exhausted their retry budget (terminal
+    /// failures — counted, never re-queued, never emitted as outcomes).
+    pub failed: usize,
+    /// Batch arrivals shed by the overload knob (`shed_queue_len`).
+    pub shed: usize,
+    /// Crash-eviction re-queues (each bumped one request's retry count).
+    pub retries_total: u64,
 }
 
 impl ModelShard {
@@ -157,7 +181,22 @@ impl ModelShard {
             last_completion: f64::NEG_INFINITY,
             last_event: f64::NEG_INFINITY,
             pending_retires: Vec::new(),
+            faults: ModelFaults::default(),
+            load_attempts: Vec::new(),
+            failed: 0,
+            shed: 0,
+            retries_total: 0,
         }
+    }
+
+    /// Install this model's fault plan (driver-side, before the run starts)
+    /// and schedule its fixed-time crash events. With the default (inert)
+    /// plan this pushes no events and the shard behaves exactly as before.
+    pub fn set_faults(&mut self, faults: ModelFaults) {
+        for k in 0..faults.crashes.len() {
+            self.push_event(faults.crashes[k], Ev::Crash { inst: None });
+        }
+        self.faults = faults;
     }
 
     // ---- event plumbing --------------------------------------------------
@@ -166,8 +205,9 @@ impl ModelShard {
         let seq = self.seq;
         self.seq += 1;
         let pri = match ev {
-            Ev::Ready(_) => 0,
-            Ev::StepDone { .. } => 1,
+            Ev::Crash { .. } => 0,
+            Ev::Ready(_) => 1,
+            Ev::StepDone { .. } => 2,
         };
         self.heap.push(Reverse(HeapEv { t, pri, seq, ev }));
     }
@@ -223,9 +263,9 @@ impl ModelShard {
                     if ta.min(th) > until {
                         break;
                     }
-                    // Heap events (pri 0/1) beat arrivals (pri 2) on ties —
-                    // identical to the monolithic loop's priority order.
-                    debug_assert!(PRI_ARRIVAL > 1);
+                    // Heap events (pri 0/1/2) beat arrivals (pri 3) on ties
+                    // — identical to the monolithic loop's priority order.
+                    debug_assert!(PRI_ARRIVAL > 2);
                     ta < th
                 }
             };
@@ -237,7 +277,21 @@ impl ModelShard {
                 if req.class == RequestClass::Interactive {
                     self.arrived_interactive += 1;
                 }
-                self.route_item(WorkItem::fresh(req));
+                // Overload shedding (graceful degradation): when the batch
+                // backlog exceeds the knob, batch arrivals are counted and
+                // dropped instead of queued. Interactive traffic is never
+                // shed.
+                let shed = match self.faults.shed_queue_len {
+                    Some(cap) => {
+                        req.class == RequestClass::Batch && self.q_batch.len() >= cap
+                    }
+                    None => false,
+                };
+                if shed {
+                    self.shed += 1;
+                } else {
+                    self.route_item(WorkItem::fresh(req));
+                }
             } else {
                 let Reverse(HeapEv { t, ev, .. }) = self.heap.pop().unwrap();
                 self.now = t;
@@ -245,6 +299,7 @@ impl ModelShard {
                 match ev {
                     Ev::Ready(iid) => self.on_ready(iid),
                     Ev::StepDone { inst, duration } => self.on_step_done(inst, duration),
+                    Ev::Crash { inst } => self.on_crash(inst),
                 }
             }
         }
@@ -253,7 +308,24 @@ impl ModelShard {
     fn on_ready(&mut self, iid: InstanceId) {
         if let Some(idx) = self.slot_of(iid) {
             if matches!(self.instances[idx].state, InstanceState::Loading { .. }) {
+                if self.faults.load_fail_p > 0.0
+                    && self.faults.rng.chance(self.faults.load_fail_p)
+                {
+                    // Model load failed: retry with capped exponential
+                    // backoff. The GPUs stay allocated while retrying (the
+                    // driver charged them at AddInstance), so a flaky load
+                    // costs real budget — exactly the penalty Chiron's
+                    // proactive scaling is supposed to hide.
+                    let attempt = self.load_attempt(iid);
+                    self.bump_load_attempt(iid);
+                    let ready = self.now + self.faults.load_retry_delay(attempt);
+                    self.instances[idx].state = InstanceState::Loading { ready_at: ready };
+                    self.push_event(ready, Ev::Ready(iid));
+                    self.mark_view_dirty(idx);
+                    return;
+                }
                 self.instances[idx].state = InstanceState::Running;
+                self.schedule_mtbf(idx);
             }
             self.pull_for(idx);
             self.kick(idx);
@@ -303,6 +375,150 @@ impl ModelShard {
         self.kick(idx);
         self.mark_view_dirty(idx);
         self.retire_drained();
+    }
+
+    // ---- fault plane -----------------------------------------------------
+
+    #[inline]
+    fn load_attempt(&self, id: InstanceId) -> u32 {
+        self.load_attempts.get(id.0 as usize).copied().unwrap_or(0)
+    }
+
+    fn bump_load_attempt(&mut self, id: InstanceId) {
+        let k = id.0 as usize;
+        if self.load_attempts.len() <= k {
+            self.load_attempts.resize(k + 1, 0);
+        }
+        self.load_attempts[k] += 1;
+    }
+
+    /// MTBF plan: when an instance enters Running, sample its lifetime from
+    /// the shard's fault RNG and schedule its crash. Draws happen in
+    /// shard-event order, so the sequence is deterministic at any shard or
+    /// worker count.
+    fn schedule_mtbf(&mut self, idx: usize) {
+        if let Some(mtbf) = self.faults.mtbf {
+            let life = self.faults.rng.exp(1.0 / mtbf);
+            let id = self.instances[idx].id;
+            self.push_event(self.now + life, Ev::Crash { inst: Some(id) });
+        }
+    }
+
+    /// Crash-event handler. MTBF-targeted events fire only if the instance
+    /// still exists and is Running (it may have drained or crashed already);
+    /// scheduled events pick the lowest-id Running instance, falling back to
+    /// the lowest-id Draining one, and no-op on an empty shard.
+    fn on_crash(&mut self, target: Option<InstanceId>) {
+        let idx = match target {
+            Some(id) => match self.slot_of(id) {
+                Some(i) if self.instances[i].state == InstanceState::Running => Some(i),
+                _ => None,
+            },
+            None => {
+                let pick = |want: InstanceState| {
+                    self.instances
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, inst)| inst.state == want)
+                        .min_by_key(|(_, inst)| inst.id.0)
+                        .map(|(i, _)| i)
+                };
+                pick(InstanceState::Running).or_else(|| pick(InstanceState::Draining))
+            }
+        };
+        if let Some(idx) = idx {
+            self.do_crash(idx);
+        }
+    }
+
+    /// Kill one instance at `self.now`: evict all in-flight work with KV
+    /// lost, retire the instance immediately (GPU credit flows through
+    /// `pending_retires`, charged only up to the crash time), then re-queue
+    /// the evicted work — bumping each request's retry count and failing
+    /// requests whose budget is exhausted. Queued-but-unstarted local work
+    /// re-routes without a retry bump (it lost nothing).
+    fn do_crash(&mut self, idx: usize) {
+        let (evicted, queued) = self.instances[idx].crash(self.now);
+        // Retire before re-routing so routing never sees the dead instance.
+        self.retire_failed();
+        let mut requeue: Vec<WorkItem> = Vec::new();
+        for e in evicted {
+            let mut w = WorkItem::from_evicted(e);
+            if w.retries >= self.faults.max_retries {
+                // Terminal failure: counted, never silently dropped, never
+                // an outcome (percentiles stay completion-only).
+                self.failed += 1;
+                continue;
+            }
+            w.retries += 1;
+            self.retries_total += 1;
+            if w.req.class == RequestClass::Interactive {
+                self.route_item(w);
+            } else {
+                requeue.push(w);
+            }
+        }
+        for w in queued {
+            if w.req.class == RequestClass::Interactive {
+                self.route_item(w);
+            } else {
+                requeue.push(w);
+            }
+        }
+        // Reverse push_front keeps the oldest evicted request at the queue
+        // head — crash recovery preserves FCFS order.
+        for w in requeue.into_iter().rev() {
+            self.q_batch.push_front(w);
+        }
+    }
+
+    /// Remove crashed instances from the slab. Mirrors `retire_drained`,
+    /// but the GPU credit is stamped with the crash time (the instance did
+    /// no useful work after it).
+    fn retire_failed(&mut self) {
+        let mut i = 0;
+        while i < self.instances.len() {
+            if let InstanceState::Failed { at } = self.instances[i].state {
+                let id = self.instances[i].id;
+                self.instances.swap_remove(i);
+                self.slots[id.0 as usize] = SLOT_NONE;
+                if i < self.instances.len() {
+                    let moved = self.instances[i].id;
+                    self.slots[moved.0 as usize] = i as u32;
+                }
+                self.views_all_dirty = true;
+                self.pending_retires.push(at);
+                continue;
+            }
+            i += 1;
+        }
+    }
+
+    /// Driver-side forced crash (capacity reclamation): kill `id` at the
+    /// current shard clock regardless of state — a Loading instance loses
+    /// its pending load (the stale Ready event no-ops), a Draining one dies
+    /// with its remaining work re-queued. Barrier-time only.
+    pub fn force_crash(&mut self, id: InstanceId) -> bool {
+        match self.slot_of(id) {
+            Some(idx) => {
+                self.do_crash(idx);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Highest live instance id in this shard (reclamation victim
+    /// candidate; the driver takes the max across shards).
+    pub fn highest_instance_id(&self) -> Option<InstanceId> {
+        self.instances.iter().map(|i| i.id).max_by_key(|id| id.0)
+    }
+
+    /// Is `idx` the lowest-id instance in the shard? (Straggler events slow
+    /// exactly one deterministic victim — the lowest live id.)
+    fn is_lowest_live(&self, idx: usize) -> bool {
+        let my = self.instances[idx].id.0;
+        self.instances.iter().all(|i| i.id.0 >= my)
     }
 
     // ---- instance slab + views ------------------------------------------
@@ -366,6 +582,9 @@ impl ModelShard {
         stats.stride = stride;
         stats.arrived_total = self.arrived as u64;
         stats.arrived_interactive = self.arrived_interactive as u64;
+        stats.failed_total = self.failed as u64;
+        stats.shed_total = self.shed as u64;
+        stats.retried_total = self.retries_total;
         stats.batch_deadline_sample.clear();
         let mut i = 0;
         while i < qb.len() {
@@ -384,6 +603,7 @@ impl ModelShard {
             inst.state = InstanceState::Running;
             self.slot_insert(id, self.instances.len());
             self.instances.push(inst);
+            self.schedule_mtbf(self.instances.len() - 1);
         } else {
             let ready = inst.ready_at().expect("fresh instances are Loading");
             self.slot_insert(id, self.instances.len());
@@ -489,11 +709,26 @@ impl ModelShard {
     /// Try to start a step on an idle instance. Draining instances keep
     /// stepping (they must finish their running/queued work to retire).
     fn kick(&mut self, idx: usize) {
+        // Straggler injection: inside an active window the lowest-id live
+        // instance's steps stretch by the window factor (a deterministic
+        // stand-in for one slow/contended GPU). The recorded step duration
+        // stretches too — observed ITL is the degraded one.
+        let straggle = if self.faults.stragglers.is_empty() {
+            1.0
+        } else {
+            let f = self.faults.straggler_factor(self.now);
+            if f > 1.0 && self.is_lowest_live(idx) {
+                f
+            } else {
+                1.0
+            }
+        };
         let inst = &mut self.instances[idx];
         if inst.step_in_flight || matches!(inst.state, InstanceState::Loading { .. }) {
             return;
         }
         if let Some(d) = inst.begin_step(self.now) {
+            let d = d * straggle;
             let id = inst.id;
             self.push_event(self.now + d, Ev::StepDone { inst: id, duration: d });
         }

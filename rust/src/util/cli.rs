@@ -4,6 +4,7 @@
 //! arguments. Each binary declares its flags up front so `--help` output is
 //! generated consistently.
 
+use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 
 #[derive(Debug, Clone)]
@@ -129,43 +130,50 @@ impl Args {
         }
     }
 
-    pub fn get(&self, name: &str) -> &str {
+    /// Raw string value of a declared flag. Errors (instead of panicking)
+    /// when the flag was never declared, so binaries can report the bad
+    /// flag by name and exit cleanly rather than abort with a backtrace.
+    pub fn get(&self, name: &str) -> Result<&str> {
         self.values
             .get(name)
-            .unwrap_or_else(|| panic!("flag --{name} was not declared"))
+            .map(String::as_str)
+            .ok_or_else(|| anyhow!("flag --{name} was not declared"))
     }
 
-    pub fn get_f64(&self, name: &str) -> f64 {
-        self.get(name)
-            .parse()
-            .unwrap_or_else(|_| panic!("flag --{name} expects a number"))
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        let raw = self.get(name)?;
+        raw.parse()
+            .map_err(|_| anyhow!("flag --{name} expects a number, got '{raw}'"))
     }
 
-    pub fn get_u64(&self, name: &str) -> u64 {
-        self.get(name)
-            .parse()
-            .unwrap_or_else(|_| panic!("flag --{name} expects an integer"))
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        let raw = self.get(name)?;
+        raw.parse()
+            .map_err(|_| anyhow!("flag --{name} expects an integer, got '{raw}'"))
     }
 
-    pub fn get_usize(&self, name: &str) -> usize {
-        self.get_u64(name) as usize
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        let raw = self.get(name)?;
+        raw.parse()
+            .map_err(|_| anyhow!("flag --{name} expects an unsigned integer, got '{raw}'"))
     }
 
-    pub fn get_bool(&self, name: &str) -> bool {
-        *self
-            .bools
+    pub fn get_bool(&self, name: &str) -> Result<bool> {
+        self.bools
             .get(name)
-            .unwrap_or_else(|| panic!("switch --{name} was not declared"))
+            .copied()
+            .ok_or_else(|| anyhow!("switch --{name} was not declared"))
     }
 
     /// Comma-separated list value (empty string → empty list).
-    pub fn get_list(&self, name: &str) -> Vec<String> {
-        self.get(name)
+    pub fn get_list(&self, name: &str) -> Result<Vec<String>> {
+        Ok(self
+            .get(name)?
             .split(',')
             .map(str::trim)
             .filter(|s| !s.is_empty())
             .map(str::to_string)
-            .collect()
+            .collect())
     }
 
     pub fn positional(&self) -> &[String] {
@@ -187,9 +195,9 @@ mod tests {
     #[test]
     fn defaults_apply() {
         let a = spec().parse_from(Vec::<String>::new()).unwrap();
-        assert_eq!(a.get_f64("rate"), 10.0);
-        assert_eq!(a.get("model"), "llama8b");
-        assert!(!a.get_bool("verbose"));
+        assert_eq!(a.get_f64("rate").unwrap(), 10.0);
+        assert_eq!(a.get("model").unwrap(), "llama8b");
+        assert!(!a.get_bool("verbose").unwrap());
     }
 
     #[test]
@@ -197,9 +205,26 @@ mod tests {
         let a = spec()
             .parse_from(["--rate", "25.5", "--model=llama70b", "--verbose"])
             .unwrap();
-        assert_eq!(a.get_f64("rate"), 25.5);
-        assert_eq!(a.get("model"), "llama70b");
-        assert!(a.get_bool("verbose"));
+        assert_eq!(a.get_f64("rate").unwrap(), 25.5);
+        assert_eq!(a.get("model").unwrap(), "llama70b");
+        assert!(a.get_bool("verbose").unwrap());
+    }
+
+    #[test]
+    fn bad_values_error_with_flag_name() {
+        let a = spec().parse_from(["--rate", "fast"]).unwrap();
+        let e = a.get_f64("rate").unwrap_err().to_string();
+        assert!(e.contains("--rate") && e.contains("fast"), "{e}");
+        let e = a.get_u64("rate").unwrap_err().to_string();
+        assert!(e.contains("--rate"), "{e}");
+    }
+
+    #[test]
+    fn undeclared_flags_error_instead_of_panicking() {
+        let a = spec().parse_from(Vec::<String>::new()).unwrap();
+        assert!(a.get("nope").unwrap_err().to_string().contains("--nope"));
+        assert!(a.get_bool("nope").is_err());
+        assert!(a.get_list("nope").is_err());
     }
 
     #[test]
@@ -223,9 +248,9 @@ mod tests {
         let a = spec()
             .parse_from(["--model", "a, b,c,,"])
             .unwrap();
-        assert_eq!(a.get_list("model"), vec!["a", "b", "c"]);
+        assert_eq!(a.get_list("model").unwrap(), vec!["a", "b", "c"]);
         let empty = spec().parse_from(["--model", ""]).unwrap();
-        assert!(empty.get_list("model").is_empty());
+        assert!(empty.get_list("model").unwrap().is_empty());
     }
 
     #[test]

@@ -1,0 +1,566 @@
+//! Deterministic fault injection: the scenario-attached failure model.
+//!
+//! A [`FaultSpec`] rides on a [`ScenarioSpec`](super::ScenarioSpec) and
+//! describes four kinds of infrastructure failure, all seeded and
+//! reproducible:
+//!
+//! - **Crash** — an instance dies at a scheduled time ([`CrashEvent`]) or
+//!   stochastically with an MTBF-driven exponential lifetime sampled per
+//!   instance from a forked RNG. All in-flight work is evicted with KV
+//!   lost (full re-prefill on retry).
+//! - **Straggler** — a per-model step-time multiplier over a time window
+//!   ([`StragglerEvent`]), modeling a slow node.
+//! - **Load failure** — a `Loading` instance fails at ready time with
+//!   probability `load_fail_p` and re-tries with capped exponential
+//!   backoff (`load_retry_base * 2^attempt`, capped at `load_retry_cap`).
+//! - **Capacity reclamation** — `gpus_total` dips by `gpus` over a window
+//!   ([`Reclamation`]), spot-market / zone-outage style; instances over
+//!   the reduced budget are force-crashed at the next tick barrier.
+//!
+//! Degradation knobs live here too: `max_retries` bounds how many times a
+//! crash-evicted request is re-queued before it is counted as a terminal
+//! failure (never silently dropped), and `shed_queue_len` optionally sheds
+//! batch arrivals when a model's batch queue exceeds the bound.
+//!
+//! Determinism: [`FaultSpec::model_plans`] forks one RNG per model — in
+//! model order — from `Rng::new(seed)`. Each shard samples from its own
+//! fork in shard-local event order, so fault runs stay bit-identical at
+//! any `--shards`/`--jobs` setting (see `sim/README.md`, "Fault model &
+//! determinism").
+
+use crate::core::Time;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// A scheduled instance crash: at time `at`, the lowest-id `Running`
+/// instance of `model` dies.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CrashEvent {
+    pub model: usize,
+    pub at: Time,
+}
+
+/// A straggler window: while `start <= now < end`, the lowest-id live
+/// instance of `model` runs its steps `factor`× slower.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StragglerEvent {
+    pub model: usize,
+    pub start: Time,
+    pub end: Time,
+    pub factor: f64,
+}
+
+/// A capacity-reclamation window: while `start <= now < end`, the cluster
+/// budget drops by `gpus` (evaluated at tick barriers only).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Reclamation {
+    pub start: Time,
+    pub end: Time,
+    pub gpus: u32,
+}
+
+/// The full fault model attached to a scenario. `FaultSpec::default()` is
+/// inert: no events, zero probabilities — a defaulted spec leaves every
+/// simulation byte-identical to a fault-free build.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Root seed for the fault RNG tree (independent of the workload seed).
+    pub seed: u64,
+    /// Scheduled crashes.
+    pub crashes: Vec<CrashEvent>,
+    /// Mean time between failures (s): when set, every instance that
+    /// reaches `Running` draws an exponential lifetime from its model's
+    /// fault RNG and crashes when it expires.
+    pub mtbf: Option<f64>,
+    /// Straggler windows.
+    pub stragglers: Vec<StragglerEvent>,
+    /// Probability that a `Loading` instance fails at ready time.
+    pub load_fail_p: f64,
+    /// First load-retry delay (s); doubles per attempt.
+    pub load_retry_base: f64,
+    /// Upper bound on the load-retry delay (s).
+    pub load_retry_cap: f64,
+    /// Capacity-reclamation windows.
+    pub reclamations: Vec<Reclamation>,
+    /// Crash-eviction retry budget per request; exceeding it makes the
+    /// request a terminal failure (counted, never silently dropped).
+    pub max_retries: u32,
+    /// Optional overload shedding: batch arrivals are shed (counted) when
+    /// the model's batch queue is at least this long.
+    pub shed_queue_len: Option<usize>,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            seed: 0,
+            crashes: Vec::new(),
+            mtbf: None,
+            stragglers: Vec::new(),
+            load_fail_p: 0.0,
+            load_retry_base: 2.0,
+            load_retry_cap: 60.0,
+            reclamations: Vec::new(),
+            max_retries: 3,
+            shed_queue_len: None,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// True when this spec injects nothing (the scenario JSON omits the
+    /// `faults` block and the simulator takes the zero-overhead path).
+    pub fn is_default(&self) -> bool {
+        *self == FaultSpec::default()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.load_fail_p),
+            "faults: load_fail_p must be in [0, 1), got {}",
+            self.load_fail_p
+        );
+        anyhow::ensure!(
+            self.load_retry_base > 0.0 && self.load_retry_base.is_finite(),
+            "faults: load_retry_base must be positive, got {}",
+            self.load_retry_base
+        );
+        anyhow::ensure!(
+            self.load_retry_cap >= self.load_retry_base,
+            "faults: load_retry_cap {} must be >= load_retry_base {}",
+            self.load_retry_cap,
+            self.load_retry_base
+        );
+        if let Some(mtbf) = self.mtbf {
+            anyhow::ensure!(
+                mtbf > 0.0 && mtbf.is_finite(),
+                "faults: mtbf must be positive, got {mtbf}"
+            );
+        }
+        for (i, c) in self.crashes.iter().enumerate() {
+            anyhow::ensure!(
+                c.at.is_finite() && c.at >= 0.0,
+                "faults: crash {i} needs a finite time >= 0, got {}",
+                c.at
+            );
+        }
+        for (i, s) in self.stragglers.iter().enumerate() {
+            anyhow::ensure!(
+                s.factor >= 1.0 && s.factor.is_finite(),
+                "faults: straggler {i} factor must be >= 1, got {}",
+                s.factor
+            );
+            anyhow::ensure!(
+                s.end > s.start && s.start >= 0.0,
+                "faults: straggler {i} window [{}, {}) is empty or negative",
+                s.start,
+                s.end
+            );
+        }
+        for (i, r) in self.reclamations.iter().enumerate() {
+            anyhow::ensure!(r.gpus > 0, "faults: reclamation {i} must reclaim >= 1 GPU");
+            anyhow::ensure!(
+                r.end > r.start && r.start >= 0.0,
+                "faults: reclamation {i} window [{}, {}) is empty or negative",
+                r.start,
+                r.end
+            );
+        }
+        Ok(())
+    }
+
+    /// GPUs reclaimed at time `t` (sum of active windows). The driver
+    /// evaluates this at tick barriers only, so the budget dip is
+    /// barrier-quantized like every other `gpus_used` change.
+    pub fn reclaimed_at(&self, t: Time) -> u32 {
+        self.reclamations
+            .iter()
+            .filter(|r| r.start <= t && t < r.end)
+            .map(|r| r.gpus)
+            .sum()
+    }
+
+    /// Build one per-model fault plan per shard, forking the fault RNG in
+    /// model order — the determinism root for all stochastic faults.
+    pub fn model_plans(&self, n_models: usize) -> Vec<ModelFaults> {
+        let mut root = Rng::new(self.seed);
+        (0..n_models)
+            .map(|m| {
+                let rng = root.fork();
+                let mut crashes: Vec<Time> = self
+                    .crashes
+                    .iter()
+                    .filter(|c| c.model == m)
+                    .map(|c| c.at)
+                    .collect();
+                crashes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                ModelFaults {
+                    crashes,
+                    stragglers: self
+                        .stragglers
+                        .iter()
+                        .filter(|s| s.model == m)
+                        .map(|s| (s.start, s.end, s.factor))
+                        .collect(),
+                    mtbf: self.mtbf,
+                    load_fail_p: self.load_fail_p,
+                    load_retry_base: self.load_retry_base,
+                    load_retry_cap: self.load_retry_cap,
+                    max_retries: self.max_retries,
+                    shed_queue_len: self.shed_queue_len,
+                    rng,
+                }
+            })
+            .collect()
+    }
+
+    /// Serialize. All scalar knobs are emitted so a shown spec is explicit;
+    /// `Option` fields appear only when set, and the scenario serializer
+    /// omits the whole block when the spec is default — both directions
+    /// round-trip exactly.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![("seed", self.seed.into())];
+        if !self.crashes.is_empty() {
+            fields.push((
+                "crashes",
+                Json::arr(self.crashes.iter().map(|c| {
+                    Json::obj(vec![("model", c.model.into()), ("at", c.at.into())])
+                })),
+            ));
+        }
+        if let Some(mtbf) = self.mtbf {
+            fields.push(("mtbf", mtbf.into()));
+        }
+        if !self.stragglers.is_empty() {
+            fields.push((
+                "stragglers",
+                Json::arr(self.stragglers.iter().map(|s| {
+                    Json::obj(vec![
+                        ("model", s.model.into()),
+                        ("start", s.start.into()),
+                        ("end", s.end.into()),
+                        ("factor", s.factor.into()),
+                    ])
+                })),
+            ));
+        }
+        fields.push(("load_fail_p", self.load_fail_p.into()));
+        fields.push(("load_retry_base", self.load_retry_base.into()));
+        fields.push(("load_retry_cap", self.load_retry_cap.into()));
+        if !self.reclamations.is_empty() {
+            fields.push((
+                "reclamations",
+                Json::arr(self.reclamations.iter().map(|r| {
+                    Json::obj(vec![
+                        ("start", r.start.into()),
+                        ("end", r.end.into()),
+                        ("gpus", (r.gpus as u64).into()),
+                    ])
+                })),
+            ));
+        }
+        fields.push(("max_retries", (self.max_retries as u64).into()));
+        if let Some(n) = self.shed_queue_len {
+            fields.push(("shed_queue_len", n.into()));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse a `faults` block. Missing fields take their defaults; present
+    /// fields parse strictly (a malformed event is an error, not a silent
+    /// default — the same contract as the stream parsers).
+    pub fn from_json(j: &Json) -> anyhow::Result<FaultSpec> {
+        let d = FaultSpec::default();
+        let crashes = match j.get("crashes").as_arr() {
+            None => Vec::new(),
+            Some(a) => a
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    Ok(CrashEvent {
+                        model: c.get("model").as_u64().unwrap_or(0) as usize,
+                        at: c
+                            .get("at")
+                            .as_f64()
+                            .ok_or_else(|| anyhow::anyhow!("faults: crash {i} needs 'at'"))?,
+                    })
+                })
+                .collect::<anyhow::Result<_>>()?,
+        };
+        let stragglers = match j.get("stragglers").as_arr() {
+            None => Vec::new(),
+            Some(a) => a
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    let field = |k: &str| {
+                        s.get(k).as_f64().ok_or_else(|| {
+                            anyhow::anyhow!("faults: straggler {i} needs '{k}'")
+                        })
+                    };
+                    Ok(StragglerEvent {
+                        model: s.get("model").as_u64().unwrap_or(0) as usize,
+                        start: field("start")?,
+                        end: field("end")?,
+                        factor: field("factor")?,
+                    })
+                })
+                .collect::<anyhow::Result<_>>()?,
+        };
+        let reclamations = match j.get("reclamations").as_arr() {
+            None => Vec::new(),
+            Some(a) => a
+                .iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    let field = |k: &str| {
+                        r.get(k).as_f64().ok_or_else(|| {
+                            anyhow::anyhow!("faults: reclamation {i} needs '{k}'")
+                        })
+                    };
+                    Ok(Reclamation {
+                        start: field("start")?,
+                        end: field("end")?,
+                        gpus: r.get("gpus").as_u64().ok_or_else(|| {
+                            anyhow::anyhow!("faults: reclamation {i} needs 'gpus'")
+                        })? as u32,
+                    })
+                })
+                .collect::<anyhow::Result<_>>()?,
+        };
+        Ok(FaultSpec {
+            seed: j.get("seed").as_u64().unwrap_or(d.seed),
+            crashes,
+            mtbf: j.get("mtbf").as_f64(),
+            stragglers,
+            load_fail_p: j.get("load_fail_p").as_f64().unwrap_or(d.load_fail_p),
+            load_retry_base: j
+                .get("load_retry_base")
+                .as_f64()
+                .unwrap_or(d.load_retry_base),
+            load_retry_cap: j.get("load_retry_cap").as_f64().unwrap_or(d.load_retry_cap),
+            reclamations,
+            max_retries: j.get("max_retries").as_u64().unwrap_or(d.max_retries as u64) as u32,
+            shed_queue_len: j.get("shed_queue_len").as_u64().map(|n| n as usize),
+        })
+    }
+}
+
+/// One model's slice of the fault plan, owned by that model's shard. The
+/// RNG is the shard's private fork; it is consumed only in shard-local
+/// event order (load-fail Bernoulli at ready events, MTBF lifetimes when
+/// instances reach `Running`), which is what keeps stochastic faults
+/// bit-identical at any worker count.
+#[derive(Debug, Clone)]
+pub struct ModelFaults {
+    /// Scheduled crash times for this model, ascending.
+    pub crashes: Vec<Time>,
+    /// `(start, end, factor)` straggler windows for this model.
+    pub stragglers: Vec<(Time, Time, f64)>,
+    pub mtbf: Option<f64>,
+    pub load_fail_p: f64,
+    pub load_retry_base: f64,
+    pub load_retry_cap: f64,
+    pub max_retries: u32,
+    pub shed_queue_len: Option<usize>,
+    pub rng: Rng,
+}
+
+impl Default for ModelFaults {
+    fn default() -> Self {
+        let spec = FaultSpec::default();
+        ModelFaults {
+            crashes: Vec::new(),
+            stragglers: Vec::new(),
+            mtbf: None,
+            load_fail_p: spec.load_fail_p,
+            load_retry_base: spec.load_retry_base,
+            load_retry_cap: spec.load_retry_cap,
+            max_retries: spec.max_retries,
+            shed_queue_len: None,
+            rng: Rng::new(0),
+        }
+    }
+}
+
+impl ModelFaults {
+    /// True when this plan can never fire — the shard skips all fault
+    /// bookkeeping, keeping fault-free runs byte-identical to older builds.
+    pub fn is_inert(&self) -> bool {
+        self.crashes.is_empty()
+            && self.stragglers.is_empty()
+            && self.mtbf.is_none()
+            && self.load_fail_p == 0.0
+            && self.shed_queue_len.is_none()
+    }
+
+    /// Step-time multiplier at `t` (max over active windows; 1.0 outside).
+    pub fn straggler_factor(&self, t: Time) -> f64 {
+        self.stragglers
+            .iter()
+            .filter(|(s, e, _)| *s <= t && t < *e)
+            .map(|(_, _, f)| *f)
+            .fold(1.0, f64::max)
+    }
+
+    /// Load-retry delay for the given (0-based) failed attempt count:
+    /// capped exponential backoff.
+    pub fn load_retry_delay(&self, attempt: u32) -> f64 {
+        let exp = 2f64.powi(attempt.min(30) as i32);
+        (self.load_retry_base * exp).min(self.load_retry_cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full_spec() -> FaultSpec {
+        FaultSpec {
+            seed: 9,
+            crashes: vec![
+                CrashEvent { model: 0, at: 120.0 },
+                CrashEvent { model: 1, at: 60.0 },
+                CrashEvent { model: 0, at: 30.0 },
+            ],
+            mtbf: Some(900.0),
+            stragglers: vec![StragglerEvent {
+                model: 0,
+                start: 100.0,
+                end: 400.0,
+                factor: 3.0,
+            }],
+            load_fail_p: 0.25,
+            load_retry_base: 1.5,
+            load_retry_cap: 20.0,
+            reclamations: vec![Reclamation {
+                start: 200.0,
+                end: 500.0,
+                gpus: 8,
+            }],
+            max_retries: 2,
+            shed_queue_len: Some(10_000),
+        }
+    }
+
+    #[test]
+    fn default_is_inert_and_roundtrips() {
+        let d = FaultSpec::default();
+        assert!(d.is_default());
+        assert!(d.validate().is_ok());
+        let back = FaultSpec::from_json(&d.to_json()).unwrap();
+        assert_eq!(d, back);
+        // A missing block parses to the default too.
+        assert_eq!(FaultSpec::from_json(&Json::Null).unwrap(), d);
+        assert!(d.model_plans(2).iter().all(ModelFaults::is_inert));
+    }
+
+    #[test]
+    fn full_spec_roundtrips_exactly() {
+        let f = full_spec();
+        assert!(!f.is_default());
+        assert!(f.validate().is_ok());
+        let back = FaultSpec::from_json(&f.to_json()).unwrap();
+        assert_eq!(f, back);
+        // And through text, the path catalog entries take.
+        let text = f.to_json().to_string();
+        let back2 = FaultSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(f, back2);
+    }
+
+    #[test]
+    fn validation_rejects_bad_inputs() {
+        let mut f = FaultSpec {
+            load_fail_p: 1.0,
+            ..FaultSpec::default()
+        };
+        assert!(f.validate().is_err(), "p = 1 would retry forever");
+        f.load_fail_p = 0.5;
+        f.load_retry_cap = 0.1; // below base
+        assert!(f.validate().is_err());
+        let bad_window = FaultSpec {
+            stragglers: vec![StragglerEvent {
+                model: 0,
+                start: 10.0,
+                end: 10.0,
+                factor: 2.0,
+            }],
+            ..FaultSpec::default()
+        };
+        assert!(bad_window.validate().is_err());
+        let slow_down = FaultSpec {
+            stragglers: vec![StragglerEvent {
+                model: 0,
+                start: 0.0,
+                end: 10.0,
+                factor: 0.5,
+            }],
+            ..FaultSpec::default()
+        };
+        assert!(slow_down.validate().is_err(), "factor < 1 is a speedup");
+        let bad_reclaim = FaultSpec {
+            reclamations: vec![Reclamation {
+                start: 5.0,
+                end: 2.0,
+                gpus: 4,
+            }],
+            ..FaultSpec::default()
+        };
+        assert!(bad_reclaim.validate().is_err());
+        let zero_mtbf = FaultSpec {
+            mtbf: Some(0.0),
+            ..FaultSpec::default()
+        };
+        assert!(zero_mtbf.validate().is_err());
+    }
+
+    #[test]
+    fn model_plans_split_by_model_and_sort() {
+        let plans = full_spec().model_plans(2);
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].crashes, vec![30.0, 120.0]);
+        assert_eq!(plans[1].crashes, vec![60.0]);
+        assert_eq!(plans[0].stragglers.len(), 1);
+        assert!(plans[1].stragglers.is_empty());
+        assert!(!plans[0].is_inert());
+    }
+
+    #[test]
+    fn model_plan_rngs_are_deterministic_and_distinct() {
+        let f = full_spec();
+        let mut a = f.model_plans(2);
+        let mut b = f.model_plans(2);
+        assert_eq!(a[0].rng.next_u64(), b[0].rng.next_u64());
+        assert_eq!(a[1].rng.next_u64(), b[1].rng.next_u64());
+        let mut c = f.model_plans(2);
+        assert_ne!(c[0].rng.next_u64(), c[1].rng.next_u64());
+    }
+
+    #[test]
+    fn straggler_factor_and_backoff() {
+        let plans = full_spec().model_plans(1);
+        let p = &plans[0];
+        assert_eq!(p.straggler_factor(50.0), 1.0);
+        assert_eq!(p.straggler_factor(100.0), 3.0, "window start inclusive");
+        assert_eq!(p.straggler_factor(400.0), 1.0, "window end exclusive");
+        assert_eq!(p.load_retry_delay(0), 1.5);
+        assert_eq!(p.load_retry_delay(1), 3.0);
+        assert_eq!(p.load_retry_delay(2), 6.0);
+        assert_eq!(p.load_retry_delay(10), 20.0, "capped");
+        assert_eq!(p.load_retry_delay(100), 20.0, "huge attempts don't overflow");
+    }
+
+    #[test]
+    fn reclaimed_at_sums_active_windows() {
+        let mut f = full_spec();
+        f.reclamations.push(Reclamation {
+            start: 300.0,
+            end: 400.0,
+            gpus: 4,
+        });
+        assert_eq!(f.reclaimed_at(100.0), 0);
+        assert_eq!(f.reclaimed_at(200.0), 8, "start inclusive");
+        assert_eq!(f.reclaimed_at(350.0), 12, "overlapping windows sum");
+        assert_eq!(f.reclaimed_at(500.0), 0, "end exclusive");
+    }
+}

@@ -6,12 +6,14 @@
 //! for the scenario catalog.
 
 pub mod arrivals;
+pub mod faults;
 pub mod scenario;
 pub mod sharegpt;
 pub mod source;
 pub mod trace;
 
 pub use arrivals::{ArrivalClock, ArrivalProcess, SpikeTrain};
+pub use faults::{CrashEvent, FaultSpec, ModelFaults, Reclamation, StragglerEvent};
 pub use scenario::{LengthDist, ScenarioSource, ScenarioSpec, StreamKind, StreamSpec};
 pub use sharegpt::ShareGptSampler;
 pub use source::{ArrivalSource, TraceSource};

@@ -27,6 +27,7 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::arrivals::{ArrivalClock, ArrivalProcess};
+use super::faults::{CrashEvent, FaultSpec, Reclamation, StragglerEvent};
 use super::sharegpt::ShareGptSampler;
 use super::source::ArrivalSource;
 use super::trace::Trace;
@@ -408,6 +409,8 @@ pub struct ScenarioSpec {
     /// Simulated-time safety cap in seconds.
     pub max_time: Time,
     pub streams: Vec<StreamSpec>,
+    /// Deterministic fault-injection plan (default: inert — no faults).
+    pub faults: FaultSpec,
 }
 
 impl ScenarioSpec {
@@ -420,6 +423,29 @@ impl ScenarioSpec {
             self.name
         );
         anyhow::ensure!(self.gpus > 0, "scenario '{}' needs gpus > 0", self.name);
+        self.faults
+            .validate()
+            .map_err(|e| e.context(format!("scenario '{}'", self.name)))?;
+        for (i, c) in self.faults.crashes.iter().enumerate() {
+            anyhow::ensure!(
+                c.model < self.models.len(),
+                "scenario '{}': crash {i} targets model {} but the scenario declares \
+                 only {} model(s)",
+                self.name,
+                c.model,
+                self.models.len()
+            );
+        }
+        for (i, s) in self.faults.stragglers.iter().enumerate() {
+            anyhow::ensure!(
+                s.model < self.models.len(),
+                "scenario '{}': straggler {i} targets model {} but the scenario declares \
+                 only {} model(s)",
+                self.name,
+                s.model,
+                self.models.len()
+            );
+        }
         for m in &self.models {
             anyhow::ensure!(
                 ModelSpec::by_name(m).is_some(),
@@ -585,7 +611,7 @@ impl ScenarioSpec {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", self.name.as_str().into()),
             ("description", self.description.as_str().into()),
             (
@@ -598,7 +624,13 @@ impl ScenarioSpec {
                 "streams",
                 Json::arr(self.streams.iter().map(|s| s.to_json())),
             ),
-        ])
+        ];
+        // Fault-free scenarios serialize without a `faults` block, so
+        // pre-fault spec files stay byte-stable and round-trip exactly.
+        if !self.faults.is_default() {
+            fields.push(("faults", self.faults.to_json()));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<ScenarioSpec> {
@@ -636,6 +668,7 @@ impl ScenarioSpec {
             gpus: j.get("gpus").as_u64().unwrap_or(50) as u32,
             max_time: j.get("max_time").as_f64().unwrap_or(4.0 * 3600.0),
             streams,
+            faults: FaultSpec::from_json(j.get("faults"))?,
         };
         spec.validate()?;
         Ok(spec)
@@ -904,6 +937,7 @@ fn diurnal_replay_generator() -> ScenarioSpec {
     );
     ScenarioSpec {
         name: "diurnal-replay-generator".into(),
+        faults: FaultSpec::default(),
         description: "generator for the diurnal-replay trace file".into(),
         models: vec!["llama8b".into()],
         gpus: 50,
@@ -974,6 +1008,7 @@ pub fn catalog() -> Vec<ScenarioSpec> {
     vec![
         ScenarioSpec {
             name: "paper-wa".into(),
+            faults: FaultSpec::default(),
             description: "Paper W_A: interactive-only Poisson stream (§6)".into(),
             models: vec!["llama8b".into()],
             gpus: 50,
@@ -990,6 +1025,7 @@ pub fn catalog() -> Vec<ScenarioSpec> {
         },
         ScenarioSpec {
             name: "paper-wb".into(),
+            faults: FaultSpec::default(),
             description: "Paper W_B: interactive stream + batch queue dump at t=300s (§6)".into(),
             models: vec!["llama8b".into()],
             gpus: 50,
@@ -1017,6 +1053,7 @@ pub fn catalog() -> Vec<ScenarioSpec> {
         },
         ScenarioSpec {
             name: "diurnal".into(),
+            faults: FaultSpec::default(),
             description:
                 "Day/night sinusoid approximated by 12 phased rate segments over a 30-min cycle"
                     .into(),
@@ -1054,6 +1091,7 @@ pub fn catalog() -> Vec<ScenarioSpec> {
         },
         ScenarioSpec {
             name: "flash-crowd".into(),
+            faults: FaultSpec::default(),
             description:
                 "Steady interactive baseline with a 12x arrival spike for 60s (paper Fig. 4 spikes)"
                     .into(),
@@ -1094,6 +1132,7 @@ pub fn catalog() -> Vec<ScenarioSpec> {
         },
         ScenarioSpec {
             name: "multi-tenant".into(),
+            faults: FaultSpec::default(),
             description: "Two models with 8:1 skewed interactive rates plus per-model batch dumps"
                 .into(),
             models: vec!["llama8b".into(), "llama70b".into()],
@@ -1141,6 +1180,7 @@ pub fn catalog() -> Vec<ScenarioSpec> {
         {
             let mut heavy = ScenarioSpec {
                 name: "heavy-tail".into(),
+                faults: FaultSpec::default(),
                 description:
                     "Pareto output lengths (α=1.35): a few requests decode for thousands of tokens"
                         .into(),
@@ -1182,6 +1222,7 @@ pub fn catalog() -> Vec<ScenarioSpec> {
         },
         ScenarioSpec {
             name: "batch-backlog".into(),
+            faults: FaultSpec::default(),
             description:
                 "Appendix A.2: 1M-request batch dump at t=300s under a light interactive stream"
                     .into(),
@@ -1211,6 +1252,7 @@ pub fn catalog() -> Vec<ScenarioSpec> {
         },
         ScenarioSpec {
             name: "spike-correlated".into(),
+            faults: FaultSpec::default(),
             description:
                 "Correlated flash crowds: four streams across two models spiking at the same onsets"
                     .into(),
@@ -1307,6 +1349,7 @@ pub fn catalog() -> Vec<ScenarioSpec> {
         },
         ScenarioSpec {
             name: "diurnal-replay".into(),
+            faults: FaultSpec::default(),
             description:
                 "A diurnal cycle replayed from a generated trace JSON through the replay source"
                     .into(),
@@ -1329,6 +1372,140 @@ pub fn catalog() -> Vec<ScenarioSpec> {
                 stop: None,
                 lengths: LengthDist::ShareGpt,
             }],
+        },
+        ScenarioSpec {
+            name: "crash-midrush".into(),
+            faults: FaultSpec {
+                seed: 61,
+                crashes: vec![
+                    CrashEvent { model: 0, at: 60.0 },
+                    CrashEvent { model: 0, at: 75.0 },
+                    CrashEvent { model: 0, at: 90.0 },
+                ],
+                mtbf: Some(1200.0),
+                load_fail_p: 0.05,
+                ..FaultSpec::default()
+            },
+            description:
+                "Three instance crashes during a batch rush, plus MTBF churn and flaky loads"
+                    .into(),
+            models: vec!["llama8b".into()],
+            gpus: 50,
+            max_time: 2.0 * 3600.0,
+            streams: vec![
+                stream(
+                    "interactive",
+                    RequestClass::Interactive,
+                    i_slo,
+                    ArrivalProcess::Poisson { rate: 20.0 },
+                    12_000,
+                    0,
+                    0.0,
+                ),
+                stream(
+                    "batch-rush",
+                    RequestClass::Batch,
+                    batch_slo(1800.0),
+                    ArrivalProcess::Burst { at: 30.0 },
+                    6_000,
+                    0,
+                    30.0,
+                ),
+            ],
+        },
+        ScenarioSpec {
+            name: "spot-reclaim".into(),
+            faults: FaultSpec {
+                seed: 62,
+                reclamations: vec![
+                    Reclamation {
+                        start: 300.0,
+                        end: 900.0,
+                        gpus: 20,
+                    },
+                    Reclamation {
+                        start: 1200.0,
+                        end: 1500.0,
+                        gpus: 10,
+                    },
+                ],
+                load_fail_p: 0.1,
+                shed_queue_len: Some(20_000),
+                ..FaultSpec::default()
+            },
+            description:
+                "Spot-market reclamation: half the cluster vanishes for 10 min mid-run"
+                    .into(),
+            models: vec!["llama8b".into()],
+            gpus: 40,
+            max_time: 2.0 * 3600.0,
+            streams: vec![
+                stream(
+                    "interactive",
+                    RequestClass::Interactive,
+                    i_slo,
+                    ArrivalProcess::Poisson { rate: 18.0 },
+                    15_000,
+                    0,
+                    0.0,
+                ),
+                stream(
+                    "batch-floor",
+                    RequestClass::Batch,
+                    batch_slo(1800.0),
+                    ArrivalProcess::Burst { at: 60.0 },
+                    5_000,
+                    0,
+                    60.0,
+                ),
+            ],
+        },
+        ScenarioSpec {
+            name: "straggler-tail".into(),
+            faults: FaultSpec {
+                seed: 63,
+                stragglers: vec![
+                    StragglerEvent {
+                        model: 0,
+                        start: 120.0,
+                        end: 600.0,
+                        factor: 4.0,
+                    },
+                    StragglerEvent {
+                        model: 0,
+                        start: 900.0,
+                        end: 1200.0,
+                        factor: 2.5,
+                    },
+                ],
+                ..FaultSpec::default()
+            },
+            description:
+                "A slow node: one instance runs 4x slower for 8 min, then 2.5x slower later"
+                    .into(),
+            models: vec!["llama8b".into()],
+            gpus: 50,
+            max_time: 2.0 * 3600.0,
+            streams: vec![
+                stream(
+                    "interactive",
+                    RequestClass::Interactive,
+                    i_slo,
+                    ArrivalProcess::Poisson { rate: 15.0 },
+                    12_000,
+                    0,
+                    0.0,
+                ),
+                stream(
+                    "batch-tail",
+                    RequestClass::Batch,
+                    batch_slo(1800.0),
+                    ArrivalProcess::Burst { at: 60.0 },
+                    3_000,
+                    0,
+                    60.0,
+                ),
+            ],
         },
     ]
 }
@@ -1363,6 +1540,9 @@ mod tests {
             "batch-backlog",
             "spike-correlated",
             "diurnal-replay",
+            "crash-midrush",
+            "spot-reclaim",
+            "straggler-tail",
         ] {
             assert!(by_name(required).is_some(), "missing catalog entry {required}");
         }
@@ -1714,5 +1894,34 @@ mod tests {
                             "lengths":{"kind":"fixed","input":64}}]}"#
         )
         .is_err());
+        // Fault blocks validate too: a crash targeting a model the
+        // scenario doesn't declare, and a load-fail probability of 1
+        // (which would retry forever), are both rejected.
+        let bad_fault_model = r#"{"name":"x","models":["llama8b"],
+            "streams":[{"arrivals":{"kind":"poisson","rate":5},"count":10}],
+            "faults":{"crashes":[{"model":2,"at":60}]}}"#;
+        assert!(ScenarioSpec::parse(bad_fault_model).is_err());
+        let bad_fault_p = r#"{"name":"x","models":["llama8b"],
+            "streams":[{"arrivals":{"kind":"poisson","rate":5},"count":10}],
+            "faults":{"load_fail_p":1.0}}"#;
+        assert!(ScenarioSpec::parse(bad_fault_p).is_err());
+        // A malformed fault event is an error, not a silent default.
+        let bad_fault_event = r#"{"name":"x","models":["llama8b"],
+            "streams":[{"arrivals":{"kind":"poisson","rate":5},"count":10}],
+            "faults":{"stragglers":[{"model":0,"start":10}]}}"#;
+        assert!(ScenarioSpec::parse(bad_fault_event).is_err());
+    }
+
+    #[test]
+    fn fault_scenarios_roundtrip_and_scale_keeps_faults() {
+        for name in ["crash-midrush", "spot-reclaim", "straggler-tail"] {
+            let spec = by_name(name).unwrap();
+            assert!(!spec.faults.is_default(), "{name} must carry faults");
+            let back = ScenarioSpec::parse(&spec.to_json().to_string()).unwrap();
+            assert_eq!(spec, back, "{name} must round-trip");
+            // `scaled` shrinks request counts but the fault plan (absolute
+            // times and probabilities) rides along unchanged.
+            assert_eq!(spec.scaled(0.01).faults, spec.faults);
+        }
     }
 }

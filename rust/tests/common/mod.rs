@@ -50,6 +50,9 @@ pub fn digest_report(report: &SimReport) -> u64 {
     eat(&mut h, report.total_requests as u64);
     eat(&mut h, report.unfinished as u64);
     eat(&mut h, report.total_tokens.to_bits());
+    eat(&mut h, report.failed as u64);
+    eat(&mut h, report.shed as u64);
+    eat(&mut h, report.retries);
     h
 }
 

@@ -1,0 +1,368 @@
+//! Fault-plane integration tests: crash recovery, retry budgets, load
+//! shedding, capacity reclamation, stragglers, and the Loading-removal
+//! edge — all pinned to the simulator's two standing contracts:
+//!
+//!  1. **Conservation** — every arrival is accounted exactly once as
+//!     completed, terminally failed, or shed; nothing is silently dropped.
+//!  2. **Determinism** — fault runs are FNV-digest bit-identical at any
+//!     `--shards` worker count and any `--jobs` grid width.
+
+mod common;
+
+use chiron::core::{InstanceClass, InstanceId, ModelSpec, RequestClass};
+use chiron::experiments::common::{make_policy, PolicyKind};
+use chiron::sim::policy::{
+    Action, ClusterView, GlobalPolicy, InstanceState, InstanceView, LocalPolicy, ModelView,
+    QueuedReq, Route,
+};
+use chiron::sim::{run_sim, SimConfig, SimReport};
+use chiron::util::parallel::run_grid_jobs;
+use chiron::util::rng::Rng;
+use chiron::workload::scenario::by_name;
+use chiron::workload::trace::{workload_a, workload_b_batch};
+use chiron::workload::{CrashEvent, FaultSpec, Reclamation, StragglerEvent, TraceBuilder};
+
+use crate::common::digest_report as digest;
+
+/// Every arrival accounted exactly once: completed outcomes + terminal
+/// failures + shed arrivals must cover the trace, with nothing unfinished.
+fn assert_conserved(r: &SimReport, label: &str) {
+    assert_eq!(
+        r.outcomes.len() + r.failed + r.shed,
+        r.total_requests,
+        "{label}: completed {} + failed {} + shed {} must equal arrivals {}",
+        r.outcomes.len(),
+        r.failed,
+        r.shed,
+        r.total_requests
+    );
+    assert_eq!(r.unfinished, 0, "{label}: no request may be left in limbo");
+}
+
+/// An interactive+batch workload on one llama8b pool with the given faults.
+fn run_faulty(
+    faults: FaultSpec,
+    gpus: u32,
+    n_inter: usize,
+    n_batch: usize,
+    workers: usize,
+    record: bool,
+) -> SimReport {
+    let models = vec![ModelSpec::llama8b()];
+    let mut rng = Rng::new(9);
+    let trace = TraceBuilder::new()
+        .stream(workload_a(10.0, n_inter, 0))
+        .stream(workload_b_batch(n_batch, 5.0, 0, 1800.0))
+        .build(&mut rng);
+    let mut cfg = SimConfig::new(gpus, models.clone());
+    cfg.max_sim_time = 4.0 * 3600.0;
+    cfg.shard_workers = workers;
+    cfg.record_gpu_trace = record;
+    cfg.faults = faults;
+    let mut p = make_policy(&PolicyKind::Chiron, &models);
+    run_sim(cfg, trace, p.as_mut())
+}
+
+#[test]
+fn crash_recovery_requeues_evicted_work_and_conserves_requests() {
+    let faults = FaultSpec {
+        seed: 17,
+        crashes: vec![
+            CrashEvent { model: 0, at: 30.0 },
+            CrashEvent { model: 0, at: 60.0 },
+            CrashEvent { model: 0, at: 90.0 },
+        ],
+        mtbf: Some(400.0),
+        ..FaultSpec::default()
+    };
+    let r = run_faulty(faults.clone(), 16, 300, 1200, 1, false);
+    assert!(
+        r.retries > 0,
+        "crashes mid-backlog must evict and re-queue in-flight work"
+    );
+    assert_conserved(&r, "crash recovery");
+
+    // Bit-identical at any shard worker count, including the fault RNG.
+    let r4 = run_faulty(faults, 16, 300, 1200, 4, false);
+    assert_eq!(digest(&r), digest(&r4), "fault run: shards 1 vs 4");
+
+    // And the fault plane genuinely changed the run.
+    let clean = run_faulty(FaultSpec::default(), 16, 300, 1200, 1, false);
+    assert_eq!(clean.failed + clean.shed, 0);
+    assert_eq!(clean.retries, 0, "a default FaultSpec must stay inert");
+    assert_ne!(digest(&r), digest(&clean));
+}
+
+#[test]
+fn exhausted_retry_budget_counts_terminal_failures() {
+    // A zero retry budget turns every crash eviction into a terminal
+    // failure — counted, never silently dropped.
+    let faults = FaultSpec {
+        seed: 5,
+        crashes: vec![
+            CrashEvent { model: 0, at: 30.0 },
+            CrashEvent { model: 0, at: 45.0 },
+        ],
+        mtbf: Some(150.0),
+        max_retries: 0,
+        ..FaultSpec::default()
+    };
+    let r = run_faulty(faults, 16, 300, 1200, 1, false);
+    assert!(
+        r.failed > 0,
+        "with max_retries = 0, crash evictions must become terminal failures"
+    );
+    assert_conserved(&r, "retry budget");
+}
+
+#[test]
+fn shedding_caps_the_batch_queue_and_spares_interactive() {
+    let faults = FaultSpec {
+        seed: 3,
+        shed_queue_len: Some(50),
+        ..FaultSpec::default()
+    };
+    let n_inter = 200;
+    let r = run_faulty(faults, 16, n_inter, 1200, 1, false);
+    assert!(
+        r.shed > 0,
+        "a 1200-request burst against a 50-deep queue bound must shed"
+    );
+    assert_conserved(&r, "shedding");
+    // Shedding is batch-only: every interactive arrival still completes.
+    let inter_done = r
+        .outcomes
+        .iter()
+        .filter(|o| o.class == RequestClass::Interactive)
+        .count();
+    assert_eq!(inter_done, n_inter, "interactive requests are never shed");
+}
+
+#[test]
+fn reclamation_dips_the_budget_at_barriers_only() {
+    let total = 16u32;
+    let reclaimed = 10u32;
+    let cap = total - reclaimed;
+    let faults = FaultSpec {
+        seed: 7,
+        reclamations: vec![Reclamation {
+            start: 30.0,
+            end: 300.0,
+            gpus: reclaimed,
+        }],
+        ..FaultSpec::default()
+    };
+    let r = run_faulty(faults.clone(), total, 400, 800, 1, true);
+    assert_conserved(&r, "reclamation");
+    // Budget changes only at integral tick barriers, faults included.
+    for &(t, used) in &r.gpu_trace {
+        assert_eq!(t.fract(), 0.0, "budget changed between barriers at t={t}");
+        assert!(used <= total, "budget must never exceed the cluster");
+    }
+    // The dip lands at the first barrier of the window: the last change at
+    // or before t=30 leaves usage within the reclaimed cap (intermediate
+    // same-timestamp entries record the instance-by-instance force-crash),
+    // and every change strictly inside the window respects it.
+    assert!(
+        r.gpu_trace.iter().any(|&(t, u)| t <= 30.0 && u > cap),
+        "the cluster should exceed {cap} GPUs before the window (dip non-vacuous)"
+    );
+    let at_window_start = r
+        .gpu_trace
+        .iter()
+        .rev()
+        .find(|(t, _)| *t <= 30.0)
+        .expect("a change at or before the window start");
+    assert!(
+        at_window_start.1 <= cap,
+        "usage {} must fit the reclaimed budget {cap} at the window start",
+        at_window_start.1
+    );
+    for &(t, used) in &r.gpu_trace {
+        if t > 30.0 && t < 300.0 {
+            assert!(
+                used <= cap,
+                "t={t}: usage {used} exceeds reclaimed budget {cap}"
+            );
+        }
+    }
+    // gpu_seconds stays the exact occupancy integral: it can only credit
+    // (mid-epoch retirements and crashes), never exceed the barrier trace.
+    let mut integral = 0.0;
+    for w in r.gpu_trace.windows(2) {
+        integral += w[0].1 as f64 * (w[1].0 - w[0].0);
+    }
+    if let Some(&(t, used)) = r.gpu_trace.last() {
+        integral += used as f64 * (r.end_time - t);
+    }
+    assert!(r.gpu_seconds > 0.0);
+    assert!(
+        r.gpu_seconds <= integral + 1e-6,
+        "gpu_seconds {} must not exceed the barrier-quantized integral {integral}",
+        r.gpu_seconds
+    );
+    // Deterministic across shard workers, reclamation crashes included.
+    let r4 = run_faulty(faults, total, 400, 800, 4, true);
+    assert_eq!(digest(&r), digest(&r4), "reclamation run: shards 1 vs 4");
+    assert_eq!(r.gpu_trace, r4.gpu_trace);
+}
+
+#[test]
+fn straggler_slows_a_single_instance_run() {
+    // One GPU → one instance → the straggler window covers every step.
+    let faults = FaultSpec {
+        seed: 2,
+        stragglers: vec![StragglerEvent {
+            model: 0,
+            start: 0.0,
+            end: 1.0e9,
+            factor: 4.0,
+        }],
+        ..FaultSpec::default()
+    };
+    let slow = run_faulty(faults, 1, 100, 0, 1, false);
+    let clean = run_faulty(FaultSpec::default(), 1, 100, 0, 1, false);
+    assert_conserved(&slow, "straggler");
+    assert_conserved(&clean, "straggler control");
+    assert!(
+        slow.end_time > clean.end_time,
+        "4x slower steps must finish later ({} vs {})",
+        slow.end_time,
+        clean.end_time
+    );
+    assert_ne!(digest(&slow), digest(&clean));
+}
+
+#[test]
+fn fault_catalog_conserves_and_is_jobs_deterministic() {
+    // The three catalog fault scenarios, run as a grid: conservation holds
+    // per cell, and the grid digests are byte-identical at --jobs 1 and 4.
+    let names = ["crash-midrush", "spot-reclaim", "straggler-tail"];
+    let cell = |name: &str| -> SimReport {
+        let spec = by_name(name).expect("catalog scenario").scaled(0.02);
+        let models = spec.model_specs().unwrap();
+        let mut cfg = SimConfig::new(spec.gpus, models.clone());
+        cfg.max_sim_time = spec.max_time;
+        cfg.faults = spec.faults.clone();
+        let mut p = make_policy(&PolicyKind::Chiron, &models);
+        chiron::sim::run_sim_source(cfg, Box::new(spec.source(11)), p.as_mut())
+    };
+    for name in names {
+        let r = cell(name);
+        assert!(!r.outcomes.is_empty(), "{name}: work must complete");
+        assert_conserved(&r, name);
+    }
+    let grid =
+        |jobs: usize| run_grid_jobs(jobs, names.to_vec(), |_, name| digest(&cell(name)));
+    let serial = grid(1);
+    assert_eq!(
+        serial,
+        grid(4),
+        "--jobs 1 and --jobs 4 fault grids must be byte-identical"
+    );
+}
+
+/// Scripted policy for the Loading-removal edge: bootstrap one instance,
+/// add a second at the first tick, then remove it (and reclassify the
+/// survivor) while both are still Loading (llama8b load_time = 15 s).
+struct ScriptedLocal;
+
+impl LocalPolicy for ScriptedLocal {
+    fn route(&mut self, _req: &QueuedReq, _view: &ModelView) -> Route {
+        Route::Queue
+    }
+    fn pull_order(&self, _inst: &InstanceView) -> &'static [RequestClass] {
+        &[RequestClass::Interactive, RequestClass::Batch]
+    }
+    fn on_step(&mut self, _inst: &InstanceView, _now: f64) -> Option<u32> {
+        None
+    }
+}
+
+struct ScriptedGlobal {
+    ticks: u32,
+}
+
+impl GlobalPolicy for ScriptedGlobal {
+    fn name(&self) -> &str {
+        "scripted"
+    }
+    fn make_local(&self, _model: usize) -> Box<dyn LocalPolicy> {
+        Box::new(ScriptedLocal)
+    }
+    fn bootstrap(&mut self, _view: &ClusterView) -> Vec<Action> {
+        vec![Action::AddInstance {
+            model: 0,
+            class: InstanceClass::Mixed,
+        }]
+    }
+    fn autoscale(&mut self, view: &ClusterView) -> Vec<Action> {
+        self.ticks += 1;
+        match self.ticks {
+            1 => vec![Action::AddInstance {
+                model: 0,
+                class: InstanceClass::Mixed,
+            }],
+            2 => {
+                // Both instances are still Loading (ready at t=15 and 16).
+                let mut loading: Vec<InstanceId> = view
+                    .instances
+                    .iter()
+                    .filter(|i| matches!(i.state, InstanceState::Loading { .. }))
+                    .map(|i| i.id)
+                    .collect();
+                loading.sort_by_key(|id| id.0);
+                assert_eq!(loading.len(), 2, "both instances should still be loading");
+                vec![
+                    Action::RemoveInstance { id: loading[1] },
+                    Action::SetClass {
+                        id: loading[0],
+                        class: InstanceClass::Mixed,
+                    },
+                ]
+            }
+            _ => Vec::new(),
+        }
+    }
+}
+
+#[test]
+fn removing_a_loading_instance_cancels_the_load_and_refunds_the_gpu() {
+    // The pinned edge (sim/README.md): RemoveInstance on a Loading
+    // instance drains it immediately (it is idle), the GPU is refunded at
+    // the next barrier — before the load would have finished — and the
+    // instance's stale Ready event no-ops. SetClass on Loading just
+    // relabels. The survivor then serves the whole trace alone.
+    let models = vec![ModelSpec::llama8b()];
+    let mut rng = Rng::new(4);
+    let trace = TraceBuilder::new()
+        .stream(workload_a(5.0, 60, 0))
+        .build(&mut rng);
+    let mut cfg = SimConfig::new(4, models.clone());
+    cfg.max_sim_time = 3600.0;
+    cfg.record_gpu_trace = true;
+    let mut p = ScriptedGlobal { ticks: 0 };
+    let r = run_sim(cfg, trace, &mut p);
+    assert_conserved(&r, "loading removal");
+    assert!(!r.outcomes.is_empty());
+    let peak = r.gpu_trace.iter().map(|&(_, u)| u).max().unwrap();
+    assert_eq!(peak, 2, "the scripted add must have landed");
+    // The refund lands before the cancelled load's ready time (t=16).
+    let refunded_at = r
+        .gpu_trace
+        .iter()
+        .find(|&&(t, u)| t > 1.0 && u == 1)
+        .map(|&(t, _)| t)
+        .expect("the loading instance's GPU must be refunded");
+    assert!(
+        refunded_at < 15.0,
+        "refund at t={refunded_at} should precede the cancelled load's completion"
+    );
+    // And it never comes back: one instance serves the rest of the run.
+    for &(t, used) in &r.gpu_trace {
+        assert!(
+            t <= refunded_at || used == 1,
+            "t={t}: usage {used} after the removal"
+        );
+    }
+}

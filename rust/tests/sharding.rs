@@ -29,6 +29,7 @@ fn run_spec(spec: &ScenarioSpec, seed: u64, shard_workers: usize, record: bool) 
     cfg.max_sim_time = spec.max_time;
     cfg.shard_workers = shard_workers;
     cfg.record_gpu_trace = record;
+    cfg.faults = spec.faults.clone();
     let mut p = make_policy(&PolicyKind::Chiron, &models);
     run_sim_source(cfg, Box::new(spec.source(seed)), p.as_mut())
 }
