@@ -238,6 +238,52 @@ fn main() {
             let r = run_sim(sim_cfg, mk(2000, 4000), policy.as_mut());
             black_box(r.outcomes.len());
         });
+        // The same workload with full telemetry (events + decision audit +
+        // counters + histograms): the delta vs `sim.run` is the whole
+        // observability-plane overhead when tracing is ON. The OFF path is
+        // pinned by the gate on `sim.run` itself — the sink's disabled
+        // branch is an Option check the gate would catch regressing.
+        b.bench_units("sim.run_traced chiron 6k requests", Some(total), || {
+            let mut cfg = ChironConfig::for_models(1);
+            cfg.bootstrap[0] = BootstrapSpec {
+                interactive: 1,
+                mixed: 2,
+                batch: 0,
+            };
+            let mut policy = Chiron::new(cfg, &models);
+            let mut sim_cfg = SimConfig::new(50, models.clone());
+            sim_cfg.max_sim_time = 4.0 * 3600.0;
+            sim_cfg.timeline_every = 0;
+            sim_cfg.telemetry = chiron::telemetry::TelemetryConfig::full();
+            let r = run_sim(sim_cfg, mk(2000, 4000), &mut policy);
+            let events = r.trace.as_ref().map_or(0, |t| t.events.len());
+            black_box((r.outcomes.len(), events));
+        });
+    }
+
+    // -- telemetry event recording ------------------------------------------
+    // 1M enabled-sink pushes: the marginal per-event cost a traced run pays
+    // at every emission site (enum construct + Vec push).
+    {
+        use chiron::telemetry::{EventKind, EventSink};
+        b.bench_units("telemetry.record_1m", Some(1e6), || {
+            let mut sink = EventSink::new(true);
+            for i in 0..1_000_000u64 {
+                sink.push(
+                    i as f64 * 1e-3,
+                    (i % 4) as usize,
+                    EventKind::Arrival {
+                        req: i,
+                        class: if i % 3 == 0 {
+                            RequestClass::Batch
+                        } else {
+                            RequestClass::Interactive
+                        },
+                    },
+                );
+            }
+            black_box(sink.drain().len());
+        });
     }
 
     // -- the fault plane under load -----------------------------------------

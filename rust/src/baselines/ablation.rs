@@ -79,6 +79,14 @@ impl GlobalPolicy for LocalOnly {
     fn bootstrap(&mut self, view: &ClusterView) -> Vec<Action> {
         self.llumnix.bootstrap(view)
     }
+
+    fn set_audit(&mut self, on: bool) {
+        self.llumnix.set_audit(on);
+    }
+
+    fn drain_decisions(&mut self) -> Vec<crate::telemetry::DecisionRecord> {
+        self.llumnix.drain_decisions()
+    }
 }
 
 /// GlobalOnly's per-model half: Chiron routing, static batch sizes.
@@ -147,6 +155,14 @@ impl GlobalPolicy for GlobalOnly {
 
     fn on_complete(&mut self, outcome: &RequestOutcome) {
         self.chiron.on_complete(outcome);
+    }
+
+    fn set_audit(&mut self, on: bool) {
+        self.chiron.set_audit(on);
+    }
+
+    fn drain_decisions(&mut self) -> Vec<crate::telemetry::DecisionRecord> {
+        self.chiron.drain_decisions()
     }
 }
 

@@ -17,6 +17,7 @@ use crate::core::{InstanceClass, ModelSpec, RequestClass, Time};
 use crate::sim::policy::{
     Action, ClusterView, GlobalPolicy, InstanceView, LocalPolicy, ModelView, QueuedReq, Route,
 };
+use crate::telemetry::AuditLog;
 
 /// Llumnix configuration knobs.
 #[derive(Debug, Clone, Copy)]
@@ -90,6 +91,7 @@ pub struct Llumnix {
     pub cfg: LlumnixConfig,
     n_models: usize,
     name: &'static str,
+    audit: AuditLog,
 }
 
 impl Llumnix {
@@ -98,6 +100,7 @@ impl Llumnix {
             cfg: LlumnixConfig::untuned(),
             n_models: models.len(),
             name: "llumnix",
+            audit: AuditLog::new("llumnix"),
         }
     }
 
@@ -106,6 +109,7 @@ impl Llumnix {
             cfg,
             n_models: models.len(),
             name: "llumnix-tuned",
+            audit: AuditLog::new("llumnix"),
         }
     }
 
@@ -159,15 +163,33 @@ impl GlobalPolicy for Llumnix {
             // the in-flight model load (gradual ramp, §6.2).
             let pressure = util > self.cfg.high || queued > 0 || waiting > 0;
             if pressure && loading == 0 {
+                let reason = if util > self.cfg.high {
+                    "util_high"
+                } else {
+                    "work_waiting"
+                };
                 for _ in 0..self.cfg.adds_per_tick {
                     if gpus_free < gpi {
                         break;
                     }
                     gpus_free -= gpi;
-                    actions.push(Action::AddInstance {
+                    let a = Action::AddInstance {
                         model,
                         class: InstanceClass::Mixed,
-                    });
+                    };
+                    if self.audit.enabled() {
+                        self.audit.record(
+                            model,
+                            a.describe(),
+                            reason,
+                            &[
+                                ("util", util),
+                                ("queued", queued as f64),
+                                ("waiting", waiting as f64),
+                            ],
+                        );
+                    }
+                    actions.push(a);
                 }
             } else if util < self.cfg.low && queued == 0 && waiting == 0 {
                 // Scale down: retire one idle instance (churn on completion,
@@ -178,7 +200,16 @@ impl GlobalPolicy for Llumnix {
                     .min_by_key(|i| i.id.0)
                 {
                     if n_running > 1 {
-                        actions.push(Action::RemoveInstance { id: idle.id });
+                        let a = Action::RemoveInstance { id: idle.id };
+                        if self.audit.enabled() {
+                            self.audit.record(
+                                model,
+                                a.describe(),
+                                "util_low",
+                                &[("util", util), ("running", n_running as f64)],
+                            );
+                        }
+                        actions.push(a);
                     }
                 }
             }
@@ -194,13 +225,25 @@ impl GlobalPolicy for Llumnix {
         let mut actions = Vec::new();
         for model in 0..self.n_models {
             for _ in 0..self.cfg.bootstrap {
-                actions.push(Action::AddInstance {
+                let a = Action::AddInstance {
                     model,
                     class: InstanceClass::Mixed,
-                });
+                };
+                if self.audit.enabled() {
+                    self.audit.record(model, a.describe(), "bootstrap", &[]);
+                }
+                actions.push(a);
             }
         }
         actions
+    }
+
+    fn set_audit(&mut self, on: bool) {
+        self.audit.set_enabled(on);
+    }
+
+    fn drain_decisions(&mut self) -> Vec<crate::telemetry::DecisionRecord> {
+        self.audit.drain()
     }
 }
 

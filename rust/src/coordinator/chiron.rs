@@ -243,23 +243,19 @@ impl GlobalPolicy for Chiron {
     fn bootstrap(&mut self, _view: &ClusterView) -> Vec<Action> {
         let mut actions = Vec::new();
         for (model, b) in self.cfg.bootstrap.iter().enumerate() {
-            for _ in 0..b.interactive {
-                actions.push(Action::AddInstance {
-                    model,
-                    class: InstanceClass::Interactive,
-                });
-            }
-            for _ in 0..b.mixed {
-                actions.push(Action::AddInstance {
-                    model,
-                    class: InstanceClass::Mixed,
-                });
-            }
-            for _ in 0..b.batch {
-                actions.push(Action::AddInstance {
-                    model,
-                    class: InstanceClass::Batch,
-                });
+            let spec = [
+                (b.interactive, InstanceClass::Interactive),
+                (b.mixed, InstanceClass::Mixed),
+                (b.batch, InstanceClass::Batch),
+            ];
+            for (n, class) in spec {
+                for _ in 0..n {
+                    let a = Action::AddInstance { model, class };
+                    if self.global.audit.enabled() {
+                        self.global.audit.record(model, a.describe(), "bootstrap", &[]);
+                    }
+                    actions.push(a);
+                }
             }
         }
         actions
@@ -267,6 +263,14 @@ impl GlobalPolicy for Chiron {
 
     fn on_complete(&mut self, outcome: &RequestOutcome) {
         self.global.on_complete(outcome);
+    }
+
+    fn set_audit(&mut self, on: bool) {
+        self.global.audit.set_enabled(on);
+    }
+
+    fn drain_decisions(&mut self) -> Vec<crate::telemetry::DecisionRecord> {
+        self.global.audit.drain()
     }
 }
 

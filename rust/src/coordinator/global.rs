@@ -8,6 +8,7 @@ use crate::core::{InstanceClass, ModelSpec, RequestOutcome, Time};
 use crate::coordinator::groups::{build_groups, RequestGroup};
 use crate::coordinator::waiting::WaitingTimeEstimator;
 use crate::sim::policy::{Action, ClusterView, InstanceView};
+use crate::telemetry::AuditLog;
 
 /// Tuning parameters for the global autoscaler.
 #[derive(Debug, Clone, Copy)]
@@ -52,6 +53,9 @@ struct ModelState {
 pub struct GlobalAutoscaler {
     pub cfg: GlobalConfig,
     models: Vec<ModelState>,
+    /// Decision audit (telemetry; disabled by default — `record` is a
+    /// no-op until the driver enables it via `GlobalPolicy::set_audit`).
+    pub audit: AuditLog,
 }
 
 /// Analytical fallback Θ (tokens/s/instance) before observations exist:
@@ -75,6 +79,7 @@ impl GlobalAutoscaler {
                     seen_interactive: false,
                 })
                 .collect(),
+            audit: AuditLog::new("chiron"),
         }
     }
 
@@ -199,16 +204,36 @@ impl GlobalAutoscaler {
                     .max(self.cfg.min_interactive_pool);
                 if ibp > self.cfg.theta + self.cfg.delta || total < self.cfg.min_interactive_pool
                 {
+                    let reason = if ibp > self.cfg.theta + self.cfg.delta {
+                        "ibp_high"
+                    } else {
+                        "pool_floor"
+                    };
                     let add = target_total.saturating_sub(total);
                     for _ in 0..add {
                         if gpus_free < gpi {
                             break;
                         }
                         gpus_free -= gpi;
-                        actions.push(Action::AddInstance {
+                        let a = Action::AddInstance {
                             model,
                             class: InstanceClass::Mixed,
-                        });
+                        };
+                        if self.audit.enabled() {
+                            self.audit.record(
+                                model,
+                                a.describe(),
+                                reason,
+                                &[
+                                    ("ibp", ibp),
+                                    ("busy", busy as f64),
+                                    ("pool", total as f64),
+                                    ("target", target_total as f64),
+                                    ("queued_interactive", queued_inter as f64),
+                                ],
+                            );
+                        }
+                        actions.push(a);
                     }
                 } else if ibp < self.cfg.theta - self.cfg.delta && total > target_total {
                     // Remove mixed instances that are not serving
@@ -221,7 +246,21 @@ impl GlobalAutoscaler {
                         .collect();
                     candidates.sort_by_key(|i| std::cmp::Reverse(i.running == 0));
                     for c in candidates.iter().take((total - target_total) as usize) {
-                        actions.push(Action::RemoveInstance { id: c.id });
+                        let a = Action::RemoveInstance { id: c.id };
+                        if self.audit.enabled() {
+                            self.audit.record(
+                                model,
+                                a.describe(),
+                                "ibp_low",
+                                &[
+                                    ("ibp", ibp),
+                                    ("busy", busy as f64),
+                                    ("pool", total as f64),
+                                    ("target", target_total as f64),
+                                ],
+                            );
+                        }
+                        actions.push(a);
                     }
                 }
             }
@@ -243,18 +282,38 @@ impl GlobalAutoscaler {
                 let groups = self.request_groups(view, model);
                 let mut dispatch = 0u32;
                 // Algorithm 2: add the minimum instances making BBP = 0.
-                while self.bbp(view, model, &groups, dispatch) > 0 {
+                // (Restructured so the initial backpressure is captured once
+                // for the audit; the sequence of bbp() evaluations is
+                // identical to the plain while-loop form.)
+                let bbp0 = self.bbp(view, model, &groups, 0);
+                let mut bbp_cur = bbp0;
+                while bbp_cur > 0 {
                     if gpus_free < gpi {
                         break; // GPU budget exhausted
                     }
                     dispatch += 1;
                     gpus_free -= gpi;
+                    bbp_cur = self.bbp(view, model, &groups, dispatch);
                 }
                 for _ in 0..dispatch {
-                    actions.push(Action::AddInstance {
+                    let a = Action::AddInstance {
                         model,
                         class: InstanceClass::Batch,
-                    });
+                    };
+                    if self.audit.enabled() {
+                        self.audit.record(
+                            model,
+                            a.describe(),
+                            "bbp_deadline",
+                            &[
+                                ("bbp", bbp0 as f64),
+                                ("queued_batch", qs.batch_len as f64),
+                                ("groups", groups.len() as f64),
+                                ("dispatch", dispatch as f64),
+                            ],
+                        );
+                    }
+                    actions.push(a);
                 }
             } else {
                 // Algorithm 2 lines 17–19: retire batch instances once no
@@ -265,7 +324,16 @@ impl GlobalAutoscaler {
                         && i.waiting == 0
                         && i.is_running()
                     {
-                        actions.push(Action::RemoveInstance { id: i.id });
+                        let a = Action::RemoveInstance { id: i.id };
+                        if self.audit.enabled() {
+                            self.audit.record(
+                                model,
+                                a.describe(),
+                                "queue_drained",
+                                &[("queued_batch", 0.0)],
+                            );
+                        }
+                        actions.push(a);
                     }
                 }
             }

@@ -370,7 +370,7 @@ pub fn save_result(name: &str, value: &Json) {
     if std::fs::create_dir_all(dir).is_ok() {
         let path = dir.join(format!("{name}.json"));
         if let Err(e) = std::fs::write(&path, value.to_string()) {
-            eprintln!("warning: could not write {}: {e}", path.display());
+            crate::log_warn!("could not write {}: {e}", path.display());
         } else {
             println!("[saved results/{name}.json]");
         }

@@ -35,6 +35,7 @@ use std::collections::VecDeque;
 
 use crate::core::{InstanceClass, ModelSpec, RequestClass, RequestOutcome, Time};
 use crate::sim::policy::{Action, ClusterView, GlobalPolicy, InstanceState, LocalPolicy};
+use crate::telemetry::{AuditLog, DecisionRecord};
 use crate::util::stats::{r_squared, Ewma};
 
 use super::{ForecastScore, ForecasterKind, RateForecaster};
@@ -81,6 +82,9 @@ pub struct PredictiveScaler {
     lead_time: Time,
     models: Vec<PerModel>,
     last_now: Time,
+    /// Decision audit for the decorator's own injections; the wrapped
+    /// policy's audit (if any) is enabled/drained alongside it.
+    audit: AuditLog,
 }
 
 impl PredictiveScaler {
@@ -115,6 +119,7 @@ impl PredictiveScaler {
             lead_time,
             models,
             last_now: 0.0,
+            audit: AuditLog::new("predictive"),
         }
     }
 
@@ -159,6 +164,18 @@ impl GlobalPolicy for PredictiveScaler {
             }
         }
         self.inner.on_complete(outcome);
+    }
+
+    fn set_audit(&mut self, on: bool) {
+        self.audit.set_enabled(on);
+        self.inner.set_audit(on);
+    }
+
+    fn drain_decisions(&mut self) -> Vec<DecisionRecord> {
+        // Inner first: it acted first this tick, so its records lead.
+        let mut out = self.inner.drain_decisions();
+        out.extend(self.audit.drain());
+        out
     }
 
     fn forecast_scores(&self) -> Vec<ForecastScore> {
@@ -285,13 +302,25 @@ impl GlobalPolicy for PredictiveScaler {
             let n_fut = (r_fut / kappa).ceil().max(0.0) as u32;
             let gpi = view.models[m].gpus_per_instance;
 
+            let forecast_inputs = [
+                ("r_now", r_now),
+                ("r_fut", r_fut),
+                ("kappa", kappa),
+                ("n_fut", n_fut as f64),
+                ("pool", pool_eff as f64),
+            ];
             if r_fut > r_now * (1.0 + RAMP_MARGIN) && n_fut > pool_eff {
                 let mut deficit = n_fut - pool_eff;
                 while deficit > 0 && view.gpus_free().saturating_sub(committed) >= gpi {
-                    actions.push(Action::AddInstance {
+                    let a = Action::AddInstance {
                         model: m,
                         class: InstanceClass::Mixed,
-                    });
+                    };
+                    if self.audit.enabled() {
+                        self.audit
+                            .record(m, a.describe(), "forecast_ramp", &forecast_inputs);
+                    }
+                    actions.push(a);
                     committed += gpi;
                     deficit -= 1;
                 }
@@ -310,10 +339,15 @@ impl GlobalPolicy for PredictiveScaler {
                         .collect();
                     idle_batch.sort_unstable();
                     for id in idle_batch.into_iter().take(deficit as usize) {
-                        actions.push(Action::SetClass {
+                        let a = Action::SetClass {
                             id: crate::core::InstanceId(id),
                             class: InstanceClass::Mixed,
-                        });
+                        };
+                        if self.audit.enabled() {
+                            self.audit
+                                .record(m, a.describe(), "forecast_convert", &forecast_inputs);
+                        }
+                        actions.push(a);
                     }
                 }
             } else if r_fut < r_now * (1.0 - TROUGH_MARGIN) {
@@ -337,9 +371,24 @@ impl GlobalPolicy for PredictiveScaler {
                         if surplus == 0 {
                             break;
                         }
-                        actions.push(Action::RemoveInstance {
+                        let a = Action::RemoveInstance {
                             id: crate::core::InstanceId(id),
-                        });
+                        };
+                        if self.audit.enabled() {
+                            self.audit.record(
+                                m,
+                                a.describe(),
+                                "forecast_trough",
+                                &[
+                                    ("r_now", r_now),
+                                    ("r_fut", r_fut),
+                                    ("n_fut", n_fut as f64),
+                                    ("keep", keep as f64),
+                                    ("pool", pool_eff as f64),
+                                ],
+                            );
+                        }
+                        actions.push(a);
                         surplus -= 1;
                     }
                 }

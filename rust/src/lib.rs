@@ -33,5 +33,6 @@ pub mod perf;
 pub mod runtime;
 pub mod server;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 pub mod workload;

@@ -42,6 +42,7 @@ fn main() {
         "simulate" => cmd_simulate(argv),
         "trace-gen" => cmd_trace_gen(argv),
         "serve" => cmd_serve(argv),
+        "explain" => cmd_explain(argv),
         "bench-gate" => cmd_bench_gate(argv),
         "list" => {
             for id in experiments::ALL {
@@ -76,14 +77,18 @@ fn help() {
          \u{20}  scenario list                   list the built-in workload catalog\n\
          \u{20}  scenario show <name|file>       print a scenario spec as JSON\n\
          \u{20}  scenario run <name|file> [--policy P --seeds N --jobs J --scale F\n\
-         \u{20}                            --forecast E --lead-time S]\n\
+         \u{20}                            --forecast E --lead-time S\n\
+         \u{20}                            --trace out.json --trace-format chrome|jsonl]\n\
          \u{20}                                  run a scenario (streaming trace), per-seed + mean±std JSON;\n\
-         \u{20}                                  --forecast wraps the policy in a predictive scaler\n\
+         \u{20}                                  --forecast wraps the policy in a predictive scaler;\n\
+         \u{20}                                  --trace records a deterministic event trace + decision audit\n\
          \u{20}  scenario sweep [--scenarios A,B --policies P,Q --seeds N --forecast E]\n\
          \u{20}                                  (policy × scenario × seed) grid over the worker pool\n\
          \u{20}  simulate --config <file>        run a simulation described by a JSON config\n\
          \u{20}  trace-gen [flags]               generate a workload trace (JSON to stdout)\n\
          \u{20}  serve [flags]                   end-to-end: serve the real AOT model (needs `make artifacts`)\n\
+         \u{20}  explain <trace-file>            summarize a --trace output: decision reasons per policy/model\n\
+         \u{20}                                  and scale-action → decision attribution\n\
          \u{20}  bench-gate [flags]              fail when the bench trajectory regresses (CI)\n\
          \u{20}  list                            list experiment ids"
     );
@@ -156,6 +161,8 @@ struct CellResult {
     summary: Summary,
     total_requests: usize,
     unfinished: usize,
+    /// Telemetry trace, present only when the cell ran with `--trace`.
+    trace: Option<Box<chiron::telemetry::TraceData>>,
 }
 
 /// Run one (scenario, policy, seed) cell: stream the scenario through the
@@ -170,18 +177,23 @@ fn run_scenario_cell(
     gpus: u32,
     seed: u64,
     keep_outcomes: bool,
+    with_trace: bool,
 ) -> CellResult {
     let mut cfg = SimConfig::new(gpus, models.to_vec());
     cfg.max_sim_time = spec.max_time;
     cfg.keep_outcomes = keep_outcomes;
     cfg.faults = spec.faults.clone();
+    if with_trace {
+        cfg.telemetry = chiron::telemetry::TelemetryConfig::full();
+    }
     let mut policy = make_policy(kind, models);
-    let report = run_sim_source(cfg, Box::new(spec.source(seed)), policy.as_mut());
+    let mut report = run_sim_source(cfg, Box::new(spec.source(seed)), policy.as_mut());
     CellResult {
         row: PolicyRow::from_report(&report),
         summary: Summary::of_report(&report),
         total_requests: report.total_requests,
         unfinished: report.unfinished,
+        trace: report.trace.take(),
     }
 }
 
@@ -231,11 +243,12 @@ fn wrap_forecast(
     }
     for m in models {
         if lead_time < m.profile.load_time {
-            eprintln!(
-                "warning: --lead-time {lead_time}s is shorter than {}'s {}s model-load \
+            chiron::log_warn!(
+                "--lead-time {lead_time}s is shorter than {}'s {}s model-load \
                  delay; pre-provisioned instances will still be loading when the \
                  forecast demand arrives",
-                m.name, m.profile.load_time
+                m.name,
+                m.profile.load_time
             );
         }
     }
@@ -344,6 +357,20 @@ fn cmd_scenario(argv: Vec<String>) -> anyhow::Result<()> {
          compact percentile samples — reported metrics are bit-identical \
          either way)",
     )
+    .flag(
+        "trace",
+        "",
+        "for `run`: write a merged telemetry trace (events + autoscaler \
+         decision audit + counters) to this path; multi-seed runs write one \
+         file per seed with a .seed<N> suffix. Traces are byte-identical at \
+         any --shards/--jobs setting and do not perturb simulation results",
+    )
+    .flag(
+        "trace-format",
+        "chrome",
+        "--trace output format: 'chrome' (chrome://tracing / Perfetto JSON) \
+         or 'jsonl' (one JSON object per line)",
+    )
     .parse_from(argv)
     .unwrap_or_else(|m| {
         eprintln!("{m}");
@@ -427,14 +454,45 @@ fn cmd_scenario(argv: Vec<String>) -> anyhow::Result<()> {
                 gpus
             );
             let keep = args.get_bool("keep-outcomes")?;
+            let trace_path = args.get("trace")?.to_string();
+            let trace_format = args.get("trace-format")?.to_string();
+            if !matches!(trace_format.as_str(), "chrome" | "jsonl") {
+                anyhow::bail!("--trace-format must be 'chrome' or 'jsonl', got '{trace_format}'");
+            }
             let t0 = std::time::Instant::now();
+            let with_trace = !trace_path.is_empty();
             let results = chiron::util::parallel::run_grid(seeds.clone(), |_, seed| {
-                (seed, run_scenario_cell(&spec, &models, &kind, gpus, seed, keep))
+                (
+                    seed,
+                    run_scenario_cell(&spec, &models, &kind, gpus, seed, keep, with_trace),
+                )
             });
             println!("[{} seed(s) done in {:.1}s]", seeds.len(), t0.elapsed().as_secs_f64());
             println!("{}", PolicyRow::header());
             for (_, cell) in &results {
                 println!("{}", cell.row.line());
+            }
+            if with_trace {
+                let model_names: Vec<String> =
+                    models.iter().map(|m| m.name.clone()).collect();
+                for (seed, cell) in &results {
+                    let Some(trace) = &cell.trace else { continue };
+                    let path = if seeds.len() == 1 {
+                        trace_path.clone()
+                    } else {
+                        seed_suffixed(&trace_path, *seed)
+                    };
+                    let text = match trace_format.as_str() {
+                        "chrome" => {
+                            chiron::telemetry::export::chrome_trace(trace, &model_names)
+                        }
+                        _ => chiron::telemetry::export::jsonl(trace),
+                    };
+                    match std::fs::write(&path, text) {
+                        Ok(()) => println!("[trace written to {path}]"),
+                        Err(e) => chiron::log_warn!("could not write trace {path}: {e}"),
+                    }
+                }
             }
             let j = scenario_result_json(&spec, &policy_name, gpus, &results);
             println!("{j}");
@@ -493,7 +551,7 @@ fn cmd_scenario(argv: Vec<String>) -> anyhow::Result<()> {
             let t0 = std::time::Instant::now();
             let flat = chiron::util::parallel::run_grid(tasks, |_, (c, seed)| {
                 let (spec, models, _, kind, gpus) = &cells[c];
-                (seed, run_scenario_cell(spec, models, kind, *gpus, seed, keep))
+                (seed, run_scenario_cell(spec, models, kind, *gpus, seed, keep, false))
             });
             println!("[sweep done in {:.1}s]", t0.elapsed().as_secs_f64());
             let mut it = flat.into_iter();
@@ -531,6 +589,47 @@ fn cmd_scenario(argv: Vec<String>) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown scenario action '{other}' (list|show|run|sweep)"),
     }
     Ok(())
+}
+
+/// `out.json` + seed 7 → `out.seed7.json` (suffix appended when there is
+/// no extension) — keeps multi-seed `--trace` outputs distinct.
+fn seed_suffixed(path: &str, seed: u64) -> String {
+    match path.rsplit_once('.') {
+        Some((stem, ext)) if !stem.is_empty() => format!("{stem}.seed{seed}.{ext}"),
+        _ => format!("{path}.seed{seed}"),
+    }
+}
+
+/// Summarize a `--trace` output file: event/decision/scale counts, decision
+/// groups by (policy, model, reason) with mean inputs, and the attribution
+/// of every applied scale action back to a recorded autoscaler decision.
+fn cmd_explain(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::new(
+        "chiron explain <trace-file>\n\n\
+         Reads a trace written by `chiron scenario run --trace` (either \
+         --trace-format) and prints the autoscaler decision audit: which \
+         policy scaled which model, why (reason tag + recorded inputs), and \
+         whether every applied scale action is attributable to a decision.",
+    )
+    .parse_from(argv)
+    .unwrap_or_else(|m| {
+        eprintln!("{m}");
+        std::process::exit(2);
+    });
+    let path = args
+        .positional()
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("usage: chiron explain <trace.json|trace.jsonl>"))?;
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    match chiron::telemetry::export::explain(&text) {
+        Ok(report) => {
+            println!("{report}");
+            Ok(())
+        }
+        Err(e) => anyhow::bail!("explain {path}: {e}"),
+    }
 }
 
 /// One trajectory entry as the gate sees it.
@@ -784,6 +883,12 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         .flag("max-new-tokens", "24", "tokens to generate per request")
         .flag("max-batch", "8", "initial max batch size")
         .flag("seed", "1", "RNG seed")
+        .flag(
+            "prom-out",
+            "",
+            "write Prometheus text-exposition metrics (request counters, \
+             TTFT/ITL log-histograms) to this path after serving",
+        )
         .switch("no-autoscale", "disable the local batch-size autoscaler")
         .parse_from(argv)
         .unwrap_or_else(|m| {
@@ -878,6 +983,31 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         mean_ttft * 1000.0,
         mean_itl * 1000.0
     );
+    let prom_out = args.get("prom-out")?.to_string();
+    if !prom_out.is_empty() {
+        use chiron::telemetry::{LogHist, Registry};
+        let mut reg = Registry::default();
+        reg.inc("requests_total", n as u64);
+        reg.inc("requests_completed", outcomes.len() as u64);
+        reg.inc("tokens_generated", total_tokens as u64);
+        reg.set_gauge("wall_seconds", wall);
+        reg.set_gauge("requests_per_second", outcomes.len() as f64 / wall);
+        reg.set_gauge("tokens_per_second", total_tokens as f64 / wall);
+        let mut ttft = LogHist::new();
+        let mut itl = LogHist::new();
+        for o in &outcomes {
+            ttft.record(o.ttft);
+            itl.record(o.mean_itl);
+        }
+        let text = chiron::telemetry::export::prometheus(
+            &reg,
+            &[("ttft_seconds", &ttft), ("itl_seconds", &itl)],
+        );
+        match std::fs::write(&prom_out, text) {
+            Ok(()) => println!("[prometheus metrics written to {prom_out}]"),
+            Err(e) => chiron::log_warn!("could not write {prom_out}: {e}"),
+        }
+    }
     front.shutdown()?;
     Ok(())
 }

@@ -25,6 +25,10 @@ use crate::sim::instance::SimInstance;
 use crate::sim::policy::{Action, ClusterView, GlobalPolicy, InstanceView, QueueStats};
 use crate::sim::shard::ModelShard;
 pub use crate::sim::shard::MAX_BATCH_CLAMP;
+use crate::telemetry::{
+    merge_events, CounterSample, DecisionRecord, EventKind, LatencyHists, SimEvent,
+    TelemetryConfig, TraceData,
+};
 use crate::util::parallel;
 use crate::workload::{ArrivalSource, FaultSpec, Trace, TraceSource};
 
@@ -67,6 +71,10 @@ pub struct SimConfig {
     /// pieces are forked to the shards at construction; capacity
     /// reclamations are applied by the driver at tick barriers.
     pub faults: FaultSpec,
+    /// Observability layers (default: all off — zero overhead, zero effect
+    /// on digests). When any layer is on the run assembles a
+    /// [`TraceData`] into `SimReport::trace`.
+    pub telemetry: TelemetryConfig,
 }
 
 impl SimConfig {
@@ -84,6 +92,7 @@ impl SimConfig {
             record_gpu_trace: false,
             keep_outcomes: true,
             faults: FaultSpec::default(),
+            telemetry: TelemetryConfig::off(),
         }
     }
 
@@ -103,11 +112,19 @@ pub struct TimelinePoint {
     pub instances_mixed: u32,
     pub instances_batch: u32,
     pub queued_batch: usize,
+    /// Interactive requests waiting in global queues (should hover near
+    /// zero under Chiron's zero-queuing discipline — a nonzero value is
+    /// itself a diagnostic).
+    pub queued_interactive: usize,
     pub running_requests: u32,
     /// Mean max-batch across running instances.
     pub mean_max_batch: f64,
     /// Mean KV utilization across running instances.
     pub mean_kv_util: f64,
+    /// Cumulative terminal failures as of this tick (fault progression).
+    pub failed: usize,
+    /// Cumulative shed arrivals as of this tick.
+    pub shed: usize,
 }
 
 /// Simulation output.
@@ -154,6 +171,9 @@ pub struct SimReport {
     /// predictions). Empty unless the policy is predictive
     /// (`forecast::PredictiveScaler`).
     pub forecast: Vec<crate::forecast::ForecastScore>,
+    /// The assembled telemetry trace; `None` unless `SimConfig::telemetry`
+    /// enabled a layer. Boxed so the disabled path costs one pointer.
+    pub trace: Option<Box<TraceData>>,
 }
 
 impl Default for SimReport {
@@ -175,6 +195,7 @@ impl Default for SimReport {
             retries: 0,
             gpu_trace: Vec::new(),
             forecast: Vec::new(),
+            trace: None,
         }
     }
 }
@@ -284,6 +305,13 @@ pub struct Simulation<'p> {
     /// Exact expected total when the source knows it up front.
     total_hint: Option<usize>,
     ticks: u64,
+    /// Driver-level telemetry events (scale actions, load starts); merged
+    /// after the shard buffers at the end of the run.
+    global_events: Vec<SimEvent>,
+    /// Decision audit, drained from the policy at each barrier.
+    decisions: Vec<DecisionRecord>,
+    /// Sampled counter rows (taken alongside timeline points).
+    counter_samples: Vec<CounterSample>,
 }
 
 impl<'p> Simulation<'p> {
@@ -311,6 +339,12 @@ impl<'p> Simulation<'p> {
                 s.set_faults(f);
             }
         }
+        if cfg.telemetry.events || cfg.telemetry.histograms {
+            for s in &mut shards {
+                s.set_telemetry(cfg.telemetry.events, cfg.telemetry.histograms);
+            }
+        }
+        policy.set_audit(cfg.telemetry.decisions);
         let shard_workers = if cfg.shard_workers > 0 {
             cfg.shard_workers
         } else {
@@ -338,6 +372,20 @@ impl<'p> Simulation<'p> {
             arrivals_done: false,
             total_hint,
             ticks: 0,
+            global_events: Vec::new(),
+            decisions: Vec::new(),
+            counter_samples: Vec::new(),
+        }
+    }
+
+    /// Drain the policy's decision records, stamping each with the current
+    /// barrier time (called right after `bootstrap`/`autoscale`).
+    fn drain_decisions(&mut self) {
+        if self.cfg.telemetry.decisions {
+            for mut r in self.policy.drain_decisions() {
+                r.t = self.now;
+                self.decisions.push(r);
+            }
         }
     }
 
@@ -438,6 +486,7 @@ impl<'p> Simulation<'p> {
     }
 
     fn apply_actions(&mut self, actions: Vec<Action>, warm: bool) {
+        let trace = self.cfg.telemetry.events;
         for a in actions {
             match a {
                 Action::AddInstance { model, class } => {
@@ -453,6 +502,26 @@ impl<'p> Simulation<'p> {
                         .initial_max_batch(spec, class)
                         .clamp(1, MAX_BATCH_CLAMP);
                     let inst = SimInstance::new(id, class, model, profile, mb, self.now);
+                    if trace {
+                        self.global_events.push(SimEvent {
+                            t: self.now,
+                            model,
+                            kind: EventKind::Scale {
+                                inst: id,
+                                op: "add",
+                                class: class.as_str(),
+                            },
+                        });
+                        if !warm {
+                            if let Some(ready) = inst.ready_at() {
+                                self.global_events.push(SimEvent {
+                                    t: self.now,
+                                    model,
+                                    kind: EventKind::LoadStart { inst: id, ready_at: ready },
+                                });
+                            }
+                        }
+                    }
                     self.set_gpus(spec.gpus_per_instance as i64);
                     self.report.scale_ups += 1;
                     debug_assert_eq!(self.owner.len(), id.0 as usize);
@@ -463,12 +532,34 @@ impl<'p> Simulation<'p> {
                     if let Some(m) = self.owner_of(id) {
                         if self.shards[m].mark_draining(id) {
                             self.report.scale_downs += 1;
+                            if trace {
+                                self.global_events.push(SimEvent {
+                                    t: self.now,
+                                    model: m,
+                                    kind: EventKind::Scale {
+                                        inst: id,
+                                        op: "remove",
+                                        class: "",
+                                    },
+                                });
+                            }
                         }
                     }
                 }
                 Action::SetClass { id, class } => {
                     if let Some(m) = self.owner_of(id) {
                         self.shards[m].set_class(id, class);
+                        if trace {
+                            self.global_events.push(SimEvent {
+                                t: self.now,
+                                model: m,
+                                kind: EventKind::Scale {
+                                    inst: id,
+                                    op: "set_class",
+                                    class: class.as_str(),
+                                },
+                            });
+                        }
                     }
                 }
             }
@@ -505,8 +596,11 @@ impl<'p> Simulation<'p> {
         let mut kv_sum = 0.0;
         let mut n_run = 0u32;
         let mut queued = 0usize;
+        let mut queued_inter = 0usize;
+        let mut failed = 0usize;
+        let mut shed = 0usize;
         for s in &self.shards {
-            let (bc, r, mb, kv, nr, q) = s.timeline_stats();
+            let (bc, r, mb, kv, nr, q, qi) = s.timeline_stats();
             for k in 0..3 {
                 by_class[k] += bc[k];
             }
@@ -515,6 +609,9 @@ impl<'p> Simulation<'p> {
             kv_sum += kv;
             n_run += nr;
             queued += q;
+            queued_inter += qi;
+            failed += s.failed;
+            shed += s.shed;
         }
         self.report.timeline.push(TimelinePoint {
             t: self.now,
@@ -523,10 +620,24 @@ impl<'p> Simulation<'p> {
             instances_mixed: by_class[1],
             instances_batch: by_class[2],
             queued_batch: queued,
+            queued_interactive: queued_inter,
             running_requests: running,
             mean_max_batch: if n_run > 0 { mb_sum / n_run as f64 } else { 0.0 },
             mean_kv_util: if n_run > 0 { kv_sum / n_run as f64 } else { 0.0 },
+            failed,
+            shed,
         });
+        if self.cfg.telemetry.counters {
+            self.counter_samples.push(CounterSample {
+                t: self.now,
+                gpus_used: self.gpus_used,
+                queued_batch: queued,
+                queued_interactive: queued_inter,
+                running,
+                failed,
+                shed,
+            });
+        }
     }
 
     /// Pull arrivals with `arrival <= horizon` from the source into their
@@ -620,7 +731,49 @@ impl<'p> Simulation<'p> {
             None => Cow::Owned(self.policy.name().to_string()),
         };
         self.report.forecast = self.policy.forecast_scores();
+        if self.cfg.telemetry.enabled() {
+            self.report.trace = Some(Box::new(self.assemble_trace(completed)));
+        }
         self.report
+    }
+
+    /// Assemble the telemetry trace: shard event buffers merged in model
+    /// order (then driver events), the stamped decision audit, sampled
+    /// counters, merged latency sketches, and an end-of-run registry
+    /// snapshot of the report's aggregate counters.
+    fn assemble_trace(&mut self, completed: usize) -> TraceData {
+        let mut buffers: Vec<Vec<SimEvent>> =
+            self.shards.iter_mut().map(|s| s.take_events()).collect();
+        buffers.push(std::mem::take(&mut self.global_events));
+        let mut hists = LatencyHists::default();
+        for s in &mut self.shards {
+            if let Some(h) = s.take_hists() {
+                hists.ttft.merge(&h.ttft);
+                hists.itl.merge(&h.itl);
+            }
+        }
+        let mut trace = TraceData {
+            events: merge_events(buffers),
+            decisions: std::mem::take(&mut self.decisions),
+            counters: std::mem::take(&mut self.counter_samples),
+            hists,
+            registry: Default::default(),
+        };
+        let r = &self.report;
+        let reg = &mut trace.registry;
+        reg.inc("requests_total", r.total_requests as u64);
+        reg.inc("requests_completed", completed as u64);
+        reg.inc("requests_failed", r.failed as u64);
+        reg.inc("requests_shed", r.shed as u64);
+        reg.inc("requests_unfinished", r.unfinished as u64);
+        reg.inc("retries", r.retries);
+        reg.inc("scale_ups", r.scale_ups);
+        reg.inc("scale_downs", r.scale_downs);
+        reg.set_gauge("gpu_seconds", r.gpu_seconds);
+        reg.set_gauge("end_time_seconds", r.end_time);
+        reg.set_gauge("total_tokens", r.total_tokens);
+        reg.set_gauge("slo_attainment", r.slo_attainment());
+        trace
     }
 
     /// Earliest unprocessed event across shards, the undelivered arrival,
@@ -654,6 +807,7 @@ impl<'p> Simulation<'p> {
             };
             self.policy.bootstrap(&view)
         };
+        self.drain_decisions();
         let warm = self.cfg.warm_bootstrap;
         self.apply_actions(boot, warm);
 
@@ -715,6 +869,7 @@ impl<'p> Simulation<'p> {
                 };
                 self.policy.autoscale(&view)
             };
+            self.drain_decisions();
             self.apply_actions(actions, false);
             if self.cfg.timeline_every > 0
                 && self.ticks % self.cfg.timeline_every as u64 == 0

@@ -201,6 +201,18 @@ pub enum Action {
     SetClass { id: InstanceId, class: InstanceClass },
 }
 
+impl Action {
+    /// Short human-readable form, used by the decision audit
+    /// (`telemetry::DecisionRecord::action`) and `chiron explain`.
+    pub fn describe(&self) -> String {
+        match self {
+            Action::AddInstance { class, .. } => format!("add {}", class.as_str()),
+            Action::RemoveInstance { id } => format!("remove {id}"),
+            Action::SetClass { id, class } => format!("set-class {id} {}", class.as_str()),
+        }
+    }
+}
+
 /// Routing decision for a newly arrived (or re-queued) request.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Route {
@@ -268,6 +280,19 @@ pub trait GlobalPolicy {
     /// (`crate::forecast::PredictiveScaler`) return entries; the simulator
     /// collects them into `SimReport::forecast` at the end of a run.
     fn forecast_scores(&self) -> Vec<crate::forecast::ForecastScore> {
+        Vec::new()
+    }
+
+    /// Enable/disable the decision audit (`telemetry::AuditLog`). Policies
+    /// that do not record decisions ignore this — the default keeps every
+    /// existing implementation compiling and auditing nothing.
+    fn set_audit(&mut self, _on: bool) {}
+
+    /// Drain decision records accumulated since the last drain. The driver
+    /// calls this right after each `bootstrap`/`autoscale` and stamps every
+    /// record with the barrier time (policies only know time through the
+    /// view they are handed).
+    fn drain_decisions(&mut self) -> Vec<crate::telemetry::DecisionRecord> {
         Vec::new()
     }
 }

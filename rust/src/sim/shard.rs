@@ -29,6 +29,7 @@ use crate::sim::instance::{SimInstance, WorkItem};
 use crate::sim::policy::{
     InstanceState, InstanceView, LocalPolicy, ModelView, QueueStats, QueuedReq, Route,
 };
+use crate::telemetry::{EventKind, EventSink, LatencyHists, SimEvent};
 use crate::workload::ModelFaults;
 
 /// Hard clamp on policy-requested batch sizes (the paper's observed maximum
@@ -153,6 +154,11 @@ pub struct ModelShard {
     pub shed: usize,
     /// Crash-eviction re-queues (each bumped one request's retry count).
     pub retries_total: u64,
+    /// Telemetry event recorder (off by default: a `None` check per
+    /// emission site, no allocation, no behavior change).
+    sink: EventSink,
+    /// Opt-in TTFT/ITL latency sketches, fed at completion time.
+    hists: Option<Box<LatencyHists>>,
 }
 
 impl ModelShard {
@@ -186,7 +192,30 @@ impl ModelShard {
             failed: 0,
             shed: 0,
             retries_total: 0,
+            sink: EventSink::default(),
+            hists: None,
         }
+    }
+
+    /// Enable telemetry layers (driver-side, before the run starts).
+    pub fn set_telemetry(&mut self, events: bool, hists: bool) {
+        self.sink = EventSink::new(events);
+        self.hists = if hists {
+            Some(Box::new(LatencyHists::default()))
+        } else {
+            None
+        };
+    }
+
+    /// Take this shard's recorded events (end of run; model-order merge is
+    /// the driver's job).
+    pub fn take_events(&mut self) -> Vec<SimEvent> {
+        self.sink.drain()
+    }
+
+    /// Take this shard's latency sketches, if recorded.
+    pub fn take_hists(&mut self) -> Option<Box<LatencyHists>> {
+        self.hists.take()
     }
 
     /// Install this model's fault plan (driver-side, before the run starts)
@@ -277,6 +306,11 @@ impl ModelShard {
                 if req.class == RequestClass::Interactive {
                     self.arrived_interactive += 1;
                 }
+                self.sink.push(
+                    self.now,
+                    self.model,
+                    EventKind::Arrival { req: req.id.0, class: req.class },
+                );
                 // Overload shedding (graceful degradation): when the batch
                 // backlog exceeds the knob, batch arrivals are counted and
                 // dropped instead of queued. Interactive traffic is never
@@ -289,6 +323,8 @@ impl ModelShard {
                 };
                 if shed {
                     self.shed += 1;
+                    self.sink
+                        .push(self.now, self.model, EventKind::Shed { req: req.id.0 });
                 } else {
                     self.route_item(WorkItem::fresh(req));
                 }
@@ -321,10 +357,17 @@ impl ModelShard {
                     let ready = self.now + self.faults.load_retry_delay(attempt);
                     self.instances[idx].state = InstanceState::Loading { ready_at: ready };
                     self.push_event(ready, Ev::Ready(iid));
+                    self.sink.push(
+                        self.now,
+                        self.model,
+                        EventKind::LoadRetry { inst: iid, attempt, ready_at: ready },
+                    );
                     self.mark_view_dirty(idx);
                     return;
                 }
                 self.instances[idx].state = InstanceState::Running;
+                self.sink
+                    .push(self.now, self.model, EventKind::LoadDone { inst: iid });
                 self.schedule_mtbf(idx);
             }
             self.pull_for(idx);
@@ -345,6 +388,38 @@ impl ModelShard {
         self.total_tokens += result.tokens_emitted;
         if !result.completed.is_empty() {
             self.last_completion = self.now;
+        }
+        if self.sink.enabled() {
+            self.sink.push(
+                self.now,
+                self.model,
+                EventKind::Step {
+                    inst: iid,
+                    duration,
+                    completed: result.completed.len() as u32,
+                    evicted: result.evicted.len() as u32,
+                },
+            );
+            if !result.evicted.is_empty() {
+                self.sink.push(
+                    self.now,
+                    self.model,
+                    EventKind::Preemption { inst: iid, evicted: result.evicted.len() as u32 },
+                );
+            }
+            for o in &result.completed {
+                self.sink.push(
+                    self.now,
+                    self.model,
+                    EventKind::Complete { req: o.id.0, inst: iid },
+                );
+            }
+        }
+        if let Some(h) = &mut self.hists {
+            for o in &result.completed {
+                h.ttft.record(o.first_token - o.arrival);
+                h.itl.record(o.mean_itl);
+            }
         }
         // The global policy's completion observations are replayed by the
         // driver at the next barrier (per-model order preserved — the
@@ -438,7 +513,19 @@ impl ModelShard {
     /// requests whose budget is exhausted. Queued-but-unstarted local work
     /// re-routes without a retry bump (it lost nothing).
     fn do_crash(&mut self, idx: usize) {
+        let crashed = self.instances[idx].id;
         let (evicted, queued) = self.instances[idx].crash(self.now);
+        if self.sink.enabled() {
+            self.sink.push(
+                self.now,
+                self.model,
+                EventKind::Crash {
+                    inst: crashed,
+                    evicted: evicted.len() as u32,
+                    queued: queued.len() as u32,
+                },
+            );
+        }
         // Retire before re-routing so routing never sees the dead instance.
         self.retire_failed();
         let mut requeue: Vec<WorkItem> = Vec::new();
@@ -448,10 +535,17 @@ impl ModelShard {
                 // Terminal failure: counted, never silently dropped, never
                 // an outcome (percentiles stay completion-only).
                 self.failed += 1;
+                self.sink
+                    .push(self.now, self.model, EventKind::Fail { req: w.req.id.0 });
                 continue;
             }
             w.retries += 1;
             self.retries_total += 1;
+            self.sink.push(
+                self.now,
+                self.model,
+                EventKind::Retry { req: w.req.id.0, attempt: w.retries },
+            );
             if w.req.class == RequestClass::Interactive {
                 self.route_item(w);
             } else {
@@ -680,8 +774,9 @@ impl ModelShard {
     }
 
     /// Timeline-sample contribution: (per-class counts, running requests,
-    /// Σ max_batch, Σ kv-utilization, running-instance count, queued batch).
-    pub fn timeline_stats(&self) -> ([u32; 3], u32, f64, f64, u32, usize) {
+    /// Σ max_batch, Σ kv-utilization, running-instance count, queued batch,
+    /// queued interactive).
+    pub fn timeline_stats(&self) -> ([u32; 3], u32, f64, f64, u32, usize, usize) {
         let mut by_class = [0u32; 3];
         let mut running = 0u32;
         let mut mb_sum = 0.0;
@@ -701,7 +796,15 @@ impl ModelShard {
                 n_run += 1;
             }
         }
-        (by_class, running, mb_sum, kv_sum, n_run, self.q_batch.len())
+        (
+            by_class,
+            running,
+            mb_sum,
+            kv_sum,
+            n_run,
+            self.q_batch.len(),
+            self.q_inter.len(),
+        )
     }
 
     // ---- work movement ---------------------------------------------------
@@ -723,13 +826,27 @@ impl ModelShard {
                 1.0
             }
         };
+        let trace = self.sink.enabled();
         let inst = &mut self.instances[idx];
         if inst.step_in_flight || matches!(inst.state, InstanceState::Loading { .. }) {
             return;
         }
+        let before = if trace { inst.running_len() as u32 } else { 0 };
         if let Some(d) = inst.begin_step(self.now) {
             let d = d * straggle;
             let id = inst.id;
+            if trace {
+                // begin_step admits waiting work into the running batch;
+                // the delta is this step's batch-join count.
+                let joined = (self.instances[idx].running_len() as u32).saturating_sub(before);
+                if joined > 0 {
+                    self.sink.push(
+                        self.now,
+                        self.model,
+                        EventKind::BatchJoin { inst: id, joined },
+                    );
+                }
+            }
             self.push_event(self.now + d, Ev::StepDone { inst: id, duration: d });
         }
     }
@@ -769,6 +886,17 @@ impl ModelShard {
             instances: &self.views_cache,
         };
         let decision = self.local.route(&qr, &view);
+        if self.sink.enabled() {
+            let inst = match decision {
+                Route::Dispatch(id) => Some(id),
+                Route::Queue => None,
+            };
+            self.sink.push(
+                self.now,
+                self.model,
+                EventKind::Route { req: item.req.id.0, inst },
+            );
+        }
         match decision {
             Route::Dispatch(id) => {
                 if let Some(idx) = self.slot_of(id) {
@@ -781,6 +909,16 @@ impl ModelShard {
                         let kv = item.req.input_tokens as u64;
                         let evicted =
                             self.instances[idx].evict_batch_for_slots(1, kv, self.now);
+                        if self.sink.enabled() && !evicted.is_empty() {
+                            self.sink.push(
+                                self.now,
+                                self.model,
+                                EventKind::Preemption {
+                                    inst: id,
+                                    evicted: evicted.len() as u32,
+                                },
+                            );
+                        }
                         for e in evicted {
                             let w = WorkItem::from_evicted(e);
                             self.q_batch.push_front(w);

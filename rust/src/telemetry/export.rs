@@ -1,0 +1,691 @@
+//! Trace exporters and the `chiron explain` analyzer.
+//!
+//! Three formats, all built on `util::json` (BTreeMap-backed objects →
+//! key-sorted, deterministic serialization):
+//!
+//!  - **Chrome trace / Perfetto JSON** ([`chrome_trace`]): one process per
+//!    model, one thread per instance; engine steps are complete ("X")
+//!    slices, request lifetimes are async ("b"/"e") spans keyed by request
+//!    id, everything else is an instant ("i") with its fields in `args`,
+//!    and sampled cluster counters are "C" counter tracks. Load the file
+//!    in `chrome://tracing` or <https://ui.perfetto.dev>.
+//!  - **JSONL** ([`jsonl`]): one JSON object per line — events in the
+//!    merged deterministic order, then decisions, counters, and the
+//!    end-of-run registry/sketches. Greppable and diffable.
+//!  - **Prometheus text exposition** ([`prometheus`]): registry counters
+//!    and gauges plus the latency sketches as cumulative-bucket
+//!    histograms, in the format scraped from `/metrics` endpoints (the
+//!    DCGM-exporter shape).
+//!
+//! Every exporter is a pure function of its inputs, so byte-identity of
+//! the output reduces to the determinism of the collected `TraceData`.
+
+use std::collections::BTreeMap;
+
+use crate::telemetry::{
+    CounterSample, DecisionRecord, EventKind, LogHist, Registry, SimEvent, TraceData, HIST_BINS,
+};
+use crate::util::json::Json;
+
+/// Stringify the payload fields of an event as (key, value) pairs.
+fn kind_args(kind: &EventKind) -> Vec<(&'static str, Json)> {
+    match kind {
+        EventKind::Arrival { req, class } => vec![
+            ("req", Json::from(*req)),
+            ("class", Json::from(class.as_str())),
+        ],
+        EventKind::Route { req, inst } => vec![
+            ("req", Json::from(*req)),
+            (
+                "inst",
+                match inst {
+                    Some(id) => Json::from(id.0 as u64),
+                    None => Json::Null,
+                },
+            ),
+        ],
+        EventKind::BatchJoin { inst, joined } => vec![
+            ("inst", Json::from(inst.0 as u64)),
+            ("joined", Json::from(*joined as u64)),
+        ],
+        EventKind::Step { inst, duration, completed, evicted } => vec![
+            ("inst", Json::from(inst.0 as u64)),
+            ("duration", Json::from(*duration)),
+            ("completed", Json::from(*completed as u64)),
+            ("evicted", Json::from(*evicted as u64)),
+        ],
+        EventKind::Preemption { inst, evicted } => vec![
+            ("inst", Json::from(inst.0 as u64)),
+            ("evicted", Json::from(*evicted as u64)),
+        ],
+        EventKind::Complete { req, inst } => vec![
+            ("req", Json::from(*req)),
+            ("inst", Json::from(inst.0 as u64)),
+        ],
+        EventKind::Crash { inst, evicted, queued } => vec![
+            ("inst", Json::from(inst.0 as u64)),
+            ("evicted", Json::from(*evicted as u64)),
+            ("queued", Json::from(*queued as u64)),
+        ],
+        EventKind::Retry { req, attempt } => vec![
+            ("req", Json::from(*req)),
+            ("attempt", Json::from(*attempt as u64)),
+        ],
+        EventKind::Fail { req } => vec![("req", Json::from(*req))],
+        EventKind::Shed { req } => vec![("req", Json::from(*req))],
+        EventKind::LoadStart { inst, ready_at } => vec![
+            ("inst", Json::from(inst.0 as u64)),
+            ("ready_at", Json::from(*ready_at)),
+        ],
+        EventKind::LoadRetry { inst, attempt, ready_at } => vec![
+            ("inst", Json::from(inst.0 as u64)),
+            ("attempt", Json::from(*attempt as u64)),
+            ("ready_at", Json::from(*ready_at)),
+        ],
+        EventKind::LoadDone { inst } => vec![("inst", Json::from(inst.0 as u64))],
+        EventKind::Scale { inst, op, class } => vec![
+            ("inst", Json::from(inst.0 as u64)),
+            ("op", Json::from(*op)),
+            ("class", Json::from(*class)),
+        ],
+    }
+}
+
+fn decision_json(d: &DecisionRecord) -> Json {
+    let inputs = Json::Obj(
+        d.inputs
+            .iter()
+            .map(|&(k, v)| (k.to_string(), Json::Num(v)))
+            .collect::<BTreeMap<_, _>>(),
+    );
+    Json::obj(vec![
+        ("t", Json::from(d.t)),
+        ("policy", Json::from(d.policy)),
+        ("model", Json::from(d.model)),
+        ("action", Json::from(d.action.as_str())),
+        ("reason", Json::from(d.reason)),
+        ("inputs", inputs),
+    ])
+}
+
+fn counter_json(c: &CounterSample) -> Vec<(&'static str, Json)> {
+    vec![
+        ("gpus_used", Json::from(c.gpus_used as u64)),
+        ("queued_batch", Json::from(c.queued_batch)),
+        ("queued_interactive", Json::from(c.queued_interactive)),
+        ("running", Json::from(c.running as u64)),
+        ("failed", Json::from(c.failed)),
+        ("shed", Json::from(c.shed)),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace / Perfetto
+// ---------------------------------------------------------------------------
+
+const US: f64 = 1e6;
+
+fn chrome_event(e: &SimEvent) -> Json {
+    let pid = Json::from(e.model);
+    let ts = Json::from(e.t * US);
+    let args = Json::Obj(
+        kind_args(&e.kind)
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    );
+    match &e.kind {
+        // Engine steps: complete slices on the instance's thread track,
+        // spanning (t - duration, t].
+        EventKind::Step { inst, duration, .. } => Json::obj(vec![
+            ("ph", Json::from("X")),
+            ("cat", Json::from("step")),
+            ("name", Json::from("step")),
+            ("pid", pid),
+            ("tid", Json::from(inst.0 as u64)),
+            ("ts", Json::from((e.t - duration) * US)),
+            ("dur", Json::from(duration * US)),
+            ("args", args),
+        ]),
+        // Request lifetime: async span opened at arrival...
+        EventKind::Arrival { req, .. } => Json::obj(vec![
+            ("ph", Json::from("b")),
+            ("cat", Json::from("request")),
+            ("id", Json::from(*req)),
+            ("name", Json::from("request")),
+            ("pid", pid),
+            ("tid", Json::from(0u64)),
+            ("ts", ts),
+            ("args", args),
+        ]),
+        // ...and closed at completion.
+        EventKind::Complete { req, .. } => Json::obj(vec![
+            ("ph", Json::from("e")),
+            ("cat", Json::from("request")),
+            ("id", Json::from(*req)),
+            ("name", Json::from("request")),
+            ("pid", pid),
+            ("tid", Json::from(0u64)),
+            ("ts", ts),
+            ("args", args),
+        ]),
+        // Everything else: instants on the owning instance's track (or the
+        // model's thread 0 when no instance is involved).
+        kind => {
+            let tid = match kind {
+                EventKind::BatchJoin { inst, .. }
+                | EventKind::Preemption { inst, .. }
+                | EventKind::Crash { inst, .. }
+                | EventKind::LoadStart { inst, .. }
+                | EventKind::LoadRetry { inst, .. }
+                | EventKind::LoadDone { inst }
+                | EventKind::Scale { inst, .. } => inst.0 as u64,
+                _ => 0,
+            };
+            Json::obj(vec![
+                ("ph", Json::from("i")),
+                ("s", Json::from("p")),
+                ("cat", Json::from(kind.name())),
+                ("name", Json::from(kind.name())),
+                ("pid", pid),
+                ("tid", Json::from(tid)),
+                ("ts", ts),
+                ("args", args),
+            ])
+        }
+    }
+}
+
+/// Serialize a trace as Chrome-trace ("trace event format") JSON, loadable
+/// in `chrome://tracing` and Perfetto.
+pub fn chrome_trace(trace: &TraceData, model_names: &[String]) -> String {
+    let mut events: Vec<Json> = Vec::new();
+    // Process-name metadata: one "process" per model.
+    for (m, name) in model_names.iter().enumerate() {
+        events.push(Json::obj(vec![
+            ("ph", Json::from("M")),
+            ("name", Json::from("process_name")),
+            ("pid", Json::from(m)),
+            ("args", Json::obj(vec![("name", Json::from(format!("model {name}")))])),
+        ]));
+    }
+    for e in &trace.events {
+        events.push(chrome_event(e));
+    }
+    // Decision audit: instants carrying the full record in args.
+    for d in &trace.decisions {
+        let mut args: BTreeMap<String, Json> = d
+            .inputs
+            .iter()
+            .map(|&(k, v)| (k.to_string(), Json::Num(v)))
+            .collect();
+        args.insert("policy".into(), Json::from(d.policy));
+        args.insert("action".into(), Json::from(d.action.as_str()));
+        events.push(Json::obj(vec![
+            ("ph", Json::from("i")),
+            ("s", Json::from("p")),
+            ("cat", Json::from("decision")),
+            ("name", Json::from(d.reason)),
+            ("pid", Json::from(d.model)),
+            ("tid", Json::from(0u64)),
+            ("ts", Json::from(d.t * US)),
+            ("args", Json::Obj(args)),
+        ]));
+    }
+    // Counter tracks: one "C" event per sample; each arg is a series.
+    for c in &trace.counters {
+        events.push(Json::obj(vec![
+            ("ph", Json::from("C")),
+            ("name", Json::from("cluster")),
+            ("pid", Json::from(0u64)),
+            ("ts", Json::from(c.t * US)),
+            (
+                "args",
+                Json::Obj(
+                    counter_json(c)
+                        .into_iter()
+                        .map(|(k, v)| (k.to_string(), v))
+                        .collect::<BTreeMap<_, _>>(),
+                ),
+            ),
+        ]));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::from("ms")),
+    ])
+    .to_string()
+}
+
+// ---------------------------------------------------------------------------
+// JSONL
+// ---------------------------------------------------------------------------
+
+/// Serialize a trace as a JSONL event log: `{"type":"event",...}` lines in
+/// the merged deterministic order, then decisions, counters, and the
+/// end-of-run registry / latency sketches.
+pub fn jsonl(trace: &TraceData) -> String {
+    let mut out = String::new();
+    for e in &trace.events {
+        let mut pairs = vec![
+            ("type", Json::from("event")),
+            ("t", Json::from(e.t)),
+            ("model", Json::from(e.model)),
+            ("kind", Json::from(e.kind.name())),
+        ];
+        pairs.extend(kind_args(&e.kind));
+        out.push_str(&Json::obj(pairs).to_string());
+        out.push('\n');
+    }
+    for d in &trace.decisions {
+        let mut j = decision_json(d);
+        if let Json::Obj(m) = &mut j {
+            m.insert("type".into(), Json::from("decision"));
+        }
+        out.push_str(&j.to_string());
+        out.push('\n');
+    }
+    for c in &trace.counters {
+        let mut pairs = vec![("type", Json::from("counters")), ("t", Json::from(c.t))];
+        pairs.extend(counter_json(c));
+        out.push_str(&Json::obj(pairs).to_string());
+        out.push('\n');
+    }
+    if !trace.registry.is_empty() {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("type".into(), Json::from("registry"));
+        for (k, v) in trace.registry.counters() {
+            m.insert(k.to_string(), Json::from(v));
+        }
+        for (k, v) in trace.registry.gauges() {
+            m.insert(k.to_string(), Json::from(v));
+        }
+        out.push_str(&Json::Obj(m).to_string());
+        out.push('\n');
+    }
+    for (name, h) in [("ttft", &trace.hists.ttft), ("itl", &trace.hists.itl)] {
+        if h.count == 0 {
+            continue;
+        }
+        out.push_str(
+            &Json::obj(vec![
+                ("type", Json::from("hist")),
+                ("name", Json::from(name)),
+                ("count", Json::from(h.count)),
+                ("mean", Json::from(h.mean())),
+                ("p50", Json::from(h.quantile(0.5))),
+                ("p99", Json::from(h.quantile(0.99))),
+                ("max", Json::from(h.max)),
+            ])
+            .to_string(),
+        );
+        out.push('\n');
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition
+// ---------------------------------------------------------------------------
+
+fn prom_hist(out: &mut String, name: &str, h: &LogHist) {
+    if h.count == 0 {
+        return;
+    }
+    out.push_str(&format!("# TYPE {name} histogram\n"));
+    let top = (0..HIST_BINS).rev().find(|&i| h.bins[i] > 0).unwrap_or(0);
+    let mut cum = 0u64;
+    for i in 0..=top {
+        cum += h.bins[i];
+        out.push_str(&format!(
+            "{name}_bucket{{le=\"{}\"}} {cum}\n",
+            LogHist::bin_hi(i)
+        ));
+    }
+    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+    out.push_str(&format!("{name}_sum {}\n", h.sum));
+    out.push_str(&format!("{name}_count {}\n", h.count));
+}
+
+/// Render a registry (plus optional named latency sketches) in the
+/// Prometheus text exposition format (metric names are prefixed
+/// `chiron_`), the shape a `/metrics` scrape endpoint serves.
+pub fn prometheus(reg: &Registry, hists: &[(&str, &LogHist)]) -> String {
+    let mut out = String::new();
+    for (k, v) in reg.counters() {
+        out.push_str(&format!("# TYPE chiron_{k} counter\nchiron_{k} {v}\n"));
+    }
+    for (k, v) in reg.gauges() {
+        out.push_str(&format!("# TYPE chiron_{k} gauge\nchiron_{k} {v}\n"));
+    }
+    for (name, h) in hists {
+        prom_hist(&mut out, &format!("chiron_{name}"), h);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// `chiron explain`
+// ---------------------------------------------------------------------------
+
+struct ParsedTrace {
+    /// (t, model, op) per scale event.
+    scales: Vec<(f64, u64, String)>,
+    /// (t, model, policy, action, reason, inputs).
+    decisions: Vec<(f64, u64, String, String, String, Vec<(String, f64)>)>,
+    events: usize,
+}
+
+fn parse_chrome(j: &Json) -> Result<ParsedTrace, String> {
+    let evs = j
+        .get("traceEvents")
+        .as_arr()
+        .ok_or("chrome trace has no traceEvents array")?;
+    let mut p = ParsedTrace { scales: Vec::new(), decisions: Vec::new(), events: 0 };
+    for e in evs {
+        let cat = e.get("cat").as_str().unwrap_or("");
+        if e.get("ph").as_str() == Some("M") || e.get("ph").as_str() == Some("C") {
+            continue;
+        }
+        if cat == "decision" {
+            let inputs = e
+                .get("args")
+                .as_obj()
+                .map(|m| {
+                    m.iter()
+                        .filter(|(k, v)| v.as_f64().is_some() && k.as_str() != "action")
+                        .map(|(k, v)| (k.clone(), v.as_f64().unwrap()))
+                        .collect()
+                })
+                .unwrap_or_default();
+            p.decisions.push((
+                e.get("ts").as_f64().unwrap_or(0.0) / US,
+                e.get("pid").as_u64().unwrap_or(0),
+                e.get("args").get("policy").as_str().unwrap_or("?").to_string(),
+                e.get("args").get("action").as_str().unwrap_or("?").to_string(),
+                e.get("name").as_str().unwrap_or("?").to_string(),
+                inputs,
+            ));
+        } else {
+            p.events += 1;
+            if cat == "scale" {
+                p.scales.push((
+                    e.get("ts").as_f64().unwrap_or(0.0) / US,
+                    e.get("pid").as_u64().unwrap_or(0),
+                    e.get("args").get("op").as_str().unwrap_or("?").to_string(),
+                ));
+            }
+        }
+    }
+    Ok(p)
+}
+
+fn parse_jsonl(text: &str) -> Result<ParsedTrace, String> {
+    let mut p = ParsedTrace { scales: Vec::new(), decisions: Vec::new(), events: 0 };
+    for (n, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| format!("line {}: {e}", n + 1))?;
+        match j.get("type").as_str() {
+            Some("event") => {
+                p.events += 1;
+                if j.get("kind").as_str() == Some("scale") {
+                    p.scales.push((
+                        j.get("t").as_f64().unwrap_or(0.0),
+                        j.get("model").as_u64().unwrap_or(0),
+                        j.get("op").as_str().unwrap_or("?").to_string(),
+                    ));
+                }
+            }
+            Some("decision") => {
+                let inputs = j
+                    .get("inputs")
+                    .as_obj()
+                    .map(|m| {
+                        m.iter()
+                            .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                p.decisions.push((
+                    j.get("t").as_f64().unwrap_or(0.0),
+                    j.get("model").as_u64().unwrap_or(0),
+                    j.get("policy").as_str().unwrap_or("?").to_string(),
+                    j.get("action").as_str().unwrap_or("?").to_string(),
+                    j.get("reason").as_str().unwrap_or("?").to_string(),
+                    inputs,
+                ));
+            }
+            _ => {}
+        }
+    }
+    Ok(p)
+}
+
+/// Analyze a trace file's text (either format, auto-detected): summarize
+/// decision records grouped by (policy, model, reason) with mean inputs,
+/// and attribute each recorded scale event to a decision at the same
+/// barrier (same timestamp + model + action verb). Returns the formatted
+/// report, or an error for unparseable input.
+pub fn explain(text: &str) -> Result<String, String> {
+    // A Chrome trace is one JSON document with a "traceEvents" array;
+    // anything else (including a whole-file parse failure, which is what
+    // multi-line JSONL produces) is treated as JSONL.
+    let parsed = match Json::parse(text.trim()) {
+        Ok(j) if !j.get("traceEvents").is_null() => parse_chrome(&j)?,
+        _ => parse_jsonl(text)?,
+    };
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "trace: {} events, {} decisions, {} scale actions\n",
+        parsed.events,
+        parsed.decisions.len(),
+        parsed.scales.len()
+    ));
+
+    // Group decisions by (policy, model, reason); accumulate input means.
+    type Group = (usize, BTreeMap<String, (f64, usize)>, BTreeMap<String, usize>);
+    let mut groups: BTreeMap<(String, u64, String), Group> = BTreeMap::new();
+    for (_, model, policy, action, reason, inputs) in &parsed.decisions {
+        let g = groups
+            .entry((policy.clone(), *model, reason.clone()))
+            .or_insert_with(|| (0, BTreeMap::new(), BTreeMap::new()));
+        g.0 += 1;
+        for (k, v) in inputs {
+            let e = g.1.entry(k.clone()).or_insert((0.0, 0));
+            e.0 += v;
+            e.1 += 1;
+        }
+        *g.2.entry(action.clone()).or_insert(0) += 1;
+    }
+    let mut last_policy = String::new();
+    for ((policy, model, reason), (count, inputs, actions)) in &groups {
+        if *policy != last_policy {
+            out.push_str(&format!("policy {policy}:\n"));
+            last_policy = policy.clone();
+        }
+        let acts: Vec<String> = actions
+            .iter()
+            .map(|(a, n)| if *n > 1 { format!("{a} ×{n}") } else { a.clone() })
+            .collect();
+        let means: Vec<String> = inputs
+            .iter()
+            .map(|(k, (sum, n))| format!("{k}≈{:.3}", sum / *n as f64))
+            .collect();
+        out.push_str(&format!(
+            "  model {model} · {reason}: {count} [{}]",
+            acts.join(", ")
+        ));
+        if !means.is_empty() {
+            out.push_str(&format!(" ({})", means.join(", ")));
+        }
+        out.push('\n');
+    }
+
+    // Attribution: match each scale event to an unclaimed decision at the
+    // same (t, model) whose action starts with the scale op's verb.
+    let mut claimed = vec![false; parsed.decisions.len()];
+    let mut matched = 0usize;
+    let mut unmatched: Vec<String> = Vec::new();
+    for (t, model, op) in &parsed.scales {
+        let verb = op.replace('_', "-");
+        let hit = parsed.decisions.iter().enumerate().position(|(i, d)| {
+            !claimed[i] && d.0 == *t && d.1 == *model && d.3.starts_with(&verb)
+        });
+        match hit {
+            Some(i) => {
+                claimed[i] = true;
+                matched += 1;
+            }
+            None => unmatched.push(format!("t={t} model={model} {op}")),
+        }
+    }
+    out.push_str(&format!(
+        "attribution: {matched}/{} scale actions matched to a recorded decision\n",
+        parsed.scales.len()
+    ));
+    for u in unmatched.iter().take(10) {
+        out.push_str(&format!("  UNATTRIBUTED {u}\n"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::InstanceId;
+    use crate::telemetry::LatencyHists;
+
+    fn tiny_trace() -> TraceData {
+        let mut t = TraceData::default();
+        t.events.push(SimEvent {
+            t: 0.5,
+            model: 0,
+            kind: EventKind::Arrival { req: 7, class: crate::core::RequestClass::Interactive },
+        });
+        t.events.push(SimEvent {
+            t: 1.0,
+            model: 0,
+            kind: EventKind::Scale { inst: InstanceId(0), op: "add", class: "mixed" },
+        });
+        t.events.push(SimEvent {
+            t: 1.25,
+            model: 0,
+            kind: EventKind::Step {
+                inst: InstanceId(0),
+                duration: 0.05,
+                completed: 1,
+                evicted: 0,
+            },
+        });
+        t.events.push(SimEvent {
+            t: 1.25,
+            model: 0,
+            kind: EventKind::Complete { req: 7, inst: InstanceId(0) },
+        });
+        t.decisions.push(DecisionRecord {
+            t: 1.0,
+            policy: "chiron",
+            model: 0,
+            action: "add mixed".into(),
+            reason: "ibp_high",
+            inputs: vec![("ibp", 0.5), ("busy", 2.0)],
+        });
+        t.counters.push(CounterSample {
+            t: 5.0,
+            gpus_used: 2,
+            queued_batch: 3,
+            queued_interactive: 0,
+            running: 2,
+            failed: 0,
+            shed: 0,
+        });
+        t.registry.inc("requests_completed", 1);
+        t.hists = LatencyHists::default();
+        t.hists.ttft.record(0.12);
+        t
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_expected_phases() {
+        let s = chrome_trace(&tiny_trace(), &["llama8b".to_string()]);
+        let j = Json::parse(&s).expect("valid json");
+        let evs = j.get("traceEvents").as_arr().unwrap();
+        let phases: Vec<&str> =
+            evs.iter().filter_map(|e| e.get("ph").as_str()).collect();
+        assert!(phases.contains(&"M"));
+        assert!(phases.contains(&"b"));
+        assert!(phases.contains(&"e"));
+        assert!(phases.contains(&"X"));
+        assert!(phases.contains(&"i"));
+        assert!(phases.contains(&"C"));
+        // The step slice spans (t - duration, t] in microseconds.
+        let step = evs.iter().find(|e| e.get("cat").as_str() == Some("step")).unwrap();
+        assert_eq!(step.get("ts").as_f64().unwrap(), (1.25 - 0.05) * 1e6);
+        assert_eq!(step.get("dur").as_f64().unwrap(), 0.05 * 1e6);
+    }
+
+    #[test]
+    fn jsonl_lines_parse_individually() {
+        let s = jsonl(&tiny_trace());
+        let mut kinds = Vec::new();
+        for line in s.lines() {
+            let j = Json::parse(line).expect("each line parses");
+            kinds.push(j.get("type").as_str().unwrap().to_string());
+        }
+        assert!(kinds.contains(&"event".to_string()));
+        assert!(kinds.contains(&"decision".to_string()));
+        assert!(kinds.contains(&"counters".to_string()));
+        assert!(kinds.contains(&"registry".to_string()));
+        assert!(kinds.contains(&"hist".to_string()));
+    }
+
+    #[test]
+    fn prometheus_histogram_buckets_are_cumulative() {
+        let mut h = LogHist::new();
+        h.record(0.01);
+        h.record(0.02);
+        h.record(5.0);
+        let mut reg = Registry::default();
+        reg.inc("requests_completed", 3);
+        let text = prometheus(&reg, &[("ttft_seconds", &h)]);
+        assert!(text.contains("# TYPE chiron_requests_completed counter"));
+        assert!(text.contains("chiron_requests_completed 3"));
+        assert!(text.contains("# TYPE chiron_ttft_seconds histogram"));
+        assert!(text.contains("chiron_ttft_seconds_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("chiron_ttft_seconds_count 3"));
+        // The last finite bucket already holds all samples.
+        let last_finite = text
+            .lines()
+            .filter(|l| l.contains("_bucket{le=") && !l.contains("+Inf"))
+            .last()
+            .unwrap();
+        assert!(last_finite.ends_with(" 3"), "{last_finite}");
+    }
+
+    #[test]
+    fn explain_attributes_scales_in_both_formats() {
+        let trace = tiny_trace();
+        for text in [chrome_trace(&trace, &["m".to_string()]), jsonl(&trace)] {
+            let report = explain(&text).expect("explain parses");
+            assert!(report.contains("1 scale actions"), "{report}");
+            assert!(report.contains("ibp_high"), "{report}");
+            assert!(
+                report.contains("attribution: 1/1 scale actions"),
+                "{report}"
+            );
+            assert!(!report.contains("UNATTRIBUTED"), "{report}");
+        }
+    }
+
+    #[test]
+    fn explain_reports_unattributed_scales() {
+        let mut trace = tiny_trace();
+        trace.decisions.clear();
+        let report = explain(&jsonl(&trace)).unwrap();
+        assert!(report.contains("attribution: 0/1"), "{report}");
+        assert!(report.contains("UNATTRIBUTED"), "{report}");
+    }
+}

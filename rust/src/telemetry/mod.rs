@@ -1,0 +1,606 @@
+//! The observability plane: structured event tracing, autoscaler decision
+//! audit, latency sketches, and a small metrics registry — all strictly
+//! pay-for-what-you-use.
+//!
+//! Chiron's pitch is that every scaling action is *explained* by a
+//! backpressure term (queue depth, utilization, SLO headroom, forecast r̂).
+//! This module makes that explanation inspectable: shards record typed
+//! [`SimEvent`]s as they process their event loops, policies record
+//! [`DecisionRecord`]s alongside the `Action`s they emit, and the driver
+//! assembles both into a [`TraceData`] that the exporters
+//! ([`export::chrome_trace`], [`export::jsonl`], [`export::prometheus`])
+//! serialize deterministically.
+//!
+//! # Determinism
+//!
+//! Shards are strictly per-model: `--shards N` changes how many worker
+//! threads advance them between barriers, never the contents of any
+//! per-model buffer. Each shard's event buffer is therefore bit-identical
+//! at any worker count, and the driver merges buffers *in model order*
+//! before stable-sorting by timestamp (`f64::total_cmp`; the stable sort
+//! preserves model order on ties). Simulated timestamps are bit-identical
+//! by the simulator's existing determinism contract, so the merged event
+//! sequence — and every exporter's byte output — is identical at
+//! `--shards 1` and `--shards 4`. `tests/telemetry.rs` pins this.
+//!
+//! # Zero cost when off
+//!
+//! All recorders are `Option`-gated: a disabled [`EventSink`] is a `None`
+//! check per would-be emission (and emission sites that must *compute*
+//! anything first are guarded on [`EventSink::enabled`]), a disabled
+//! [`AuditLog`] drops records before formatting, and histograms/counters
+//! are only allocated when requested. Telemetry is off by default and has
+//! no effect on sim digests (`tests/telemetry.rs`) or on the `sim.run`
+//! bench (gated in CI).
+
+pub mod export;
+
+use std::collections::BTreeMap;
+
+use crate::core::{InstanceId, RequestClass, Time};
+
+// ---------------------------------------------------------------------------
+// configuration
+// ---------------------------------------------------------------------------
+
+/// Which telemetry layers a run records. Everything defaults to off; the
+/// simulator behaves (and digests) identically whatever the setting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TelemetryConfig {
+    /// Record per-shard [`SimEvent`]s (arrival/route/step/crash/…).
+    pub events: bool,
+    /// Ask the global policy to record [`DecisionRecord`]s.
+    pub decisions: bool,
+    /// Accumulate TTFT/ITL [`LogHist`] sketches per shard.
+    pub histograms: bool,
+    /// Sample [`CounterSample`] rows at timeline ticks.
+    pub counters: bool,
+}
+
+impl TelemetryConfig {
+    /// Everything off (the default — and the zero-overhead path).
+    pub fn off() -> Self {
+        Self::default()
+    }
+
+    /// Every layer on (what `--trace` enables).
+    pub fn full() -> Self {
+        TelemetryConfig { events: true, decisions: true, histograms: true, counters: true }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.events || self.decisions || self.histograms || self.counters
+    }
+}
+
+// ---------------------------------------------------------------------------
+// events
+// ---------------------------------------------------------------------------
+
+/// One typed simulator event. `t` is simulated seconds; `model` is the
+/// emitting shard's model index (driver-level events use the model the
+/// action targets).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimEvent {
+    pub t: Time,
+    pub model: usize,
+    pub kind: EventKind,
+}
+
+/// The event vocabulary. Request ids are the raw `RequestId.0`; instance
+/// ids the raw `InstanceId`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// A request reached its model's shard.
+    Arrival { req: u64, class: RequestClass },
+    /// Routing decision for a fresh or re-queued request: dispatched to an
+    /// instance, or left in the model's global queue (`inst: None`).
+    Route { req: u64, inst: Option<InstanceId> },
+    /// `joined` requests were admitted into an instance's running batch as
+    /// a step began (continuation steps with no admissions emit nothing).
+    BatchJoin { inst: InstanceId, joined: u32 },
+    /// An engine step finished.
+    Step { inst: InstanceId, duration: Time, completed: u32, evicted: u32 },
+    /// Batch requests were evicted to make room for interactive work
+    /// (paper §3 preemption), either at dispatch or at step end.
+    Preemption { inst: InstanceId, evicted: u32 },
+    /// A request completed (emitted per outcome at its finishing step).
+    Complete { req: u64, inst: InstanceId },
+    /// An instance crashed; `evicted` in-flight and `queued` waiting
+    /// requests were thrown back to recovery.
+    Crash { inst: InstanceId, evicted: u32, queued: u32 },
+    /// A crash-evicted request re-queued (`attempt` = its retry count).
+    Retry { req: u64, attempt: u32 },
+    /// A crash-evicted request exhausted its retry budget (terminal).
+    Fail { req: u64 },
+    /// A batch arrival shed by the overload knob.
+    Shed { req: u64 },
+    /// A cold instance began loading weights; Running expected at
+    /// `ready_at` (flaky loads may retry past it).
+    LoadStart { inst: InstanceId, ready_at: Time },
+    /// A model load failed and was rescheduled (capped exponential
+    /// backoff); `attempt` counts prior failures.
+    LoadRetry { inst: InstanceId, attempt: u32, ready_at: Time },
+    /// An instance finished loading and entered Running.
+    LoadDone { inst: InstanceId },
+    /// A driver-applied scaling action (`op` ∈ add/remove/set-class;
+    /// `class` is the new class for add/set-class, empty for remove).
+    Scale { inst: InstanceId, op: &'static str, class: &'static str },
+}
+
+impl EventKind {
+    /// Stable schema name (JSONL `kind` field, Chrome-trace event name).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Arrival { .. } => "arrival",
+            EventKind::Route { .. } => "route",
+            EventKind::BatchJoin { .. } => "batch_join",
+            EventKind::Step { .. } => "step",
+            EventKind::Preemption { .. } => "preemption",
+            EventKind::Complete { .. } => "complete",
+            EventKind::Crash { .. } => "crash",
+            EventKind::Retry { .. } => "retry",
+            EventKind::Fail { .. } => "fail",
+            EventKind::Shed { .. } => "shed",
+            EventKind::LoadStart { .. } => "load_start",
+            EventKind::LoadRetry { .. } => "load_retry",
+            EventKind::LoadDone { .. } => "load_done",
+            EventKind::Scale { .. } => "scale",
+        }
+    }
+}
+
+/// Per-shard event recorder. Disabled (`None` buffer) it is a branch per
+/// would-be emission and allocates nothing; enabled it appends to a plain
+/// `Vec` in shard-event order.
+#[derive(Debug, Default)]
+pub struct EventSink {
+    buf: Option<Vec<SimEvent>>,
+}
+
+impl EventSink {
+    pub fn new(enabled: bool) -> Self {
+        EventSink { buf: if enabled { Some(Vec::new()) } else { None } }
+    }
+
+    /// Cheap gate for emission sites that must compute arguments (batch
+    /// deltas, eviction counts) before pushing.
+    #[inline(always)]
+    pub fn enabled(&self) -> bool {
+        self.buf.is_some()
+    }
+
+    #[inline]
+    pub fn push(&mut self, t: Time, model: usize, kind: EventKind) {
+        if let Some(b) = &mut self.buf {
+            b.push(SimEvent { t, model, kind });
+        }
+    }
+
+    /// Take the recorded events (driver-side, at end of run).
+    pub fn drain(&mut self) -> Vec<SimEvent> {
+        self.buf.take().unwrap_or_default()
+    }
+}
+
+/// Merge per-source event buffers into one deterministic stream: concat in
+/// the order given (callers pass model order, then driver-level events)
+/// and stable-sort by time — ties keep concat order, so the result is
+/// independent of worker count.
+pub fn merge_events(buffers: Vec<Vec<SimEvent>>) -> Vec<SimEvent> {
+    let mut all: Vec<SimEvent> = buffers.into_iter().flatten().collect();
+    all.sort_by(|a, b| a.t.total_cmp(&b.t));
+    all
+}
+
+// ---------------------------------------------------------------------------
+// decision audit
+// ---------------------------------------------------------------------------
+
+/// One audited autoscaler decision: the action, the backpressure inputs
+/// that triggered it, and a reason tag. `t` is stamped by the driver when
+/// it drains the policy after each `autoscale`/`bootstrap` call (policies
+/// see barrier time only through the view, so the driver owns the clock).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionRecord {
+    pub t: Time,
+    /// The recording policy layer (e.g. "chiron", "predictive").
+    pub policy: &'static str,
+    pub model: usize,
+    /// Human-readable action, e.g. "add mixed", "remove inst3".
+    pub action: String,
+    /// Which rule fired, e.g. "ibp_high", "bbp_deadline", "forecast_ramp".
+    pub reason: &'static str,
+    /// The inputs the rule read, as (name, value) pairs.
+    pub inputs: Vec<(&'static str, f64)>,
+}
+
+/// Policy-side decision recorder. Disabled (the default) `record` returns
+/// before formatting anything.
+#[derive(Debug, Default)]
+pub struct AuditLog {
+    tag: &'static str,
+    buf: Option<Vec<DecisionRecord>>,
+}
+
+impl AuditLog {
+    pub fn new(tag: &'static str) -> Self {
+        AuditLog { tag, buf: None }
+    }
+
+    pub fn set_enabled(&mut self, on: bool) {
+        if on && self.buf.is_none() {
+            self.buf = Some(Vec::new());
+        } else if !on {
+            self.buf = None;
+        }
+    }
+
+    #[inline(always)]
+    pub fn enabled(&self) -> bool {
+        self.buf.is_some()
+    }
+
+    /// Record one decision. `inputs` is borrowed so disabled calls can pass
+    /// a stack slice without allocating.
+    pub fn record(
+        &mut self,
+        model: usize,
+        action: String,
+        reason: &'static str,
+        inputs: &[(&'static str, f64)],
+    ) {
+        if let Some(b) = &mut self.buf {
+            b.push(DecisionRecord {
+                t: 0.0, // stamped by the driver at drain time
+                policy: self.tag,
+                model,
+                action,
+                reason,
+                inputs: inputs.to_vec(),
+            });
+        }
+    }
+
+    pub fn drain(&mut self) -> Vec<DecisionRecord> {
+        match &mut self.buf {
+            Some(b) => std::mem::take(b),
+            None => Vec::new(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// registry
+// ---------------------------------------------------------------------------
+
+/// A tiny metrics registry: named monotonic counters and last-value
+/// gauges. BTreeMap-backed so iteration (and thus every export) is
+/// deterministically ordered.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+}
+
+impl Registry {
+    pub fn inc(&mut self, name: &'static str, by: u64) {
+        *self.counters.entry(name).or_insert(0) += by;
+    }
+
+    pub fn set_gauge(&mut self, name: &'static str, v: f64) {
+        self.gauges.insert(name, v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn counters(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        self.counters.iter().map(|(&k, &v)| (k, v))
+    }
+
+    pub fn gauges(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
+        self.gauges.iter().map(|(&k, &v)| (k, v))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// log-histogram sketch
+// ---------------------------------------------------------------------------
+
+/// Log-spaced bins per decade. 8/decade bounds the relative quantile error
+/// at a geometric half-bin: sqrt(10^(1/8)) − 1 ≈ 15.5%.
+pub const HIST_BINS_PER_DECADE: f64 = 8.0;
+/// Lower edge of bin 0 (10 µs — well under any simulated latency).
+pub const HIST_MIN: f64 = 1e-5;
+/// Bin count: 10 decades (1e-5 .. 1e5 seconds).
+pub const HIST_BINS: usize = 80;
+
+/// Fixed-bin log-histogram sketch for latency distributions. Merging is an
+/// elementwise bin add — order-independent, hence deterministic at any
+/// shard count — and quantiles come from geometric bin midpoints, accurate
+/// to within half a bin (≈ ±15.5% relative). This is the sketch the
+/// ROADMAP's 100M-request item calls for: O(1) memory per series instead
+/// of the exact-percentile sample buffers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogHist {
+    pub bins: [u64; HIST_BINS],
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Default for LogHist {
+    fn default() -> Self {
+        LogHist {
+            bins: [0; HIST_BINS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl LogHist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bin index for a value (clamped into range; non-finite/negative
+    /// values clamp to bin 0).
+    #[inline]
+    pub fn bin_of(v: f64) -> usize {
+        if !(v > HIST_MIN) {
+            return 0;
+        }
+        let b = ((v / HIST_MIN).log10() * HIST_BINS_PER_DECADE).floor() as isize;
+        b.clamp(0, HIST_BINS as isize - 1) as usize
+    }
+
+    /// Lower edge of bin `i`.
+    pub fn bin_lo(i: usize) -> f64 {
+        HIST_MIN * 10f64.powf(i as f64 / HIST_BINS_PER_DECADE)
+    }
+
+    /// Upper edge of bin `i`.
+    pub fn bin_hi(i: usize) -> f64 {
+        HIST_MIN * 10f64.powf((i + 1) as f64 / HIST_BINS_PER_DECADE)
+    }
+
+    /// Geometric midpoint of bin `i` (the quantile estimate).
+    pub fn bin_mid(i: usize) -> f64 {
+        (Self::bin_lo(i) * Self::bin_hi(i)).sqrt()
+    }
+
+    /// Worst-case relative error of a quantile estimate (half a bin,
+    /// geometrically): sqrt(10^(1/8)) − 1.
+    pub fn relative_error() -> f64 {
+        10f64.powf(0.5 / HIST_BINS_PER_DECADE) - 1.0
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: f64) {
+        self.bins[Self::bin_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Elementwise merge; independent of merge order.
+    pub fn merge(&mut self, other: &LogHist) {
+        for i in 0..HIST_BINS {
+            self.bins[i] += other.bins[i];
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Quantile estimate (`q` in [0,1]): the geometric midpoint of the bin
+    /// holding the q-th sample. NaN on an empty sketch.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for i in 0..HIST_BINS {
+            seen += self.bins[i];
+            if seen >= rank {
+                return Self::bin_mid(i);
+            }
+        }
+        Self::bin_mid(HIST_BINS - 1)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// The pair of latency sketches a shard accumulates when histograms are on.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyHists {
+    pub ttft: LogHist,
+    pub itl: LogHist,
+}
+
+// ---------------------------------------------------------------------------
+// counters + assembled trace
+// ---------------------------------------------------------------------------
+
+/// One sampled counter row (taken at timeline ticks when
+/// `TelemetryConfig::counters` is on) — feeds Chrome-trace counter tracks
+/// and Prometheus gauges without retaining the full report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CounterSample {
+    pub t: Time,
+    pub gpus_used: u32,
+    pub queued_batch: usize,
+    pub queued_interactive: usize,
+    pub running: u32,
+    /// Cumulative terminal failures at this tick.
+    pub failed: usize,
+    /// Cumulative shed arrivals at this tick.
+    pub shed: usize,
+}
+
+/// Everything a traced run collected, assembled by the driver at the end:
+/// the merged deterministic event stream, the decision audit, sampled
+/// counters, latency sketches, and the end-of-run registry snapshot.
+#[derive(Debug, Default)]
+pub struct TraceData {
+    pub events: Vec<SimEvent>,
+    pub decisions: Vec<DecisionRecord>,
+    pub counters: Vec<CounterSample>,
+    pub hists: LatencyHists,
+    pub registry: Registry,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let mut s = EventSink::new(false);
+        assert!(!s.enabled());
+        s.push(1.0, 0, EventKind::Fail { req: 1 });
+        assert!(s.drain().is_empty());
+    }
+
+    #[test]
+    fn enabled_sink_keeps_order() {
+        let mut s = EventSink::new(true);
+        s.push(1.0, 0, EventKind::Fail { req: 1 });
+        s.push(1.0, 0, EventKind::Fail { req: 2 });
+        let v = s.drain();
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0].kind, EventKind::Fail { req: 1 });
+        assert_eq!(v[1].kind, EventKind::Fail { req: 2 });
+    }
+
+    #[test]
+    fn merge_is_stable_on_time_ties() {
+        // Two "shards" with events at the same timestamp: model order wins.
+        let a = vec![SimEvent { t: 2.0, model: 0, kind: EventKind::Fail { req: 1 } }];
+        let b = vec![
+            SimEvent { t: 1.0, model: 1, kind: EventKind::Fail { req: 2 } },
+            SimEvent { t: 2.0, model: 1, kind: EventKind::Fail { req: 3 } },
+        ];
+        let m = merge_events(vec![a, b]);
+        assert_eq!(m[0].kind, EventKind::Fail { req: 2 });
+        assert_eq!(m[1].kind, EventKind::Fail { req: 1 }); // model 0 first at t=2
+        assert_eq!(m[2].kind, EventKind::Fail { req: 3 });
+    }
+
+    #[test]
+    fn audit_disabled_is_noop_and_enabled_records() {
+        let mut a = AuditLog::new("test");
+        a.record(0, "add mixed".into(), "r", &[("x", 1.0)]);
+        assert!(a.drain().is_empty());
+        a.set_enabled(true);
+        a.record(3, "add mixed".into(), "r", &[("x", 1.0)]);
+        let d = a.drain();
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].model, 3);
+        assert_eq!(d[0].policy, "test");
+        assert_eq!(d[0].inputs, vec![("x", 1.0)]);
+    }
+
+    #[test]
+    fn hist_bins_are_monotonic_and_clamped() {
+        assert_eq!(LogHist::bin_of(0.0), 0);
+        assert_eq!(LogHist::bin_of(f64::NAN), 0);
+        assert_eq!(LogHist::bin_of(1e-9), 0);
+        assert_eq!(LogHist::bin_of(1e9), HIST_BINS - 1);
+        let mut last = 0;
+        for k in 1..60 {
+            let v = 1e-4 * 1.3f64.powi(k);
+            let b = LogHist::bin_of(v);
+            assert!(b >= last, "bins must be monotone in v");
+            last = b;
+        }
+        // The bin edges bracket the values they claim to.
+        for i in 0..HIST_BINS {
+            let mid = LogHist::bin_mid(i);
+            assert_eq!(LogHist::bin_of(mid), i);
+        }
+    }
+
+    #[test]
+    fn hist_quantile_within_bin_error() {
+        let mut h = LogHist::new();
+        let n = 10_000;
+        for k in 0..n {
+            // Latencies spread over ~3 decades.
+            let v = 0.001 * 1.001f64.powi(k);
+            h.record(v);
+        }
+        assert_eq!(h.count, n as u64);
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            let est = h.quantile(q);
+            let exact = 0.001 * 1.001f64.powi((q * n as f64) as i32);
+            let rel = (est - exact).abs() / exact;
+            assert!(
+                // Small extra slack: the "exact" reference itself carries
+                // index-rounding slop from the integer quantile position.
+                rel <= LogHist::relative_error() + 0.005,
+                "q={q}: est {est} vs exact {exact} (rel {rel})"
+            );
+        }
+    }
+
+    #[test]
+    fn hist_merge_equals_single_accumulator() {
+        let mut a = LogHist::new();
+        let mut b = LogHist::new();
+        let mut whole = LogHist::new();
+        for k in 0..1000 {
+            let v = 0.002 * 1.01f64.powi(k % 500);
+            whole.record(v);
+            if k % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.bins, whole.bins);
+        assert_eq!(a.count, whole.count);
+        assert!((a.sum - whole.sum).abs() < 1e-9 * whole.sum.abs());
+        assert_eq!(a.min, whole.min);
+        assert_eq!(a.max, whole.max);
+    }
+
+    #[test]
+    fn registry_orders_deterministically() {
+        let mut r = Registry::default();
+        r.inc("zeta", 1);
+        r.inc("alpha", 2);
+        r.inc("zeta", 1);
+        r.set_gauge("g", 0.5);
+        let names: Vec<_> = r.counters().map(|(k, _)| k).collect();
+        assert_eq!(names, vec!["alpha", "zeta"]);
+        assert_eq!(r.counter("zeta"), 2);
+        assert_eq!(r.gauge("g"), Some(0.5));
+    }
+}

@@ -277,7 +277,7 @@ impl Bencher {
         let doc = Json::obj(vec![("runs", Json::Arr(runs))]);
         match std::fs::write(path, doc.to_string()) {
             Ok(()) => println!("[bench trajectory appended to {path}]"),
-            Err(e) => eprintln!("warning: could not write {path}: {e}"),
+            Err(e) => crate::log_warn!("could not write {path}: {e}"),
         }
     }
 }

@@ -1,0 +1,123 @@
+//! Leveled stderr logging gated by the `CHIRON_LOG` environment variable.
+//!
+//! Levels: `off`, `warn` (the default), `info`, `debug`. The variable is
+//! read once per process and cached, so the per-call cost of a suppressed
+//! message is one atomic load and an integer compare. Use the
+//! [`log_warn!`](crate::log_warn)/[`log_info!`](crate::log_info)/
+//! [`log_debug!`](crate::log_debug) macros; they format lazily (arguments
+//! are only rendered when the level is enabled).
+//!
+//! This is intentionally tiny — one emitter, stderr only, no timestamps —
+//! because the simulator's diagnostics are deterministic warnings, not an
+//! operational log stream. Structured observability lives in
+//! `crate::telemetry`.
+
+use std::sync::OnceLock;
+
+/// Log severity, ordered so a numeric compare implements filtering
+/// (`Warn < Info < Debug`; `Off` disables everything).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Off = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    /// Parse a `CHIRON_LOG` value; unrecognized strings fall back to the
+    /// `warn` default rather than erroring (a typo'd env var should not
+    /// silence warnings).
+    pub fn parse(s: &str) -> Level {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" | "0" => Level::Off,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            _ => Level::Warn,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+static LEVEL: OnceLock<Level> = OnceLock::new();
+
+/// The active level: `CHIRON_LOG` parsed once, default `warn`.
+pub fn level() -> Level {
+    *LEVEL.get_or_init(|| {
+        std::env::var("CHIRON_LOG")
+            .map(|v| Level::parse(&v))
+            .unwrap_or(Level::Warn)
+    })
+}
+
+/// Whether messages at `lvl` are currently emitted.
+pub fn enabled(lvl: Level) -> bool {
+    lvl != Level::Off && lvl <= level()
+}
+
+/// Emit one leveled line to stderr. Prefer the macros — they skip argument
+/// formatting entirely when the level is disabled.
+pub fn log(lvl: Level, args: std::fmt::Arguments<'_>) {
+    eprintln!("[chiron {}] {}", lvl.tag(), args);
+}
+
+/// Warning: something is off but the run proceeds (default-on).
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Warn) {
+            $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($t)*));
+        }
+    };
+}
+
+/// Informational progress notes (`CHIRON_LOG=info`).
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Info) {
+            $crate::util::log::log($crate::util::log::Level::Info, format_args!($($t)*));
+        }
+    };
+}
+
+/// Developer diagnostics (`CHIRON_LOG=debug`, off by default).
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Debug) {
+            $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("off"), Level::Off);
+        assert_eq!(Level::parse("0"), Level::Off);
+        assert_eq!(Level::parse("WARN"), Level::Warn);
+        assert_eq!(Level::parse("Info"), Level::Info);
+        assert_eq!(Level::parse("debug"), Level::Debug);
+        // Typos keep warnings on.
+        assert_eq!(Level::parse("verbose"), Level::Warn);
+    }
+
+    #[test]
+    fn ordering_implements_filtering() {
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Off < Level::Warn);
+    }
+}

@@ -7,6 +7,7 @@ pub mod bench;
 pub mod check;
 pub mod cli;
 pub mod json;
+pub mod log;
 pub mod parallel;
 pub mod rng;
 pub mod stats;

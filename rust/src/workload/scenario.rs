@@ -990,8 +990,8 @@ fn diurnal_replay_path() -> String {
             let wrote = std::fs::write(&tmp, trace.to_json().to_string())
                 .and_then(|()| std::fs::rename(&tmp, &path));
             if let Err(e) = wrote {
-                eprintln!(
-                    "warning: could not write diurnal-replay trace {}: {e} \
+                crate::log_warn!(
+                    "could not write diurnal-replay trace {}: {e} \
                      (the diurnal-replay scenario will fail validation)",
                     path.display()
                 );

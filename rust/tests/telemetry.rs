@@ -1,0 +1,206 @@
+//! Observability-plane integration tests, pinning the three telemetry
+//! contracts:
+//!
+//!  1. **Zero effect when off (and on!)** — enabling full telemetry must
+//!     not perturb simulation results: the FNV report digest is
+//!     bit-identical with telemetry off and on, across the whole scenario
+//!     catalog including the three fault scenarios.
+//!  2. **Deterministic traces** — the merged event trace, decision audit,
+//!     and exporter output are *byte-identical* at any `--shards` worker
+//!     count.
+//!  3. **Faithful audit** — every applied scale action in a fault run is
+//!     attributable to a recorded autoscaler decision (`chiron explain`).
+
+mod common;
+
+use chiron::experiments::common::{make_policy, PolicyKind};
+use chiron::sim::{run_sim_source, SimConfig, SimReport};
+use chiron::telemetry::export::{chrome_trace, explain, jsonl};
+use chiron::telemetry::{LogHist, TelemetryConfig};
+use chiron::workload::scenario::{by_name, catalog, ScenarioSpec};
+
+use crate::common::digest_report;
+
+fn run_spec(
+    spec: &ScenarioSpec,
+    seed: u64,
+    shard_workers: usize,
+    telemetry: TelemetryConfig,
+) -> SimReport {
+    let models = spec.model_specs().unwrap();
+    let mut cfg = SimConfig::new(spec.gpus, models.clone());
+    cfg.max_sim_time = spec.max_time;
+    cfg.shard_workers = shard_workers;
+    cfg.faults = spec.faults.clone();
+    cfg.telemetry = telemetry;
+    let mut p = make_policy(&PolicyKind::Chiron, &models);
+    run_sim_source(cfg, Box::new(spec.source(seed)), p.as_mut())
+}
+
+#[test]
+fn telemetry_on_vs_off_digests_identical_across_catalog() {
+    // Acceptance: with telemetry disabled the whole-catalog digests are
+    // bit-identical to a fully-instrumented run — recording observes the
+    // simulation, never steers it. The catalog includes the three fault
+    // scenarios (crash-midrush, spot-reclaim, straggler-tail), so crash /
+    // retry / shed / reclamation emission paths are all covered.
+    let mut saw_fault_scenario = 0;
+    for spec in catalog() {
+        let spec = spec.scaled(0.005);
+        if !spec.faults.is_inert() {
+            saw_fault_scenario += 1;
+        }
+        let off = run_spec(&spec, 11, 1, TelemetryConfig::off());
+        let on = run_spec(&spec, 11, 1, TelemetryConfig::full());
+        assert!(
+            !off.outcomes.is_empty(),
+            "{}: scenario must complete work",
+            spec.name
+        );
+        assert_eq!(
+            digest_report(&off),
+            digest_report(&on),
+            "{}: telemetry must not perturb the simulation",
+            spec.name
+        );
+        assert!(off.trace.is_none(), "{}: off ⇒ no trace", spec.name);
+        let trace = on.trace.as_ref().expect("full telemetry ⇒ trace");
+        assert!(
+            !trace.events.is_empty(),
+            "{}: an instrumented run must record events",
+            spec.name
+        );
+    }
+    assert_eq!(
+        saw_fault_scenario, 3,
+        "the catalog should contain exactly the three fault scenarios"
+    );
+}
+
+#[test]
+fn traces_byte_identical_across_shard_workers() {
+    // The determinism argument (telemetry/README.md): per-model shard
+    // buffers concatenated in model order + a stable time sort make the
+    // merged trace independent of worker scheduling. Pin it end-to-end:
+    // both exporters' output is byte-equal at --shards 1 vs 4, on a fault
+    // scenario (crash + retry + load events) and a multi-model one.
+    for name in ["crash-midrush", "multi-tenant"] {
+        let spec = by_name(name).expect("catalog scenario").scaled(0.02);
+        let models = spec.model_specs().unwrap();
+        let names: Vec<String> = models.iter().map(|m| m.name.clone()).collect();
+        let r1 = run_spec(&spec, 11, 1, TelemetryConfig::full());
+        let r4 = run_spec(&spec, 11, 4, TelemetryConfig::full());
+        assert_eq!(digest_report(&r1), digest_report(&r4), "{name}: digests");
+        let (t1, t4) = (r1.trace.as_ref().unwrap(), r4.trace.as_ref().unwrap());
+        assert_eq!(
+            chrome_trace(t1, &names),
+            chrome_trace(t4, &names),
+            "{name}: chrome trace must be byte-identical at shards 1 vs 4"
+        );
+        assert_eq!(
+            jsonl(t1),
+            jsonl(t4),
+            "{name}: jsonl trace must be byte-identical at shards 1 vs 4"
+        );
+        assert!(
+            !t1.decisions.is_empty(),
+            "{name}: an autoscaled run must record decisions"
+        );
+    }
+}
+
+#[test]
+fn hist_sketch_matches_exact_quantiles_within_bin_error() {
+    // The TTFT log-histogram assembled from per-shard sketches must agree
+    // with exact quantiles computed from the retained outcomes, within the
+    // sketch's guaranteed half-bin relative error.
+    let spec = by_name("multi-tenant").expect("catalog scenario").scaled(0.02);
+    let r = run_spec(&spec, 11, 4, TelemetryConfig::full());
+    let trace = r.trace.as_ref().unwrap();
+    let mut exact_ttft: Vec<f64> = r
+        .outcomes
+        .iter()
+        .map(|o| o.first_token - o.arrival)
+        .collect();
+    exact_ttft.sort_by(|a, b| a.total_cmp(b));
+    assert_eq!(trace.hists.ttft.count as usize, exact_ttft.len());
+    for q in [0.5, 0.9, 0.99] {
+        let est = trace.hists.ttft.quantile(q);
+        let idx = ((q * exact_ttft.len() as f64) as usize).min(exact_ttft.len() - 1);
+        let exact = exact_ttft[idx].max(1e-9);
+        let rel = (est - exact).abs() / exact;
+        assert!(
+            rel <= LogHist::relative_error() + 0.02,
+            "q={q}: sketch {est} vs exact {exact} (rel {rel})"
+        );
+    }
+    // Merging per-shard sketches is order-independent: the same run at
+    // shards 1 yields the identical histogram.
+    let r1 = run_spec(&spec, 11, 1, TelemetryConfig::full());
+    assert_eq!(r1.trace.as_ref().unwrap().hists.ttft, trace.hists.ttft);
+    assert_eq!(r1.trace.as_ref().unwrap().hists.itl, trace.hists.itl);
+}
+
+#[test]
+fn explain_attributes_every_scale_action_in_crash_midrush() {
+    // Acceptance: `chiron explain` on a crash-midrush Chiron trace
+    // attributes EVERY applied scale action to a recorded decision carrying
+    // its backpressure inputs — in both exporter formats.
+    let spec = by_name("crash-midrush")
+        .expect("catalog scenario")
+        .scaled(0.02);
+    let models = spec.model_specs().unwrap();
+    let names: Vec<String> = models.iter().map(|m| m.name.clone()).collect();
+    let r = run_spec(&spec, 11, 1, TelemetryConfig::full());
+    let trace = r.trace.as_ref().unwrap();
+    for text in [chrome_trace(trace, &names), jsonl(trace)] {
+        let report = explain(&text).expect("explain must parse its own exporters");
+        assert!(
+            !report.contains("UNATTRIBUTED"),
+            "every scale action must trace back to a decision:\n{report}"
+        );
+        let attr = report
+            .lines()
+            .find(|l| l.starts_with("attribution: "))
+            .expect("explain must report attribution");
+        let frac = attr
+            .strip_prefix("attribution: ")
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap();
+        let (matched, total) = frac.split_once('/').expect("M/N fraction");
+        assert_eq!(matched, total, "attribution must be complete: {attr}");
+        assert!(
+            total.parse::<usize>().unwrap() > 0,
+            "a crash-midrush run must scale at least once: {attr}"
+        );
+        // The audit carries the IBP backpressure input for interactive adds.
+        assert!(
+            report.contains("ibp") || report.contains("bbp"),
+            "decision groups must expose backpressure inputs:\n{report}"
+        );
+    }
+}
+
+#[test]
+fn timeline_reports_interactive_queue_and_cumulative_failures() {
+    // Satellite: TimelinePoint now carries queued_interactive plus
+    // cumulative failed/shed. On a shedding fault run the last sample must
+    // agree with the report's terminal counters.
+    let spec = by_name("crash-midrush")
+        .expect("catalog scenario")
+        .scaled(0.02);
+    let r = run_spec(&spec, 11, 1, TelemetryConfig::off());
+    assert!(!r.timeline.is_empty(), "timeline sampling defaults on");
+    let last = r.timeline.last().unwrap();
+    assert!(
+        last.failed <= r.failed && last.shed <= r.shed,
+        "cumulative counters never exceed the terminal report"
+    );
+    let monotone = r
+        .timeline
+        .windows(2)
+        .all(|w| w[0].failed <= w[1].failed && w[0].shed <= w[1].shed);
+    assert!(monotone, "failed/shed are cumulative, hence monotone");
+}
