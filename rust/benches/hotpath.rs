@@ -19,7 +19,7 @@ use chiron::forecast::{ForecasterKind, RateForecaster};
 use chiron::sim::policy::{
     InstanceState, InstanceView, LocalPolicy, ModelView, QueuedReq,
 };
-use chiron::sim::{run_sim, run_sim_source, SimConfig, SimInstance, WorkItem};
+use chiron::sim::{run_sim, run_sim_source, EventCore, SimConfig, SimInstance, WorkItem};
 use chiron::metrics::{Summary, SummaryAccum};
 use chiron::util::bench::{black_box, Bencher};
 use chiron::util::parallel::{for_each_mut, run_grid_jobs};
@@ -261,6 +261,45 @@ fn main() {
         });
     }
 
+    // -- calendar queue vs binary heap on the same workload ------------------
+    // The event-core A/B: identical 6k workload through each core, identical
+    // results (whole-catalog digest equality is pinned by
+    // tests/event_core.rs), so the delta is pure queue mechanics. The CI
+    // gate tracks the calendar entry (registered first — the gate's
+    // word-boundary match takes the first "sim.calendar_vs_heap " hit); the
+    // heap entry rides along so the trajectory records the A/B ratio.
+    {
+        let mk = |n_inter: usize, n_batch: usize| {
+            let mut rng = Rng::new(3);
+            TraceBuilder::new()
+                .stream(workload_a(30.0, n_inter, 0))
+                .stream(workload_b_batch(n_batch, 5.0, 0, 1800.0))
+                .build(&mut rng)
+        };
+        let total = mk(2000, 4000).len() as f64;
+        let run_core = |core: EventCore, trace: chiron::workload::Trace| {
+            let mut cfg = ChironConfig::for_models(1);
+            cfg.bootstrap[0] = BootstrapSpec {
+                interactive: 1,
+                mixed: 2,
+                batch: 0,
+            };
+            let mut policy = Chiron::new(cfg, &models);
+            let mut sim_cfg = SimConfig::new(50, models.clone());
+            sim_cfg.max_sim_time = 4.0 * 3600.0;
+            sim_cfg.timeline_every = 0;
+            sim_cfg.event_core = core;
+            let r = run_sim(sim_cfg, trace, &mut policy);
+            black_box(r.outcomes.len());
+        };
+        b.bench_units("sim.calendar_vs_heap calendar 6k requests", Some(total), || {
+            run_core(EventCore::Calendar, mk(2000, 4000))
+        });
+        b.bench_units("sim.calendar_vs_heap heap 6k requests", Some(total), || {
+            run_core(EventCore::Heap, mk(2000, 4000))
+        });
+    }
+
     // -- telemetry event recording ------------------------------------------
     // 1M enabled-sink pushes: the marginal per-event cost a traced run pays
     // at every emission site (enum construct + Vec push).
@@ -480,6 +519,33 @@ fn main() {
             let r = run_sim_source(cfg, Box::new(spec.source(1)), &mut policy);
             assert_eq!(r.unfinished, 0, "backlog must drain completely");
             assert!(r.outcomes.is_empty(), "streaming mode keeps no outcome buffer");
+            black_box(r.stats.count());
+        });
+    }
+
+    // -- the week-long 100M-request trace: the event-core scale target ------
+    // week-diurnal-100m through the calendar core with sketch metrics and
+    // streaming summaries: per-request memory is O(1), so the full week fits
+    // in bounded memory. One timed run; quick mode scales the request caps
+    // down (5e-5 → 5k requests) so CI records the entry on every push while
+    // the full 100M run remains a local/nightly acceptance measurement.
+    {
+        use chiron::workload::scenario::by_name;
+        let quick = std::env::var("CHIRON_BENCH_QUICK").is_ok();
+        let spec = by_name("week-diurnal-100m")
+            .expect("catalog scenario")
+            .scaled(if quick { 5e-5 } else { 1.0 });
+        let models_wk = spec.model_specs().expect("known models");
+        let total = spec.max_requests() as f64;
+        b.bench_once("sim.week_100m", Some(total), || {
+            let mut cfg = SimConfig::new(spec.gpus, models_wk.clone());
+            cfg.max_sim_time = spec.max_time;
+            cfg.timeline_every = 0;
+            cfg.keep_outcomes = false;
+            cfg.sketch_metrics = true;
+            let mut policy = Chiron::new(ChironConfig::for_models(1), &models_wk);
+            let r = run_sim_source(cfg, Box::new(spec.source(1)), &mut policy);
+            assert!(r.outcomes.is_empty(), "sketch mode keeps no outcome buffer");
             black_box(r.stats.count());
         });
     }

@@ -194,6 +194,15 @@ impl LocalPolicy for ChironLocal {
     fn on_step(&mut self, inst: &InstanceView, _now: Time) -> Option<u32> {
         self.local.on_step(inst)
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        self.local.save_state(out);
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut d = crate::util::binio::Dec::new(bytes);
+        self.local.load_state(&mut d)
+    }
 }
 
 /// Chiron: the paper's hierarchical autoscaler (global half).
@@ -271,6 +280,15 @@ impl GlobalPolicy for Chiron {
 
     fn drain_decisions(&mut self) -> Vec<crate::telemetry::DecisionRecord> {
         self.global.audit.drain()
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        self.global.save_state(out);
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut d = crate::util::binio::Dec::new(bytes);
+        self.global.load_state(&mut d)
     }
 }
 

@@ -93,6 +93,32 @@ impl GlobalAutoscaler {
         &self.models[model].estimator
     }
 
+    /// Serialize per-model estimator state (checkpoint). The audit log is
+    /// excluded — checkpointed runs reject `--trace`/audit output.
+    pub fn save_state(&self, out: &mut Vec<u8>) {
+        crate::util::binio::put_usize(out, self.models.len());
+        for st in &self.models {
+            st.estimator.save_state(out);
+            crate::util::binio::put_bool(out, st.seen_interactive);
+        }
+    }
+
+    /// Restore state written by [`save_state`](Self::save_state). The model
+    /// count must match the scenario the autoscaler was built from.
+    pub fn load_state(&mut self, d: &mut crate::util::binio::Dec) -> anyhow::Result<()> {
+        let n = d.usize()?;
+        anyhow::ensure!(
+            n == self.models.len(),
+            "checkpoint: global autoscaler has {} models, checkpoint has {n}",
+            self.models.len()
+        );
+        for st in &mut self.models {
+            st.estimator.load_state(d)?;
+            st.seen_interactive = d.bool()?;
+        }
+        Ok(())
+    }
+
     /// Interactive backpressure for a model: (busy, total, IBP).
     /// "Busy" counts interactive/mixed instances currently serving at least
     /// one interactive request; Loading instances count toward the pool so

@@ -184,6 +184,46 @@ impl LocalAutoscaler {
             None
         }
     }
+
+    /// Serialize the controller bank (checkpoint). Entries are written in
+    /// instance-id order so the byte stream is deterministic regardless of
+    /// `HashMap` iteration order; `cfg` is configuration, rebuilt by the
+    /// owner, and does not round-trip.
+    pub fn save_state(&self, out: &mut Vec<u8>) {
+        use crate::util::binio::{put_f64, put_opt_f64, put_u32, put_u64, put_usize};
+        let mut ids: Vec<InstanceId> = self.state.keys().copied().collect();
+        ids.sort_by_key(|id| id.0);
+        put_usize(out, ids.len());
+        for id in ids {
+            let s = &self.state[&id];
+            put_u32(out, id.0);
+            put_opt_f64(out, s.itl.get());
+            put_f64(out, s.mb);
+            put_f64(out, s.prev_mb);
+            put_f64(out, s.prev_thr);
+            put_u64(out, s.last_decision_step);
+        }
+    }
+
+    /// Restore a controller bank written by [`save_state`](Self::save_state).
+    pub fn load_state(&mut self, d: &mut crate::util::binio::Dec) -> anyhow::Result<()> {
+        self.state.clear();
+        let n = d.usize()?;
+        for _ in 0..n {
+            let id = InstanceId(d.u32()?);
+            let mut itl = Ewma::new(self.cfg.alpha);
+            itl.set_value(d.opt_f64()?);
+            let st = LocalState {
+                itl,
+                mb: d.f64()?,
+                prev_mb: d.f64()?,
+                prev_thr: d.f64()?,
+                last_decision_step: d.u64()?,
+            };
+            self.state.insert(id, st);
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

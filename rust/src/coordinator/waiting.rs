@@ -102,6 +102,28 @@ impl WaitingTimeEstimator {
         self.theta.get_or(self.fallback_theta).max(1e-6)
     }
 
+    /// Serialize the estimator's mutable state (checkpoint): the Welford
+    /// output-length fit and the smoothed Θ. Priors, `fallback_theta`, and
+    /// `z` are configuration, rebuilt by the owner.
+    pub fn save_state(&self, out: &mut Vec<u8>) {
+        use crate::util::binio::{put_f64, put_opt_f64, put_u64};
+        let (n, mean, m2) = self.out.w.state();
+        put_u64(out, n);
+        put_f64(out, mean);
+        put_f64(out, m2);
+        put_opt_f64(out, self.theta.get());
+    }
+
+    /// Restore state written by [`save_state`](Self::save_state).
+    pub fn load_state(&mut self, d: &mut crate::util::binio::Dec) -> anyhow::Result<()> {
+        let n = d.u64()?;
+        let mean = d.f64()?;
+        let m2 = d.f64()?;
+        self.out.w = Welford::from_state(n, mean, m2);
+        self.theta.set_value(d.opt_f64()?);
+        Ok(())
+    }
+
     /// Estimate the waiting time until the queue position `requests_ahead`
     /// is fully served by `serving_instances` instances (Eq. 1 scaled to a
     /// multi-instance pool, with the CLT confidence margin).

@@ -18,8 +18,9 @@ use chiron::experiments::common::{make_policy, save_result, seed_list, PolicyKin
 use chiron::metrics::{PolicyRow, Summary, SummaryStats};
 use chiron::runtime::TinyLlmRuntime;
 use chiron::server::ServingFrontend;
+use chiron::sim::checkpoint::{CheckpointConfig, CheckpointMeta};
 use chiron::sim::policy::{InstanceState, InstanceView};
-use chiron::sim::{run_sim, run_sim_source, SimConfig};
+use chiron::sim::{resume_sim_source, run_sim, run_sim_source, EventCore, SimConfig};
 use chiron::util::cli::Args;
 use chiron::util::json::Json;
 use chiron::util::rng::Rng;
@@ -78,10 +79,14 @@ fn help() {
          \u{20}  scenario show <name|file>       print a scenario spec as JSON\n\
          \u{20}  scenario run <name|file> [--policy P --seeds N --jobs J --scale F\n\
          \u{20}                            --forecast E --lead-time S\n\
-         \u{20}                            --trace out.json --trace-format chrome|jsonl]\n\
+         \u{20}                            --trace out.json --trace-format chrome|jsonl\n\
+         \u{20}                            --event-core calendar|heap --sketch-metrics\n\
+         \u{20}                            --checkpoint-every S --checkpoint f.ckpt --resume f.ckpt\n\
+         \u{20}                            --progress-every S]\n\
          \u{20}                                  run a scenario (streaming trace), per-seed + mean±std JSON;\n\
          \u{20}                                  --forecast wraps the policy in a predictive scaler;\n\
-         \u{20}                                  --trace records a deterministic event trace + decision audit\n\
+         \u{20}                                  --trace records a deterministic event trace + decision audit;\n\
+         \u{20}                                  --checkpoint-every/--resume checkpoint long runs (bit-identical)\n\
          \u{20}  scenario sweep [--scenarios A,B --policies P,Q --seeds N --forecast E]\n\
          \u{20}                                  (policy × scenario × seed) grid over the worker pool\n\
          \u{20}  simulate --config <file>        run a simulation described by a JSON config\n\
@@ -178,19 +183,31 @@ fn run_scenario_cell(
     seed: u64,
     keep_outcomes: bool,
     with_trace: bool,
+    core: EventCore,
+    sketch: bool,
+    progress_every: f64,
+    checkpoint: Option<CheckpointConfig>,
 ) -> CellResult {
     let mut cfg = SimConfig::new(gpus, models.to_vec());
     cfg.max_sim_time = spec.max_time;
     cfg.keep_outcomes = keep_outcomes;
     cfg.faults = spec.faults.clone();
+    cfg.event_core = core;
+    cfg.sketch_metrics = sketch;
+    cfg.progress_every = progress_every;
+    cfg.checkpoint = checkpoint;
     if with_trace {
         cfg.telemetry = chiron::telemetry::TelemetryConfig::full();
     }
     let mut policy = make_policy(kind, models);
     let mut report = run_sim_source(cfg, Box::new(spec.source(seed)), policy.as_mut());
+    cell_result(&mut report)
+}
+
+fn cell_result(report: &mut chiron::sim::SimReport) -> CellResult {
     CellResult {
-        row: PolicyRow::from_report(&report),
-        summary: Summary::of_report(&report),
+        row: PolicyRow::from_report(report),
+        summary: Summary::of_report(report),
         total_requests: report.total_requests,
         unfinished: report.unfinished,
         trace: report.trace.take(),
@@ -371,6 +388,48 @@ fn cmd_scenario(argv: Vec<String>) -> anyhow::Result<()> {
         "--trace output format: 'chrome' (chrome://tracing / Perfetto JSON) \
          or 'jsonl' (one JSON object per line)",
     )
+    .flag(
+        "event-core",
+        "calendar",
+        "event-queue implementation: 'calendar' (hierarchical timing wheel, \
+         amortized O(1) at high event rates) or 'heap' (binary heap); \
+         results are bit-identical either way",
+    )
+    .switch(
+        "sketch-metrics",
+        "accumulate latency/SLO distributions in O(1)-memory log-histogram \
+         sketches instead of exact percentile samples (quantiles carry the \
+         sketch's ~1.5%-of-value bin error; pairs with streaming summaries \
+         to make 100M-request runs flat-memory)",
+    )
+    .flag(
+        "checkpoint-every",
+        "0",
+        "for `run`: write a checkpoint of the full simulation state every N \
+         simulated seconds (0 = off; requires --seeds 1, --policy chiron, \
+         and no --trace)",
+    )
+    .flag(
+        "checkpoint",
+        "chiron.ckpt",
+        "checkpoint file path for --checkpoint-every / --resume (written \
+         atomically, overwritten at each cadence point)",
+    )
+    .flag(
+        "resume",
+        "",
+        "for `run`: resume from this checkpoint file instead of starting at \
+         t=0; scenario, seed, scale, policy, and GPU count must match the \
+         recording run, and the final report is bit-identical to an \
+         uninterrupted run",
+    )
+    .flag(
+        "progress-every",
+        "600",
+        "log streaming progress (sim time, arrivals, completions, speedup) \
+         every N simulated seconds at CHIRON_LOG=info (0 = off; free when \
+         info logging is disabled)",
+    )
     .parse_from(argv)
     .unwrap_or_else(|m| {
         eprintln!("{m}");
@@ -382,6 +441,13 @@ fn cmd_scenario(argv: Vec<String>) -> anyhow::Result<()> {
     if !(scale.is_finite() && scale > 0.0) {
         anyhow::bail!("--scale must be a positive number, got '{}'", args.get("scale")?);
     }
+    let core = EventCore::parse(args.get("event-core")?).ok_or_else(|| {
+        anyhow::anyhow!(
+            "--event-core must be 'calendar' or 'heap', got '{}'",
+            args.get("event-core")?
+        )
+    })?;
+    let sketch = args.get_bool("sketch-metrics")?;
     // `--gpus 0` (the default) defers to the scenario's own cluster size.
     let gpus_flag = args.get_usize("gpus")? as u32;
     let effective_gpus = |spec: &ScenarioSpec| if gpus_flag == 0 { spec.gpus } else { gpus_flag };
@@ -459,14 +525,82 @@ fn cmd_scenario(argv: Vec<String>) -> anyhow::Result<()> {
             if !matches!(trace_format.as_str(), "chrome" | "jsonl") {
                 anyhow::bail!("--trace-format must be 'chrome' or 'jsonl', got '{trace_format}'");
             }
+            let ckpt_every = args.get_f64("checkpoint-every")?;
+            let resume_path = args.get("resume")?.to_string();
+            let progress_every = args.get_f64("progress-every")?;
+            let checkpointing = ckpt_every > 0.0 || !resume_path.is_empty();
+            if checkpointing {
+                // Checkpoint/resume serializes one deterministic run; grids,
+                // traces, and policies without serialized state are out.
+                anyhow::ensure!(
+                    seeds.len() == 1,
+                    "--checkpoint-every/--resume require --seeds 1 (one run per file)"
+                );
+                anyhow::ensure!(
+                    trace_path.is_empty(),
+                    "--checkpoint-every/--resume do not support --trace"
+                );
+                anyhow::ensure!(
+                    policy_name == "chiron",
+                    "--checkpoint-every/--resume support --policy chiron only \
+                     (other policies do not serialize their state), got '{policy_name}'"
+                );
+            }
+            let ckpt_cfg = |seed: u64| -> Option<CheckpointConfig> {
+                checkpointing.then(|| CheckpointConfig {
+                    path: std::path::PathBuf::from(args.get("checkpoint").unwrap()),
+                    every: ckpt_every,
+                    meta: CheckpointMeta {
+                        scenario: spec.name.clone(),
+                        seed,
+                        scale,
+                        policy: policy_name.clone(),
+                        gpus,
+                    },
+                })
+            };
             let t0 = std::time::Instant::now();
             let with_trace = !trace_path.is_empty();
-            let results = chiron::util::parallel::run_grid(seeds.clone(), |_, seed| {
-                (
-                    seed,
-                    run_scenario_cell(&spec, &models, &kind, gpus, seed, keep, with_trace),
-                )
-            });
+            let results = if resume_path.is_empty() {
+                chiron::util::parallel::run_grid(seeds.clone(), |_, seed| {
+                    (
+                        seed,
+                        run_scenario_cell(
+                            &spec,
+                            &models,
+                            &kind,
+                            gpus,
+                            seed,
+                            keep,
+                            with_trace,
+                            core,
+                            sketch,
+                            progress_every,
+                            ckpt_cfg(seed),
+                        ),
+                    )
+                })
+            } else {
+                let bytes = std::fs::read(&resume_path)
+                    .map_err(|e| anyhow::anyhow!("reading --resume {resume_path}: {e}"))?;
+                let seed = seeds[0];
+                let mut cfg = SimConfig::new(gpus, models.to_vec());
+                cfg.max_sim_time = spec.max_time;
+                cfg.keep_outcomes = keep;
+                cfg.faults = spec.faults.clone();
+                cfg.event_core = core;
+                cfg.sketch_metrics = sketch;
+                cfg.progress_every = progress_every;
+                cfg.checkpoint = ckpt_cfg(seed);
+                let mut policy = make_policy(&kind, &models);
+                let mut report = resume_sim_source(
+                    cfg,
+                    Box::new(spec.source(seed)),
+                    policy.as_mut(),
+                    &bytes,
+                )?;
+                vec![(seed, cell_result(&mut report))]
+            };
             println!("[{} seed(s) done in {:.1}s]", seeds.len(), t0.elapsed().as_secs_f64());
             println!("{}", PolicyRow::header());
             for (_, cell) in &results {
@@ -551,7 +685,12 @@ fn cmd_scenario(argv: Vec<String>) -> anyhow::Result<()> {
             let t0 = std::time::Instant::now();
             let flat = chiron::util::parallel::run_grid(tasks, |_, (c, seed)| {
                 let (spec, models, _, kind, gpus) = &cells[c];
-                (seed, run_scenario_cell(spec, models, kind, *gpus, seed, keep, false))
+                (
+                    seed,
+                    run_scenario_cell(
+                        spec, models, kind, *gpus, seed, keep, false, core, sketch, 0.0, None,
+                    ),
+                )
             });
             println!("[sweep done in {:.1}s]", t0.elapsed().as_secs_f64());
             let mut it = flat.into_iter();

@@ -14,6 +14,8 @@ use std::borrow::Cow;
 use crate::core::{RequestClass, RequestOutcome};
 use crate::forecast::ForecastScore;
 use crate::sim::SimReport;
+use crate::telemetry::LogHist;
+use crate::util::binio::{put_bool, put_f64, put_u64, put_u8, put_usize, Dec};
 use crate::util::json::Json;
 use crate::util::stats::{Percentiles, Welford};
 
@@ -134,24 +136,166 @@ impl Summary {
     }
 }
 
+/// A latency sample series in one of two storage modes.
+///
+/// `Exact` keeps every sample (16 bytes per outcome across the two series)
+/// and computes interpolated percentiles — the default, and part of the
+/// bit-exactness contract with the buffered path. `Sketch` folds each
+/// sample into a fixed [`LogHist`] — O(1) memory per series regardless of
+/// request count (the `SimConfig::sketch_metrics` mode that makes
+/// 100M-request runs fit in bounded memory), with quantiles accurate to
+/// the sketch's half-bin bound (≈ ±15.5% relative).
+///
+/// The two modes are never mixed: a run constructs every accumulator in
+/// one mode, and `merge` panics on a mismatch rather than silently
+/// degrading an exact series.
+#[derive(Debug, Clone)]
+pub enum Series {
+    Exact(Percentiles),
+    Sketch(LogHist),
+}
+
+impl Default for Series {
+    fn default() -> Self {
+        Series::Exact(Percentiles::default())
+    }
+}
+
+impl Series {
+    fn sketch() -> Series {
+        Series::Sketch(LogHist::default())
+    }
+
+    #[inline]
+    fn push(&mut self, v: f64) {
+        match self {
+            Series::Exact(p) => p.push(v),
+            Series::Sketch(h) => h.record(v),
+        }
+    }
+
+    fn merge(&mut self, other: &Series) {
+        match (self, other) {
+            (Series::Exact(p), Series::Exact(o)) => p.extend(o.values().iter().copied()),
+            (Series::Sketch(h), Series::Sketch(o)) => h.merge(o),
+            _ => panic!("cannot merge exact and sketch metric series"),
+        }
+    }
+
+    /// Percentile `p` in [0, 100]. Empty series answer 0.0 in both modes
+    /// (the historical exact-path convention).
+    fn pct(&mut self, p: f64) -> f64 {
+        match self {
+            Series::Exact(ps) => ps.pct(p),
+            Series::Sketch(h) => {
+                if h.count == 0 {
+                    0.0
+                } else {
+                    h.quantile(p / 100.0)
+                }
+            }
+        }
+    }
+
+    fn mean(&self) -> f64 {
+        match self {
+            Series::Exact(p) => p.mean(),
+            Series::Sketch(h) => {
+                if h.count == 0 {
+                    0.0
+                } else {
+                    h.mean()
+                }
+            }
+        }
+    }
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Series::Exact(p) => {
+                let (xs, sorted) = p.raw();
+                put_u8(out, 0);
+                put_bool(out, sorted);
+                put_usize(out, xs.len());
+                for &x in xs {
+                    put_f64(out, x);
+                }
+            }
+            Series::Sketch(h) => {
+                put_u8(out, 1);
+                for &b in h.bins.iter() {
+                    put_u64(out, b);
+                }
+                put_u64(out, h.count);
+                put_f64(out, h.sum);
+                put_f64(out, h.min);
+                put_f64(out, h.max);
+            }
+        }
+    }
+
+    fn decode(d: &mut Dec) -> anyhow::Result<Series> {
+        match d.u8()? {
+            0 => {
+                let sorted = d.bool()?;
+                let n = d.usize()?;
+                let mut xs = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    xs.push(d.f64()?);
+                }
+                Ok(Series::Exact(Percentiles::from_raw(xs, sorted)))
+            }
+            1 => {
+                let mut h = LogHist::default();
+                for b in h.bins.iter_mut() {
+                    *b = d.u64()?;
+                }
+                h.count = d.u64()?;
+                h.sum = d.f64()?;
+                h.min = d.f64()?;
+                h.max = d.f64()?;
+                Ok(Series::Sketch(h))
+            }
+            t => anyhow::bail!("unknown metric series tag {t}"),
+        }
+    }
+}
+
 /// Streaming accumulator behind [`Summary`]: exact integer counters plus
 /// the ttft / mean-ITL sample series as compact `f64` vectors (16 bytes per
 /// outcome vs ~100 for a full `RequestOutcome`). Percentiles stay *exact*
 /// — the series is the percentile state — and `summary()` performs the
 /// same arithmetic, over the same series order, as summarizing a buffer of
 /// outcomes pushed in the same order, so the two paths are bit-identical
-/// field by field.
+/// field by field. Sketch-mode accumulators ([`ClassAccum::sketch`]) swap
+/// the series storage for fixed-size log-histograms; every counter stays
+/// exact, only the latency quantiles carry the sketch's error bound.
 #[derive(Debug, Clone, Default)]
 pub struct ClassAccum {
     count: usize,
     met: usize,
     preemptions: u64,
     output_tokens: u64,
-    ttft: Percentiles,
-    itl: Percentiles,
+    ttft: Series,
+    itl: Series,
 }
 
 impl ClassAccum {
+    /// A sketch-mode accumulator: O(1) latency-series memory, exact
+    /// counters. Must not be merged with exact-mode accumulators.
+    pub fn sketch() -> ClassAccum {
+        ClassAccum {
+            ttft: Series::sketch(),
+            itl: Series::sketch(),
+            ..ClassAccum::default()
+        }
+    }
+
+    /// Is this accumulator storing its series as sketches?
+    pub fn is_sketch(&self) -> bool {
+        matches!(self.ttft, Series::Sketch(_))
+    }
+
     /// Fold one completion in.
     pub fn push(&mut self, o: &RequestOutcome) {
         self.ttft.push(o.ttft());
@@ -168,13 +312,35 @@ impl ClassAccum {
     /// merging per-shard accumulators in model order reproduces exactly
     /// the series a model-order outcome concatenation would have built.
     /// Must run before any percentile query sorts a series in place.
+    /// (Sketch-mode merges are elementwise bin adds — order-independent.)
     pub fn merge(&mut self, other: &ClassAccum) {
         self.count += other.count;
         self.met += other.met;
         self.preemptions += other.preemptions;
         self.output_tokens += other.output_tokens;
-        self.ttft.extend(other.ttft.values().iter().copied());
-        self.itl.extend(other.itl.values().iter().copied());
+        self.ttft.merge(&other.ttft);
+        self.itl.merge(&other.itl);
+    }
+
+    /// Checkpoint encode (schema versioned by `sim::checkpoint`).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        put_usize(out, self.count);
+        put_usize(out, self.met);
+        put_u64(out, self.preemptions);
+        put_u64(out, self.output_tokens);
+        self.ttft.encode(out);
+        self.itl.encode(out);
+    }
+
+    pub fn decode(d: &mut Dec) -> anyhow::Result<ClassAccum> {
+        Ok(ClassAccum {
+            count: d.usize()?,
+            met: d.usize()?,
+            preemptions: d.u64()?,
+            output_tokens: d.u64()?,
+            ttft: Series::decode(d)?,
+            itl: Series::decode(d)?,
+        })
     }
 
     pub fn count(&self) -> usize {
@@ -251,6 +417,52 @@ pub struct SummaryAccum {
 }
 
 impl SummaryAccum {
+    /// Sketch-mode summary state: all three class accumulators store their
+    /// latency series as fixed-size log-histograms (`SimConfig::
+    /// sketch_metrics`). With `keep_outcomes = false` this makes per-request
+    /// metric memory O(1).
+    pub fn sketch() -> SummaryAccum {
+        SummaryAccum {
+            all: ClassAccum::sketch(),
+            interactive: ClassAccum::sketch(),
+            batch: ClassAccum::sketch(),
+            bins: Vec::new(),
+        }
+    }
+
+    pub fn is_sketch(&self) -> bool {
+        self.all.is_sketch()
+    }
+
+    /// Checkpoint encode (schema versioned by `sim::checkpoint`).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        self.all.encode(out);
+        self.interactive.encode(out);
+        self.batch.encode(out);
+        put_usize(out, self.bins.len());
+        for &(c, m) in &self.bins {
+            put_u64(out, c as u64);
+            put_u64(out, m as u64);
+        }
+    }
+
+    pub fn decode(d: &mut Dec) -> anyhow::Result<SummaryAccum> {
+        let all = ClassAccum::decode(d)?;
+        let interactive = ClassAccum::decode(d)?;
+        let batch = ClassAccum::decode(d)?;
+        let n = d.usize()?;
+        let mut bins = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            bins.push((d.u64()? as u32, d.u64()? as u32));
+        }
+        Ok(SummaryAccum {
+            all,
+            interactive,
+            batch,
+            bins,
+        })
+    }
+
     pub fn push(&mut self, o: &RequestOutcome) {
         self.all.push(o);
         match o.class {
@@ -696,6 +908,102 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), outs.len());
         assert_summary_bits_eq(&Summary::of(&outs), &a.summary());
+    }
+
+    #[test]
+    fn sketch_accumulator_exact_counters_bounded_quantiles() {
+        let outs: Vec<RequestOutcome> = (0..4096)
+            .map(|i| {
+                let class = if i % 3 == 0 {
+                    RequestClass::Batch
+                } else {
+                    RequestClass::Interactive
+                };
+                // TTFTs spread over two decades; mean ITLs over one.
+                outcome(0.05 + (i % 997) as f64 * 0.013, 0.02 + (i % 89) as f64 * 0.003, class)
+            })
+            .collect();
+        let (mut exact, mut sk) = (SummaryAccum::default(), SummaryAccum::sketch());
+        for o in &outs {
+            exact.push(o);
+            sk.push(o);
+        }
+        assert!(sk.is_sketch() && !exact.is_sketch());
+        let (e, s) = (exact.summary(), sk.summary());
+        // Counters are exact in both modes.
+        assert_eq!(e.count, s.count);
+        assert_eq!(e.slo_attainment.to_bits(), s.slo_attainment.to_bits());
+        assert_eq!(e.mean_output_tokens.to_bits(), s.mean_output_tokens.to_bits());
+        assert_eq!(e.itl_mean.to_bits(), s.itl_mean.to_bits());
+        // Quantiles carry the sketch bound. The sketch's half-bin guarantee
+        // is against the q-th *sample*; the exact path interpolates between
+        // ranks, so allow a slightly generous margin.
+        let bound = crate::telemetry::LogHist::relative_error() * 1.6 + 0.02;
+        for (name, ex, sx) in [("ttft_p50", e.ttft_p50, s.ttft_p50),
+                               ("ttft_p99", e.ttft_p99, s.ttft_p99),
+                               ("itl_p99", e.itl_p99, s.itl_p99)] {
+            assert!(
+                (sx - ex).abs() <= bound * ex.abs(),
+                "{name}: sketch {sx} vs exact {ex} (bound {bound})"
+            );
+        }
+        // Per-class summaries work in sketch mode too.
+        assert_eq!(
+            sk.summary_class(RequestClass::Batch).count,
+            exact.summary_class(RequestClass::Batch).count
+        );
+    }
+
+    #[test]
+    fn sketch_merge_matches_single_accumulator() {
+        let outs: Vec<RequestOutcome> = (0..500)
+            .map(|i| outcome(0.1 + i as f64 * 0.01, 0.05, RequestClass::Interactive))
+            .collect();
+        let mut whole = SummaryAccum::sketch();
+        let (mut a, mut b) = (SummaryAccum::sketch(), SummaryAccum::sketch());
+        for (i, o) in outs.iter().enumerate() {
+            whole.push(o);
+            if i % 2 == 0 { a.push(o) } else { b.push(o) }
+        }
+        a.merge(&b);
+        let (w, m) = (whole.summary(), a.summary());
+        // Sketch merges are elementwise — any split is bit-identical.
+        assert_eq!(w.ttft_p50.to_bits(), m.ttft_p50.to_bits());
+        assert_eq!(w.ttft_p99.to_bits(), m.ttft_p99.to_bits());
+        assert_eq!(w.itl_mean.to_bits(), m.itl_mean.to_bits());
+        assert_eq!(w.count, m.count);
+    }
+
+    #[test]
+    #[should_panic(expected = "exact and sketch")]
+    fn mixed_mode_merge_panics() {
+        let mut a = SummaryAccum::default();
+        a.merge(&SummaryAccum::sketch());
+    }
+
+    #[test]
+    fn accumulator_codec_roundtrips_both_modes() {
+        for sketch in [false, true] {
+            let mut acc = if sketch { SummaryAccum::sketch() } else { SummaryAccum::default() };
+            for i in 0..97 {
+                let class = if i % 4 == 0 { RequestClass::Batch } else { RequestClass::Interactive };
+                acc.push(&outcome(0.3 + i as f64 * 0.21, 0.01 + i as f64 * 1e-3, class));
+            }
+            let mut bytes = Vec::new();
+            acc.encode(&mut bytes);
+            let mut d = crate::util::binio::Dec::new(&bytes);
+            let back = SummaryAccum::decode(&mut d).unwrap();
+            assert!(d.is_empty());
+            assert_eq!(back.is_sketch(), sketch);
+            let (a, b) = (acc.summary(), back.summary());
+            assert_eq!(a.count, b.count);
+            for (x, y) in [(a.ttft_p50, b.ttft_p50), (a.ttft_p99, b.ttft_p99),
+                           (a.itl_mean, b.itl_mean), (a.itl_p99, b.itl_p99),
+                           (a.slo_attainment, b.slo_attainment)] {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            assert_eq!(acc.mttr().to_bits(), back.mttr().to_bits());
+        }
     }
 
     fn outcome_bin(completion: f64, met: bool) -> RequestOutcome {

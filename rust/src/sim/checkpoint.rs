@@ -1,0 +1,416 @@
+//! Checkpoint file format for long simulations: the versioned header, the
+//! run-identity metadata block, and binary codecs for the core domain
+//! types (requests, work items, outcomes, instance states) that every
+//! layer's `encode_state`/`decode_state` builds on.
+//!
+//! # Format
+//!
+//! A checkpoint is a single binary blob (written atomically — see
+//! `util::binio::atomic_write`):
+//!
+//! ```text
+//! MAGIC (u32) | VERSION (u32) | CheckpointMeta | driver state |
+//! global-policy blob | per-shard blob × n_models
+//! ```
+//!
+//! The driver (`sim::cluster`) assembles and consumes the container; each
+//! shard serializes *all* of its live state — event queue (every pending
+//! event plus the sequence counter), instance slab (full engine state per
+//! instance, including its performance profile), SoA work queues, local
+//! policy blob, streaming accumulators, outcome buffer, fault-RNG state,
+//! and every counter. Nothing is recomputed on resume except structures
+//! that are pure functions of the config (e.g. the fault plan's schedule,
+//! whose RNG state is then overwritten from the file).
+//!
+//! # Versioning
+//!
+//! `VERSION` bumps on any layout change; the reader rejects a mismatched
+//! version (or magic) outright — resuming across layouts would silently
+//! corrupt a run, and checkpoints are cheap to regenerate. The
+//! [`CheckpointMeta`] block pins run identity (scenario, seed, scale,
+//! policy, GPU budget): `--resume` refuses a file recorded under different
+//! run parameters, because the rebuilt arrival source and policy objects
+//! would diverge from the serialized state.
+//!
+//! # Bit-exactness
+//!
+//! Everything is fixed-width little-endian with `f64`s as raw bits, so a
+//! resumed run replays the identical float state (including the ±∞
+//! sentinels in instance and shard clocks). `tests/event_core.rs` pins
+//! digest equality of interrupted+resumed vs uninterrupted runs.
+
+use std::path::PathBuf;
+
+use anyhow::{ensure, Result};
+
+use crate::core::{
+    InstanceClass, PerfProfile, Request, RequestClass, RequestId, RequestOutcome, Slo,
+};
+use crate::sim::instance::WorkItem;
+use crate::sim::policy::InstanceState;
+use crate::util::binio::{
+    put_bool, put_f64, put_str, put_u32, put_u64, put_u8, put_usize, Dec,
+};
+
+/// "CHKP" — checkpoint container magic.
+pub const MAGIC: u32 = 0x43484b50;
+/// Layout version; bump on ANY change to any `encode_state` in the tree.
+pub const VERSION: u32 = 1;
+
+pub fn write_header(out: &mut Vec<u8>) {
+    put_u32(out, MAGIC);
+    put_u32(out, VERSION);
+}
+
+pub fn read_header(d: &mut Dec) -> Result<()> {
+    let magic = d.u32()?;
+    ensure!(magic == MAGIC, "not a checkpoint file (magic {magic:#x})");
+    let version = d.u32()?;
+    ensure!(
+        version == VERSION,
+        "checkpoint version {version} != supported {VERSION}; re-run without --resume"
+    );
+    Ok(())
+}
+
+/// Run-identity block: the parameters that must match for a resume to be
+/// meaningful (the arrival source, policy, and budget are rebuilt from
+/// them, then fast-forwarded / overwritten with serialized state).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointMeta {
+    pub scenario: String,
+    pub seed: u64,
+    pub scale: f64,
+    pub policy: String,
+    pub gpus: u32,
+}
+
+impl CheckpointMeta {
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        put_str(out, &self.scenario);
+        put_u64(out, self.seed);
+        put_f64(out, self.scale);
+        put_str(out, &self.policy);
+        put_u32(out, self.gpus);
+    }
+
+    pub fn decode(d: &mut Dec) -> Result<CheckpointMeta> {
+        Ok(CheckpointMeta {
+            scenario: d.str_()?,
+            seed: d.u64()?,
+            scale: d.f64()?,
+            policy: d.str_()?,
+            gpus: d.u32()?,
+        })
+    }
+
+    /// Refuse to resume under different run parameters.
+    pub fn ensure_matches(&self, expected: &CheckpointMeta) -> Result<()> {
+        ensure!(
+            self == expected,
+            "checkpoint was recorded for a different run:\n  file: {self:?}\n  args: {expected:?}"
+        );
+        Ok(())
+    }
+}
+
+/// Checkpointing configuration carried in `SimConfig` (`None` = off).
+#[derive(Debug, Clone)]
+pub struct CheckpointConfig {
+    /// Where to write (atomically, overwritten at each cadence point).
+    pub path: PathBuf,
+    /// Simulated-seconds between checkpoints (aligned to tick barriers).
+    pub every: f64,
+    /// Run identity embedded in the file and validated on resume.
+    pub meta: CheckpointMeta,
+}
+
+// ---- core-type codecs -----------------------------------------------------
+
+pub fn put_class(out: &mut Vec<u8>, c: RequestClass) {
+    put_u8(out, matches!(c, RequestClass::Batch) as u8);
+}
+
+pub fn get_class(d: &mut Dec) -> Result<RequestClass> {
+    Ok(match d.u8()? {
+        0 => RequestClass::Interactive,
+        _ => RequestClass::Batch,
+    })
+}
+
+pub fn put_instance_class(out: &mut Vec<u8>, c: InstanceClass) {
+    put_u8(
+        out,
+        match c {
+            InstanceClass::Interactive => 0,
+            InstanceClass::Mixed => 1,
+            InstanceClass::Batch => 2,
+        },
+    );
+}
+
+pub fn get_instance_class(d: &mut Dec) -> Result<InstanceClass> {
+    Ok(match d.u8()? {
+        0 => InstanceClass::Interactive,
+        1 => InstanceClass::Mixed,
+        2 => InstanceClass::Batch,
+        t => anyhow::bail!("bad instance class tag {t}"),
+    })
+}
+
+pub fn put_instance_state(out: &mut Vec<u8>, s: InstanceState) {
+    match s {
+        InstanceState::Loading { ready_at } => {
+            put_u8(out, 0);
+            put_f64(out, ready_at);
+        }
+        InstanceState::Running => put_u8(out, 1),
+        InstanceState::Draining => put_u8(out, 2),
+        InstanceState::Failed { at } => {
+            put_u8(out, 3);
+            put_f64(out, at);
+        }
+    }
+}
+
+pub fn get_instance_state(d: &mut Dec) -> Result<InstanceState> {
+    Ok(match d.u8()? {
+        0 => InstanceState::Loading { ready_at: d.f64()? },
+        1 => InstanceState::Running,
+        2 => InstanceState::Draining,
+        3 => InstanceState::Failed { at: d.f64()? },
+        t => anyhow::bail!("bad instance state tag {t}"),
+    })
+}
+
+pub fn put_request(out: &mut Vec<u8>, r: &Request) {
+    put_u64(out, r.id.0);
+    put_class(out, r.class);
+    put_f64(out, r.slo.ttft);
+    put_f64(out, r.slo.itl);
+    put_f64(out, r.arrival);
+    put_u32(out, r.input_tokens);
+    put_u32(out, r.output_tokens);
+    put_usize(out, r.model);
+}
+
+pub fn get_request(d: &mut Dec) -> Result<Request> {
+    Ok(Request {
+        id: RequestId(d.u64()?),
+        class: get_class(d)?,
+        slo: Slo {
+            ttft: d.f64()?,
+            itl: d.f64()?,
+        },
+        arrival: d.f64()?,
+        input_tokens: d.u32()?,
+        output_tokens: d.u32()?,
+        model: d.usize()?,
+    })
+}
+
+pub fn put_work_item(out: &mut Vec<u8>, w: &WorkItem) {
+    put_request(out, &w.req);
+    put_f64(out, w.generated);
+    put_u64(out, w.ctx_done);
+    put_bool(out, w.first_token.is_some());
+    if let Some(t) = w.first_token {
+        put_f64(out, t);
+    }
+    put_f64(out, w.last_emit);
+    put_f64(out, w.max_gap);
+    put_u32(out, w.preemptions);
+    put_u32(out, w.retries);
+    put_bool(out, w.kv_saved);
+}
+
+pub fn get_work_item(d: &mut Dec) -> Result<WorkItem> {
+    Ok(WorkItem {
+        req: get_request(d)?,
+        generated: d.f64()?,
+        ctx_done: d.u64()?,
+        first_token: if d.bool()? { Some(d.f64()?) } else { None },
+        last_emit: d.f64()?,
+        max_gap: d.f64()?,
+        preemptions: d.u32()?,
+        retries: d.u32()?,
+        kv_saved: d.bool()?,
+    })
+}
+
+/// Serialized per instance rather than rebuilt from the model spec: an
+/// instance's profile can carry a per-run serving configuration, and the
+/// bit-exactness contract is simplest when nothing is re-derived.
+pub fn put_profile(out: &mut Vec<u8>, p: &PerfProfile) {
+    put_f64(out, p.decode_base);
+    put_f64(out, p.decode_per_seq);
+    put_f64(out, p.decode_per_ctx_token);
+    put_f64(out, p.prefill_base);
+    put_f64(out, p.prefill_per_token);
+    put_u64(out, p.kv_capacity_tokens);
+    put_f64(out, p.load_time);
+    put_f64(out, p.restore_per_token);
+    put_f64(out, p.tokens_per_step);
+    put_u32(out, p.max_prefill_tokens_per_step);
+}
+
+pub fn get_profile(d: &mut Dec) -> Result<PerfProfile> {
+    Ok(PerfProfile {
+        decode_base: d.f64()?,
+        decode_per_seq: d.f64()?,
+        decode_per_ctx_token: d.f64()?,
+        prefill_base: d.f64()?,
+        prefill_per_token: d.f64()?,
+        kv_capacity_tokens: d.u64()?,
+        load_time: d.f64()?,
+        restore_per_token: d.f64()?,
+        tokens_per_step: d.f64()?,
+        max_prefill_tokens_per_step: d.u32()?,
+    })
+}
+
+pub fn put_outcome(out: &mut Vec<u8>, o: &RequestOutcome) {
+    put_u64(out, o.id.0);
+    put_class(out, o.class);
+    put_f64(out, o.slo.ttft);
+    put_f64(out, o.slo.itl);
+    put_usize(out, o.model);
+    put_f64(out, o.arrival);
+    put_f64(out, o.first_token);
+    put_f64(out, o.completion);
+    put_u32(out, o.input_tokens);
+    put_u32(out, o.output_tokens);
+    put_f64(out, o.mean_itl);
+    put_f64(out, o.max_itl);
+    put_u32(out, o.preemptions);
+}
+
+pub fn get_outcome(d: &mut Dec) -> Result<RequestOutcome> {
+    Ok(RequestOutcome {
+        id: RequestId(d.u64()?),
+        class: get_class(d)?,
+        slo: Slo {
+            ttft: d.f64()?,
+            itl: d.f64()?,
+        },
+        model: d.usize()?,
+        arrival: d.f64()?,
+        first_token: d.f64()?,
+        completion: d.f64()?,
+        input_tokens: d.u32()?,
+        output_tokens: d.u32()?,
+        mean_itl: d.f64()?,
+        max_itl: d.f64()?,
+        preemptions: d.u32()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_rejects_wrong_magic_and_version() {
+        let mut good = Vec::new();
+        write_header(&mut good);
+        assert!(read_header(&mut Dec::new(&good)).is_ok());
+
+        let mut bad_magic = Vec::new();
+        put_u32(&mut bad_magic, 0xDEAD);
+        put_u32(&mut bad_magic, VERSION);
+        assert!(read_header(&mut Dec::new(&bad_magic)).is_err());
+
+        let mut bad_ver = Vec::new();
+        put_u32(&mut bad_ver, MAGIC);
+        put_u32(&mut bad_ver, VERSION + 1);
+        let err = read_header(&mut Dec::new(&bad_ver)).unwrap_err();
+        assert!(err.to_string().contains("version"));
+    }
+
+    #[test]
+    fn meta_mismatch_is_an_error() {
+        let a = CheckpointMeta {
+            scenario: "crash-midrush".into(),
+            seed: 11,
+            scale: 0.1,
+            policy: "chiron".into(),
+            gpus: 50,
+        };
+        let mut b = a.clone();
+        assert!(a.ensure_matches(&b).is_ok());
+        b.seed = 12;
+        assert!(a.ensure_matches(&b).is_err());
+
+        let mut bytes = Vec::new();
+        a.encode(&mut bytes);
+        let back = CheckpointMeta::decode(&mut Dec::new(&bytes)).unwrap();
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn request_and_outcome_roundtrip_bit_exact() {
+        let r = Request {
+            id: RequestId(u64::MAX - 1),
+            class: RequestClass::Batch,
+            slo: Slo { ttft: 3600.0, itl: 2.0 },
+            arrival: 12345.6789,
+            input_tokens: 4096,
+            output_tokens: 777,
+            model: 3,
+        };
+        let mut b = Vec::new();
+        put_request(&mut b, &r);
+        let q = get_request(&mut Dec::new(&b)).unwrap();
+        assert_eq!(q.id, r.id);
+        assert_eq!(q.class, r.class);
+        assert_eq!(q.arrival.to_bits(), r.arrival.to_bits());
+        assert_eq!(q.model, r.model);
+
+        let mut w = WorkItem::fresh(r.clone());
+        w.generated = 1.5;
+        w.first_token = Some(-0.0);
+        w.kv_saved = true;
+        let mut wb = Vec::new();
+        put_work_item(&mut wb, &w);
+        let w2 = get_work_item(&mut Dec::new(&wb)).unwrap();
+        assert_eq!(w2.first_token.unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(w2.generated.to_bits(), w.generated.to_bits());
+        assert!(w2.kv_saved);
+
+        let o = RequestOutcome {
+            id: r.id,
+            class: r.class,
+            slo: r.slo,
+            model: r.model,
+            arrival: r.arrival,
+            first_token: 12350.0,
+            completion: 12400.25,
+            input_tokens: r.input_tokens,
+            output_tokens: r.output_tokens,
+            mean_itl: 0.0625,
+            max_itl: 0.25,
+            preemptions: 2,
+        };
+        let mut ob = Vec::new();
+        put_outcome(&mut ob, &o);
+        let mut dec = Dec::new(&ob);
+        let o2 = get_outcome(&mut dec).unwrap();
+        assert!(dec.is_empty());
+        assert_eq!(o2.completion.to_bits(), o.completion.to_bits());
+        assert_eq!(o2.preemptions, o.preemptions);
+    }
+
+    #[test]
+    fn instance_state_roundtrip() {
+        for s in [
+            InstanceState::Loading { ready_at: 5.25 },
+            InstanceState::Running,
+            InstanceState::Draining,
+            InstanceState::Failed { at: 99.5 },
+        ] {
+            let mut b = Vec::new();
+            put_instance_state(&mut b, s);
+            assert_eq!(get_instance_state(&mut Dec::new(&b)).unwrap(), s);
+        }
+    }
+}

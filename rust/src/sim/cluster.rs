@@ -21,6 +21,8 @@ use crate::core::{
     InstanceId, ModelSpec, Request, RequestClass, RequestOutcome, ServingConfig, Time,
 };
 use crate::metrics::SummaryAccum;
+use crate::sim::checkpoint::{self, CheckpointConfig, CheckpointMeta};
+use crate::sim::events::EventCore;
 use crate::sim::instance::SimInstance;
 use crate::sim::policy::{Action, ClusterView, GlobalPolicy, InstanceView, QueueStats};
 use crate::sim::shard::ModelShard;
@@ -29,8 +31,12 @@ use crate::telemetry::{
     merge_events, CounterSample, DecisionRecord, EventKind, LatencyHists, SimEvent,
     TelemetryConfig, TraceData,
 };
+use crate::util::binio::{
+    atomic_write, put_bool, put_bytes, put_f64, put_u32, put_u64, put_usize, Dec,
+};
 use crate::util::parallel;
-use crate::workload::{ArrivalSource, FaultSpec, Trace, TraceSource};
+use crate::workload::{ArrivalSource, FaultSpec, ModelFaults, Trace, TraceSource};
+use crate::{log_info, log_warn};
 
 /// Simulator configuration.
 #[derive(Debug, Clone)]
@@ -75,6 +81,23 @@ pub struct SimConfig {
     /// on digests). When any layer is on the run assembles a
     /// [`TraceData`] into `SimReport::trace`.
     pub telemetry: TelemetryConfig,
+    /// Event-queue implementation for the shards: the hierarchical calendar
+    /// queue (default) or the original binary heap. Both pop the identical
+    /// `(t, pri, seq)` order — digests are bit-identical; the knob exists
+    /// for A/B benching (`--event-core`).
+    pub event_core: EventCore,
+    /// Use O(1)-memory log-bucketed sketches for the streaming latency
+    /// summaries instead of exact sample vectors. With `keep_outcomes =
+    /// false` this makes per-request memory O(1): counters and ~80-bin
+    /// histograms only. Quantiles carry the sketch's bounded relative
+    /// error (~15.5%); counts/means/attainment stay exact.
+    pub sketch_metrics: bool,
+    /// Periodic checkpointing (`None` = off). Written atomically at the
+    /// first tick barrier at or past each cadence point.
+    pub checkpoint: Option<CheckpointConfig>,
+    /// Emit a `log_info!` progress line every this many simulated seconds
+    /// (0 = off). Costs one atomic load per barrier at `CHIRON_LOG=off`.
+    pub progress_every: f64,
 }
 
 impl SimConfig {
@@ -93,6 +116,10 @@ impl SimConfig {
             keep_outcomes: true,
             faults: FaultSpec::default(),
             telemetry: TelemetryConfig::off(),
+            event_core: EventCore::default(),
+            sketch_metrics: false,
+            checkpoint: None,
+            progress_every: 0.0,
         }
     }
 
@@ -302,6 +329,10 @@ pub struct Simulation<'p> {
     pending_arrival: Option<Request>,
     /// The source is exhausted (no pending arrival remains).
     arrivals_done: bool,
+    /// Total `Some` draws taken from the source (including the pending
+    /// lookahead). Checkpoints record it so resume can fast-forward a
+    /// source rebuilt from the spec to the identical stream position.
+    drawn: u64,
     /// Exact expected total when the source knows it up front.
     total_hint: Option<usize>,
     ticks: u64,
@@ -330,7 +361,9 @@ impl<'p> Simulation<'p> {
         let nm = cfg.models.len();
         let total_hint = source.total_hint();
         let mut shards: Vec<ModelShard> = (0..nm)
-            .map(|m| ModelShard::new(m, policy.make_local(m)))
+            .map(|m| {
+                ModelShard::new(m, policy.make_local(m), cfg.event_core, cfg.sketch_metrics)
+            })
             .collect();
         if !cfg.faults.is_default() {
             // Fork the fault plan per model, in model order (the RNG fork
@@ -350,6 +383,7 @@ impl<'p> Simulation<'p> {
         } else {
             parallel::shards()
         };
+        let sketch = cfg.sketch_metrics;
         Simulation {
             cfg,
             policy,
@@ -362,6 +396,11 @@ impl<'p> Simulation<'p> {
             last_gpu_change: 0.0,
             report: SimReport {
                 total_requests: total_hint.unwrap_or(0),
+                stats: if sketch {
+                    SummaryAccum::sketch()
+                } else {
+                    SummaryAccum::default()
+                },
                 ..Default::default()
             },
             merged_views: Vec::new(),
@@ -370,6 +409,7 @@ impl<'p> Simulation<'p> {
             source,
             pending_arrival: None,
             arrivals_done: false,
+            drawn: 0,
             total_hint,
             ticks: 0,
             global_events: Vec::new(),
@@ -640,14 +680,23 @@ impl<'p> Simulation<'p> {
         }
     }
 
+    /// One counted draw from the source (the count is checkpoint state —
+    /// resume fast-forwards a rebuilt source by exactly `drawn` draws).
+    fn draw_arrival(&mut self) -> Option<Request> {
+        let r = self.source.next_request();
+        if r.is_some() {
+            self.drawn += 1;
+        } else {
+            self.arrivals_done = true;
+        }
+        r
+    }
+
     /// Pull arrivals with `arrival <= horizon` from the source into their
     /// model shards' epoch FIFOs.
     fn demux_arrivals(&mut self, horizon: Time) {
         if self.pending_arrival.is_none() && !self.arrivals_done {
-            self.pending_arrival = self.source.next_request();
-            if self.pending_arrival.is_none() {
-                self.arrivals_done = true;
-            }
+            self.pending_arrival = self.draw_arrival();
         }
         while let Some(r) = &self.pending_arrival {
             if r.arrival > horizon {
@@ -655,9 +704,8 @@ impl<'p> Simulation<'p> {
             }
             let r = self.pending_arrival.take().unwrap();
             self.shards[r.model].push_arrival(r);
-            self.pending_arrival = self.source.next_request();
+            self.pending_arrival = self.draw_arrival();
             if self.pending_arrival.is_none() {
-                self.arrivals_done = true;
                 break;
             }
         }
@@ -810,9 +858,23 @@ impl<'p> Simulation<'p> {
         self.drain_decisions();
         let warm = self.cfg.warm_bootstrap;
         self.apply_actions(boot, warm);
+        let first_tick = self.cfg.tick_interval;
+        self.run_loop(first_tick)
+    }
 
+    /// The epoch loop, entered either from a fresh bootstrap (`run`) or
+    /// from restored checkpoint state (`resume_sim_source`) at the barrier
+    /// after the saved one. Checkpoint writes and progress lines happen
+    /// only at barriers and touch no simulation state, so their cadence
+    /// cannot perturb digests.
+    fn run_loop(mut self, first_tick: Time) -> SimReport {
         let cap = self.cfg.max_sim_time;
-        let mut next_tick = self.cfg.tick_interval;
+        let mut next_tick = first_tick;
+        let ckpt_every = self.cfg.checkpoint.as_ref().map_or(0.0, |c| c.every);
+        let mut next_ckpt = self.now + ckpt_every;
+        let mut next_progress = self.now + self.cfg.progress_every;
+        let wall_start = std::time::Instant::now();
+        let sim_start = self.now;
         loop {
             // Epoch (prev_tick, next_tick]: deliver this window's arrivals
             // (never past the cap — the monolithic loop stopped before
@@ -895,9 +957,200 @@ impl<'p> Simulation<'p> {
                 }
                 return self.finish(end);
             }
+
+            // Progress reporting (info level; one atomic load when off).
+            if self.cfg.progress_every > 0.0
+                && crate::util::log::enabled(crate::util::log::Level::Info)
+                && self.now >= next_progress
+            {
+                let wall = wall_start.elapsed().as_secs_f64();
+                let rate = if wall > 0.0 {
+                    (self.now - sim_start) / wall
+                } else {
+                    0.0
+                };
+                let eta = if rate > 0.0 {
+                    (cap - self.now).max(0.0) / rate
+                } else {
+                    0.0
+                };
+                log_info!(
+                    "t={:.0}s arrived={} completed={} gpus={} {:.0}x realtime eta<={:.0}s",
+                    self.now,
+                    self.arrived(),
+                    self.completed(),
+                    self.gpus_used,
+                    rate,
+                    eta
+                );
+                next_progress = self.now + self.cfg.progress_every;
+            }
+
+            // Periodic checkpoint (atomic write; failure warns, run goes on).
+            if ckpt_every > 0.0 && self.now >= next_ckpt {
+                self.write_checkpoint();
+                next_ckpt = self.now + ckpt_every;
+            }
+
             next_tick += self.cfg.tick_interval;
         }
     }
+
+    // ---- checkpoint / resume --------------------------------------------
+
+    /// Serialize driver-level state (everything `finish` and the loop need
+    /// that shards don't own). Shard and policy state follow separately in
+    /// the container.
+    fn encode_driver(&self, out: &mut Vec<u8>) {
+        put_f64(out, self.now);
+        put_u64(out, self.ticks);
+        put_u32(out, self.gpus_used);
+        put_f64(out, self.gpu_seconds);
+        put_f64(out, self.last_gpu_change);
+        put_u32(out, self.next_instance);
+        put_usize(out, self.owner.len());
+        for &m in &self.owner {
+            put_u32(out, m as u32);
+        }
+        put_u64(out, self.report.scale_ups);
+        put_u64(out, self.report.scale_downs);
+        put_usize(out, self.report.timeline.len());
+        for p in &self.report.timeline {
+            encode_timeline_point(out, p);
+        }
+        put_usize(out, self.report.gpu_trace.len());
+        for &(t, g) in &self.report.gpu_trace {
+            put_f64(out, t);
+            put_u32(out, g);
+        }
+        put_u64(out, self.drawn);
+        put_bool(out, self.pending_arrival.is_some());
+        if let Some(r) = &self.pending_arrival {
+            checkpoint::put_request(out, r);
+        }
+        put_bool(out, self.arrivals_done);
+    }
+
+    /// Write the full checkpoint container to the configured path. A write
+    /// failure warns and the run continues — losing a checkpoint is
+    /// recoverable, losing a week of simulation to an I/O hiccup is not.
+    fn write_checkpoint(&self) {
+        let Some(ck) = &self.cfg.checkpoint else {
+            return;
+        };
+        let mut out = Vec::new();
+        checkpoint::write_header(&mut out);
+        ck.meta.encode(&mut out);
+        self.encode_driver(&mut out);
+        let mut blob = Vec::new();
+        self.policy.save_state(&mut blob);
+        put_bytes(&mut out, &blob);
+        for s in &self.shards {
+            s.encode_state(&mut out);
+        }
+        match atomic_write(&ck.path, &out) {
+            Ok(()) => log_info!(
+                "checkpoint t={:.0}s -> {} ({} bytes)",
+                self.now,
+                ck.path.display(),
+                out.len()
+            ),
+            Err(e) => log_warn!("checkpoint write failed: {e:#}"),
+        }
+    }
+
+    /// Restore driver, policy, and shard state from a checkpoint body (the
+    /// header and meta block have already been read and validated).
+    fn restore(&mut self, d: &mut Dec) -> anyhow::Result<()> {
+        self.now = d.f64()?;
+        self.ticks = d.u64()?;
+        self.gpus_used = d.u32()?;
+        self.gpu_seconds = d.f64()?;
+        self.last_gpu_change = d.f64()?;
+        self.next_instance = d.u32()?;
+        let n_owner = d.usize()?;
+        self.owner.clear();
+        for _ in 0..n_owner {
+            self.owner.push(d.u32()? as u16);
+        }
+        self.report.scale_ups = d.u64()?;
+        self.report.scale_downs = d.u64()?;
+        let n_tl = d.usize()?;
+        for _ in 0..n_tl {
+            self.report.timeline.push(decode_timeline_point(d)?);
+        }
+        let n_gt = d.usize()?;
+        for _ in 0..n_gt {
+            self.report.gpu_trace.push((d.f64()?, d.u32()?));
+        }
+        self.drawn = d.u64()?;
+        let pending = if d.bool()? {
+            Some(checkpoint::get_request(d)?)
+        } else {
+            None
+        };
+        self.arrivals_done = d.bool()?;
+        // Fast-forward the rebuilt source through the draws the
+        // interrupted run consumed; the stream then continues
+        // bit-identically from the saved position.
+        for _ in 0..self.drawn {
+            let _ = self.source.next_request();
+        }
+        self.pending_arrival = pending;
+        let blob = d.bytes()?.to_vec();
+        self.policy.load_state(&blob)?;
+        let nm = self.cfg.models.len();
+        let plans: Vec<ModelFaults> = if self.cfg.faults.is_default() {
+            (0..nm).map(|_| ModelFaults::default()).collect()
+        } else {
+            self.cfg.faults.model_plans(nm)
+        };
+        let mut shards = Vec::with_capacity(nm);
+        for (m, plan) in plans.into_iter().enumerate() {
+            shards.push(ModelShard::decode_state(
+                d,
+                m,
+                self.policy.make_local(m),
+                self.cfg.event_core,
+                self.cfg.sketch_metrics,
+                plan,
+            )?);
+        }
+        self.shards = shards;
+        Ok(())
+    }
+}
+
+fn encode_timeline_point(out: &mut Vec<u8>, p: &TimelinePoint) {
+    put_f64(out, p.t);
+    put_u32(out, p.gpus_used);
+    put_u32(out, p.instances_interactive);
+    put_u32(out, p.instances_mixed);
+    put_u32(out, p.instances_batch);
+    put_usize(out, p.queued_batch);
+    put_usize(out, p.queued_interactive);
+    put_u32(out, p.running_requests);
+    put_f64(out, p.mean_max_batch);
+    put_f64(out, p.mean_kv_util);
+    put_usize(out, p.failed);
+    put_usize(out, p.shed);
+}
+
+fn decode_timeline_point(d: &mut Dec) -> anyhow::Result<TimelinePoint> {
+    Ok(TimelinePoint {
+        t: d.f64()?,
+        gpus_used: d.u32()?,
+        instances_interactive: d.u32()?,
+        instances_mixed: d.u32()?,
+        instances_batch: d.u32()?,
+        queued_batch: d.usize()?,
+        queued_interactive: d.usize()?,
+        running_requests: d.u32()?,
+        mean_max_batch: d.f64()?,
+        mean_kv_util: d.f64()?,
+        failed: d.usize()?,
+        shed: d.usize()?,
+    })
 }
 
 /// Convenience: run a trace under a policy and config.
@@ -912,4 +1165,38 @@ pub fn run_sim_source(
     policy: &mut dyn GlobalPolicy,
 ) -> SimReport {
     Simulation::from_source(cfg, source, policy).run()
+}
+
+/// Resume a checkpointed run: `source` and `policy` must be rebuilt from
+/// the same spec/seed/config the original run used (the checkpoint's meta
+/// block pins them when `cfg.checkpoint` carries the expected identity).
+/// The report of the resumed run is bit-identical to the uninterrupted one.
+pub fn resume_sim_source(
+    cfg: SimConfig,
+    source: Box<dyn ArrivalSource>,
+    policy: &mut dyn GlobalPolicy,
+    bytes: &[u8],
+) -> anyhow::Result<SimReport> {
+    anyhow::ensure!(
+        !cfg.telemetry.enabled(),
+        "--resume does not support telemetry traces"
+    );
+    let mut d = Dec::new(bytes);
+    checkpoint::read_header(&mut d)?;
+    let meta = CheckpointMeta::decode(&mut d)?;
+    if let Some(ck) = &cfg.checkpoint {
+        meta.ensure_matches(&ck.meta)?;
+    }
+    let tick = cfg.tick_interval;
+    let mut sim = Simulation::from_source(cfg, source, policy);
+    sim.restore(&mut d)?;
+    anyhow::ensure!(
+        d.is_empty(),
+        "checkpoint: {} trailing bytes after shard state",
+        d.remaining()
+    );
+    // The checkpoint was written at barrier `sim.now`, after that barrier's
+    // actions; the loop re-enters at the next barrier.
+    let next_tick = sim.now + tick;
+    Ok(sim.run_loop(next_tick))
 }

@@ -566,6 +566,111 @@ impl SimInstance {
     pub fn write_view(&self, out: &mut InstanceView) {
         *out = self.view();
     }
+
+    // ---- checkpointing ---------------------------------------------------
+
+    /// Serialize the complete engine state (schema versioned by
+    /// `sim::checkpoint`): every field, including the per-instance profile
+    /// and the in-flight-step flag — a resumed instance continues exactly
+    /// where it stopped (its pending StepDone event rides in the shard's
+    /// serialized event queue).
+    pub fn encode_state(&self, out: &mut Vec<u8>) {
+        use crate::sim::checkpoint as ck;
+        use crate::util::binio::*;
+        put_u32(out, self.id.0);
+        ck::put_instance_class(out, self.class);
+        put_usize(out, self.model);
+        ck::put_profile(out, &self.profile);
+        ck::put_instance_state(out, self.state);
+        put_u32(out, self.max_batch);
+        put_usize(out, self.running.len());
+        for r in &self.running {
+            ck::put_request(out, &r.req);
+            put_f64(out, r.generated);
+            put_u64(out, r.ctx_tokens);
+            put_opt_f64(out, r.first_token);
+            put_f64(out, r.last_emit);
+            put_f64(out, r.max_gap);
+            put_u32(out, r.preemptions);
+            put_u32(out, r.retries);
+            put_u32(out, r.pending_prefill);
+            put_bool(out, r.restore);
+        }
+        put_usize(out, self.local_queue.len());
+        for w in &self.local_queue {
+            ck::put_work_item(out, w);
+        }
+        put_u64(out, self.kv_tokens);
+        put_u32(out, self.n_running_interactive);
+        put_f64(out, self.min_itl_cache);
+        put_bool(out, self.step_in_flight);
+        put_f64(out, self.last_step_time);
+        put_f64(out, self.last_decode_time);
+        put_opt_f64(out, self.throughput.get());
+        put_u64(out, self.steps);
+        put_f64(out, self.created_at);
+        put_f64(out, self.total_tokens);
+    }
+
+    /// Rebuild an instance from [`encode_state`](Self::encode_state) bytes.
+    pub fn decode_state(d: &mut crate::util::binio::Dec) -> anyhow::Result<SimInstance> {
+        use crate::sim::checkpoint as ck;
+        let id = InstanceId(d.u32()?);
+        let class = ck::get_instance_class(d)?;
+        let model = d.usize()?;
+        let profile = ck::get_profile(d)?;
+        let state = ck::get_instance_state(d)?;
+        let max_batch = d.u32()?;
+        let n_running = d.usize()?;
+        let mut running = Vec::with_capacity(n_running.min(1 << 20));
+        for _ in 0..n_running {
+            running.push(Running {
+                req: ck::get_request(d)?,
+                generated: d.f64()?,
+                ctx_tokens: d.u64()?,
+                first_token: d.opt_f64()?,
+                last_emit: d.f64()?,
+                max_gap: d.f64()?,
+                preemptions: d.u32()?,
+                retries: d.u32()?,
+                pending_prefill: d.u32()?,
+                restore: d.bool()?,
+            });
+        }
+        let n_queued = d.usize()?;
+        let mut local_queue = VecDeque::with_capacity(n_queued.min(1 << 20));
+        for _ in 0..n_queued {
+            local_queue.push_back(ck::get_work_item(d)?);
+        }
+        let kv_tokens = d.u64()?;
+        let n_running_interactive = d.u32()?;
+        let min_itl_cache = d.f64()?;
+        let step_in_flight = d.bool()?;
+        let last_step_time = d.f64()?;
+        let last_decode_time = d.f64()?;
+        let mut throughput = Ewma::new(0.3);
+        throughput.set_value(d.opt_f64()?);
+        Ok(SimInstance {
+            id,
+            class,
+            model,
+            profile,
+            state,
+            max_batch,
+            running,
+            local_queue,
+            kv_tokens,
+            n_running_interactive,
+            min_itl_cache,
+            step_in_flight,
+            last_step_time,
+            last_decode_time,
+            throughput,
+            steps: d.u64()?,
+            created_at: d.f64()?,
+            total_tokens: d.f64()?,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -797,6 +902,43 @@ mod tests {
         assert!(matches!(inst.state, InstanceState::Failed { .. }));
         assert_eq!(inst.admission_headroom(), 0, "a carcass admits nothing");
         assert_eq!(inst.ready_at(), None);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_mid_step_is_bit_identical() {
+        let mut inst = instance(3);
+        inst.enqueue(WorkItem::fresh(req(1, RequestClass::Interactive, 64, 30)));
+        inst.enqueue(WorkItem::fresh(req(2, RequestClass::Batch, 32, 50)));
+        inst.enqueue(WorkItem::fresh(req(3, RequestClass::Batch, 32, 50)));
+        inst.enqueue(WorkItem::fresh(req(4, RequestClass::Batch, 32, 50)));
+        // Warm up a couple of steps so EWMA/caches/counters are non-trivial,
+        // then leave a step in flight — the hardest state to resume.
+        let d0 = inst.begin_step(0.0).unwrap();
+        inst.finish_step(d0, d0);
+        let d1 = inst.begin_step(d0).unwrap();
+
+        let mut bytes = Vec::new();
+        inst.encode_state(&mut bytes);
+        let mut dec = crate::util::binio::Dec::new(&bytes);
+        let mut back = SimInstance::decode_state(&mut dec).unwrap();
+        assert!(dec.is_empty(), "trailing bytes after instance state");
+
+        assert!(back.step_in_flight);
+        assert_eq!(back.kv_tokens(), inst.kv_tokens());
+        assert_eq!(back.queued_len(), inst.queued_len());
+        assert_eq!(back.min_itl_slo().to_bits(), inst.min_itl_slo().to_bits());
+        // Drive both copies through the same future; every observable must
+        // match bit for bit.
+        let now = d0 + d1;
+        let (ra, rb) = (inst.finish_step(now, d1), back.finish_step(now, d1));
+        assert_eq!(ra.completed.len(), rb.completed.len());
+        assert_eq!(ra.tokens_emitted.to_bits(), rb.tokens_emitted.to_bits());
+        let (va, vb) = (inst.view(), back.view());
+        assert_eq!(va.kv_tokens, vb.kv_tokens);
+        assert_eq!(va.throughput_tokens.to_bits(), vb.throughput_tokens.to_bits());
+        assert_eq!(va.steps, vb.steps);
+        let (da, db) = (inst.begin_step(now), back.begin_step(now));
+        assert_eq!(da.map(f64::to_bits), db.map(f64::to_bits));
     }
 
     #[test]

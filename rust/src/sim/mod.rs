@@ -11,14 +11,19 @@
 //! `crate::server`. See `README.md` in this directory for the shard/barrier
 //! design and the determinism argument.
 
+pub mod checkpoint;
 pub mod cluster;
+pub mod events;
 pub mod instance;
 pub mod policy;
 pub mod shard;
+pub mod soa;
 
 pub use cluster::{
-    run_sim, run_sim_source, SimConfig, SimReport, Simulation, TimelinePoint, MAX_BATCH_CLAMP,
+    resume_sim_source, run_sim, run_sim_source, SimConfig, SimReport, Simulation, TimelinePoint,
+    MAX_BATCH_CLAMP,
 };
+pub use events::EventCore;
 pub use instance::{Evicted, SimInstance, StepResult, WorkItem};
 pub use policy::{
     Action, ClusterView, GlobalPolicy, InstanceState, InstanceView, LocalPolicy, ModelView,

@@ -238,6 +238,18 @@ pub trait LocalPolicy: Send {
     /// Local autoscaler (paper Algorithm 1): called after each engine step
     /// of `inst`; returns the new max batch size if it should change.
     fn on_step(&mut self, inst: &InstanceView, now: Time) -> Option<u32>;
+
+    /// Checkpoint hook: serialize mutable policy state into `out`. Stateless
+    /// policies (the default) write nothing; a policy with estimator or
+    /// decision state must override both hooks for `--resume` to be
+    /// bit-identical.
+    fn save_state(&self, _out: &mut Vec<u8>) {}
+
+    /// Checkpoint hook: restore state written by
+    /// [`save_state`](Self::save_state).
+    fn load_state(&mut self, _bytes: &[u8]) -> anyhow::Result<()> {
+        Ok(())
+    }
 }
 
 /// The cross-model (global) half of an autoscaling policy: bootstrap and
@@ -294,6 +306,18 @@ pub trait GlobalPolicy {
     /// view they are handed).
     fn drain_decisions(&mut self) -> Vec<crate::telemetry::DecisionRecord> {
         Vec::new()
+    }
+
+    /// Checkpoint hook: serialize mutable global state (estimators,
+    /// output-length statistics) into `out`. Stateless policies write
+    /// nothing. Checkpointed runs are restricted to policies that implement
+    /// the pair faithfully (see `--resume` validation in the CLI).
+    fn save_state(&self, _out: &mut Vec<u8>) {}
+
+    /// Checkpoint hook: restore state written by
+    /// [`save_state`](Self::save_state).
+    fn load_state(&mut self, _bytes: &[u8]) -> anyhow::Result<()> {
+        Ok(())
     }
 }
 

@@ -13,23 +13,33 @@
 //! Event ordering within a shard replicates the monolithic loop exactly:
 //! events are ordered by `(time, priority, sequence)` with Crash(0) <
 //! Ready(1) < StepDone(2) < Arrival(3) < barrier-Tick(4). Arrivals are not
-//! heap entries: the driver demuxes the streaming `ArrivalSource` into a
+//! queue entries: the driver demuxes the streaming `ArrivalSource` into a
 //! per-shard FIFO for each epoch, and the shard merges that FIFO with its
-//! heap (heap events win time ties because their priorities are lower).
-//! Crashes outrank everything at a timestamp so a failure at time t is
-//! visible to every same-instant routing/step decision — the rule that
-//! keeps fault runs bit-identical at any shard/job count.
+//! event queue (queued events win time ties because their priorities are
+//! lower). Crashes outrank everything at a timestamp so a failure at time
+//! t is visible to every same-instant routing/step decision — the rule
+//! that keeps fault runs bit-identical at any shard/job count.
+//!
+//! The event queue itself is pluggable (`sim::events`): a hierarchical
+//! calendar queue by default (amortized O(1) push/pop at simulation event
+//! densities), with the original binary heap kept behind
+//! `SimConfig::event_core` for A/B benching. Both pop the identical
+//! `(t, pri, seq)` sequence. The model-level work queues store their items
+//! column-wise (`sim::soa::WorkQueue`) so million-deep batch backlogs keep
+//! admission peeks and deadline sampling on dense scalar lanes.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::core::{InstanceClass, InstanceId, Request, RequestClass, RequestOutcome, Time};
 use crate::metrics::SummaryAccum;
+use crate::sim::events::{Ev, EventCore, EventQueue, HeapEv, PRI_ARRIVAL};
 use crate::sim::instance::{SimInstance, WorkItem};
 use crate::sim::policy::{
     InstanceState, InstanceView, LocalPolicy, ModelView, QueueStats, QueuedReq, Route,
 };
+use crate::sim::soa::WorkQueue;
 use crate::telemetry::{EventKind, EventSink, LatencyHists, SimEvent};
+use crate::util::binio::{put_bool, put_f64, put_u32, put_u64, put_u8, put_usize, Dec};
 use crate::workload::ModelFaults;
 
 /// Hard clamp on policy-requested batch sizes (the paper's observed maximum
@@ -42,58 +52,10 @@ const QUEUE_SAMPLE: usize = 2_048;
 /// Slab sentinel: this `InstanceId` has no live slot in this shard.
 const SLOT_NONE: u32 = u32::MAX;
 
-/// Shard-local event. The periodic autoscaler tick is not an event here —
-/// it is the epoch boundary the driver advances every shard to.
-#[derive(Debug)]
-enum Ev {
-    StepDone { inst: InstanceId, duration: Time },
-    Ready(InstanceId),
-    /// Fault injection. `Some(id)`: an MTBF-sampled lifetime expiry — fires
-    /// only if that instance still exists and is Running. `None`: a
-    /// scheduled [`CrashEvent`](crate::workload::CrashEvent) — the victim
-    /// (lowest-id Running instance, falling back to Draining) is chosen at
-    /// fire time.
-    Crash { inst: Option<InstanceId> },
-}
-
-/// Heap entry: payload carried inline, ordered by (time, priority,
-/// sequence) so Crash precedes Ready precedes StepDone at equal timestamps
-/// and ties stay deterministic (sequence = shard-local insertion order).
-struct HeapEv {
-    t: f64,
-    pri: u8,
-    seq: u64,
-    ev: Ev,
-}
-impl PartialEq for HeapEv {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.pri == other.pri && self.seq == other.seq
-    }
-}
-impl Eq for HeapEv {}
-impl PartialOrd for HeapEv {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for HeapEv {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.t
-            .partial_cmp(&other.t)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(self.pri.cmp(&other.pri))
-            .then(self.seq.cmp(&other.seq))
-    }
-}
-
-/// Event priority of arrivals relative to heap events (Crash=0, Ready=1,
-/// StepDone=2).
-const PRI_ARRIVAL: u8 = 3;
-
 /// One model's event-loop shard.
 pub struct ModelShard {
     pub model: usize,
-    heap: BinaryHeap<Reverse<HeapEv>>,
+    events: EventQueue,
     seq: u64,
     now: Time,
     instances: Vec<SimInstance>,
@@ -102,9 +64,9 @@ pub struct ModelShard {
     /// `SLOT_NONE`). One u32 per instance ever created is trivial memory
     /// and keeps the O(1) id→slot lookup of the monolithic loop.
     slots: Vec<u32>,
-    // This model's global queues.
-    q_batch: VecDeque<WorkItem>,
-    q_inter: VecDeque<WorkItem>,
+    // This model's global queues (column-wise; see `sim::soa`).
+    q_batch: WorkQueue,
+    q_inter: WorkQueue,
     /// The per-model half of the policy hierarchy.
     local: Box<dyn LocalPolicy>,
     /// Cached per-instance views, index-aligned with `instances`.
@@ -162,16 +124,16 @@ pub struct ModelShard {
 }
 
 impl ModelShard {
-    pub fn new(model: usize, local: Box<dyn LocalPolicy>) -> Self {
+    pub fn new(model: usize, local: Box<dyn LocalPolicy>, core: EventCore, sketch: bool) -> Self {
         ModelShard {
             model,
-            heap: BinaryHeap::new(),
+            events: EventQueue::new(core),
             seq: 0,
             now: 0.0,
             instances: Vec::new(),
             slots: Vec::new(),
-            q_batch: VecDeque::new(),
-            q_inter: VecDeque::new(),
+            q_batch: WorkQueue::new(),
+            q_inter: WorkQueue::new(),
             local,
             views_cache: Vec::new(),
             views_dirty_idx: Vec::new(),
@@ -179,7 +141,11 @@ impl ModelShard {
             arrivals: VecDeque::new(),
             outcomes: Vec::new(),
             observed_upto: 0,
-            stats: SummaryAccum::default(),
+            stats: if sketch {
+                SummaryAccum::sketch()
+            } else {
+                SummaryAccum::default()
+            },
             arrived: 0,
             arrived_interactive: 0,
             completed: 0,
@@ -238,7 +204,7 @@ impl ModelShard {
             Ev::Ready(_) => 1,
             Ev::StepDone { .. } => 2,
         };
-        self.heap.push(Reverse(HeapEv { t, pri, seq, ev }));
+        self.events.push(HeapEv { t, pri, seq, ev });
     }
 
     /// Deliver one epoch arrival (driver-side demux; must be time-ordered).
@@ -258,7 +224,7 @@ impl ModelShard {
     /// Timestamp of the next unprocessed event, if any (end-time candidate
     /// when the simulated-time cap cuts an epoch short).
     pub fn next_event_time(&self) -> Option<Time> {
-        let heap_t = self.heap.peek().map(|Reverse(e)| e.t);
+        let heap_t = self.events.peek_time();
         let arr_t = self.arrivals.front().map(|r| r.arrival);
         match (heap_t, arr_t) {
             (Some(h), Some(a)) => Some(h.min(a)),
@@ -272,7 +238,7 @@ impl ModelShard {
     /// with other shards.
     pub fn run_epoch(&mut self, until: Time) {
         loop {
-            let heap_key = self.heap.peek().map(|Reverse(e)| (e.t, e.pri));
+            let heap_key = self.events.peek_key();
             let arr_t = self.arrivals.front().map(|r| r.arrival);
             let take_arrival = match (arr_t, heap_key) {
                 (None, None) => break,
@@ -329,7 +295,7 @@ impl ModelShard {
                     self.route_item(WorkItem::fresh(req));
                 }
             } else {
-                let Reverse(HeapEv { t, ev, .. }) = self.heap.pop().unwrap();
+                let HeapEv { t, ev, .. } = self.events.pop().unwrap();
                 self.now = t;
                 self.last_event = t;
                 match ev {
@@ -671,7 +637,7 @@ impl ModelShard {
         let qb = &self.q_batch;
         stats.batch_len = qb.len();
         stats.interactive_len = self.q_inter.len();
-        stats.batch_oldest_arrival = qb.front().map(|w| w.req.arrival);
+        stats.batch_oldest_arrival = qb.front_arrival();
         let stride = (qb.len() / QUEUE_SAMPLE).max(1);
         stats.stride = stride;
         stats.arrived_total = self.arrived as u64;
@@ -682,7 +648,7 @@ impl ModelShard {
         stats.batch_deadline_sample.clear();
         let mut i = 0;
         while i < qb.len() {
-            stats.batch_deadline_sample.push(qb[i].req.ttft_deadline());
+            stats.batch_deadline_sample.push(qb.ttft_deadline(i));
             i += stride;
         }
     }
@@ -867,8 +833,8 @@ impl ModelShard {
                     RequestClass::Batch => &mut self.q_batch,
                     RequestClass::Interactive => &mut self.q_inter,
                 };
-                let Some(front) = q.front() else { break };
-                if !inst.kv_admittable(front.req.input_tokens) {
+                let Some(input) = q.front_input_tokens() else { break };
+                if !inst.kv_admittable(input) {
                     break;
                 }
                 let item = q.pop_front().unwrap();
@@ -946,4 +912,188 @@ impl ModelShard {
             RequestClass::Interactive => self.q_inter.push_back(item),
         }
     }
+
+    // ---- checkpoint ------------------------------------------------------
+
+    /// Serialize this shard's complete dynamic state (barrier-time only).
+    /// Telemetry layers (`sink`, `hists`) are excluded — checkpointed runs
+    /// reject `--trace` so there is nothing to save.
+    pub fn encode_state(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.seq);
+        put_usize(out, self.events.len());
+        self.events.for_each(|e| put_heap_ev(out, e));
+        put_f64(out, self.now);
+        put_usize(out, self.instances.len());
+        for inst in &self.instances {
+            inst.encode_state(out);
+        }
+        put_usize(out, self.slots.len());
+        for &s in &self.slots {
+            put_u32(out, s);
+        }
+        for q in [&self.q_batch, &self.q_inter] {
+            put_usize(out, q.len());
+            for i in 0..q.len() {
+                crate::sim::checkpoint::put_work_item(out, &q.item(i));
+            }
+        }
+        let mut blob = Vec::new();
+        self.local.save_state(&mut blob);
+        crate::util::binio::put_bytes(out, &blob);
+        put_usize(out, self.outcomes.len());
+        for o in &self.outcomes {
+            crate::sim::checkpoint::put_outcome(out, o);
+        }
+        put_usize(out, self.observed_upto);
+        self.stats.encode(out);
+        put_usize(out, self.arrived);
+        put_usize(out, self.arrived_interactive);
+        put_usize(out, self.completed);
+        put_f64(out, self.total_tokens);
+        put_f64(out, self.last_completion);
+        put_f64(out, self.last_event);
+        put_usize(out, self.pending_retires.len());
+        for &t in &self.pending_retires {
+            put_f64(out, t);
+        }
+        // The arrival FIFO is drained by the epoch that precedes every
+        // barrier, but serialize it anyway — the format stays valid even if
+        // checkpoint cadence ever moves off the barrier.
+        put_usize(out, self.arrivals.len());
+        for r in &self.arrivals {
+            crate::sim::checkpoint::put_request(out, r);
+        }
+        for w in self.faults.rng.state() {
+            put_u64(out, w);
+        }
+        put_usize(out, self.load_attempts.len());
+        for &a in &self.load_attempts {
+            put_u32(out, a);
+        }
+        put_usize(out, self.failed);
+        put_usize(out, self.shed);
+        put_u64(out, self.retries_total);
+    }
+
+    /// Rebuild a shard from `encode_state` bytes. `faults` is the plan
+    /// rebuilt from the scenario spec; its RNG is overwritten with the saved
+    /// stream position, and — unlike [`set_faults`](Self::set_faults) — no
+    /// crash events are scheduled (the live ones are already in the
+    /// serialized event queue).
+    pub fn decode_state(
+        d: &mut Dec,
+        model: usize,
+        local: Box<dyn LocalPolicy>,
+        core: EventCore,
+        sketch: bool,
+        mut faults: ModelFaults,
+    ) -> anyhow::Result<ModelShard> {
+        let mut shard = ModelShard::new(model, local, core, sketch);
+        shard.seq = d.u64()?;
+        let n_ev = d.usize()?;
+        for _ in 0..n_ev {
+            let ev = get_heap_ev(d)?;
+            shard.events.push(ev);
+        }
+        shard.now = d.f64()?;
+        let n_inst = d.usize()?;
+        for _ in 0..n_inst {
+            shard.instances.push(SimInstance::decode_state(d)?);
+        }
+        let n_slots = d.usize()?;
+        shard.slots = Vec::with_capacity(n_slots);
+        for _ in 0..n_slots {
+            shard.slots.push(d.u32()?);
+        }
+        for q in [&mut shard.q_batch, &mut shard.q_inter] {
+            let n = d.usize()?;
+            for _ in 0..n {
+                q.push_back(crate::sim::checkpoint::get_work_item(d)?);
+            }
+        }
+        let blob = d.bytes()?.to_vec();
+        shard.local.load_state(&blob)?;
+        let n_out = d.usize()?;
+        shard.outcomes.reserve(n_out);
+        for _ in 0..n_out {
+            shard.outcomes.push(crate::sim::checkpoint::get_outcome(d)?);
+        }
+        shard.observed_upto = d.usize()?;
+        shard.stats = SummaryAccum::decode(d)?;
+        shard.arrived = d.usize()?;
+        shard.arrived_interactive = d.usize()?;
+        shard.completed = d.usize()?;
+        shard.total_tokens = d.f64()?;
+        shard.last_completion = d.f64()?;
+        shard.last_event = d.f64()?;
+        let n_ret = d.usize()?;
+        for _ in 0..n_ret {
+            shard.pending_retires.push(d.f64()?);
+        }
+        let n_arr = d.usize()?;
+        for _ in 0..n_arr {
+            shard
+                .arrivals
+                .push_back(crate::sim::checkpoint::get_request(d)?);
+        }
+        let rng_state = [d.u64()?, d.u64()?, d.u64()?, d.u64()?];
+        faults.rng = crate::util::rng::Rng::from_state(rng_state);
+        shard.faults = faults;
+        let n_att = d.usize()?;
+        for _ in 0..n_att {
+            shard.load_attempts.push(d.u32()?);
+        }
+        shard.failed = d.usize()?;
+        shard.shed = d.usize()?;
+        shard.retries_total = d.u64()?;
+        shard.views_all_dirty = true;
+        Ok(shard)
+    }
+}
+
+/// Event codec: full `(t, pri, seq)` key plus payload. Decode re-pushes
+/// into a fresh queue; pop order depends only on the key, so the rebuilt
+/// queue pops the identical sequence regardless of internal layout.
+fn put_heap_ev(out: &mut Vec<u8>, e: &HeapEv) {
+    put_f64(out, e.t);
+    put_u8(out, e.pri);
+    put_u64(out, e.seq);
+    match e.ev {
+        Ev::StepDone { inst, duration } => {
+            put_u8(out, 0);
+            put_u32(out, inst.0);
+            put_f64(out, duration);
+        }
+        Ev::Ready(id) => {
+            put_u8(out, 1);
+            put_u32(out, id.0);
+        }
+        Ev::Crash { inst } => {
+            put_u8(out, 2);
+            put_bool(out, inst.is_some());
+            put_u32(out, inst.map_or(0, |i| i.0));
+        }
+    }
+}
+
+fn get_heap_ev(d: &mut Dec) -> anyhow::Result<HeapEv> {
+    let t = d.f64()?;
+    let pri = d.u8()?;
+    let seq = d.u64()?;
+    let ev = match d.u8()? {
+        0 => Ev::StepDone {
+            inst: InstanceId(d.u32()?),
+            duration: d.f64()?,
+        },
+        1 => Ev::Ready(InstanceId(d.u32()?)),
+        2 => {
+            let some = d.bool()?;
+            let id = d.u32()?;
+            Ev::Crash {
+                inst: some.then_some(InstanceId(id)),
+            }
+        }
+        k => anyhow::bail!("checkpoint: unknown event tag {k}"),
+    };
+    Ok(HeapEv { t, pri, seq, ev })
 }

@@ -1,0 +1,226 @@
+//! Minimal binary encoding for checkpoint files.
+//!
+//! The checkpoint contract is *bit-exact* resume: every `f64` must round-trip
+//! to the identical bit pattern (including negative zero, infinities used as
+//! sentinels, and NaN payloads), which rules text formats out. Encoding is
+//! little-endian, fixed-width, and self-describing only through the caller's
+//! schema — the versioned header in `sim::checkpoint` is what guards against
+//! reading a file with a different layout.
+//!
+//! Writers use the free `put_*` functions on a plain `Vec<u8>` so nested
+//! encoders compose without lifetimes; readers use [`Dec`], a cursor that
+//! returns `anyhow` errors (never panics) on truncated or malformed input.
+
+use anyhow::{ensure, Result};
+use std::io::Write;
+use std::path::Path;
+
+#[inline]
+pub fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+#[inline]
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_usize(buf: &mut Vec<u8>, v: usize) {
+    put_u64(buf, v as u64);
+}
+
+/// f64 as raw bits — the whole point of the binary format.
+#[inline]
+pub fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    put_u64(buf, v.to_bits());
+}
+
+#[inline]
+pub fn put_bool(buf: &mut Vec<u8>, v: bool) {
+    buf.push(v as u8);
+}
+
+pub fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u64(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+pub fn put_opt_f64(buf: &mut Vec<u8>, v: Option<f64>) {
+    match v {
+        Some(x) => {
+            put_bool(buf, true);
+            put_f64(buf, x);
+        }
+        None => put_bool(buf, false),
+    }
+}
+
+/// A length-prefixed nested blob (policy state, per-shard state, …) so a
+/// reader that does not understand the contents can still skip it.
+pub fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) {
+    put_u64(buf, b.len() as u64);
+    buf.extend_from_slice(b);
+}
+
+/// Decoding cursor over a byte slice. Every accessor checks bounds and
+/// returns an error on truncation — a corrupt checkpoint must fail loudly,
+/// never resume from garbage.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        // `pos <= len` always holds, so this subtraction cannot wrap (a
+        // `pos + n` form could, on an adversarial length prefix).
+        ensure!(
+            n <= self.buf.len() - self.pos,
+            "checkpoint truncated: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn str_(&mut self) -> Result<String> {
+        let n = self.usize()?;
+        let b = self.take(n)?;
+        Ok(std::str::from_utf8(b)?.to_string())
+    }
+
+    pub fn opt_f64(&mut self) -> Result<Option<f64>> {
+        Ok(if self.bool()? { Some(self.f64()?) } else { None })
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.usize()?;
+        self.take(n)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+}
+
+/// Write `bytes` to `path` atomically: write a sibling temp file, fsync, then
+/// rename over the target. A crash mid-write leaves either the old checkpoint
+/// or the new one — never a torn file.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = match path.file_name().and_then(|n| n.to_str()) {
+        Some(name) => path.with_file_name(format!(".{name}.tmp")),
+        None => anyhow::bail!("checkpoint path {path:?} has no file name"),
+    };
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types_bit_exact() {
+        let mut b = Vec::new();
+        put_u8(&mut b, 7);
+        put_u32(&mut b, 0xDEADBEEF);
+        put_u64(&mut b, u64::MAX - 3);
+        put_usize(&mut b, 42);
+        put_f64(&mut b, -0.0);
+        put_f64(&mut b, f64::INFINITY);
+        put_f64(&mut b, f64::NEG_INFINITY);
+        put_f64(&mut b, 1.0e-300);
+        put_bool(&mut b, true);
+        put_str(&mut b, "week-diurnal-100m");
+        put_opt_f64(&mut b, None);
+        put_opt_f64(&mut b, Some(3.5));
+        put_bytes(&mut b, &[1, 2, 3]);
+
+        let mut d = Dec::new(&b);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(d.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(d.usize().unwrap(), 42);
+        assert_eq!(d.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(d.f64().unwrap(), f64::INFINITY);
+        assert_eq!(d.f64().unwrap(), f64::NEG_INFINITY);
+        assert_eq!(d.f64().unwrap(), 1.0e-300);
+        assert!(d.bool().unwrap());
+        assert_eq!(d.str_().unwrap(), "week-diurnal-100m");
+        assert_eq!(d.opt_f64().unwrap(), None);
+        assert_eq!(d.opt_f64().unwrap(), Some(3.5));
+        assert_eq!(d.bytes().unwrap(), &[1, 2, 3]);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn truncation_errors_instead_of_panicking() {
+        let mut b = Vec::new();
+        put_u64(&mut b, 123);
+        let mut d = Dec::new(&b[..4]);
+        assert!(d.u64().is_err());
+        // A huge length prefix must not allocate or wrap.
+        let mut b2 = Vec::new();
+        put_u64(&mut b2, u64::MAX);
+        let mut d2 = Dec::new(&b2);
+        assert!(d2.bytes().is_err());
+        assert!(Dec::new(&b2).str_().is_err());
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join("chiron-binio-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.bin");
+        atomic_write(&path, b"first").unwrap();
+        atomic_write(&path, b"second").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        assert!(!dir.join(".ckpt.bin.tmp").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -4,6 +4,7 @@
 //! dependency closure (no rand / serde / clap / criterion / proptest).
 
 pub mod bench;
+pub mod binio;
 pub mod check;
 pub mod cli;
 pub mod json;

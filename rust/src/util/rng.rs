@@ -42,6 +42,17 @@ impl Rng {
         Rng::new(self.next_u64())
     }
 
+    /// The raw 256-bit state, for checkpointing. Restoring it with
+    /// [`Rng::from_state`] continues the exact output sequence.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator mid-sequence from a saved [`Rng::state`].
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Rng { s }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;

@@ -62,6 +62,16 @@ impl Welford {
         self.sample_variance().sqrt()
     }
 
+    /// Raw `(n, mean, m2)` state, for checkpointing.
+    pub fn state(&self) -> (u64, f64, f64) {
+        (self.n, self.mean, self.m2)
+    }
+
+    /// Rebuild an accumulator from a saved [`Welford::state`], bit-exactly.
+    pub fn from_state(n: u64, mean: f64, m2: f64) -> Self {
+        Welford { n, mean, m2 }
+    }
+
     /// Merge another accumulator (parallel Welford / Chan et al.).
     pub fn merge(&mut self, other: &Welford) {
         if other.n == 0 {
@@ -113,6 +123,13 @@ impl Ewma {
     pub fn reset(&mut self) {
         self.value = None;
     }
+
+    /// Overwrite the smoothed value (checkpoint restore; pair with
+    /// [`Ewma::get`] on save — `alpha` is configuration, rebuilt by the
+    /// owner, so only the value round-trips).
+    pub fn set_value(&mut self, v: Option<f64>) {
+        self.value = v;
+    }
 }
 
 /// Exact percentile summary over a collected sample (the experiment harness
@@ -148,6 +165,18 @@ impl Percentiles {
     /// before querying percentiles.
     pub fn values(&self) -> &[f64] {
         &self.xs
+    }
+
+    /// Raw `(samples, sorted)` state, for checkpointing. The sort flag
+    /// matters: restoring an unsorted series as unsorted keeps later
+    /// percentile math bit-identical to the uninterrupted run.
+    pub fn raw(&self) -> (&[f64], bool) {
+        (&self.xs, self.sorted)
+    }
+
+    /// Rebuild a summary from a saved [`Percentiles::raw`] state.
+    pub fn from_raw(xs: Vec<f64>, sorted: bool) -> Self {
+        Percentiles { xs, sorted }
     }
 
     fn ensure_sorted(&mut self) {

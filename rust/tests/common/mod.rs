@@ -6,6 +6,22 @@
 
 use chiron::core::{Request, RequestOutcome};
 use chiron::sim::SimReport;
+use chiron::workload::scenario::ScenarioSpec;
+
+/// Catalog-loop scaling for whole-catalog integration tests: `base` for
+/// ordinary entries, but the 100M-request `week-diurnal-100m` scale target
+/// gets a much deeper cut (2e-5 → ~2k requests) plus a 4-simulated-hour cap
+/// so the loops stay fast. The nightly dumps after the cap simply never
+/// arrive and are accounted as unfinished.
+pub fn test_scale(spec: ScenarioSpec, base: f64) -> ScenarioSpec {
+    if spec.name == "week-diurnal-100m" {
+        let mut s = spec.scaled(2e-5);
+        s.max_time = 4.0 * 3600.0;
+        s
+    } else {
+        spec.scaled(base)
+    }
+}
 
 const FNV_OFFSET: u64 = 0xcbf29ce484222325;
 const FNV_PRIME: u64 = 0x100000001b3;

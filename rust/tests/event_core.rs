@@ -1,0 +1,222 @@
+//! Event-core, sketch-metrics, and checkpoint/resume acceptance tests.
+//!
+//! The calendar-queue tentpole replaces the per-shard `BinaryHeap` with a
+//! hierarchical timing wheel; these tests pin the three contracts that make
+//! that (and the 100M-request scale features riding on it) safe:
+//!
+//!  1. **Bit-identical event cores** — for every catalog scenario, the
+//!     calendar queue and the binary heap produce FNV-digest-equal reports,
+//!     at shard worker counts 1 and 4.
+//!  2. **Checkpoint/resume is invisible** — a run that is killed mid-flight
+//!     and resumed from its last checkpoint digests identically to an
+//!     uninterrupted run, and a checkpoint refuses to resume under
+//!     different run parameters.
+//!  3. **Sketch metrics are bounded-error** — with `sketch_metrics` on, the
+//!     simulation itself is unperturbed (outcome digests equal) and the
+//!     log-histogram quantiles land within the sketch's documented relative
+//!     error of the exact percentiles.
+
+mod common;
+
+use chiron::experiments::common::{make_policy, PolicyKind};
+use chiron::metrics::Summary;
+use chiron::sim::checkpoint::{CheckpointConfig, CheckpointMeta};
+use chiron::sim::{resume_sim_source, run_sim_source, EventCore, SimConfig, SimReport};
+use chiron::telemetry::LogHist;
+use chiron::workload::scenario::{by_name, catalog, ScenarioSpec};
+
+use crate::common::{digest_report, test_scale};
+
+fn run_spec(
+    spec: &ScenarioSpec,
+    seed: u64,
+    core: EventCore,
+    shard_workers: usize,
+    sketch: bool,
+) -> SimReport {
+    let models = spec.model_specs().unwrap();
+    let mut cfg = SimConfig::new(spec.gpus, models.clone());
+    cfg.max_sim_time = spec.max_time;
+    cfg.shard_workers = shard_workers;
+    cfg.faults = spec.faults.clone();
+    cfg.event_core = core;
+    cfg.sketch_metrics = sketch;
+    let mut p = make_policy(&PolicyKind::Chiron, &models);
+    run_sim_source(cfg, Box::new(spec.source(seed)), p.as_mut())
+}
+
+#[test]
+fn whole_catalog_digest_identical_calendar_vs_heap() {
+    // Acceptance: the calendar queue preserves the exact (t, pri, seq)
+    // total order, so for every catalog scenario the two cores are
+    // byte-identical — sequentially and through the worker pool.
+    for spec in catalog() {
+        let spec = test_scale(spec, 0.005);
+        let heap = run_spec(&spec, 11, EventCore::Heap, 1, false);
+        assert!(
+            !heap.outcomes.is_empty(),
+            "{}: scenario must complete work",
+            spec.name
+        );
+        let want = digest_report(&heap);
+        for (core, workers) in [
+            (EventCore::Calendar, 1usize),
+            (EventCore::Heap, 4),
+            (EventCore::Calendar, 4),
+        ] {
+            let got = run_spec(&spec, 11, core, workers, false);
+            assert_eq!(
+                want,
+                digest_report(&got),
+                "{}: heap/shards=1 vs {}/shards={workers} must be byte-identical",
+                spec.name,
+                core.as_str()
+            );
+        }
+    }
+}
+
+/// Build the checkpoint identity block the CLI would construct for a
+/// `scenario run --checkpoint` invocation of `spec`.
+fn meta_for(spec: &ScenarioSpec, seed: u64, scale: f64) -> CheckpointMeta {
+    CheckpointMeta {
+        scenario: spec.name.clone(),
+        seed,
+        scale,
+        policy: "chiron".into(),
+        gpus: spec.gpus,
+    }
+}
+
+fn ckpt_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("chiron-test-{}-{tag}.ckpt", std::process::id()))
+}
+
+#[test]
+fn checkpoint_kill_resume_digest_equals_uninterrupted() {
+    // crash-midrush: scheduled crashes, MTBF churn, and flaky loads make
+    // this the hardest state to round-trip (fault RNG mid-stream, retry
+    // counters, pending retirements). Kill the run mid-rush by capping
+    // max_sim_time, then resume from the last checkpoint with the full
+    // horizon — the final report must digest-equal an uninterrupted run.
+    let spec = by_name("crash-midrush").unwrap().scaled(0.05);
+    let models = spec.model_specs().unwrap();
+    let seed = 11u64;
+    for workers in [1usize, 4] {
+        let path = ckpt_path(&format!("resume-w{workers}"));
+        // 60 s cadence: the first checkpoint lands between the scheduled
+        // crashes (60/75/90 s), while evicted work is still being retried.
+        let ck = CheckpointConfig {
+            path: path.clone(),
+            every: 60.0,
+            meta: meta_for(&spec, seed, 0.05),
+        };
+        let mk_cfg = |max_time: f64, ck: Option<CheckpointConfig>| {
+            let mut cfg = SimConfig::new(spec.gpus, models.clone());
+            cfg.max_sim_time = max_time;
+            cfg.shard_workers = workers;
+            cfg.faults = spec.faults.clone();
+            cfg.checkpoint = ck;
+            cfg
+        };
+
+        // Uninterrupted reference.
+        let mut p = make_policy(&PolicyKind::Chiron, &models);
+        let full = run_sim_source(
+            mk_cfg(spec.max_time, None),
+            Box::new(spec.source(seed)),
+            p.as_mut(),
+        );
+        assert!(!full.outcomes.is_empty(), "reference run must complete work");
+
+        // "Killed" run: checkpoints every 120 sim-seconds, dies at t=400
+        // (after the three scheduled crashes at 60/75/90 s).
+        let mut p = make_policy(&PolicyKind::Chiron, &models);
+        let _killed = run_sim_source(
+            mk_cfg(400.0, Some(ck.clone())),
+            Box::new(spec.source(seed)),
+            p.as_mut(),
+        );
+        let bytes = std::fs::read(&path).expect("killed run must leave a checkpoint");
+
+        // Resume with the full horizon.
+        let mut p = make_policy(&PolicyKind::Chiron, &models);
+        let resumed = resume_sim_source(
+            mk_cfg(spec.max_time, Some(ck.clone())),
+            Box::new(spec.source(seed)),
+            p.as_mut(),
+            &bytes,
+        )
+        .expect("resume must succeed");
+        assert_eq!(
+            digest_report(&full),
+            digest_report(&resumed),
+            "shards={workers}: interrupted+resumed must be bit-identical to uninterrupted"
+        );
+
+        // A checkpoint refuses to resume under different run parameters.
+        let mut wrong = ck.clone();
+        wrong.meta.seed = seed + 1;
+        let mut p = make_policy(&PolicyKind::Chiron, &models);
+        let err = resume_sim_source(
+            mk_cfg(spec.max_time, Some(wrong)),
+            Box::new(spec.source(seed)),
+            p.as_mut(),
+            &bytes,
+        );
+        assert!(err.is_err(), "mismatched meta must be rejected");
+
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn sketch_metrics_do_not_perturb_and_bound_quantile_error() {
+    // Sketch mode only swaps the metric accumulators: the simulation's
+    // outcome stream (and every counter the digest covers) is untouched,
+    // and the log-histogram quantiles stay within the sketch's bin error
+    // of the exact percentiles.
+    let spec = by_name("flash-crowd").unwrap().scaled(0.05);
+    let exact = run_spec(&spec, 7, EventCore::Calendar, 1, false);
+    let sketch = run_spec(&spec, 7, EventCore::Calendar, 1, true);
+    assert_eq!(
+        digest_report(&exact),
+        digest_report(&sketch),
+        "sketch metrics must not perturb the simulation"
+    );
+    let es = Summary::of_report(&exact);
+    let ss = Summary::of_report(&sketch);
+    assert_eq!(es.count, ss.count);
+    assert_eq!(
+        es.slo_attainment, ss.slo_attainment,
+        "SLO attainment is counter-based and stays exact in sketch mode"
+    );
+    // Bin-mid quantiles are within one half-bin of the true value; allow a
+    // second half-bin for the nearest-rank vs interpolated-rank difference.
+    let bound = 2.0 * LogHist::relative_error() + 0.02;
+    for (name, e, s) in [
+        ("ttft_p50", es.ttft_p50, ss.ttft_p50),
+        ("ttft_p99", es.ttft_p99, ss.ttft_p99),
+        ("itl_p99", es.itl_p99, ss.itl_p99),
+    ] {
+        assert!(
+            e > 0.0 && s > 0.0,
+            "{name}: quantiles must be populated (exact {e}, sketch {s})"
+        );
+        let rel = (s - e).abs() / e;
+        assert!(
+            rel <= bound,
+            "{name}: sketch {s} vs exact {e} — relative error {rel:.4} > bound {bound:.4}"
+        );
+    }
+}
+
+#[test]
+fn week_scenario_is_exactly_100m_requests() {
+    // The scale target's composition is load-bearing for the benches and
+    // docs: 72M diurnal chat + 21M steady API + 7 nightly 1M dumps.
+    let spec = by_name("week-diurnal-100m").unwrap();
+    assert_eq!(spec.total_requests(), Some(100_000_000));
+    assert_eq!(spec.streams.len(), 9);
+    assert_eq!(spec.max_time, 8.0 * 24.0 * 3600.0);
+}

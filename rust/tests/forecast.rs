@@ -111,7 +111,7 @@ fn estimators_track_phased_poisson_step() {
 fn predictive_digest_identical_across_shard_workers_whole_catalog() {
     let kind = predictive_chiron(45.0);
     for spec in catalog() {
-        let spec = spec.scaled(0.004);
+        let spec = common::test_scale(spec, 0.004);
         let mono = run_spec(&spec, &kind, 11, 1, None, false);
         let sharded = run_spec(&spec, &kind, 11, 4, None, false);
         assert!(

@@ -123,7 +123,7 @@ fn every_catalog_scenario_simulates_when_scaled_down() {
     // Smoke: each catalog entry drives the simulator end-to-end at 0.5%
     // scale under Chiron and completes with sane accounting.
     for spec in catalog() {
-        let spec = spec.scaled(0.005);
+        let spec = common::test_scale(spec, 0.005);
         let models = spec.model_specs().unwrap();
         let mut cfg = SimConfig::new(spec.gpus, models.clone());
         cfg.max_sim_time = spec.max_time;

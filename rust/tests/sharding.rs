@@ -44,7 +44,7 @@ fn whole_catalog_digest_identical_across_shard_workers() {
     // digest-pinned, in sim/README.md: exact for single-model runs,
     // report-accumulation-order-different for multi-model ones.
     for spec in catalog() {
-        let spec = spec.scaled(0.005);
+        let spec = common::test_scale(spec, 0.005);
         let inline = run_spec(&spec, 11, 1, false);
         assert!(
             !inline.outcomes.is_empty(),

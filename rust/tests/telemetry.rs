@@ -46,7 +46,7 @@ fn telemetry_on_vs_off_digests_identical_across_catalog() {
     // retry / shed / reclamation emission paths are all covered.
     let mut saw_fault_scenario = 0;
     for spec in catalog() {
-        let spec = spec.scaled(0.005);
+        let spec = common::test_scale(spec, 0.005);
         if !spec.faults.is_inert() {
             saw_fault_scenario += 1;
         }
