@@ -12,7 +12,8 @@ use chiron::coordinator::{
     BootstrapSpec, Chiron, ChironConfig, ChironLocal, LocalAutoscaler, LocalConfig,
 };
 use chiron::core::{
-    InstanceClass, InstanceId, ModelSpec, Request, RequestClass, RequestId, RequestOutcome, Slo,
+    InstanceClass, InstanceId, ModelSpec, PhaseBreakdown, Request, RequestClass, RequestId,
+    RequestOutcome, Slo, WaitKind,
 };
 use chiron::experiments::common::{make_policy, PolicyKind};
 use chiron::forecast::{ForecasterKind, RateForecaster};
@@ -325,6 +326,49 @@ fn main() {
         });
     }
 
+    // -- latency decomposition + miss-cause classification ------------------
+    // 1M rounds of the SLO-forensics hot path: phase accrual (wait charges +
+    // the ulp-exact close), dominant-cause classification, and the blame-
+    // table fold. Bounds the always-on per-completion cost the forensics
+    // plane adds on top of plain summarization.
+    {
+        use chiron::metrics::MissTable;
+        b.bench_units("telemetry.decompose_1m", Some(1e6), || {
+            let mut table = MissTable::default();
+            let mut o = RequestOutcome {
+                id: RequestId(0),
+                class: RequestClass::Interactive,
+                slo: Slo::interactive_default(),
+                model: 0,
+                arrival: 0.0,
+                first_token: 1.0,
+                completion: 30.0,
+                input_tokens: 128,
+                output_tokens: 100,
+                mean_itl: 0.05,
+                max_itl: 0.1,
+                preemptions: 0,
+                retries: 0,
+                phases: PhaseBreakdown::default(),
+            };
+            for i in 0..1_000_000u64 {
+                let wait = 0.5 + (i % 7) as f64 * 0.25;
+                o.model = (i % 4) as usize;
+                o.class = if i % 3 == 0 {
+                    RequestClass::Batch
+                } else {
+                    RequestClass::Interactive
+                };
+                o.phases = PhaseBreakdown::default();
+                o.phases.charge_wait(WaitKind::Queue, wait);
+                o.phases.charge_wait(WaitKind::from_u8((i % 4) as u8), 0.3);
+                o.phases.close(o.latency());
+                table.push(&o);
+            }
+            black_box(table.total());
+        });
+    }
+
     // -- the fault plane under load -----------------------------------------
     // crash-midrush's FaultSpec (three scheduled crashes, MTBF churn, flaky
     // loads) through the streaming source at quarter scale. The delta vs
@@ -435,6 +479,8 @@ fn main() {
                     mean_itl: itl,
                     max_itl: itl * 2.0,
                     preemptions: (i % 11 == 0) as u32,
+                    retries: 0,
+                    phases: PhaseBreakdown::default(),
                 }
             })
             .collect();

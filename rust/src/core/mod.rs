@@ -5,7 +5,9 @@ pub mod model;
 pub mod request;
 
 pub use model::{ModelSpec, PerfProfile, ServingConfig};
-pub use request::{Request, RequestClass, RequestId, RequestOutcome, Slo};
+pub use request::{
+    MissCause, PhaseBreakdown, Request, RequestClass, RequestId, RequestOutcome, Slo, WaitKind,
+};
 
 /// Simulation / wall time in seconds. All latency figures in the paper are
 /// seconds or milliseconds; f64 seconds keeps the math simple.

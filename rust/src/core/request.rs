@@ -86,6 +86,162 @@ impl Request {
     }
 }
 
+/// What a queued/evicted request is currently waiting *for* — the bucket
+/// its next wait span will be charged to when it is (re)admitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(u8)]
+pub enum WaitKind {
+    /// Ordinary queue wait (arrival → dispatch, dispatch → admission).
+    #[default]
+    Queue = 0,
+    /// Waiting behind a still-loading instance's weight load.
+    Load = 1,
+    /// Evicted by batch→interactive preemption; waiting to be re-admitted.
+    Preempt = 2,
+    /// Evicted by an instance crash; waiting in the retry path.
+    Retry = 3,
+}
+
+impl WaitKind {
+    pub fn from_u8(v: u8) -> WaitKind {
+        match v {
+            1 => WaitKind::Load,
+            2 => WaitKind::Preempt,
+            3 => WaitKind::Retry,
+            _ => WaitKind::Queue,
+        }
+    }
+}
+
+/// Exact per-request latency decomposition, accrued by the simulator as the
+/// request moves through queues, loads, evictions, and engine steps.
+///
+/// **Invariant** (test-pinned): for every completed request,
+/// `queue_wait + load_delay + preempt_stall + retry_rework + prefill +
+/// decode == completion − arrival`, *bit-exactly* (the decode field is
+/// closed as the residual, with an ulp-correction loop so the literal
+/// field-order sum reproduces the total).
+///
+/// `slow_excess` is an annotation, not a partition member: the extra step
+/// time attributable to straggler windows, already contained inside
+/// prefill/decode/stall spans.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PhaseBreakdown {
+    /// Time spent queued (global queue + instance admission queue).
+    pub queue_wait: Time,
+    /// Queue time attributable to waiting on a loading instance.
+    pub load_delay: Time,
+    /// Time between a preemption eviction and re-admission.
+    pub preempt_stall: Time,
+    /// Time between a crash eviction and re-admission (lost work is
+    /// re-executed, so the whole span is rework exposure).
+    pub retry_rework: Time,
+    /// Engine-step time spent prefilling (incl. crash re-prefills).
+    pub prefill: Time,
+    /// Decode time — the residual that closes the sum to `latency()`.
+    pub decode: Time,
+    /// Extra step time from straggler slowdown windows (annotation; not
+    /// part of the partition sum).
+    pub slow_excess: Time,
+}
+
+impl PhaseBreakdown {
+    /// Charge a completed wait span to the bucket `kind` selects.
+    #[inline]
+    pub fn charge_wait(&mut self, kind: WaitKind, dt: Time) {
+        match kind {
+            WaitKind::Queue => self.queue_wait += dt,
+            WaitKind::Load => self.load_delay += dt,
+            WaitKind::Preempt => self.preempt_stall += dt,
+            WaitKind::Retry => self.retry_rework += dt,
+        }
+    }
+
+    /// Close the decomposition: set `decode` to the residual so that the
+    /// field-order sum `queue_wait + load_delay + preempt_stall +
+    /// retry_rework + prefill + decode` equals `total` bit-exactly.
+    /// Floating point makes `fl(s + fl(total − s)) == total` plausible but
+    /// not guaranteed, so the residual is corrected iteratively (at most a
+    /// few ulps; two rounds always suffice in practice, and the loop exits
+    /// the moment the sum lands).
+    pub fn close(&mut self, total: Time) {
+        let s = self.queue_wait + self.load_delay + self.preempt_stall + self.retry_rework
+            + self.prefill;
+        let mut decode = total - s;
+        for _ in 0..4 {
+            let err = total - (s + decode);
+            if err == 0.0 {
+                break;
+            }
+            decode += err;
+        }
+        self.decode = decode;
+    }
+
+    /// The partition sum, in fixed field order (what `close` pins to the
+    /// request's total latency).
+    pub fn sum(&self) -> Time {
+        self.queue_wait + self.load_delay + self.preempt_stall + self.retry_rework + self.prefill
+            + self.decode
+    }
+}
+
+/// Dominant cause of an SLO miss, classified from the phase breakdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MissCause {
+    /// Queue wait alone exceeds the slack the request missed by.
+    QueueWait,
+    /// Waiting on model-load delay dominates.
+    LoadDelay,
+    /// Preemption stall dominates.
+    Preemption,
+    /// Crash-retry rework dominates.
+    Retry,
+    /// Straggler slowdown exposure dominates.
+    Straggler,
+    /// No single stall source explains the miss: service itself was too
+    /// slow for the SLO — a capacity/provisioning problem.
+    Capacity,
+}
+
+impl MissCause {
+    pub const ALL: [MissCause; 6] = [
+        MissCause::QueueWait,
+        MissCause::LoadDelay,
+        MissCause::Preemption,
+        MissCause::Retry,
+        MissCause::Straggler,
+        MissCause::Capacity,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MissCause::QueueWait => "queue_wait",
+            MissCause::LoadDelay => "load_delay",
+            MissCause::Preemption => "preemption",
+            MissCause::Retry => "retry",
+            MissCause::Straggler => "straggler",
+            MissCause::Capacity => "capacity",
+        }
+    }
+
+    /// Index into `ALL` (stable — used by the aggregation tables).
+    pub fn index(&self) -> usize {
+        match self {
+            MissCause::QueueWait => 0,
+            MissCause::LoadDelay => 1,
+            MissCause::Preemption => 2,
+            MissCause::Retry => 3,
+            MissCause::Straggler => 4,
+            MissCause::Capacity => 5,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Option<MissCause> {
+        MissCause::ALL.get(i).copied()
+    }
+}
+
 /// Completion record used by the metrics pipeline. Produced by both the
 /// simulator and the real engine.
 #[derive(Debug, Clone)]
@@ -107,6 +263,11 @@ pub struct RequestOutcome {
     pub max_itl: Time,
     /// Number of times this request was preempted/evicted.
     pub preemptions: u32,
+    /// Crash-eviction re-queues this request survived.
+    pub retries: u32,
+    /// Exact latency decomposition (always populated by the simulator;
+    /// invisible to report digests, which hash the original fields only).
+    pub phases: PhaseBreakdown,
 }
 
 impl RequestOutcome {
@@ -131,6 +292,56 @@ impl RequestOutcome {
     pub fn latency(&self) -> Time {
         self.completion - self.arrival
     }
+
+    /// How much the request overshot its SLO, in seconds: the larger of the
+    /// TTFT overshoot and the total decode-time overshoot implied by the
+    /// mean-ITL miss. Zero when the SLO was met.
+    pub fn slo_excess(&self) -> Time {
+        let mut excess: Time = 0.0;
+        if !self.ttft_met() {
+            excess = excess.max(self.ttft() - self.slo.ttft);
+        }
+        if !self.itl_met() {
+            let decode_tokens = (self.output_tokens.max(1) - 1) as Time;
+            excess = excess.max((self.mean_itl - self.slo.itl) * decode_tokens.max(1.0));
+        }
+        excess
+    }
+
+    /// Dominant-cause classification for SLO misses — `None` iff the SLO
+    /// was met, so every missed request gets exactly one cause (the
+    /// slo-debug acceptance criterion: no UNATTRIBUTED rows is structural).
+    ///
+    /// Rule: take the largest stall bucket (queue wait, load delay,
+    /// preemption stall, retry rework, straggler excess — first wins on
+    /// ties, in that fixed order). If that bucket alone is at least the
+    /// SLO overshoot, it is the dominant cause: removing it would have met
+    /// the SLO. Otherwise no single stall explains the miss and the
+    /// request was simply under-served — `Capacity`.
+    pub fn miss_cause(&self) -> Option<MissCause> {
+        if self.slo_met() {
+            return None;
+        }
+        let candidates = [
+            (MissCause::QueueWait, self.phases.queue_wait),
+            (MissCause::LoadDelay, self.phases.load_delay),
+            (MissCause::Preemption, self.phases.preempt_stall),
+            (MissCause::Retry, self.phases.retry_rework),
+            (MissCause::Straggler, self.phases.slow_excess),
+        ];
+        let (mut cause, mut mag) = candidates[0];
+        for &(c, m) in &candidates[1..] {
+            if m > mag {
+                cause = c;
+                mag = m;
+            }
+        }
+        if mag >= self.slo_excess() && mag > 0.0 {
+            Some(cause)
+        } else {
+            Some(MissCause::Capacity)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -151,6 +362,8 @@ mod tests {
             mean_itl,
             max_itl: mean_itl * 2.0,
             preemptions: 0,
+            retries: 0,
+            phases: PhaseBreakdown::default(),
         }
     }
 
@@ -160,6 +373,105 @@ mod tests {
         assert!(!outcome(10.1, 0.2).slo_met());
         assert!(!outcome(10.0, 0.21).slo_met());
         assert!(outcome(0.5, 0.05).slo_met());
+    }
+
+    #[test]
+    fn phase_close_is_bit_exact_even_with_awkward_residuals() {
+        // Values chosen so the naive residual would round: the correction
+        // loop must land the field-order sum exactly on the total.
+        let totals = [12.3456789, 1e-7, 36000.0 + 1e-9, 0.1 + 0.2];
+        for &total in &totals {
+            let mut p = PhaseBreakdown {
+                queue_wait: total * 0.3,
+                load_delay: total * 0.05,
+                preempt_stall: total * 0.1,
+                retry_rework: total * 0.07,
+                prefill: total * 0.11,
+                ..PhaseBreakdown::default()
+            };
+            p.close(total);
+            assert_eq!(p.sum().to_bits(), total.to_bits(), "total={total}");
+        }
+        // Degenerate: everything already accounted, residual ~0.
+        let mut p = PhaseBreakdown {
+            queue_wait: 5.0,
+            ..PhaseBreakdown::default()
+        };
+        p.close(5.0);
+        assert_eq!(p.sum().to_bits(), 5.0f64.to_bits());
+    }
+
+    #[test]
+    fn charge_wait_routes_to_the_right_bucket() {
+        let mut p = PhaseBreakdown::default();
+        p.charge_wait(WaitKind::Queue, 1.0);
+        p.charge_wait(WaitKind::Load, 2.0);
+        p.charge_wait(WaitKind::Preempt, 3.0);
+        p.charge_wait(WaitKind::Retry, 4.0);
+        assert_eq!(
+            (p.queue_wait, p.load_delay, p.preempt_stall, p.retry_rework),
+            (1.0, 2.0, 3.0, 4.0)
+        );
+        for k in [WaitKind::Queue, WaitKind::Load, WaitKind::Preempt, WaitKind::Retry] {
+            assert_eq!(WaitKind::from_u8(k as u8), k);
+        }
+    }
+
+    #[test]
+    fn miss_cause_is_total_over_missed_requests() {
+        // Met SLO → no cause.
+        assert_eq!(outcome(1.0, 0.05).miss_cause(), None);
+
+        // TTFT missed by 5 s with 8 s of queue wait → queue_wait dominates.
+        let mut o = outcome(15.0, 0.05);
+        o.phases.queue_wait = 8.0;
+        o.phases.close(o.latency());
+        assert_eq!(o.miss_cause(), Some(MissCause::QueueWait));
+
+        // Same miss, dominated by load delay instead.
+        let mut o = outcome(15.0, 0.05);
+        o.phases.load_delay = 9.0;
+        o.phases.close(o.latency());
+        assert_eq!(o.miss_cause(), Some(MissCause::LoadDelay));
+
+        // Preemption stall and retry rework classify likewise.
+        let mut o = outcome(15.0, 0.05);
+        o.phases.preempt_stall = 9.0;
+        o.phases.close(o.latency());
+        assert_eq!(o.miss_cause(), Some(MissCause::Preemption));
+        let mut o = outcome(15.0, 0.05);
+        o.phases.retry_rework = 9.0;
+        o.phases.close(o.latency());
+        assert_eq!(o.miss_cause(), Some(MissCause::Retry));
+
+        // Straggler exposure can dominate an ITL miss.
+        let mut o = outcome(1.0, 0.5);
+        o.phases.slow_excess = 100.0;
+        o.phases.close(o.latency());
+        assert_eq!(o.miss_cause(), Some(MissCause::Straggler));
+
+        // Miss with no stall big enough to explain it → capacity.
+        let mut o = outcome(15.0, 0.05);
+        o.phases.queue_wait = 0.5;
+        o.phases.close(o.latency());
+        assert_eq!(o.miss_cause(), Some(MissCause::Capacity));
+        // And with no stalls at all (pure slow service) → capacity.
+        let mut o = outcome(15.0, 0.05);
+        o.phases.close(o.latency());
+        assert_eq!(o.miss_cause(), Some(MissCause::Capacity));
+
+        // slo_excess: TTFT overshoot wins over a small ITL overshoot.
+        let o = outcome(15.0, 0.05);
+        assert!((o.slo_excess() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn miss_cause_indexing_round_trips() {
+        for (i, c) in MissCause::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i);
+            assert_eq!(MissCause::from_index(i), Some(*c));
+        }
+        assert_eq!(MissCause::from_index(6), None);
     }
 
     #[test]

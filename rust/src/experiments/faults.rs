@@ -4,7 +4,8 @@
 //! each policy degrades (SLO attainment, recovery time, terminal failures)
 //! and what the faults cost in GPU-hours.
 
-use crate::metrics::{MeanStd, PolicyRow};
+use crate::core::MissCause;
+use crate::metrics::{MeanStd, MissTable, PolicyRow};
 use crate::util::json::Json;
 use crate::workload::scenario::by_name;
 
@@ -73,5 +74,89 @@ pub fn fig21(scale: Scale) -> Json {
     }
     let j = Json::arr(cells);
     save_result("fig21", &j);
+    j
+}
+
+/// Figure 22 (new): SLO forensics — miss-cause composition across the
+/// fault catalog. For each fault scenario × policy, every SLO-missed
+/// request is classified by its dominant latency phase (queue wait, load
+/// delay, preemption stall, retry rework, straggler exposure, or raw
+/// capacity) and the composition is aggregated over seeds. The signature
+/// the forensics plane predicts: crash-midrush misses skew to retry
+/// rework, spot-reclaim to preemption/load delay, straggler-tail to
+/// straggler exposure — and a policy that recovers well shifts mass from
+/// those causes toward plain capacity.
+pub fn fig22(scale: Scale) -> Json {
+    let frac = match scale {
+        Scale::Quick => 0.2,
+        Scale::Full => 1.0,
+    };
+    let seeds = seed_list(22, scale.n(2, 3));
+    let kinds = vec![PolicyKind::Chiron, PolicyKind::LlumnixUntuned];
+    let mut cells = Vec::new();
+    println!("\n=== Figure 22 (new) — SLO forensics: miss-cause composition under injected failures ===");
+    println!(
+        "{:<16} {:<14} {:>8}  {}",
+        "scenario", "policy", "misses", "dominant-cause composition"
+    );
+    for name in ["crash-midrush", "spot-reclaim", "straggler-tail"] {
+        let spec = by_name(name).expect("catalog scenario").scaled(frac);
+        let grouped = compare_seeds_spec(&spec, &kinds, &seeds);
+        for per_seed in &grouped {
+            // Sum the per-run blame tables over seeds (integer counts, so
+            // the aggregate is order-independent).
+            let mut table = MissTable::default();
+            for (_, report) in per_seed {
+                table.merge(report.stats.miss_table());
+            }
+            let mut counts = [0u64; 6];
+            for row in table.rows() {
+                for (i, c) in row.counts.iter().enumerate() {
+                    counts[i] += c;
+                }
+            }
+            let total: u64 = counts.iter().sum();
+            let policy = per_seed[0].0.policy.clone();
+            let comp: Vec<String> = MissCause::ALL
+                .iter()
+                .filter(|c| counts[c.index()] > 0)
+                .map(|c| {
+                    format!(
+                        "{}={:.1}%",
+                        c.as_str(),
+                        100.0 * counts[c.index()] as f64 / total.max(1) as f64
+                    )
+                })
+                .collect();
+            println!(
+                "{:<16} {:<14} {:>8}  {}",
+                name,
+                policy,
+                total,
+                comp.join(" ")
+            );
+            cells.push(Json::obj(vec![
+                ("scenario", name.into()),
+                ("policy", policy.as_ref().into()),
+                ("seeds", seeds.len().into()),
+                ("misses", total.into()),
+                (
+                    "by_cause",
+                    Json::obj(
+                        MissCause::ALL
+                            .iter()
+                            .map(|c| (c.as_str(), counts[c.index()].into()))
+                            .collect(),
+                    ),
+                ),
+                (
+                    "rows",
+                    Json::arr(table.rows().iter().map(|r| r.to_json())),
+                ),
+            ]));
+        }
+    }
+    let j = Json::arr(cells);
+    save_result("fig22", &j);
     j
 }

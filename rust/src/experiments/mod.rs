@@ -14,12 +14,12 @@ pub mod robustness;
 use crate::util::json::Json;
 use common::Scale;
 
-/// All experiment ids in run order. `fig20` (forecast-plane ablation) and
-/// `fig21` (fault-plane ablation) are this reproduction's own additions,
-/// not paper figures.
+/// All experiment ids in run order. `fig20` (forecast-plane ablation),
+/// `fig21` (fault-plane ablation), and `fig22` (SLO-forensics miss-cause
+/// composition) are this reproduction's own additions, not paper figures.
 pub const ALL: &[&str] = &[
     "fig2", "fig3", "fig4", "fig5", "fig6", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
-    "fig15", "fig16", "fig17", "fig18", "fig19", "fig20", "fig21",
+    "fig15", "fig16", "fig17", "fig18", "fig19", "fig20", "fig21", "fig22",
 ];
 
 /// Run one experiment by id.
@@ -43,6 +43,7 @@ pub fn run(id: &str, scale: Scale) -> Option<Json> {
         "fig19" => ablation::fig19(scale),
         "fig20" => forecast::fig20(scale),
         "fig21" => faults::fig21(scale),
+        "fig22" => faults::fig22(scale),
         _ => return None,
     };
     Some(j)

@@ -470,6 +470,8 @@ mod tests {
             mean_itl: 0.05,
             max_itl: 0.05,
             preemptions: 0,
+            retries: 0,
+            phases: crate::core::PhaseBreakdown::default(),
         }
     }
 

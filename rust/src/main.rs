@@ -44,6 +44,7 @@ fn main() {
         "trace-gen" => cmd_trace_gen(argv),
         "serve" => cmd_serve(argv),
         "explain" => cmd_explain(argv),
+        "slo-debug" => cmd_slo_debug(argv),
         "bench-gate" => cmd_bench_gate(argv),
         "list" => {
             for id in experiments::ALL {
@@ -92,8 +93,11 @@ fn help() {
          \u{20}  simulate --config <file>        run a simulation described by a JSON config\n\
          \u{20}  trace-gen [flags]               generate a workload trace (JSON to stdout)\n\
          \u{20}  serve [flags]                   end-to-end: serve the real AOT model (needs `make artifacts`)\n\
-         \u{20}  explain <trace-file>            summarize a --trace output: decision reasons per policy/model\n\
-         \u{20}                                  and scale-action → decision attribution\n\
+         \u{20}  explain <trace-file> [--window start:end]\n\
+         \u{20}                                  summarize a --trace output: decision reasons per policy/model,\n\
+         \u{20}                                  scale-action → decision attribution, per-window activity\n\
+         \u{20}  slo-debug <trace|report.json>   SLO forensics: per model×class miss-cause blame table,\n\
+         \u{20}                                  attribution check, and worst-window drilldown\n\
          \u{20}  bench-gate [flags]              fail when the bench trajectory regresses (CI)\n\
          \u{20}  list                            list experiment ids"
     );
@@ -385,8 +389,9 @@ fn cmd_scenario(argv: Vec<String>) -> anyhow::Result<()> {
     .flag(
         "trace-format",
         "chrome",
-        "--trace output format: 'chrome' (chrome://tracing / Perfetto JSON) \
-         or 'jsonl' (one JSON object per line)",
+        "--trace output format: 'chrome' (chrome://tracing / Perfetto JSON), \
+         'jsonl' (one JSON object per line), or 'prom' (Prometheus text \
+         exposition with timestamped forensics series)",
     )
     .flag(
         "event-core",
@@ -522,8 +527,10 @@ fn cmd_scenario(argv: Vec<String>) -> anyhow::Result<()> {
             let keep = args.get_bool("keep-outcomes")?;
             let trace_path = args.get("trace")?.to_string();
             let trace_format = args.get("trace-format")?.to_string();
-            if !matches!(trace_format.as_str(), "chrome" | "jsonl") {
-                anyhow::bail!("--trace-format must be 'chrome' or 'jsonl', got '{trace_format}'");
+            if !matches!(trace_format.as_str(), "chrome" | "jsonl" | "prom") {
+                anyhow::bail!(
+                    "--trace-format must be 'chrome', 'jsonl', or 'prom', got '{trace_format}'"
+                );
             }
             let ckpt_every = args.get_f64("checkpoint-every")?;
             let resume_path = args.get("resume")?.to_string();
@@ -620,6 +627,7 @@ fn cmd_scenario(argv: Vec<String>) -> anyhow::Result<()> {
                         "chrome" => {
                             chiron::telemetry::export::chrome_trace(trace, &model_names)
                         }
+                        "prom" => chiron::telemetry::export::prometheus_trace(trace),
                         _ => chiron::telemetry::export::jsonl(trace),
                     };
                     match std::fs::write(&path, text) {
@@ -744,11 +752,20 @@ fn seed_suffixed(path: &str, seed: u64) -> String {
 /// of every applied scale action back to a recorded autoscaler decision.
 fn cmd_explain(argv: Vec<String>) -> anyhow::Result<()> {
     let args = Args::new(
-        "chiron explain <trace-file>\n\n\
+        "chiron explain <trace-file> [--window start:end]\n\n\
          Reads a trace written by `chiron scenario run --trace` (either \
          --trace-format) and prints the autoscaler decision audit: which \
          policy scaled which model, why (reason tag + recorded inputs), and \
-         whether every applied scale action is attributable to a decision.",
+         whether every applied scale action is attributable to a decision. \
+         When the run recorded forensics windows (telemetry window_dt), the \
+         report also counts decisions/scales/misses per window.",
+    )
+    .flag(
+        "window",
+        "",
+        "restrict the report to the half-open simulated-second interval \
+         start:end (e.g. 120:180 — the bounds slo-debug prints for its \
+         worst window)",
     )
     .parse_from(argv)
     .unwrap_or_else(|m| {
@@ -760,14 +777,71 @@ fn cmd_explain(argv: Vec<String>) -> anyhow::Result<()> {
         .first()
         .cloned()
         .ok_or_else(|| anyhow::anyhow!("usage: chiron explain <trace.json|trace.jsonl>"))?;
+    let window = parse_window(args.get("window")?)?;
     let text = std::fs::read_to_string(&path)
         .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
-    match chiron::telemetry::export::explain(&text) {
+    match chiron::telemetry::export::explain_filtered(&text, window) {
         Ok(report) => {
             println!("{report}");
             Ok(())
         }
         Err(e) => anyhow::bail!("explain {path}: {e}"),
+    }
+}
+
+/// Parse a `--window start:end` value ("" = no filter).
+fn parse_window(s: &str) -> anyhow::Result<Option<(f64, f64)>> {
+    if s.is_empty() {
+        return Ok(None);
+    }
+    let (a, b) = s
+        .split_once(':')
+        .ok_or_else(|| anyhow::anyhow!("--window must be start:end seconds, got '{s}'"))?;
+    let (start, end): (f64, f64) = (
+        a.trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--window start '{a}' is not a number"))?,
+        b.trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--window end '{b}' is not a number"))?,
+    );
+    anyhow::ensure!(
+        start.is_finite() && end.is_finite() && end > start,
+        "--window needs finite end > start, got '{s}'"
+    );
+    Ok(Some((start, end)))
+}
+
+/// SLO forensics report: miss-cause blame table, attribution check, and
+/// worst-window drilldown from a trace file or aggregated report JSON.
+fn cmd_slo_debug(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::new(
+        "chiron slo-debug <trace-file|report.json>\n\n\
+         Reads a trace written by `chiron scenario run --trace` (either \
+         --trace-format), or a result JSON whose summary carries a \
+         miss_causes table, and prints which latency phase (queue wait, \
+         model-load delay, preemption stall, crash-retry rework, straggler \
+         exposure, or raw capacity) dominated each SLO miss — per \
+         model×class, with the worst window called out for drilldown.",
+    )
+    .parse_from(argv)
+    .unwrap_or_else(|m| {
+        eprintln!("{m}");
+        std::process::exit(2);
+    });
+    let path = args
+        .positional()
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("usage: chiron slo-debug <trace.json|report.json>"))?;
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    match chiron::telemetry::export::slo_debug(&text) {
+        Ok(report) => {
+            println!("{report}");
+            Ok(())
+        }
+        Err(e) => anyhow::bail!("slo-debug {path}: {e}"),
     }
 }
 

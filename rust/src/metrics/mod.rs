@@ -10,8 +10,9 @@
 //! is field-for-field bit-identical to summarizing the buffered outcomes.
 
 use std::borrow::Cow;
+use std::collections::BTreeMap;
 
-use crate::core::{RequestClass, RequestOutcome};
+use crate::core::{MissCause, RequestClass, RequestOutcome};
 use crate::forecast::ForecastScore;
 use crate::sim::SimReport;
 use crate::telemetry::LogHist;
@@ -50,15 +51,23 @@ pub struct Summary {
     /// Per-model forecast accuracy (only populated for predictive-policy
     /// runs summarized via [`Summary::of_report`]).
     pub forecast: Vec<ForecastScore>,
+    /// Miss-cause blame table (SLO forensics): one row per model×class
+    /// that had any SLO-missed completion, with counts per dominant cause.
+    /// Empty when every request met its SLO.
+    pub miss_causes: Vec<MissRow>,
 }
 
 impl Summary {
     pub fn of(outcomes: &[RequestOutcome]) -> Summary {
         let mut acc = ClassAccum::default();
+        let mut misses = MissTable::default();
         for o in outcomes {
             acc.push(o);
+            misses.push(o);
         }
-        acc.into_summary()
+        let mut s = acc.into_summary();
+        s.miss_causes = misses.rows();
+        s
     }
 
     /// Summarize a full report from its streaming accumulator: outcome
@@ -74,6 +83,7 @@ impl Summary {
             shed: report.shed,
             retries: report.retries,
             mttr: report.stats.mttr(),
+            miss_causes: report.stats.miss_table().rows(),
             ..report.stats.summary()
         }
     }
@@ -82,10 +92,14 @@ impl Summary {
     /// accumulator — no filtered clone of the outcome records.
     pub fn of_class(outcomes: &[RequestOutcome], class: RequestClass) -> Summary {
         let mut acc = ClassAccum::default();
+        let mut misses = MissTable::default();
         for o in outcomes.iter().filter(|o| o.class == class) {
             acc.push(o);
+            misses.push(o);
         }
-        acc.into_summary()
+        let mut s = acc.into_summary();
+        s.miss_causes = misses.rows();
+        s
     }
 
     pub fn to_json(&self) -> Json {
@@ -116,6 +130,14 @@ impl Summary {
                 Json::arr(self.forecast.iter().map(|f| f.to_json())),
             ));
         }
+        // Blame table only when something actually missed — fault-free
+        // output stays byte-stable.
+        if !self.miss_causes.is_empty() {
+            fields.push((
+                "miss_causes",
+                Json::arr(self.miss_causes.iter().map(|r| r.to_json())),
+            ));
+        }
         Json::obj(fields)
     }
 
@@ -133,6 +155,136 @@ impl Summary {
             return None;
         }
         Some(self.forecast.iter().map(|f| f.mape).sum::<f64>() / self.forecast.len() as f64)
+    }
+}
+
+/// One row of the miss-cause blame table: for a model×class cell, how many
+/// SLO-missed completions had each [`MissCause`] as their dominant cause.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MissRow {
+    pub model: usize,
+    pub class: RequestClass,
+    /// Counts indexed by [`MissCause::index`].
+    pub counts: [u64; 6],
+}
+
+impl MissRow {
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// The cause with the largest count (ties break in `MissCause::ALL`
+    /// order — same first-wins rule as the per-request classifier).
+    pub fn dominant(&self) -> MissCause {
+        let mut best = 0;
+        for i in 1..self.counts.len() {
+            if self.counts[i] > self.counts[best] {
+                best = i;
+            }
+        }
+        MissCause::from_index(best).unwrap()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&'static str, Json)> = vec![
+            ("model", self.model.into()),
+            ("class", self.class.as_str().into()),
+        ];
+        for cause in MissCause::ALL {
+            fields.push((cause.as_str(), self.counts[cause.index()].into()));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Streaming per-model×class miss-cause counts. Integer counters keyed by
+/// a `BTreeMap`, so per-shard accumulation merged in any order — and the
+/// derived [`MissRow`] listing — is deterministic at any shard count.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MissTable {
+    /// `(model, class-tag)` → counts per [`MissCause::index`]. The class
+    /// tag matches the checkpoint codec: 0 = interactive, 1 = batch.
+    rows: BTreeMap<(u32, u8), [u64; 6]>,
+}
+
+impl MissTable {
+    /// Fold one completion in (no-op for SLO-met requests — the classifier
+    /// is total over missed ones, so every miss lands in exactly one cell).
+    pub fn push(&mut self, o: &RequestOutcome) {
+        if let Some(cause) = o.miss_cause() {
+            let key = (o.model as u32, matches!(o.class, RequestClass::Batch) as u8);
+            self.rows.entry(key).or_insert([0; 6])[cause.index()] += 1;
+        }
+    }
+
+    pub fn of(outcomes: &[RequestOutcome]) -> MissTable {
+        let mut t = MissTable::default();
+        for o in outcomes {
+            t.push(o);
+        }
+        t
+    }
+
+    /// Elementwise merge — order-independent.
+    pub fn merge(&mut self, other: &MissTable) {
+        for (k, counts) in &other.rows {
+            let row = self.rows.entry(*k).or_insert([0; 6]);
+            for i in 0..counts.len() {
+                row[i] += counts[i];
+            }
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Total misses across all cells.
+    pub fn total(&self) -> u64 {
+        self.rows.values().flatten().sum()
+    }
+
+    /// Materialize the table in deterministic (model, class) order.
+    pub fn rows(&self) -> Vec<MissRow> {
+        self.rows
+            .iter()
+            .map(|(&(model, tag), &counts)| MissRow {
+                model: model as usize,
+                class: if tag == 0 {
+                    RequestClass::Interactive
+                } else {
+                    RequestClass::Batch
+                },
+                counts,
+            })
+            .collect()
+    }
+
+    /// Checkpoint encode (schema versioned by `sim::checkpoint`).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        put_usize(out, self.rows.len());
+        for (&(model, tag), counts) in &self.rows {
+            put_u64(out, model as u64);
+            put_u8(out, tag);
+            for &c in counts {
+                put_u64(out, c);
+            }
+        }
+    }
+
+    pub fn decode(d: &mut Dec) -> anyhow::Result<MissTable> {
+        let n = d.usize()?;
+        let mut rows = BTreeMap::new();
+        for _ in 0..n {
+            let model = d.u64()? as u32;
+            let tag = d.u8()?;
+            let mut counts = [0u64; 6];
+            for c in counts.iter_mut() {
+                *c = d.u64()?;
+            }
+            rows.insert((model, tag), counts);
+        }
+        Ok(MissTable { rows })
     }
 }
 
@@ -396,6 +548,7 @@ impl ClassAccum {
             retries: 0,
             mttr: 0.0,
             forecast: Vec::new(),
+            miss_causes: Vec::new(),
         }
     }
 }
@@ -414,6 +567,9 @@ pub struct SummaryAccum {
     /// state. Integer counters, so per-shard accumulation merged in any
     /// order is exactly the monolithic series.
     bins: Vec<(u32, u32)>,
+    /// Per-model×class dominant-miss-cause counts (integer, key-sorted —
+    /// shard-merge-order independent like `bins`).
+    misses: MissTable,
 }
 
 impl SummaryAccum {
@@ -427,6 +583,7 @@ impl SummaryAccum {
             interactive: ClassAccum::sketch(),
             batch: ClassAccum::sketch(),
             bins: Vec::new(),
+            misses: MissTable::default(),
         }
     }
 
@@ -444,6 +601,7 @@ impl SummaryAccum {
             put_u64(out, c as u64);
             put_u64(out, m as u64);
         }
+        self.misses.encode(out);
     }
 
     pub fn decode(d: &mut Dec) -> anyhow::Result<SummaryAccum> {
@@ -455,11 +613,13 @@ impl SummaryAccum {
         for _ in 0..n {
             bins.push((d.u64()? as u32, d.u64()? as u32));
         }
+        let misses = MissTable::decode(d)?;
         Ok(SummaryAccum {
             all,
             interactive,
             batch,
             bins,
+            misses,
         })
     }
 
@@ -477,6 +637,7 @@ impl SummaryAccum {
         if o.slo_met() {
             self.bins[b].1 += 1;
         }
+        self.misses.push(o);
     }
 
     /// Append `other` after this accumulator (order-exact; see
@@ -492,6 +653,7 @@ impl SummaryAccum {
             self.bins[i].0 += c;
             self.bins[i].1 += m;
         }
+        self.misses.merge(&other.misses);
     }
 
     /// Mean-time-to-recovery in seconds: the longest contiguous run of
@@ -524,6 +686,11 @@ impl SummaryAccum {
             RequestClass::Interactive => &self.interactive,
             RequestClass::Batch => &self.batch,
         }
+    }
+
+    /// The miss-cause blame table accumulated so far.
+    pub fn miss_table(&self) -> &MissTable {
+        &self.misses
     }
 
     /// Completed requests folded in so far.
@@ -811,6 +978,8 @@ mod tests {
             mean_itl: itl,
             max_itl: itl,
             preemptions: 1,
+            retries: 0,
+            phases: crate::core::PhaseBreakdown::default(),
         }
     }
 
@@ -1092,6 +1261,97 @@ mod tests {
         let stats2 = SummaryStats::of(&[b]);
         assert_eq!(stats2.forecast_r2.n, 0);
         assert!(stats2.to_json().get("forecast_r2").get("mean").as_f64().is_none());
+    }
+
+    /// A missed outcome whose dominant stall bucket is `cause`, on the
+    /// given model×class cell.
+    fn missed(model: usize, class: RequestClass, cause: MissCause) -> RequestOutcome {
+        let mut o = outcome(25.0, 0.1, class);
+        o.model = model;
+        match cause {
+            MissCause::QueueWait => o.phases.queue_wait = 20.0,
+            MissCause::LoadDelay => o.phases.load_delay = 20.0,
+            MissCause::Preemption => o.phases.preempt_stall = 20.0,
+            MissCause::Retry => o.phases.retry_rework = 20.0,
+            MissCause::Straggler => o.phases.slow_excess = 20.0,
+            MissCause::Capacity => {} // no dominant stall → under-served
+        }
+        o.phases.close(o.latency());
+        o
+    }
+
+    #[test]
+    fn miss_table_streaming_matches_buffered_and_merge_order_free() {
+        let outs = vec![
+            outcome(1.0, 0.1, RequestClass::Interactive), // met → no row
+            missed(0, RequestClass::Interactive, MissCause::QueueWait),
+            missed(0, RequestClass::Interactive, MissCause::QueueWait),
+            missed(0, RequestClass::Batch, MissCause::Retry),
+            missed(2, RequestClass::Interactive, MissCause::Capacity),
+            missed(1, RequestClass::Batch, MissCause::Straggler),
+        ];
+        // Buffered path.
+        let s = Summary::of(&outs);
+        assert_eq!(s.miss_causes.len(), 4, "one row per model×class cell");
+        // Rows come out key-sorted: (0,I), (0,B), (1,B), (2,I) → sorted by
+        // (model, class-tag) with interactive tag 0 first.
+        assert_eq!(s.miss_causes[0].model, 0);
+        assert_eq!(s.miss_causes[0].class, RequestClass::Interactive);
+        assert_eq!(
+            s.miss_causes[0].counts[MissCause::QueueWait.index()],
+            2,
+            "both queue-wait misses land in one cell"
+        );
+        assert_eq!(s.miss_causes[0].dominant(), MissCause::QueueWait);
+        assert_eq!(s.miss_causes[1].class, RequestClass::Batch);
+        assert_eq!(s.miss_causes[1].counts[MissCause::Retry.index()], 1);
+        assert_eq!(s.miss_causes[3].model, 2);
+        assert_eq!(s.miss_causes[3].counts[MissCause::Capacity.index()], 1);
+        let total: u64 = s.miss_causes.iter().map(|r| r.total()).sum();
+        assert_eq!(total, 5, "every missed request attributed exactly once");
+
+        // Streaming path, split across two accumulators merged out of
+        // arrival order, matches the buffered table exactly.
+        let (mut a, mut b) = (SummaryAccum::default(), SummaryAccum::default());
+        for (i, o) in outs.iter().enumerate() {
+            if i % 2 == 0 {
+                a.push(o);
+            } else {
+                b.push(o);
+            }
+        }
+        let mut forward = a.clone();
+        forward.merge(&b);
+        let mut backward = b;
+        backward.merge(&a);
+        assert_eq!(forward.miss_table(), backward.miss_table());
+        assert_eq!(forward.miss_table().rows(), s.miss_causes);
+        assert_eq!(forward.miss_table().total(), 5);
+
+        // Checkpoint codec round-trips the table bit-exactly.
+        let mut bytes = Vec::new();
+        forward.encode(&mut bytes);
+        let mut d = crate::util::binio::Dec::new(&bytes);
+        let back = SummaryAccum::decode(&mut d).unwrap();
+        assert_eq!(back.miss_table(), forward.miss_table());
+    }
+
+    #[test]
+    fn miss_causes_json_gated_on_misses() {
+        // Fault-free summary: no "miss_causes" key at all (byte-stable
+        // output for clean runs).
+        let clean = Summary::of(&[outcome(1.0, 0.1, RequestClass::Interactive)]);
+        assert!(clean.miss_causes.is_empty());
+        assert!(clean.to_json().get("miss_causes").as_arr().is_none());
+
+        let s = Summary::of(&[missed(3, RequestClass::Batch, MissCause::Preemption)]);
+        let j = s.to_json();
+        let rows = j.get("miss_causes").as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("model").as_f64(), Some(3.0));
+        assert_eq!(rows[0].get("class").as_str(), Some("batch"));
+        assert_eq!(rows[0].get("preemption").as_f64(), Some(1.0));
+        assert_eq!(rows[0].get("queue_wait").as_f64(), Some(0.0));
     }
 
     #[test]

@@ -44,7 +44,8 @@ use std::path::PathBuf;
 use anyhow::{ensure, Result};
 
 use crate::core::{
-    InstanceClass, PerfProfile, Request, RequestClass, RequestId, RequestOutcome, Slo,
+    InstanceClass, PerfProfile, PhaseBreakdown, Request, RequestClass, RequestId, RequestOutcome,
+    Slo, WaitKind,
 };
 use crate::sim::instance::WorkItem;
 use crate::sim::policy::InstanceState;
@@ -55,7 +56,9 @@ use crate::util::binio::{
 /// "CHKP" — checkpoint container magic.
 pub const MAGIC: u32 = 0x43484b50;
 /// Layout version; bump on ANY change to any `encode_state` in the tree.
-pub const VERSION: u32 = 1;
+/// v2: per-request latency decomposition (wait spans on work items, phase
+/// breakdowns + retry counts on outcomes and running requests).
+pub const VERSION: u32 = 2;
 
 pub fn write_header(out: &mut Vec<u8>) {
     put_u32(out, MAGIC);
@@ -222,6 +225,9 @@ pub fn put_work_item(out: &mut Vec<u8>, w: &WorkItem) {
     put_u32(out, w.preemptions);
     put_u32(out, w.retries);
     put_bool(out, w.kv_saved);
+    put_f64(out, w.wait_since);
+    put_u8(out, w.wait_kind as u8);
+    put_phases(out, &w.phases);
 }
 
 pub fn get_work_item(d: &mut Dec) -> Result<WorkItem> {
@@ -235,6 +241,32 @@ pub fn get_work_item(d: &mut Dec) -> Result<WorkItem> {
         preemptions: d.u32()?,
         retries: d.u32()?,
         kv_saved: d.bool()?,
+        wait_since: d.f64()?,
+        wait_kind: WaitKind::from_u8(d.u8()?),
+        phases: get_phases(d)?,
+    })
+}
+
+/// Phase breakdown codec: seven raw-bit `f64`s in declaration order.
+pub fn put_phases(out: &mut Vec<u8>, p: &PhaseBreakdown) {
+    put_f64(out, p.queue_wait);
+    put_f64(out, p.load_delay);
+    put_f64(out, p.preempt_stall);
+    put_f64(out, p.retry_rework);
+    put_f64(out, p.prefill);
+    put_f64(out, p.decode);
+    put_f64(out, p.slow_excess);
+}
+
+pub fn get_phases(d: &mut Dec) -> Result<PhaseBreakdown> {
+    Ok(PhaseBreakdown {
+        queue_wait: d.f64()?,
+        load_delay: d.f64()?,
+        preempt_stall: d.f64()?,
+        retry_rework: d.f64()?,
+        prefill: d.f64()?,
+        decode: d.f64()?,
+        slow_excess: d.f64()?,
     })
 }
 
@@ -283,6 +315,8 @@ pub fn put_outcome(out: &mut Vec<u8>, o: &RequestOutcome) {
     put_f64(out, o.mean_itl);
     put_f64(out, o.max_itl);
     put_u32(out, o.preemptions);
+    put_u32(out, o.retries);
+    put_phases(out, &o.phases);
 }
 
 pub fn get_outcome(d: &mut Dec) -> Result<RequestOutcome> {
@@ -302,6 +336,8 @@ pub fn get_outcome(d: &mut Dec) -> Result<RequestOutcome> {
         mean_itl: d.f64()?,
         max_itl: d.f64()?,
         preemptions: d.u32()?,
+        retries: d.u32()?,
+        phases: get_phases(d)?,
     })
 }
 
@@ -370,12 +406,20 @@ mod tests {
         w.generated = 1.5;
         w.first_token = Some(-0.0);
         w.kv_saved = true;
+        w.wait_since = 12346.5;
+        w.wait_kind = WaitKind::Retry;
+        w.phases.queue_wait = 0.1 + 0.2; // deliberately non-representable
+        w.phases.retry_rework = 7.25;
         let mut wb = Vec::new();
         put_work_item(&mut wb, &w);
         let w2 = get_work_item(&mut Dec::new(&wb)).unwrap();
         assert_eq!(w2.first_token.unwrap().to_bits(), (-0.0f64).to_bits());
         assert_eq!(w2.generated.to_bits(), w.generated.to_bits());
         assert!(w2.kv_saved);
+        assert_eq!(w2.wait_since.to_bits(), w.wait_since.to_bits());
+        assert_eq!(w2.wait_kind, WaitKind::Retry);
+        assert_eq!(w2.phases.queue_wait.to_bits(), w.phases.queue_wait.to_bits());
+        assert_eq!(w2.phases.retry_rework.to_bits(), w.phases.retry_rework.to_bits());
 
         let o = RequestOutcome {
             id: r.id,
@@ -390,6 +434,16 @@ mod tests {
             mean_itl: 0.0625,
             max_itl: 0.25,
             preemptions: 2,
+            retries: 1,
+            phases: PhaseBreakdown {
+                queue_wait: 3.5,
+                load_delay: 0.75,
+                preempt_stall: 0.0,
+                retry_rework: 1.25,
+                prefill: 0.5,
+                decode: 48.75,
+                slow_excess: 0.125,
+            },
         };
         let mut ob = Vec::new();
         put_outcome(&mut ob, &o);
@@ -398,6 +452,8 @@ mod tests {
         assert!(dec.is_empty());
         assert_eq!(o2.completion.to_bits(), o.completion.to_bits());
         assert_eq!(o2.preemptions, o.preemptions);
+        assert_eq!(o2.retries, 1);
+        assert_eq!(o2.phases, o.phases);
     }
 
     #[test]

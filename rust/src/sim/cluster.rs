@@ -28,8 +28,8 @@ use crate::sim::policy::{Action, ClusterView, GlobalPolicy, InstanceView, QueueS
 use crate::sim::shard::ModelShard;
 pub use crate::sim::shard::MAX_BATCH_CLAMP;
 use crate::telemetry::{
-    merge_events, CounterSample, DecisionRecord, EventKind, LatencyHists, SimEvent,
-    TelemetryConfig, TraceData,
+    merge_events, CounterSample, DecisionRecord, EventKind, LatencyHists, MissRecord, SimEvent,
+    TelemetryConfig, TraceData, WindowSample,
 };
 use crate::util::binio::{
     atomic_write, put_bool, put_bytes, put_f64, put_u32, put_u64, put_usize, Dec,
@@ -343,6 +343,14 @@ pub struct Simulation<'p> {
     decisions: Vec<DecisionRecord>,
     /// Sampled counter rows (taken alongside timeline points).
     counter_samples: Vec<CounterSample>,
+    /// Closed forensics windows (`TelemetryConfig::window_dt`).
+    window_samples: Vec<WindowSample>,
+    /// Open-window start time and next boundary.
+    win_t0: Time,
+    next_window: Time,
+    /// Cumulative [arrived, completed, met, failed, shed] at the last
+    /// window close — windows report deltas against this.
+    win_last: [u64; 5],
 }
 
 impl<'p> Simulation<'p> {
@@ -384,6 +392,7 @@ impl<'p> Simulation<'p> {
             parallel::shards()
         };
         let sketch = cfg.sketch_metrics;
+        let win_dt = cfg.telemetry.window_dt;
         Simulation {
             cfg,
             policy,
@@ -415,6 +424,10 @@ impl<'p> Simulation<'p> {
             global_events: Vec::new(),
             decisions: Vec::new(),
             counter_samples: Vec::new(),
+            window_samples: Vec::new(),
+            win_t0: 0.0,
+            next_window: win_dt,
+            win_last: [0; 5],
         }
     }
 
@@ -680,6 +693,68 @@ impl<'p> Simulation<'p> {
         }
     }
 
+    /// Cluster-wide cumulative [arrived, completed, met, failed, shed]
+    /// (window-delta basis; all exact integers, so deltas are too).
+    fn cumulative_counts(&self) -> [u64; 5] {
+        let mut c = [0u64; 5];
+        for s in &self.shards {
+            c[0] += s.arrived as u64;
+            c[1] += s.completed as u64;
+            c[2] += s.stats.met() as u64;
+            c[3] += s.failed as u64;
+            c[4] += s.shed as u64;
+        }
+        c
+    }
+
+    /// Close the open forensics window at `t1`: deltas of the cumulative
+    /// counters since the last close, plus instantaneous backpressure
+    /// (queue lengths from the barrier-refreshed `queue_stats`) and GPU
+    /// occupancy. Driver-side and single-threaded, so the series is
+    /// bit-identical at any shard/worker count.
+    fn close_window(&mut self, t1: Time) {
+        let cum = self.cumulative_counts();
+        let (mut ibp, mut bbp) = (0u64, 0u64);
+        for q in &self.queue_stats {
+            ibp += q.interactive_len as u64;
+            bbp += q.batch_len as u64;
+        }
+        let total = self.effective_gpus_total();
+        self.window_samples.push(WindowSample {
+            t0: self.win_t0,
+            t1,
+            arrivals: cum[0] - self.win_last[0],
+            completions: cum[1] - self.win_last[1],
+            met: cum[2] - self.win_last[2],
+            failed: cum[3] - self.win_last[3],
+            shed: cum[4] - self.win_last[4],
+            ibp,
+            bbp,
+            gpus_used: self.gpus_used,
+            utilization: if total > 0 {
+                self.gpus_used as f64 / total as f64
+            } else {
+                0.0
+            },
+        });
+        self.win_t0 = t1;
+        self.win_last = cum;
+    }
+
+    /// Barrier hook: close a window at the first barrier at or past each
+    /// `window_dt` boundary (windows are barrier-aligned, like every other
+    /// cluster-level observation).
+    fn maybe_close_window(&mut self) {
+        if !self.cfg.telemetry.windows() || self.now < self.next_window {
+            return;
+        }
+        self.close_window(self.now);
+        let dt = self.cfg.telemetry.window_dt;
+        while self.next_window <= self.now {
+            self.next_window += dt;
+        }
+    }
+
     /// One counted draw from the source (the count is checkpoint state —
     /// resume fast-forwards a rebuilt source by exactly `drawn` draws).
     fn draw_arrival(&mut self) -> Option<Request> {
@@ -800,10 +875,35 @@ impl<'p> Simulation<'p> {
                 hists.itl.merge(&h.itl);
             }
         }
+        // Seal the open forensics window at the run's end time so the
+        // series always covers the full run (the tail is a partial window).
+        if self.cfg.telemetry.windows() && self.report.end_time > self.win_t0 {
+            self.close_window(self.report.end_time);
+        }
+        // Miss-cause forensics: one record per SLO-missed completion, in
+        // the outcomes' deterministic model order. Needs the outcome buffer
+        // (`keep_outcomes`); sketch-mode runs get the aggregate blame table
+        // from the streaming accumulator instead.
+        let misses: Vec<MissRecord> = self
+            .report
+            .outcomes
+            .iter()
+            .filter_map(|o| {
+                o.miss_cause().map(|cause| MissRecord {
+                    t: o.completion,
+                    model: o.model,
+                    class: o.class,
+                    cause,
+                    excess: o.slo_excess(),
+                })
+            })
+            .collect();
         let mut trace = TraceData {
             events: merge_events(buffers),
             decisions: std::mem::take(&mut self.decisions),
             counters: std::mem::take(&mut self.counter_samples),
+            windows: std::mem::take(&mut self.window_samples),
+            misses,
             hists,
             registry: Default::default(),
         };
@@ -875,6 +975,9 @@ impl<'p> Simulation<'p> {
         let mut next_progress = self.now + self.cfg.progress_every;
         let wall_start = std::time::Instant::now();
         let sim_start = self.now;
+        // Rolling-attainment basis for the progress heartbeat (updated only
+        // when a line is actually printed — pure logging state).
+        let mut prog_cum = self.cumulative_counts();
         loop {
             // Epoch (prev_tick, next_tick]: deliver this window's arrivals
             // (never past the cap — the monolithic loop stopped before
@@ -938,6 +1041,7 @@ impl<'p> Simulation<'p> {
             {
                 self.sample_timeline();
             }
+            self.maybe_close_window();
 
             if was_done {
                 // Work was already complete when this tick fired (e.g. an
@@ -974,12 +1078,19 @@ impl<'p> Simulation<'p> {
                 } else {
                     0.0
                 };
+                // Rolling SLO attainment since the previous heartbeat —
+                // week-scale runs surface degradation live, not at the end.
+                let cum = self.cumulative_counts();
+                let (dc, dm) = (cum[1] - prog_cum[1], cum[2] - prog_cum[2]);
+                let roll = if dc > 0 { dm as f64 / dc as f64 } else { 1.0 };
+                prog_cum = cum;
                 log_info!(
-                    "t={:.0}s arrived={} completed={} gpus={} {:.0}x realtime eta<={:.0}s",
+                    "t={:.0}s arrived={} completed={} gpus={} slo[window]={:.3} {:.0}x realtime eta<={:.0}s",
                     self.now,
                     self.arrived(),
                     self.completed(),
                     self.gpus_used,
+                    roll,
                     rate,
                     eta
                 );

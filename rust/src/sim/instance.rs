@@ -15,7 +15,8 @@
 use std::collections::VecDeque;
 
 use crate::core::{
-    InstanceClass, InstanceId, PerfProfile, Request, RequestClass, RequestOutcome, Time,
+    InstanceClass, InstanceId, PerfProfile, PhaseBreakdown, Request, RequestClass, RequestOutcome,
+    Time, WaitKind,
 };
 use crate::sim::policy::{InstanceState, InstanceView};
 use crate::util::stats::Ewma;
@@ -42,6 +43,8 @@ struct Running {
     /// True if the pending prefill is a CPU-KV restore (cheap) rather than
     /// a full recompute.
     restore: bool,
+    /// Accrued latency decomposition (SLO forensics; always on).
+    phases: PhaseBreakdown,
 }
 
 /// A request evicted from an instance, to be re-queued by the cluster.
@@ -59,6 +62,12 @@ pub struct Evicted {
     pub retries: u32,
     /// KV saved to CPU (mixed-instance fast restart)?
     pub kv_saved: bool,
+    /// When the current wait span started (the eviction time).
+    pub wait_since: Time,
+    /// Bucket the current wait span will be charged to on re-admission.
+    pub wait_kind: WaitKind,
+    /// Decomposition accrued before the eviction.
+    pub phases: PhaseBreakdown,
 }
 
 /// Work item entering an instance: either a fresh request or a re-queued
@@ -74,6 +83,12 @@ pub struct WorkItem {
     pub preemptions: u32,
     pub retries: u32,
     pub kv_saved: bool,
+    /// When the current wait span started (arrival / eviction / re-route).
+    pub wait_since: Time,
+    /// Bucket the current wait span will be charged to at admission.
+    pub wait_kind: WaitKind,
+    /// Decomposition accrued so far (SLO forensics; always on).
+    pub phases: PhaseBreakdown,
 }
 
 impl WorkItem {
@@ -89,6 +104,9 @@ impl WorkItem {
             preemptions: 0,
             retries: 0,
             kv_saved: false,
+            wait_since: arrival,
+            wait_kind: WaitKind::Queue,
+            phases: PhaseBreakdown::default(),
         }
     }
 
@@ -103,7 +121,20 @@ impl WorkItem {
             preemptions: e.preemptions,
             retries: e.retries,
             kv_saved: e.kv_saved,
+            wait_since: e.wait_since,
+            wait_kind: e.wait_kind,
+            phases: e.phases,
         }
+    }
+
+    /// Close the current wait span at `now`, charging it to the active
+    /// bucket, and open a new span of `kind` — used when a queued item's
+    /// waiting *reason* changes (e.g. it gets dispatched behind a loading
+    /// instance).
+    pub fn switch_wait(&mut self, now: Time, kind: WaitKind) {
+        self.phases.charge_wait(self.wait_kind, now - self.wait_since);
+        self.wait_since = now;
+        self.wait_kind = kind;
     }
 
     pub fn class(&self) -> RequestClass {
@@ -264,7 +295,7 @@ impl SimInstance {
     /// Admission is bounded by the chunked-prefill token budget so one step
     /// never balloons with unbounded prompt processing (which would inflate
     /// every running request's ITL).
-    fn admit(&mut self) {
+    fn admit(&mut self, now: Time) {
         let cap = (self.profile.kv_capacity_tokens as f64 * KV_WATERMARK) as u64;
         let mut prefill_budget = self.prefill_budget_tokens();
         while self.running.len() < self.max_batch as usize && prefill_budget > 0 {
@@ -276,7 +307,7 @@ impl SimInstance {
                 break;
             }
             prefill_budget -= needed as i64;
-            let item = self.local_queue.pop_front().unwrap();
+            let mut item = self.local_queue.pop_front().unwrap();
             let pending = item.req.input_tokens; // prompt tokens to (re)build
             self.kv_tokens += needed;
             if item.req.class == RequestClass::Interactive {
@@ -285,6 +316,10 @@ impl SimInstance {
             if item.req.slo.itl < self.min_itl_cache {
                 self.min_itl_cache = item.req.slo.itl;
             }
+            // Close the wait span: time since arrival/eviction/re-route is
+            // charged to whatever the item was waiting for.
+            item.phases
+                .charge_wait(item.wait_kind, now - item.wait_since);
             self.running.push(Running {
                 generated: item.generated,
                 ctx_tokens: needed,
@@ -295,6 +330,7 @@ impl SimInstance {
                 retries: item.retries,
                 pending_prefill: pending,
                 restore: item.kv_saved,
+                phases: item.phases,
                 req: item.req,
             });
         }
@@ -302,9 +338,9 @@ impl SimInstance {
 
     /// Begin an engine step at `now`; returns its duration, or None if there
     /// is nothing to run.
-    pub fn begin_step(&mut self, _now: Time) -> Option<Time> {
+    pub fn begin_step(&mut self, now: Time) -> Option<Time> {
         debug_assert!(!self.step_in_flight);
-        self.admit();
+        self.admit(now);
         if self.running.is_empty() {
             return None;
         }
@@ -354,6 +390,9 @@ impl SimInstance {
         while i < self.running.len() {
             let r = &mut self.running[i];
             if r.pending_prefill > 0 {
+                // The admission step (re)built this request's context: its
+                // full duration is (re-)prefill exposure for the request.
+                r.phases.prefill += duration;
                 r.pending_prefill = 0;
                 r.restore = false;
             }
@@ -390,6 +429,10 @@ impl SimInstance {
                 } else {
                     0.0
                 };
+                // Close the decomposition: decode is the residual, ulp-
+                // corrected so the phase sum lands bit-exactly on latency.
+                let mut phases = r.phases;
+                phases.close(now - r.req.arrival);
                 result.completed.push(RequestOutcome {
                     id: r.req.id,
                     class: r.req.class,
@@ -403,6 +446,8 @@ impl SimInstance {
                     mean_itl,
                     max_itl: r.max_gap.max(mean_itl.min(duration)),
                     preemptions: r.preemptions,
+                    retries: r.retries,
+                    phases,
                 });
                 continue; // swap_remove replaced index i
             }
@@ -439,6 +484,9 @@ impl SimInstance {
             preemptions: r.preemptions + 1,
             retries: r.retries,
             kv_saved,
+            wait_since: now,
+            wait_kind: WaitKind::Preempt,
+            phases: r.phases,
             req: r.req,
         }
     }
@@ -455,6 +503,9 @@ impl SimInstance {
             // Oldest first, preserving admission order in the re-queue.
             let mut e = self.evict_index(0, now);
             e.kv_saved = false;
+            // A crash eviction waits in the *retry* path, not the
+            // preemption path the generic evictor assumes.
+            e.wait_kind = WaitKind::Retry;
             evicted.push(e);
         }
         let queued = self.take_local_queue();
@@ -506,6 +557,16 @@ impl SimInstance {
     /// Drain the local queue (used when retiring an instance).
     pub fn take_local_queue(&mut self) -> Vec<WorkItem> {
         self.local_queue.drain(..).collect()
+    }
+
+    /// Straggler forensics: `excess` seconds of the step just begun are
+    /// attributable to a slowdown window. Annotate every running request —
+    /// the time itself is already inside their prefill/decode spans, so
+    /// this is classification metadata, not part of the partition sum.
+    pub fn charge_slow_excess(&mut self, excess: Time) {
+        for r in &mut self.running {
+            r.phases.slow_excess += excess;
+        }
     }
 
     /// Tightest ITL SLO among running requests (paper: the instance SLO).
@@ -595,6 +656,7 @@ impl SimInstance {
             put_u32(out, r.retries);
             put_u32(out, r.pending_prefill);
             put_bool(out, r.restore);
+            ck::put_phases(out, &r.phases);
         }
         put_usize(out, self.local_queue.len());
         for w in &self.local_queue {
@@ -635,6 +697,7 @@ impl SimInstance {
                 retries: d.u32()?,
                 pending_prefill: d.u32()?,
                 restore: d.bool()?,
+                phases: ck::get_phases(d)?,
             });
         }
         let n_queued = d.usize()?;
@@ -939,6 +1002,60 @@ mod tests {
         assert_eq!(va.steps, vb.steps);
         let (da, db) = (inst.begin_step(now), back.begin_step(now));
         assert_eq!(da.map(f64::to_bits), db.map(f64::to_bits));
+    }
+
+    #[test]
+    fn phase_decomposition_sums_bit_exactly_to_latency() {
+        // Through admission waits, preemption evictions, and re-admission,
+        // every outcome's phase partition must land exactly on its latency.
+        let mut inst = instance(2);
+        for i in 0..6 {
+            inst.enqueue(WorkItem::fresh(req(i, RequestClass::Batch, 32, 25)));
+        }
+        inst.enqueue(WorkItem::fresh(req(9, RequestClass::Interactive, 16, 10)));
+        let (done, _) = run_to_completion(&mut inst, 0.0);
+        assert_eq!(done.len(), 7);
+        for o in &done {
+            assert_eq!(
+                o.phases.sum().to_bits(),
+                o.latency().to_bits(),
+                "{}: phases {:?} must partition latency {}",
+                o.id,
+                o.phases,
+                o.latency()
+            );
+            assert!(o.phases.prefill > 0.0, "{}: prefill step charged", o.id);
+            assert!(o.phases.decode >= 0.0, "{}: decode residual sane", o.id);
+        }
+        // The later batch arrivals waited behind max_batch=2: queue wait
+        // must show up for at least one of them.
+        assert!(done.iter().any(|o| o.phases.queue_wait > 0.0));
+    }
+
+    #[test]
+    fn crash_eviction_charges_retry_rework_on_readmission() {
+        let mut inst = instance(2);
+        inst.enqueue(WorkItem::fresh(req(1, RequestClass::Batch, 16, 40)));
+        let d = inst.begin_step(0.0).unwrap();
+        inst.finish_step(d, d);
+        let (evicted, _) = inst.crash(d);
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].wait_kind, WaitKind::Retry);
+        // Re-admit on a fresh instance after a 5 s stall.
+        let mut inst2 = instance(2);
+        let mut w = WorkItem::from_evicted(evicted.into_iter().next().unwrap());
+        w.retries += 1;
+        inst2.enqueue(w);
+        let (done, _) = run_to_completion(&mut inst2, d + 5.0);
+        assert_eq!(done.len(), 1);
+        let o = &done[0];
+        assert_eq!(o.retries, 1);
+        assert!(
+            (o.phases.retry_rework - 5.0).abs() < 1e-9,
+            "stall span charged to retry_rework: {:?}",
+            o.phases
+        );
+        assert_eq!(o.phases.sum().to_bits(), o.latency().to_bits());
     }
 
     #[test]

@@ -30,7 +30,7 @@
 
 use std::collections::VecDeque;
 
-use crate::core::{InstanceClass, InstanceId, Request, RequestClass, RequestOutcome, Time};
+use crate::core::{InstanceClass, InstanceId, Request, RequestClass, RequestOutcome, Time, WaitKind};
 use crate::metrics::SummaryAccum;
 use crate::sim::events::{Ev, EventCore, EventQueue, HeapEv, PRI_ARRIVAL};
 use crate::sim::instance::{SimInstance, WorkItem};
@@ -799,7 +799,13 @@ impl ModelShard {
         }
         let before = if trace { inst.running_len() as u32 } else { 0 };
         if let Some(d) = inst.begin_step(self.now) {
+            let base = d;
             let d = d * straggle;
+            if straggle > 1.0 {
+                // Forensics annotation: the stretch beyond the nominal step
+                // is straggler-attributable for every request in the batch.
+                inst.charge_slow_excess(d - base);
+            }
             let id = inst.id;
             if trace {
                 // begin_step admits waiting work into the running batch;
@@ -843,7 +849,7 @@ impl ModelShard {
         }
     }
 
-    fn route_item(&mut self, item: WorkItem) {
+    fn route_item(&mut self, mut item: WorkItem) {
         self.refresh_instance_views();
         let qr = QueuedReq::from_request(&item.req);
         let view = ModelView {
@@ -889,6 +895,12 @@ impl ModelShard {
                             let w = WorkItem::from_evicted(e);
                             self.q_batch.push_front(w);
                         }
+                    }
+                    // Forensics: a dispatch behind a still-loading instance
+                    // waits on the model load, not on queue backlog — flip
+                    // the open wait span so admission charges it right.
+                    if matches!(self.instances[idx].state, InstanceState::Loading { .. }) {
+                        item.switch_wait(self.now, WaitKind::Load);
                     }
                     self.instances[idx].enqueue(item);
                     self.kick(idx);

@@ -15,7 +15,7 @@
 
 use std::collections::VecDeque;
 
-use crate::core::{Request, RequestClass, RequestId, Slo, Time};
+use crate::core::{PhaseBreakdown, Request, RequestClass, RequestId, Slo, Time, WaitKind};
 use crate::sim::instance::WorkItem;
 
 /// A FIFO of [`WorkItem`]s stored column-wise. Supports exactly the
@@ -39,6 +39,9 @@ pub struct WorkQueue {
     preemptions: VecDeque<u32>,
     retries: VecDeque<u32>,
     kv_saved: VecDeque<bool>,
+    wait_since: VecDeque<Time>,
+    wait_kind: VecDeque<WaitKind>,
+    phases: VecDeque<PhaseBreakdown>,
 }
 
 impl WorkQueue {
@@ -71,6 +74,9 @@ impl WorkQueue {
         self.preemptions.push_back(w.preemptions);
         self.retries.push_back(w.retries);
         self.kv_saved.push_back(w.kv_saved);
+        self.wait_since.push_back(w.wait_since);
+        self.wait_kind.push_back(w.wait_kind);
+        self.phases.push_back(w.phases);
     }
 
     /// Re-queue at the head (evictions go back to the front so preempted
@@ -92,6 +98,9 @@ impl WorkQueue {
         self.preemptions.push_front(w.preemptions);
         self.retries.push_front(w.retries);
         self.kv_saved.push_front(w.kv_saved);
+        self.wait_since.push_front(w.wait_since);
+        self.wait_kind.push_front(w.wait_kind);
+        self.phases.push_front(w.phases);
     }
 
     /// Reassemble the item at `i` exactly as pushed (checkpoint encode and
@@ -118,6 +127,9 @@ impl WorkQueue {
             preemptions: self.preemptions[i],
             retries: self.retries[i],
             kv_saved: self.kv_saved[i],
+            wait_since: self.wait_since[i],
+            wait_kind: self.wait_kind[i],
+            phases: self.phases[i],
         }
     }
 
@@ -144,6 +156,9 @@ impl WorkQueue {
             preemptions: self.preemptions.pop_front().unwrap(),
             retries: self.retries.pop_front().unwrap(),
             kv_saved: self.kv_saved.pop_front().unwrap(),
+            wait_since: self.wait_since.pop_front().unwrap(),
+            wait_kind: self.wait_kind.pop_front().unwrap(),
+            phases: self.phases.pop_front().unwrap(),
         })
     }
 
@@ -190,6 +205,10 @@ mod tests {
         w.preemptions = id as u32 % 4;
         w.retries = id as u32 % 2;
         w.kv_saved = id % 3 == 0;
+        w.wait_since = arrival + 0.125 * (id % 5) as f64;
+        w.wait_kind = WaitKind::from_u8((id % 4) as u8);
+        w.phases.queue_wait = 0.3 * id as f64;
+        w.phases.retry_rework = if id % 2 == 1 { 1.5 } else { 0.0 };
         w
     }
 
@@ -213,6 +232,13 @@ mod tests {
         assert_eq!(a.preemptions, b.preemptions);
         assert_eq!(a.retries, b.retries);
         assert_eq!(a.kv_saved, b.kv_saved);
+        assert_eq!(a.wait_since.to_bits(), b.wait_since.to_bits());
+        assert_eq!(a.wait_kind, b.wait_kind);
+        assert_eq!(a.phases.queue_wait.to_bits(), b.phases.queue_wait.to_bits());
+        assert_eq!(
+            a.phases.retry_rework.to_bits(),
+            b.phases.retry_rework.to_bits()
+        );
     }
 
     #[test]

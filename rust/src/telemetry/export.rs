@@ -22,8 +22,10 @@
 
 use std::collections::BTreeMap;
 
+use crate::core::MissCause;
 use crate::telemetry::{
-    CounterSample, DecisionRecord, EventKind, LogHist, Registry, SimEvent, TraceData, HIST_BINS,
+    CounterSample, DecisionRecord, EventKind, LogHist, MissRecord, Registry, SimEvent, TraceData,
+    WindowSample, HIST_BINS,
 };
 use crate::util::json::Json;
 
@@ -116,6 +118,35 @@ fn counter_json(c: &CounterSample) -> Vec<(&'static str, Json)> {
         ("running", Json::from(c.running as u64)),
         ("failed", Json::from(c.failed)),
         ("shed", Json::from(c.shed)),
+    ]
+}
+
+/// The forensics-window fields shared by the Chrome counter track and the
+/// JSONL `window` lines (derived rates included so consumers don't have to
+/// recompute them).
+fn window_json(w: &WindowSample) -> Vec<(&'static str, Json)> {
+    vec![
+        ("arrivals", Json::from(w.arrivals)),
+        ("completions", Json::from(w.completions)),
+        ("met", Json::from(w.met)),
+        ("failed", Json::from(w.failed)),
+        ("shed", Json::from(w.shed)),
+        ("ibp", Json::from(w.ibp)),
+        ("bbp", Json::from(w.bbp)),
+        ("gpus_used", Json::from(w.gpus_used as u64)),
+        ("utilization", Json::from(w.utilization)),
+        ("attainment", Json::from(w.attainment())),
+        ("arrival_rate", Json::from(w.arrival_rate())),
+    ]
+}
+
+fn miss_json(m: &MissRecord) -> Vec<(&'static str, Json)> {
+    vec![
+        ("t", Json::from(m.t)),
+        ("model", Json::from(m.model)),
+        ("class", Json::from(m.class.as_str())),
+        ("cause", Json::from(m.cause.as_str())),
+        ("excess", Json::from(m.excess)),
     ]
 }
 
@@ -250,6 +281,51 @@ pub fn chrome_trace(trace: &TraceData, model_names: &[String]) -> String {
             ),
         ]));
     }
+    // Forensics windows: a second counter track sampled at each window
+    // close (windows are contiguous, so t0 is recoverable as the previous
+    // sample's timestamp).
+    for w in &trace.windows {
+        events.push(Json::obj(vec![
+            ("ph", Json::from("C")),
+            ("name", Json::from("slo_forensics")),
+            ("pid", Json::from(0u64)),
+            ("ts", Json::from(w.t1 * US)),
+            (
+                "args",
+                Json::Obj(
+                    window_json(w)
+                        .into_iter()
+                        .map(|(k, v)| (k.to_string(), v))
+                        .collect::<BTreeMap<_, _>>(),
+                ),
+            ),
+        ]));
+    }
+    // SLO misses: instants named by their dominant cause on the owning
+    // model's process, so a Perfetto search for e.g. "queue_wait" lands on
+    // every miss it explains.
+    for m in &trace.misses {
+        events.push(Json::obj(vec![
+            ("ph", Json::from("i")),
+            ("s", Json::from("p")),
+            ("cat", Json::from("miss")),
+            ("name", Json::from(m.cause.as_str())),
+            ("pid", Json::from(m.model)),
+            ("tid", Json::from(0u64)),
+            ("ts", Json::from(m.t * US)),
+            (
+                "args",
+                Json::Obj(
+                    vec![
+                        ("class".to_string(), Json::from(m.class.as_str())),
+                        ("excess".to_string(), Json::from(m.excess)),
+                    ]
+                    .into_iter()
+                    .collect::<BTreeMap<_, _>>(),
+                ),
+            ),
+        ]));
+    }
     Json::obj(vec![
         ("traceEvents", Json::Arr(events)),
         ("displayTimeUnit", Json::from("ms")),
@@ -291,6 +367,22 @@ pub fn jsonl(trace: &TraceData) -> String {
         out.push_str(&Json::obj(pairs).to_string());
         out.push('\n');
     }
+    for w in &trace.windows {
+        let mut pairs = vec![
+            ("type", Json::from("window")),
+            ("t0", Json::from(w.t0)),
+            ("t1", Json::from(w.t1)),
+        ];
+        pairs.extend(window_json(w));
+        out.push_str(&Json::obj(pairs).to_string());
+        out.push('\n');
+    }
+    for m in &trace.misses {
+        let mut pairs = vec![("type", Json::from("miss"))];
+        pairs.extend(miss_json(m));
+        out.push_str(&Json::obj(pairs).to_string());
+        out.push('\n');
+    }
     if !trace.registry.is_empty() {
         let mut m: BTreeMap<String, Json> = BTreeMap::new();
         m.insert("type".into(), Json::from("registry"));
@@ -328,10 +420,49 @@ pub fn jsonl(trace: &TraceData) -> String {
 // Prometheus text exposition
 // ---------------------------------------------------------------------------
 
+/// `# HELP` text for the registry metrics the simulator emits. Unknown
+/// names (user-registered counters) get a generic line rather than none —
+/// conformant scrapers expect HELP before TYPE for every family.
+fn prom_help(name: &str) -> &'static str {
+    match name {
+        "requests_total" => "Requests generated by the workload.",
+        "requests_completed" => "Requests that finished decoding.",
+        "requests_failed" => "Requests that exhausted their retry budget.",
+        "requests_shed" => "Batch arrivals shed by the overload knob.",
+        "requests_unfinished" => "Requests still in flight when the run ended.",
+        "retries" => "Crash-eviction re-queues across the run.",
+        "scale_ups" => "Instances added by the autoscaler.",
+        "scale_downs" => "Instances retired by the autoscaler.",
+        "gpu_seconds" => "GPU-seconds consumed across the run.",
+        "end_time_seconds" => "Simulated end time of the run in seconds.",
+        "total_tokens" => "Tokens generated across all requests.",
+        "slo_attainment" => "Fraction of completed requests that met their SLO.",
+        _ => "Chiron simulator metric.",
+    }
+}
+
+/// Escape a label *value* per the text exposition format: backslash,
+/// double-quote, and newline must be backslash-escaped inside the quotes.
+fn prom_escape(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 fn prom_hist(out: &mut String, name: &str, h: &LogHist) {
     if h.count == 0 {
         return;
     }
+    out.push_str(&format!(
+        "# HELP {name} Latency distribution (log-histogram sketch).\n"
+    ));
     out.push_str(&format!("# TYPE {name} histogram\n"));
     let top = (0..HIST_BINS).rev().find(|&i| h.bins[i] > 0).unwrap_or(0);
     let mut cum = 0u64;
@@ -349,17 +480,87 @@ fn prom_hist(out: &mut String, name: &str, h: &LogHist) {
 
 /// Render a registry (plus optional named latency sketches) in the
 /// Prometheus text exposition format (metric names are prefixed
-/// `chiron_`), the shape a `/metrics` scrape endpoint serves.
+/// `chiron_`, every family gets `# HELP` and `# TYPE` lines), the shape a
+/// `/metrics` scrape endpoint serves.
 pub fn prometheus(reg: &Registry, hists: &[(&str, &LogHist)]) -> String {
     let mut out = String::new();
     for (k, v) in reg.counters() {
-        out.push_str(&format!("# TYPE chiron_{k} counter\nchiron_{k} {v}\n"));
+        out.push_str(&format!(
+            "# HELP chiron_{k} {}\n# TYPE chiron_{k} counter\nchiron_{k} {v}\n",
+            prom_help(k)
+        ));
     }
     for (k, v) in reg.gauges() {
-        out.push_str(&format!("# TYPE chiron_{k} gauge\nchiron_{k} {v}\n"));
+        out.push_str(&format!(
+            "# HELP chiron_{k} {}\n# TYPE chiron_{k} gauge\nchiron_{k} {v}\n",
+            prom_help(k)
+        ));
     }
     for (name, h) in hists {
         prom_hist(&mut out, &format!("chiron_{name}"), h);
+    }
+    out
+}
+
+/// Trace-level Prometheus export: the registry/sketch families from
+/// [`prometheus`] plus the SLO forensics — the miss-cause blame counts as
+/// a labelled counter family, and the windowed backpressure series as
+/// gauges with explicit millisecond timestamps (a time-series dump in
+/// exposition syntax, the shape remote-write backfill tools ingest).
+pub fn prometheus_trace(trace: &TraceData) -> String {
+    let mut out = prometheus(
+        &trace.registry,
+        &[
+            ("ttft_seconds", &trace.hists.ttft),
+            ("itl_seconds", &trace.hists.itl),
+        ],
+    );
+    if !trace.misses.is_empty() {
+        // Aggregate the per-request records into labelled totals (sorted
+        // keys → deterministic line order).
+        let mut cells: BTreeMap<(u64, &str, &str), u64> = BTreeMap::new();
+        for m in &trace.misses {
+            *cells
+                .entry((m.model as u64, m.class.as_str(), m.cause.as_str()))
+                .or_insert(0) += 1;
+        }
+        out.push_str(
+            "# HELP chiron_slo_miss_total SLO-missed completions by dominant cause.\n\
+             # TYPE chiron_slo_miss_total counter\n",
+        );
+        for ((model, class, cause), n) in &cells {
+            out.push_str(&format!(
+                "chiron_slo_miss_total{{model=\"{model}\",class=\"{}\",cause=\"{}\"}} {n}\n",
+                prom_escape(class),
+                prom_escape(cause)
+            ));
+        }
+    }
+    if !trace.windows.is_empty() {
+        let series: [(&str, &str, fn(&WindowSample) -> f64); 6] = [
+            ("window_ibp", "Queued interactive requests at window close.", |w| w.ibp as f64),
+            ("window_bbp", "Queued batch requests at window close.", |w| w.bbp as f64),
+            ("window_gpus", "GPUs allocated at window close.", |w| w.gpus_used as f64),
+            ("window_utilization", "Busy fraction of allocated GPUs at window close.", |w| {
+                w.utilization
+            }),
+            ("window_slo_attainment", "SLO attainment over the window.", |w| w.attainment()),
+            ("window_arrival_rate", "Arrivals per second over the window.", |w| {
+                w.arrival_rate()
+            }),
+        ];
+        for (name, help, f) in series {
+            out.push_str(&format!(
+                "# HELP chiron_{name} {help}\n# TYPE chiron_{name} gauge\n"
+            ));
+            for w in &trace.windows {
+                out.push_str(&format!(
+                    "chiron_{name} {} {}\n",
+                    f(w),
+                    (w.t1 * 1000.0) as i64
+                ));
+            }
+        }
     }
     out
 }
@@ -368,12 +569,26 @@ pub fn prometheus(reg: &Registry, hists: &[(&str, &LogHist)]) -> String {
 // `chiron explain`
 // ---------------------------------------------------------------------------
 
+/// One SLO-miss record as read back from a trace file.
+struct ParsedMiss {
+    t: f64,
+    model: u64,
+    class: String,
+    cause: String,
+    excess: f64,
+}
+
+#[derive(Default)]
 struct ParsedTrace {
     /// (t, model, op) per scale event.
     scales: Vec<(f64, u64, String)>,
     /// (t, model, policy, action, reason, inputs).
     decisions: Vec<(f64, u64, String, String, String, Vec<(String, f64)>)>,
-    events: usize,
+    /// Timestamps of the remaining (non-decision, non-miss) events.
+    event_ts: Vec<f64>,
+    /// Forensics window bounds `(t0, t1)` when the trace recorded them.
+    windows: Vec<(f64, f64)>,
+    misses: Vec<ParsedMiss>,
 }
 
 fn parse_chrome(j: &Json) -> Result<ParsedTrace, String> {
@@ -381,10 +596,31 @@ fn parse_chrome(j: &Json) -> Result<ParsedTrace, String> {
         .get("traceEvents")
         .as_arr()
         .ok_or("chrome trace has no traceEvents array")?;
-    let mut p = ParsedTrace { scales: Vec::new(), decisions: Vec::new(), events: 0 };
+    let mut p = ParsedTrace::default();
     for e in evs {
         let cat = e.get("cat").as_str().unwrap_or("");
-        if e.get("ph").as_str() == Some("M") || e.get("ph").as_str() == Some("C") {
+        if e.get("ph").as_str() == Some("C") {
+            // Forensics windows ride the "slo_forensics" counter track;
+            // samples are window closes and windows are contiguous, so t0
+            // is the previous close (first window opens at 0).
+            if e.get("name").as_str() == Some("slo_forensics") {
+                let t1 = e.get("ts").as_f64().unwrap_or(0.0) / US;
+                let t0 = p.windows.last().map(|w| w.1).unwrap_or(0.0);
+                p.windows.push((t0, t1));
+            }
+            continue;
+        }
+        if e.get("ph").as_str() == Some("M") {
+            continue;
+        }
+        if cat == "miss" {
+            p.misses.push(ParsedMiss {
+                t: e.get("ts").as_f64().unwrap_or(0.0) / US,
+                model: e.get("pid").as_u64().unwrap_or(0),
+                class: e.get("args").get("class").as_str().unwrap_or("?").to_string(),
+                cause: e.get("name").as_str().unwrap_or("?").to_string(),
+                excess: e.get("args").get("excess").as_f64().unwrap_or(0.0),
+            });
             continue;
         }
         if cat == "decision" {
@@ -407,7 +643,7 @@ fn parse_chrome(j: &Json) -> Result<ParsedTrace, String> {
                 inputs,
             ));
         } else {
-            p.events += 1;
+            p.event_ts.push(e.get("ts").as_f64().unwrap_or(0.0) / US);
             if cat == "scale" {
                 p.scales.push((
                     e.get("ts").as_f64().unwrap_or(0.0) / US,
@@ -421,7 +657,7 @@ fn parse_chrome(j: &Json) -> Result<ParsedTrace, String> {
 }
 
 fn parse_jsonl(text: &str) -> Result<ParsedTrace, String> {
-    let mut p = ParsedTrace { scales: Vec::new(), decisions: Vec::new(), events: 0 };
+    let mut p = ParsedTrace::default();
     for (n, line) in text.lines().enumerate() {
         if line.trim().is_empty() {
             continue;
@@ -429,7 +665,7 @@ fn parse_jsonl(text: &str) -> Result<ParsedTrace, String> {
         let j = Json::parse(line).map_err(|e| format!("line {}: {e}", n + 1))?;
         match j.get("type").as_str() {
             Some("event") => {
-                p.events += 1;
+                p.event_ts.push(j.get("t").as_f64().unwrap_or(0.0));
                 if j.get("kind").as_str() == Some("scale") {
                     p.scales.push((
                         j.get("t").as_f64().unwrap_or(0.0),
@@ -457,10 +693,47 @@ fn parse_jsonl(text: &str) -> Result<ParsedTrace, String> {
                     inputs,
                 ));
             }
+            Some("window") => {
+                p.windows.push((
+                    j.get("t0").as_f64().unwrap_or(0.0),
+                    j.get("t1").as_f64().unwrap_or(0.0),
+                ));
+            }
+            Some("miss") => {
+                p.misses.push(ParsedMiss {
+                    t: j.get("t").as_f64().unwrap_or(0.0),
+                    model: j.get("model").as_u64().unwrap_or(0),
+                    class: j.get("class").as_str().unwrap_or("?").to_string(),
+                    cause: j.get("cause").as_str().unwrap_or("?").to_string(),
+                    excess: j.get("excess").as_f64().unwrap_or(0.0),
+                });
+            }
             _ => {}
         }
     }
     Ok(p)
+}
+
+/// Parse a trace file's text, auto-detecting the format: a Chrome trace is
+/// one JSON document with a "traceEvents" array; anything else (including
+/// a whole-file parse failure, which is what multi-line JSONL produces) is
+/// treated as JSONL.
+fn parse_trace(text: &str) -> Result<ParsedTrace, String> {
+    match Json::parse(text.trim()) {
+        Ok(j) if !j.get("traceEvents").is_null() => parse_chrome(&j),
+        _ => parse_jsonl(text),
+    }
+}
+
+/// Half-open time filter `[start, end)` applied in place.
+fn filter_window(p: &mut ParsedTrace, (start, end): (f64, f64)) {
+    p.event_ts.retain(|&t| t >= start && t < end);
+    p.scales.retain(|s| s.0 >= start && s.0 < end);
+    p.decisions.retain(|d| d.0 >= start && d.0 < end);
+    p.misses.retain(|m| m.t >= start && m.t < end);
+    // Keep windows that overlap the filter (a window is `(t0, t1]`-ish;
+    // overlap is the useful notion here).
+    p.windows.retain(|&(t0, t1)| t1 > start && t0 < end);
 }
 
 /// Analyze a trace file's text (either format, auto-detected): summarize
@@ -469,21 +742,48 @@ fn parse_jsonl(text: &str) -> Result<ParsedTrace, String> {
 /// barrier (same timestamp + model + action verb). Returns the formatted
 /// report, or an error for unparseable input.
 pub fn explain(text: &str) -> Result<String, String> {
-    // A Chrome trace is one JSON document with a "traceEvents" array;
-    // anything else (including a whole-file parse failure, which is what
-    // multi-line JSONL produces) is treated as JSONL.
-    let parsed = match Json::parse(text.trim()) {
-        Ok(j) if !j.get("traceEvents").is_null() => parse_chrome(&j)?,
-        _ => parse_jsonl(text)?,
-    };
+    explain_filtered(text, None)
+}
+
+/// [`explain`] restricted to a `[start, end)` simulated-second window
+/// (`chiron explain --window start:end`). When the trace recorded
+/// forensics windows, the report also breaks decision/scale/miss counts
+/// out per window.
+pub fn explain_filtered(text: &str, window: Option<(f64, f64)>) -> Result<String, String> {
+    let mut parsed = parse_trace(text)?;
+    if let Some(w) = window {
+        filter_window(&mut parsed, w);
+    }
 
     let mut out = String::new();
+    if let Some((start, end)) = window {
+        out.push_str(&format!("window filter: [{start}, {end})\n"));
+    }
     out.push_str(&format!(
         "trace: {} events, {} decisions, {} scale actions\n",
-        parsed.events,
+        parsed.event_ts.len(),
         parsed.decisions.len(),
         parsed.scales.len()
     ));
+
+    // Per-window activity counts (only when the run recorded forensics
+    // windows; capped so week-scale traces stay readable).
+    const MAX_WINDOW_LINES: usize = 48;
+    for &(t0, t1) in parsed.windows.iter().take(MAX_WINDOW_LINES) {
+        let in_win = |t: f64| t >= t0 && t < t1;
+        let d = parsed.decisions.iter().filter(|d| in_win(d.0)).count();
+        let s = parsed.scales.iter().filter(|s| in_win(s.0)).count();
+        let m = parsed.misses.iter().filter(|m| in_win(m.t)).count();
+        out.push_str(&format!(
+            "  window [{t0:.0}, {t1:.0}): decisions={d} scales={s} misses={m}\n"
+        ));
+    }
+    if parsed.windows.len() > MAX_WINDOW_LINES {
+        out.push_str(&format!(
+            "  … {} more windows (narrow with --window start:end)\n",
+            parsed.windows.len() - MAX_WINDOW_LINES
+        ));
+    }
 
     // Group decisions by (policy, model, reason); accumulate input means.
     type Group = (usize, BTreeMap<String, (f64, usize)>, BTreeMap<String, usize>);
@@ -552,6 +852,158 @@ pub fn explain(text: &str) -> Result<String, String> {
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// `chiron slo-debug`
+// ---------------------------------------------------------------------------
+
+/// Render a miss-cause blame table from `(model, class) → counts` cells.
+fn blame_table(out: &mut String, cells: &BTreeMap<(u64, String), [u64; 6]>) {
+    let total: u64 = cells.values().flatten().sum();
+    out.push_str(&format!(
+        "miss-cause blame table ({total} SLO-missed requests):\n"
+    ));
+    for ((model, class), counts) in cells {
+        let parts: Vec<String> = MissCause::ALL
+            .iter()
+            .filter(|c| counts[c.index()] > 0)
+            .map(|c| format!("{}={}", c.as_str(), counts[c.index()]))
+            .collect();
+        let dominant = MissCause::ALL
+            .iter()
+            .max_by_key(|c| (counts[c.index()], std::cmp::Reverse(c.index())))
+            .unwrap();
+        out.push_str(&format!(
+            "  model {model} {class}: total={} dominant={} [{}]\n",
+            counts.iter().sum::<u64>(),
+            dominant.as_str(),
+            parts.join(" ")
+        ));
+    }
+}
+
+/// SLO forensics report (`chiron slo-debug <trace|report>`): the per
+/// model×class blame table, an attribution check (every miss must carry a
+/// recognized dominant cause — anything else is flagged UNATTRIBUTED), and
+/// a worst-window drilldown when per-request records are available.
+///
+/// Accepts a trace in either exporter format, or a report/summary JSON
+/// carrying a `miss_causes` table (`chiron run --out`).
+pub fn slo_debug(text: &str) -> Result<String, String> {
+    // Report path: a summary JSON with an aggregated blame table (possibly
+    // nested under "summary"). Traces either have "traceEvents" (Chrome)
+    // or are JSONL, whose lines all carry a "type" tag.
+    if let Ok(j) = Json::parse(text.trim()) {
+        if j.get("traceEvents").is_null() && j.get("type").is_null() {
+            let rows = [&j, j.get("summary")]
+                .into_iter()
+                .find_map(|r| r.get("miss_causes").as_arr());
+            let Some(rows) = rows else {
+                return Err(
+                    "not a trace, and no miss_causes table found (did every request meet \
+                     its SLO, or was the report built without forensics?)"
+                        .into(),
+                );
+            };
+            let mut cells: BTreeMap<(u64, String), [u64; 6]> = BTreeMap::new();
+            for r in rows {
+                let key = (
+                    r.get("model").as_u64().unwrap_or(0),
+                    r.get("class").as_str().unwrap_or("?").to_string(),
+                );
+                let counts = cells.entry(key).or_insert([0; 6]);
+                for c in MissCause::ALL {
+                    counts[c.index()] += r.get(c.as_str()).as_f64().unwrap_or(0.0) as u64;
+                }
+            }
+            let mut out = String::new();
+            blame_table(&mut out, &cells);
+            out.push_str("(aggregated report — per-request drilldown needs a --trace file)\n");
+            return Ok(out);
+        }
+    }
+
+    let parsed = parse_trace(text)?;
+    if parsed.misses.is_empty() {
+        return Ok("no SLO misses recorded — nothing to debug\n".into());
+    }
+
+    let mut cells: BTreeMap<(u64, String), [u64; 6]> = BTreeMap::new();
+    let mut attributed = 0usize;
+    let mut unattributed: Vec<String> = Vec::new();
+    for m in &parsed.misses {
+        match MissCause::ALL.iter().find(|c| c.as_str() == m.cause) {
+            Some(c) => {
+                attributed += 1;
+                cells.entry((m.model, m.class.clone())).or_insert([0; 6])[c.index()] += 1;
+            }
+            None => unattributed.push(format!("t={} model={} cause={:?}", m.t, m.model, m.cause)),
+        }
+    }
+
+    let mut out = String::new();
+    blame_table(&mut out, &cells);
+    out.push_str(&format!(
+        "attribution: {attributed}/{} misses carry a dominant cause\n",
+        parsed.misses.len()
+    ));
+    for u in unattributed.iter().take(10) {
+        out.push_str(&format!("  UNATTRIBUTED {u}\n"));
+    }
+
+    // Worst-window drilldown: bucket misses into the trace's forensics
+    // windows, or fixed 60 s buckets when the run didn't record any.
+    let windows: Vec<(f64, f64)> = if !parsed.windows.is_empty() {
+        parsed.windows.clone()
+    } else {
+        let t_max = parsed.misses.iter().map(|m| m.t).fold(0.0f64, f64::max);
+        (0..=(t_max / 60.0) as usize)
+            .map(|i| (i as f64 * 60.0, (i + 1) as f64 * 60.0))
+            .collect()
+    };
+    let worst = windows
+        .iter()
+        .map(|&(t0, t1)| {
+            let n = parsed
+                .misses
+                .iter()
+                .filter(|m| m.t >= t0 && m.t < t1)
+                .count();
+            (n, t0, t1)
+        })
+        .max_by(|a, b| a.0.cmp(&b.0).then(b.1.total_cmp(&a.1)));
+    if let Some((n, t0, t1)) = worst {
+        if n > 0 {
+            let in_win: Vec<&ParsedMiss> = parsed
+                .misses
+                .iter()
+                .filter(|m| m.t >= t0 && m.t < t1)
+                .collect();
+            let mut counts = [0u64; 6];
+            for m in &in_win {
+                if let Some(c) = MissCause::ALL.iter().find(|c| c.as_str() == m.cause) {
+                    counts[c.index()] += 1;
+                }
+            }
+            let parts: Vec<String> = MissCause::ALL
+                .iter()
+                .filter(|c| counts[c.index()] > 0)
+                .map(|c| format!("{}={}", c.as_str(), counts[c.index()]))
+                .collect();
+            let top = in_win
+                .iter()
+                .map(|m| m.excess)
+                .fold(0.0f64, f64::max);
+            out.push_str(&format!(
+                "worst window [{t0:.0}, {t1:.0}): {n} misses [{}] top excess={top:.3}s\n",
+                parts.join(" ")
+            ));
+            out.push_str("(drill in with: chiron explain --window ");
+            out.push_str(&format!("{t0:.0}:{t1:.0} <trace>)\n"));
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -605,6 +1057,26 @@ mod tests {
         t.registry.inc("requests_completed", 1);
         t.hists = LatencyHists::default();
         t.hists.ttft.record(0.12);
+        t.windows.push(WindowSample {
+            t0: 0.0,
+            t1: 60.0,
+            arrivals: 30,
+            completions: 4,
+            met: 3,
+            failed: 0,
+            shed: 0,
+            ibp: 3,
+            bbp: 5,
+            gpus_used: 2,
+            utilization: 0.5,
+        });
+        t.misses.push(MissRecord {
+            t: 42.0,
+            model: 0,
+            class: crate::core::RequestClass::Interactive,
+            cause: MissCause::QueueWait,
+            excess: 1.5,
+        });
         t
     }
 
@@ -638,8 +1110,35 @@ mod tests {
         assert!(kinds.contains(&"event".to_string()));
         assert!(kinds.contains(&"decision".to_string()));
         assert!(kinds.contains(&"counters".to_string()));
+        assert!(kinds.contains(&"window".to_string()));
+        assert!(kinds.contains(&"miss".to_string()));
         assert!(kinds.contains(&"registry".to_string()));
         assert!(kinds.contains(&"hist".to_string()));
+        // Window lines carry the derived rates.
+        let win = s.lines().find(|l| l.contains("\"window\"")).unwrap();
+        let j = Json::parse(win).unwrap();
+        assert_eq!(j.get("attainment").as_f64(), Some(0.75));
+        assert_eq!(j.get("arrival_rate").as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn chrome_trace_carries_windows_and_misses() {
+        let s = chrome_trace(&tiny_trace(), &["m".to_string()]);
+        let j = Json::parse(&s).unwrap();
+        let evs = j.get("traceEvents").as_arr().unwrap();
+        let win = evs
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("slo_forensics"))
+            .expect("forensics counter track");
+        assert_eq!(win.get("ph").as_str(), Some("C"));
+        assert_eq!(win.get("ts").as_f64(), Some(60.0 * 1e6));
+        assert_eq!(win.get("args").get("ibp").as_f64(), Some(3.0));
+        let miss = evs
+            .iter()
+            .find(|e| e.get("cat").as_str() == Some("miss"))
+            .expect("miss instant");
+        assert_eq!(miss.get("name").as_str(), Some("queue_wait"));
+        assert_eq!(miss.get("args").get("excess").as_f64(), Some(1.5));
     }
 
     #[test]
@@ -663,6 +1162,130 @@ mod tests {
             .last()
             .unwrap();
         assert!(last_finite.ends_with(" 3"), "{last_finite}");
+    }
+
+    #[test]
+    fn prometheus_text_format_is_byte_pinned() {
+        // Registry families: HELP, TYPE, sample — in that order, counters
+        // before gauges, `chiron_` prefix throughout. Pinned byte-for-byte
+        // so conformance regressions show up as a diff, not a scrape error.
+        let mut reg = Registry::default();
+        reg.inc("requests_completed", 3);
+        reg.set_gauge("slo_attainment", 0.975);
+        assert_eq!(
+            prometheus(&reg, &[]),
+            "# HELP chiron_requests_completed Requests that finished decoding.\n\
+             # TYPE chiron_requests_completed counter\n\
+             chiron_requests_completed 3\n\
+             # HELP chiron_slo_attainment Fraction of completed requests that met their SLO.\n\
+             # TYPE chiron_slo_attainment gauge\n\
+             chiron_slo_attainment 0.975\n"
+        );
+
+        // Forensics families: labelled miss counters and timestamped
+        // window gauges (timestamps in milliseconds).
+        let mut t = TraceData::default();
+        t.windows = tiny_trace().windows;
+        t.misses = tiny_trace().misses;
+        assert_eq!(
+            prometheus_trace(&t),
+            "# HELP chiron_slo_miss_total SLO-missed completions by dominant cause.\n\
+             # TYPE chiron_slo_miss_total counter\n\
+             chiron_slo_miss_total{model=\"0\",class=\"interactive\",cause=\"queue_wait\"} 1\n\
+             # HELP chiron_window_ibp Queued interactive requests at window close.\n\
+             # TYPE chiron_window_ibp gauge\n\
+             chiron_window_ibp 3 60000\n\
+             # HELP chiron_window_bbp Queued batch requests at window close.\n\
+             # TYPE chiron_window_bbp gauge\n\
+             chiron_window_bbp 5 60000\n\
+             # HELP chiron_window_gpus GPUs allocated at window close.\n\
+             # TYPE chiron_window_gpus gauge\n\
+             chiron_window_gpus 2 60000\n\
+             # HELP chiron_window_utilization Busy fraction of allocated GPUs at window close.\n\
+             # TYPE chiron_window_utilization gauge\n\
+             chiron_window_utilization 0.5 60000\n\
+             # HELP chiron_window_slo_attainment SLO attainment over the window.\n\
+             # TYPE chiron_window_slo_attainment gauge\n\
+             chiron_window_slo_attainment 0.75 60000\n\
+             # HELP chiron_window_arrival_rate Arrivals per second over the window.\n\
+             # TYPE chiron_window_arrival_rate gauge\n\
+             chiron_window_arrival_rate 0.5 60000\n"
+        );
+    }
+
+    #[test]
+    fn prometheus_label_values_escape_specials() {
+        assert_eq!(prom_escape("plain"), "plain");
+        assert_eq!(prom_escape("a\"b"), "a\\\"b");
+        assert_eq!(prom_escape("a\\b"), "a\\\\b");
+        assert_eq!(prom_escape("a\nb"), "a\\nb");
+    }
+
+    #[test]
+    fn slo_debug_attributes_every_miss_in_both_formats() {
+        let trace = tiny_trace();
+        for text in [chrome_trace(&trace, &["m".to_string()]), jsonl(&trace)] {
+            let report = slo_debug(&text).expect("slo-debug parses");
+            assert!(
+                report.contains("blame table (1 SLO-missed"),
+                "{report}"
+            );
+            assert!(
+                report.contains("model 0 interactive: total=1 dominant=queue_wait [queue_wait=1]"),
+                "{report}"
+            );
+            assert!(
+                report.contains("attribution: 1/1 misses carry a dominant cause"),
+                "{report}"
+            );
+            assert!(!report.contains("UNATTRIBUTED"), "{report}");
+            assert!(
+                report.contains("worst window [0, 60): 1 misses [queue_wait=1] top excess=1.500s"),
+                "{report}"
+            );
+        }
+    }
+
+    #[test]
+    fn slo_debug_reads_aggregated_report_json() {
+        let text = r#"{"summary":{"miss_causes":[
+            {"model":2,"class":"batch","queue_wait":0,"load_delay":0,
+             "preemption":4,"retry":1,"straggler":0,"capacity":0}]}}"#;
+        let report = slo_debug(text).unwrap();
+        assert!(report.contains("blame table (5 SLO-missed"), "{report}");
+        assert!(
+            report.contains("model 2 batch: total=5 dominant=preemption [preemption=4 retry=1]"),
+            "{report}"
+        );
+        // A clean trace is a clean bill of health, not an error.
+        let mut clean = tiny_trace();
+        clean.misses.clear();
+        assert!(slo_debug(&jsonl(&clean)).unwrap().contains("no SLO misses"));
+        // A report with no table explains itself.
+        assert!(slo_debug("{\"summary\":{}}").unwrap_err().contains("miss_causes"));
+    }
+
+    #[test]
+    fn explain_window_filter_and_per_window_counts() {
+        let text = jsonl(&tiny_trace());
+        // Unfiltered: per-window activity for the recorded window.
+        let full = explain(&text).unwrap();
+        assert!(
+            full.contains("window [0, 60): decisions=1 scales=1 misses=1"),
+            "{full}"
+        );
+        // [0, 1.0) keeps the arrival but drops the t=1.0 decision/scale
+        // and the t=42 miss.
+        let part = explain_filtered(&text, Some((0.0, 1.0))).unwrap();
+        assert!(part.contains("window filter: [0, 1)"), "{part}");
+        assert!(
+            part.contains("trace: 1 events, 0 decisions, 0 scale actions"),
+            "{part}"
+        );
+        assert!(
+            part.contains("window [0, 60): decisions=0 scales=0 misses=0"),
+            "{part}"
+        );
     }
 
     #[test]

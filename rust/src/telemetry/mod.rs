@@ -37,7 +37,7 @@ pub mod export;
 
 use std::collections::BTreeMap;
 
-use crate::core::{InstanceId, RequestClass, Time};
+use crate::core::{InstanceId, MissCause, RequestClass, Time};
 
 // ---------------------------------------------------------------------------
 // configuration
@@ -45,7 +45,7 @@ use crate::core::{InstanceId, RequestClass, Time};
 
 /// Which telemetry layers a run records. Everything defaults to off; the
 /// simulator behaves (and digests) identically whatever the setting.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct TelemetryConfig {
     /// Record per-shard [`SimEvent`]s (arrival/route/step/crash/…).
     pub events: bool,
@@ -55,6 +55,11 @@ pub struct TelemetryConfig {
     pub histograms: bool,
     /// Sample [`CounterSample`] rows at timeline ticks.
     pub counters: bool,
+    /// Record [`WindowSample`] backpressure/attainment rows every
+    /// `window_dt` simulated seconds (0.0 = off). Windows close at tick
+    /// barriers — driver-side, single-threaded — so the series is
+    /// bit-identical at any `--shards`/`--jobs`.
+    pub window_dt: f64,
 }
 
 impl TelemetryConfig {
@@ -65,12 +70,24 @@ impl TelemetryConfig {
 
     /// Every layer on (what `--trace` enables).
     pub fn full() -> Self {
-        TelemetryConfig { events: true, decisions: true, histograms: true, counters: true }
+        TelemetryConfig {
+            events: true,
+            decisions: true,
+            histograms: true,
+            counters: true,
+            window_dt: 60.0,
+        }
+    }
+
+    /// Is the windowed time-series layer on?
+    #[inline]
+    pub fn windows(&self) -> bool {
+        self.window_dt > 0.0
     }
 
     #[inline]
     pub fn enabled(&self) -> bool {
-        self.events || self.decisions || self.histograms || self.counters
+        self.events || self.decisions || self.histograms || self.counters || self.windows()
     }
 }
 
@@ -463,14 +480,86 @@ pub struct CounterSample {
     pub shed: usize,
 }
 
+/// One closed forensics window (`TelemetryConfig::window_dt`): cluster-wide
+/// deltas of the shard counters over `[t0, t1)` plus instantaneous
+/// backpressure/occupancy at the closing barrier. Recorded by the driver's
+/// single-threaded barrier loop, so the series is bit-identical at any
+/// shard/worker count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WindowSample {
+    /// Window open (simulated seconds).
+    pub t0: Time,
+    /// Window close (the barrier that sealed it).
+    pub t1: Time,
+    /// Arrivals observed in the window.
+    pub arrivals: u64,
+    /// Completions in the window.
+    pub completions: u64,
+    /// Of `completions`, those that met their SLO.
+    pub met: u64,
+    /// Terminal failures in the window.
+    pub failed: u64,
+    /// Shed batch arrivals in the window.
+    pub shed: u64,
+    /// Interactive backpressure: queued interactive requests at `t1`.
+    pub ibp: u64,
+    /// Batch backpressure: queued batch requests at `t1`.
+    pub bbp: u64,
+    /// GPUs allocated at `t1`.
+    pub gpus_used: u32,
+    /// GPU-budget utilization at `t1` (`gpus_used / budget`).
+    pub utilization: f64,
+}
+
+impl WindowSample {
+    /// SLO attainment over the window (1.0 when nothing completed — an
+    /// empty window is not a degraded one).
+    pub fn attainment(&self) -> f64 {
+        if self.completions == 0 {
+            1.0
+        } else {
+            self.met as f64 / self.completions as f64
+        }
+    }
+
+    /// Arrival rate over the window (req/s; 0 for a zero-width window).
+    pub fn arrival_rate(&self) -> f64 {
+        let dt = self.t1 - self.t0;
+        if dt > 0.0 {
+            self.arrivals as f64 / dt
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One SLO-missed request in a trace: when it finished, where it ran, what
+/// dominated the miss, and by how much it overshot. Derived from outcomes
+/// at trace-assembly time (requires `keep_outcomes`), so the record list is
+/// in deterministic model order regardless of shard count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MissRecord {
+    /// Completion time (simulated seconds).
+    pub t: Time,
+    pub model: usize,
+    pub class: RequestClass,
+    /// Dominant cause per [`crate::core::RequestOutcome::miss_cause`].
+    pub cause: MissCause,
+    /// SLO overshoot in seconds ([`crate::core::RequestOutcome::slo_excess`]).
+    pub excess: f64,
+}
+
 /// Everything a traced run collected, assembled by the driver at the end:
 /// the merged deterministic event stream, the decision audit, sampled
-/// counters, latency sketches, and the end-of-run registry snapshot.
+/// counters, windowed backpressure series, per-request miss records,
+/// latency sketches, and the end-of-run registry snapshot.
 #[derive(Debug, Default)]
 pub struct TraceData {
     pub events: Vec<SimEvent>,
     pub decisions: Vec<DecisionRecord>,
     pub counters: Vec<CounterSample>,
+    pub windows: Vec<WindowSample>,
+    pub misses: Vec<MissRecord>,
     pub hists: LatencyHists,
     pub registry: Registry,
 }
@@ -589,6 +678,110 @@ mod tests {
         assert!((a.sum - whole.sum).abs() < 1e-9 * whole.sum.abs());
         assert_eq!(a.min, whole.min);
         assert_eq!(a.max, whole.max);
+    }
+
+    #[test]
+    fn hist_empty_sketch_yields_nan_stats() {
+        let h = LogHist::new();
+        assert_eq!(h.count, 0);
+        assert!(h.quantile(0.5).is_nan());
+        assert!(h.mean().is_nan());
+        assert_eq!(h.min, f64::INFINITY);
+        assert_eq!(h.max, f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn hist_single_sample_dominates_every_quantile() {
+        let mut h = LogHist::new();
+        h.record(0.25);
+        assert_eq!(h.count, 1);
+        assert_eq!(h.min, 0.25);
+        assert_eq!(h.max, 0.25);
+        assert_eq!(h.mean(), 0.25);
+        let b = LogHist::bin_of(0.25);
+        for q in [0.0, 0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), LogHist::bin_mid(b), "q={q}");
+        }
+        // The single-sample estimate stays within the sketch's error bound.
+        let rel = (h.quantile(0.5) - 0.25).abs() / 0.25;
+        assert!(rel <= LogHist::relative_error());
+    }
+
+    #[test]
+    fn hist_underflow_and_overflow_clamp_to_edge_bins() {
+        let mut h = LogHist::new();
+        h.record(1e-9); // below bin 0's lower edge
+        h.record(-3.0); // negative clamps to bin 0 too
+        h.record(1e9); // past the top decade
+        assert_eq!(h.bins[0], 2);
+        assert_eq!(h.bins[HIST_BINS - 1], 1);
+        assert_eq!(h.count, 3);
+        // Min/max keep the true extremes even though the bins clamp.
+        assert_eq!(h.min, -3.0);
+        assert_eq!(h.max, 1e9);
+        // Low quantiles land in the clamp bin, high ones in the overflow bin.
+        assert_eq!(h.quantile(0.1), LogHist::bin_mid(0));
+        assert_eq!(h.quantile(1.0), LogHist::bin_mid(HIST_BINS - 1));
+    }
+
+    #[test]
+    fn hist_merge_of_mixed_occupancy_sketches_keeps_error_bound() {
+        // One dense sketch, one empty, one single-sample: merge must equal
+        // recording everything into one accumulator, and quantiles must
+        // stay within the bound.
+        let mut dense = LogHist::new();
+        let mut whole = LogHist::new();
+        let mut vals: Vec<f64> = Vec::new();
+        for k in 0..999 {
+            let v = 0.01 * 1.005f64.powi(k);
+            dense.record(v);
+            whole.record(v);
+            vals.push(v);
+        }
+        let empty = LogHist::new();
+        let mut single = LogHist::new();
+        single.record(0.5);
+        whole.record(0.5);
+        vals.push(0.5);
+        dense.merge(&empty);
+        dense.merge(&single);
+        assert_eq!(dense.bins, whole.bins);
+        assert_eq!(dense.count, 1000);
+        assert_eq!(dense.min, whole.min);
+        assert_eq!(dense.max, whole.max);
+        vals.sort_by(f64::total_cmp);
+        for q in [0.25, 0.5, 0.9] {
+            let est = dense.quantile(q);
+            let exact = vals[((q * 1000.0) as usize).min(999)];
+            let rel = (est - exact).abs() / exact;
+            assert!(
+                rel <= LogHist::relative_error() + 0.005,
+                "q={q}: est {est} vs exact {exact} (rel {rel})"
+            );
+        }
+    }
+
+    #[test]
+    fn window_sample_derived_rates() {
+        let w = WindowSample {
+            t0: 60.0,
+            t1: 120.0,
+            arrivals: 120,
+            completions: 50,
+            met: 40,
+            failed: 1,
+            shed: 2,
+            ibp: 3,
+            bbp: 400,
+            gpus_used: 10,
+            utilization: 0.625,
+        };
+        assert_eq!(w.attainment(), 0.8);
+        assert_eq!(w.arrival_rate(), 2.0);
+        let empty = WindowSample { completions: 0, met: 0, ..w };
+        assert_eq!(empty.attainment(), 1.0);
+        let degenerate = WindowSample { t1: 60.0, ..w };
+        assert_eq!(degenerate.arrival_rate(), 0.0);
     }
 
     #[test]

@@ -15,7 +15,7 @@ mod common;
 
 use chiron::experiments::common::{make_policy, PolicyKind};
 use chiron::sim::{run_sim_source, SimConfig, SimReport};
-use chiron::telemetry::export::{chrome_trace, explain, jsonl};
+use chiron::telemetry::export::{chrome_trace, explain, jsonl, prometheus_trace, slo_debug};
 use chiron::telemetry::{LogHist, TelemetryConfig};
 use chiron::workload::scenario::{by_name, catalog, ScenarioSpec};
 
@@ -179,6 +179,145 @@ fn explain_attributes_every_scale_action_in_crash_midrush() {
         assert!(
             report.contains("ibp") || report.contains("bbp"),
             "decision groups must expose backpressure inputs:\n{report}"
+        );
+    }
+}
+
+#[test]
+fn latency_decomposition_partitions_end_to_end_latency_bit_exactly() {
+    // The SLO-forensics invariant (telemetry/README.md): for every
+    // completed request, the phase breakdown — queue wait, load-delay
+    // exposure, preemption stall, crash-retry rework, prefill, decode —
+    // sums *bit-exactly* to completion − arrival. Pinned across all three
+    // fault scenarios so crash/retry, reclamation, and straggler accrual
+    // paths are all exercised, and with telemetry fully off to prove the
+    // decomposition is always-on, not trace-gated.
+    let mut checked = 0usize;
+    let mut missed = 0usize;
+    for name in ["crash-midrush", "spot-reclaim", "straggler-tail"] {
+        let spec = by_name(name).expect("catalog scenario").scaled(0.02);
+        let r = run_spec(&spec, 11, 4, TelemetryConfig::off());
+        assert!(!r.outcomes.is_empty(), "{name}: scenario must complete work");
+        for o in &r.outcomes {
+            assert_eq!(
+                o.phases.sum().to_bits(),
+                o.latency().to_bits(),
+                "{name}: phases of request {:?} must partition its latency \
+                 ({:?} vs {})",
+                o.id,
+                o.phases,
+                o.latency()
+            );
+            // Attribution is total: a dominant cause exists iff the SLO
+            // was missed — never for met requests, always for missed ones.
+            assert_eq!(
+                o.miss_cause().is_some(),
+                !o.slo_met(),
+                "{name}: miss-cause must be attributed iff the SLO was missed"
+            );
+            checked += 1;
+            missed += !o.slo_met() as usize;
+        }
+    }
+    assert!(checked > 100, "fault catalog must complete real work");
+    assert!(missed > 0, "fault scenarios must produce SLO misses to classify");
+}
+
+#[test]
+fn windowed_series_byte_identical_across_shard_workers_in_all_exporters() {
+    // Tentpole layer 3: the windowed backpressure/attainment series is
+    // recorded single-threaded at tick barriers, so it is independent of
+    // the shard worker count — and every exporter (Chrome trace, JSONL,
+    // Prometheus exposition) must serialize it byte-identically at
+    // --shards 1 vs 4. Windows tile [0, end) contiguously.
+    let spec = by_name("crash-midrush")
+        .expect("catalog scenario")
+        .scaled(0.02);
+    let models = spec.model_specs().unwrap();
+    let names: Vec<String> = models.iter().map(|m| m.name.clone()).collect();
+    let r1 = run_spec(&spec, 11, 1, TelemetryConfig::full());
+    let r4 = run_spec(&spec, 11, 4, TelemetryConfig::full());
+    let (t1, t4) = (r1.trace.as_ref().unwrap(), r4.trace.as_ref().unwrap());
+    assert!(
+        !t1.windows.is_empty(),
+        "full telemetry must record the windowed series"
+    );
+    assert_eq!(t1.windows, t4.windows, "window samples at shards 1 vs 4");
+    assert_eq!(t1.misses, t4.misses, "miss records at shards 1 vs 4");
+    assert_eq!(t1.windows[0].t0, 0.0, "first window starts at t=0");
+    for w in t1.windows.windows(2) {
+        assert_eq!(
+            w[0].t1.to_bits(),
+            w[1].t0.to_bits(),
+            "windows must tile time contiguously"
+        );
+    }
+    let last = t1.windows.last().unwrap();
+    assert_eq!(
+        last.t1.to_bits(),
+        r1.end_time.to_bits(),
+        "the final (partial) window is sealed at the run's end time"
+    );
+    assert_eq!(
+        chrome_trace(t1, &names),
+        chrome_trace(t4, &names),
+        "chrome trace byte-identical with windows + misses"
+    );
+    assert_eq!(jsonl(t1), jsonl(t4), "jsonl byte-identical");
+    let p1 = prometheus_trace(t1);
+    assert_eq!(p1, prometheus_trace(t4), "prometheus exposition byte-identical");
+    assert!(
+        p1.contains("chiron_window_ibp") && p1.contains("chiron_slo_miss_total"),
+        "prometheus exposition must carry the windowed series and blame counters"
+    );
+    // Cross-check: window completion counts sum to the terminal report.
+    let windowed: u64 = t1.windows.iter().map(|w| w.completions).sum();
+    assert_eq!(windowed as usize, r1.outcomes.len(), "windows cover every completion");
+}
+
+#[test]
+fn slo_debug_attributes_every_miss_in_crash_midrush() {
+    // Acceptance: `chiron slo-debug` on a crash-midrush Chiron trace
+    // attributes a dominant cause to 100% of SLO-missed requests — no
+    // UNATTRIBUTED rows — in both exporter formats, and names the worst
+    // window for drilldown.
+    let spec = by_name("crash-midrush")
+        .expect("catalog scenario")
+        .scaled(0.02);
+    let models = spec.model_specs().unwrap();
+    let names: Vec<String> = models.iter().map(|m| m.name.clone()).collect();
+    let r = run_spec(&spec, 11, 1, TelemetryConfig::full());
+    let trace = r.trace.as_ref().unwrap();
+    assert!(
+        !trace.misses.is_empty(),
+        "a crash run at this scale must miss some SLOs"
+    );
+    for text in [chrome_trace(trace, &names), jsonl(trace)] {
+        let report = slo_debug(&text).expect("slo-debug must parse its own exporters");
+        assert!(
+            !report.contains("UNATTRIBUTED"),
+            "every miss must carry a dominant cause:\n{report}"
+        );
+        let attr = report
+            .lines()
+            .find(|l| l.starts_with("attribution: "))
+            .expect("slo-debug must report attribution");
+        let frac = attr
+            .strip_prefix("attribution: ")
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap();
+        let (matched, total) = frac.split_once('/').expect("M/N fraction");
+        assert_eq!(matched, total, "attribution must be complete: {attr}");
+        assert_eq!(
+            total.parse::<usize>().unwrap(),
+            trace.misses.len(),
+            "slo-debug must see every recorded miss"
+        );
+        assert!(
+            report.contains("worst window ["),
+            "slo-debug must name the worst window for drilldown:\n{report}"
         );
     }
 }
