@@ -301,6 +301,51 @@ fn main() {
         });
     }
 
+    // -- fused macro-stepping vs stepwise on a quiescent-decode workload ----
+    // The macro-stepping A/B: a sparse interactive stream (2 req/s) on a
+    // single pinned instance (1 GPU — the autoscaler cannot add a second),
+    // so between arrivals the batch is pure decode and nearly every engine
+    // step is fusable. Results are bit-identical either way
+    // (tests/macro_step.rs pins the whole catalog), so the delta is the
+    // per-step event-queue round-trip fusion eliminates. The CI gate
+    // tracks the fused entry (registered first); the stepwise entry rides
+    // along so the trajectory records the ratio.
+    {
+        let mk_sparse = || {
+            let mut rng = Rng::new(9);
+            TraceBuilder::new()
+                .stream(workload_a(2.0, 2000, 0))
+                .build(&mut rng)
+        };
+        let total = mk_sparse().len() as f64;
+        let run_fuse = |fuse: bool, trace: chiron::workload::Trace| {
+            let mut cfg = ChironConfig::for_models(1);
+            cfg.bootstrap[0] = BootstrapSpec {
+                interactive: 0,
+                mixed: 1,
+                batch: 0,
+            };
+            let mut policy = Chiron::new(cfg, &models);
+            let mut sim_cfg = SimConfig::new(1, models.clone());
+            sim_cfg.max_sim_time = 4.0 * 3600.0;
+            sim_cfg.timeline_every = 0;
+            sim_cfg.fuse_steps = fuse;
+            let r = run_sim(sim_cfg, trace, &mut policy);
+            if fuse {
+                assert!(r.steps_fused > 0, "sparse decode workload must fuse");
+            } else {
+                assert_eq!(r.steps_fused, 0);
+            }
+            black_box((r.outcomes.len(), r.steps_fused));
+        };
+        b.bench_units("sim.fused_vs_stepwise fused 2k sparse", Some(total), || {
+            run_fuse(true, mk_sparse())
+        });
+        b.bench_units("sim.fused_vs_stepwise stepwise 2k sparse", Some(total), || {
+            run_fuse(false, mk_sparse())
+        });
+    }
+
     // -- telemetry event recording ------------------------------------------
     // 1M enabled-sink pushes: the marginal per-event cost a traced run pays
     // at every emission site (enum construct + Vec push).
@@ -589,10 +634,29 @@ fn main() {
             cfg.timeline_every = 0;
             cfg.keep_outcomes = false;
             cfg.sketch_metrics = true;
+            // Pinned stepwise so this entry keeps its historical meaning
+            // (the pre-fusion engine trajectory); the fused variant below
+            // measures the macro-stepping win on the same week.
+            cfg.fuse_steps = false;
             let mut policy = Chiron::new(ChironConfig::for_models(1), &models_wk);
             let r = run_sim_source(cfg, Box::new(spec.source(1)), &mut policy);
             assert!(r.outcomes.is_empty(), "sketch mode keeps no outcome buffer");
             black_box(r.stats.count());
+        });
+        // The same week with decode macro-stepping on (the shipping
+        // default): quiescent night-trough and sparse-arrival stretches
+        // collapse into fused steps, so the delta vs `sim.week_100m` is
+        // the tentpole's week-scale event-traffic win.
+        b.bench_once("sim.week_100m_fused", Some(total), || {
+            let mut cfg = SimConfig::new(spec.gpus, models_wk.clone());
+            cfg.max_sim_time = spec.max_time;
+            cfg.timeline_every = 0;
+            cfg.keep_outcomes = false;
+            cfg.sketch_metrics = true;
+            let mut policy = Chiron::new(ChironConfig::for_models(1), &models_wk);
+            let r = run_sim_source(cfg, Box::new(spec.source(1)), &mut policy);
+            assert!(r.steps_fused > 0, "the week hot path must fuse");
+            black_box((r.stats.count(), r.steps_fused));
         });
     }
 

@@ -191,6 +191,7 @@ fn run_scenario_cell(
     sketch: bool,
     progress_every: f64,
     checkpoint: Option<CheckpointConfig>,
+    fuse: bool,
 ) -> CellResult {
     let mut cfg = SimConfig::new(gpus, models.to_vec());
     cfg.max_sim_time = spec.max_time;
@@ -200,6 +201,7 @@ fn run_scenario_cell(
     cfg.sketch_metrics = sketch;
     cfg.progress_every = progress_every;
     cfg.checkpoint = checkpoint;
+    cfg.fuse_steps = fuse;
     if with_trace {
         cfg.telemetry = chiron::telemetry::TelemetryConfig::full();
     }
@@ -435,6 +437,12 @@ fn cmd_scenario(argv: Vec<String>) -> anyhow::Result<()> {
          every N simulated seconds at CHIRON_LOG=info (0 = off; free when \
          info logging is disabled)",
     )
+    .switch(
+        "no-fuse",
+        "disable decode macro-stepping (quiescent engine steps fused into \
+         one event; on by default, results bit-identical either way — this \
+         switch exists for A/B benching and bisection)",
+    )
     .parse_from(argv)
     .unwrap_or_else(|m| {
         eprintln!("{m}");
@@ -453,6 +461,7 @@ fn cmd_scenario(argv: Vec<String>) -> anyhow::Result<()> {
         )
     })?;
     let sketch = args.get_bool("sketch-metrics")?;
+    let fuse = !args.get_bool("no-fuse")?;
     // `--gpus 0` (the default) defers to the scenario's own cluster size.
     let gpus_flag = args.get_usize("gpus")? as u32;
     let effective_gpus = |spec: &ScenarioSpec| if gpus_flag == 0 { spec.gpus } else { gpus_flag };
@@ -584,6 +593,7 @@ fn cmd_scenario(argv: Vec<String>) -> anyhow::Result<()> {
                             sketch,
                             progress_every,
                             ckpt_cfg(seed),
+                            fuse,
                         ),
                     )
                 })
@@ -599,6 +609,7 @@ fn cmd_scenario(argv: Vec<String>) -> anyhow::Result<()> {
                 cfg.sketch_metrics = sketch;
                 cfg.progress_every = progress_every;
                 cfg.checkpoint = ckpt_cfg(seed);
+                cfg.fuse_steps = fuse;
                 let mut policy = make_policy(&kind, &models);
                 let mut report = resume_sim_source(
                     cfg,
@@ -697,6 +708,7 @@ fn cmd_scenario(argv: Vec<String>) -> anyhow::Result<()> {
                     seed,
                     run_scenario_cell(
                         spec, models, kind, *gpus, seed, keep, false, core, sketch, 0.0, None,
+                        fuse,
                     ),
                 )
             });

@@ -843,6 +843,11 @@ pub struct PolicyRow {
     pub shed: usize,
     /// Recovery time under faults, seconds (see [`SummaryAccum::mttr`]).
     pub mttr: f64,
+    /// Engine steps collapsed by decode macro-stepping (0 = stepwise run).
+    pub steps_fused: u64,
+    /// Events popped from the shard event queues (the fusion ratio's
+    /// denominator — digest-neutral engine telemetry, not a table column).
+    pub events_processed: u64,
 }
 
 impl PolicyRow {
@@ -861,6 +866,8 @@ impl PolicyRow {
             failed: r.failed,
             shed: r.shed,
             mttr: r.stats.mttr(),
+            steps_fused: r.steps_fused,
+            events_processed: r.events_processed,
         }
     }
 
@@ -917,6 +924,8 @@ impl PolicyRow {
             ("failed", self.failed.into()),
             ("shed", self.shed.into()),
             ("mttr", self.mttr.into()),
+            ("steps_fused", self.steps_fused.into()),
+            ("events_processed", self.events_processed.into()),
         ])
     }
 
@@ -955,6 +964,14 @@ impl PolicyRow {
             ("failed", MeanStd::of(rows, |r| r.failed as f64).to_json()),
             ("shed", MeanStd::of(rows, |r| r.shed as f64).to_json()),
             ("mttr", MeanStd::of(rows, |r| r.mttr).to_json()),
+            (
+                "steps_fused",
+                MeanStd::of(rows, |r| r.steps_fused as f64).to_json(),
+            ),
+            (
+                "events_processed",
+                MeanStd::of(rows, |r| r.events_processed as f64).to_json(),
+            ),
         ])
     }
 }

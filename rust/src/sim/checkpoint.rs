@@ -58,7 +58,9 @@ pub const MAGIC: u32 = 0x43484b50;
 /// Layout version; bump on ANY change to any `encode_state` in the tree.
 /// v2: per-request latency decomposition (wait spans on work items, phase
 /// breakdowns + retry counts on outcomes and running requests).
-pub const VERSION: u32 = 2;
+/// v3: per-shard macro-stepping counters (`steps_fused`,
+/// `events_processed`) appended to shard state.
+pub const VERSION: u32 = 3;
 
 pub fn write_header(out: &mut Vec<u8>) {
     put_u32(out, MAGIC);

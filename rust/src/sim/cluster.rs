@@ -98,6 +98,14 @@ pub struct SimConfig {
     /// Emit a `log_info!` progress line every this many simulated seconds
     /// (0 = off). Costs one atomic load per barrier at `CHIRON_LOG=off`.
     pub progress_every: f64,
+    /// Decode macro-stepping (default on): when an instance's batch is
+    /// quiescent, the shard runs its next k decode steps as a closed loop
+    /// and emits one fused `StepDone` instead of k — the identical f64
+    /// operation sequence, so digests are bit-identical
+    /// (`tests/macro_step.rs`); `SimReport::steps_fused` counts the
+    /// collapsed iterations. Runs with the telemetry event sink enabled
+    /// auto-drop to stepwise so per-step trace events stay byte-identical.
+    pub fuse_steps: bool,
 }
 
 impl SimConfig {
@@ -120,6 +128,7 @@ impl SimConfig {
             sketch_metrics: false,
             checkpoint: None,
             progress_every: 0.0,
+            fuse_steps: true,
         }
     }
 
@@ -190,6 +199,15 @@ pub struct SimReport {
     pub shed: usize,
     /// Total crash-eviction re-queues across the run.
     pub retries: u64,
+    /// Engine steps executed inside fused macro-steps (0 when
+    /// `SimConfig::fuse_steps` is off, telemetry recorded events, or the
+    /// run never went quiescent). Each one saved a `StepDone` round-trip
+    /// through an event queue.
+    pub steps_fused: u64,
+    /// Events popped from the shards' event queues. With fusion on, the
+    /// saved traffic is visible here: `events_processed + steps_fused`
+    /// equals the stepwise run's `events_processed`.
+    pub events_processed: u64,
     /// Cluster-level GPU-budget changes `(time, gpus_used)`; only populated
     /// under `SimConfig::record_gpu_trace`. Every entry's time is a tick
     /// barrier (or the t=0 bootstrap) by construction.
@@ -220,6 +238,8 @@ impl Default for SimReport {
             failed: 0,
             shed: 0,
             retries: 0,
+            steps_fused: 0,
+            events_processed: 0,
             gpu_trace: Vec::new(),
             forecast: Vec::new(),
             trace: None,
@@ -383,6 +403,11 @@ impl<'p> Simulation<'p> {
         if cfg.telemetry.events || cfg.telemetry.histograms {
             for s in &mut shards {
                 s.set_telemetry(cfg.telemetry.events, cfg.telemetry.histograms);
+            }
+        }
+        if cfg.fuse_steps {
+            for s in &mut shards {
+                s.set_fuse_steps(true);
             }
         }
         policy.set_audit(cfg.telemetry.decisions);
@@ -839,6 +864,8 @@ impl<'p> Simulation<'p> {
             self.report.failed += s.failed;
             self.report.shed += s.shed;
             self.report.retries += s.retries_total;
+            self.report.steps_fused += s.steps_fused;
+            self.report.events_processed += s.events_processed;
         }
         self.report.gpu_seconds = self.gpu_seconds;
         self.report.end_time = end;
@@ -1084,13 +1111,22 @@ impl<'p> Simulation<'p> {
                 let (dc, dm) = (cum[1] - prog_cum[1], cum[2] - prog_cum[2]);
                 let roll = if dc > 0 { dm as f64 / dc as f64 } else { 1.0 };
                 prog_cum = cum;
+                // Macro-stepping visibility: fused engine steps over events
+                // actually popped, summed across shards so far.
+                let (mut fused, mut popped) = (0u64, 0u64);
+                for s in &self.shards {
+                    fused += s.steps_fused;
+                    popped += s.events_processed;
+                }
                 log_info!(
-                    "t={:.0}s arrived={} completed={} gpus={} slo[window]={:.3} {:.0}x realtime eta<={:.0}s",
+                    "t={:.0}s arrived={} completed={} gpus={} slo[window]={:.3} fused={} events={} {:.0}x realtime eta<={:.0}s",
                     self.now,
                     self.arrived(),
                     self.completed(),
                     self.gpus_used,
                     roll,
+                    fused,
+                    popped,
                     rate,
                     eta
                 );
@@ -1228,6 +1264,13 @@ impl<'p> Simulation<'p> {
             )?);
         }
         self.shards = shards;
+        // Re-apply config-derived shard flags: `decode_state` rebuilds
+        // shards with defaults, and fuse_steps is config, not saved state.
+        if self.cfg.fuse_steps {
+            for s in &mut self.shards {
+                s.set_fuse_steps(true);
+            }
+        }
         Ok(())
     }
 }

@@ -349,7 +349,10 @@ impl EventQueue {
 
     /// `(t, pri)` of the next event. `&mut` because the calendar may
     /// advance its cursor / cascade to locate the front (key order is
-    /// unaffected).
+    /// unaffected). This is the peek-min-without-popping both the epoch
+    /// merge loop and the macro-stepping fusion horizon (`shard.rs
+    /// fused_steps`, next-pending-event bound) are built on — it must stay
+    /// exact on both cores, not approximate.
     #[inline]
     pub fn peek_key(&mut self) -> Option<(Time, u8)> {
         match self {

@@ -569,6 +569,41 @@ impl SimInstance {
         }
     }
 
+    /// All running members are past their prompt phase: the next step's
+    /// duration is pure `decode_step_time` on the current context. One of
+    /// the macro-stepping quiescence conditions (`shard.rs` fused kick) —
+    /// a pending prefill/restore means the *next* `begin_step` would price
+    /// the step differently than a straight decode continuation.
+    pub fn decode_only(&self) -> bool {
+        self.running.iter().all(|r| r.pending_prefill == 0)
+    }
+
+    /// Would the step in flight end in a completion or a KV-capacity
+    /// eviction? Read-only replication of [`finish_step`]'s predicates: a
+    /// member completes when `generated + tokens_per_step` reaches its
+    /// output budget (the identical f64 comparison `finish_step` makes
+    /// post-increment), and context growth past the hard KV capacity
+    /// triggers preemption. Either outcome needs the full stepwise path
+    /// (outcome assembly, eviction re-queues, local-queue admission), so
+    /// the fused loop must hand such a step back to the event queue.
+    ///
+    /// [`finish_step`]: Self::finish_step
+    pub fn fused_step_blocked(&self) -> bool {
+        let tps = self.profile.tokens_per_step;
+        let mut kv_after = self.kv_tokens;
+        for r in &self.running {
+            let after = r.generated + tps;
+            if after >= r.req.output_tokens as f64 {
+                return true;
+            }
+            let emitted = after.min(r.req.output_tokens as f64) - r.generated;
+            if emitted > 0.0 {
+                kv_after += emitted.ceil() as u64;
+            }
+        }
+        kv_after > self.profile.kv_capacity_tokens
+    }
+
     /// Tightest ITL SLO among running requests (paper: the instance SLO).
     /// O(1): served from the incrementally maintained cache.
     pub fn min_itl_slo(&self) -> Time {

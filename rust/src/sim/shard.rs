@@ -121,6 +121,21 @@ pub struct ModelShard {
     sink: EventSink,
     /// Opt-in TTFT/ITL latency sketches, fed at completion time.
     hists: Option<Box<LatencyHists>>,
+    /// Macro-stepping (`SimConfig::fuse_steps`): collapse quiescent decode
+    /// iterations into a closed loop instead of one queue round-trip per
+    /// step. Dynamically ignored while the event sink records, so per-step
+    /// `Step` trace events stay byte-identical.
+    fuse_steps: bool,
+    /// The `until` bound of the epoch currently running — the fusion
+    /// horizon's barrier input. Set at every `run_epoch` entry;
+    /// barrier-time kicks observe `now == epoch_until` and never fuse.
+    epoch_until: Time,
+    /// Engine steps executed inside fused loops (each one saved an event
+    /// push + pop + dispatch round-trip).
+    pub steps_fused: u64,
+    /// Events popped from this shard's event queue (the fusion ratio's
+    /// denominator; arrivals merge from the epoch FIFO, not the queue).
+    pub events_processed: u64,
 }
 
 impl ModelShard {
@@ -160,7 +175,18 @@ impl ModelShard {
             retries_total: 0,
             sink: EventSink::default(),
             hists: None,
+            fuse_steps: false,
+            epoch_until: f64::NEG_INFINITY,
+            steps_fused: 0,
+            events_processed: 0,
         }
+    }
+
+    /// Enable/disable decode macro-stepping (driver-side: before the run
+    /// starts, and again after checkpoint restore — the flag is config,
+    /// not simulation state, so it is never serialized).
+    pub fn set_fuse_steps(&mut self, on: bool) {
+        self.fuse_steps = on;
     }
 
     /// Enable telemetry layers (driver-side, before the run starts).
@@ -237,6 +263,9 @@ impl ModelShard {
     /// first). Touches only shard-local state — safe to run concurrently
     /// with other shards.
     pub fn run_epoch(&mut self, until: Time) {
+        // The fusion horizon's barrier input (see `fused_steps`): a fused
+        // kick may advance the clock only strictly inside this epoch.
+        self.epoch_until = until;
         loop {
             let heap_key = self.events.peek_key();
             let arr_t = self.arrivals.front().map(|r| r.arrival);
@@ -265,37 +294,61 @@ impl ModelShard {
                 }
             };
             if take_arrival {
-                let req = self.arrivals.pop_front().unwrap();
-                self.now = req.arrival;
-                self.last_event = self.now;
-                self.arrived += 1;
-                if req.class == RequestClass::Interactive {
-                    self.arrived_interactive += 1;
-                }
-                self.sink.push(
-                    self.now,
-                    self.model,
-                    EventKind::Arrival { req: req.id.0, class: req.class },
-                );
-                // Overload shedding (graceful degradation): when the batch
-                // backlog exceeds the knob, batch arrivals are counted and
-                // dropped instead of queued. Interactive traffic is never
-                // shed.
-                let shed = match self.faults.shed_queue_len {
-                    Some(cap) => {
-                        req.class == RequestClass::Batch && self.q_batch.len() >= cap
+                // Bulk admission: every arrival that precedes the next
+                // queued event drains as one burst against a single view
+                // refresh. Routing itself point-patches the views it
+                // changes, so the per-request `refresh_instance_views` the
+                // generic `route_item` entry pays is pure overhead here.
+                self.refresh_instance_views();
+                loop {
+                    let req = self.arrivals.pop_front().unwrap();
+                    self.now = req.arrival;
+                    self.last_event = self.now;
+                    self.arrived += 1;
+                    if req.class == RequestClass::Interactive {
+                        self.arrived_interactive += 1;
                     }
-                    None => false,
-                };
-                if shed {
-                    self.shed += 1;
-                    self.sink
-                        .push(self.now, self.model, EventKind::Shed { req: req.id.0 });
-                } else {
-                    self.route_item(WorkItem::fresh(req));
+                    self.sink.push(
+                        self.now,
+                        self.model,
+                        EventKind::Arrival { req: req.id.0, class: req.class },
+                    );
+                    // Overload shedding (graceful degradation): when the
+                    // batch backlog exceeds the knob, batch arrivals are
+                    // counted and dropped instead of queued. Interactive
+                    // traffic is never shed.
+                    let shed = match self.faults.shed_queue_len {
+                        Some(cap) => {
+                            req.class == RequestClass::Batch && self.q_batch.len() >= cap
+                        }
+                        None => false,
+                    };
+                    if shed {
+                        self.shed += 1;
+                        self.sink
+                            .push(self.now, self.model, EventKind::Shed { req: req.id.0 });
+                    } else {
+                        self.route_refreshed(WorkItem::fresh(req));
+                    }
+                    // Keep bursting while the next arrival still beats both
+                    // the epoch bound and every queued event. The dispatch
+                    // kicks above push StepDone events, so the queue head
+                    // must be re-peeked each iteration.
+                    let Some(ta) = self.arrivals.front().map(|r| r.arrival) else {
+                        break;
+                    };
+                    if ta > until {
+                        break;
+                    }
+                    if let Some((th, _)) = self.events.peek_key() {
+                        if ta >= th {
+                            break;
+                        }
+                    }
                 }
             } else {
                 let HeapEv { t, ev, .. } = self.events.pop().unwrap();
+                self.events_processed += 1;
                 self.now = t;
                 self.last_event = t;
                 match ev {
@@ -337,7 +390,7 @@ impl ModelShard {
                 self.schedule_mtbf(idx);
             }
             self.pull_for(idx);
-            self.kick(idx);
+            self.kick_fused(idx);
             self.mark_view_dirty(idx);
         }
     }
@@ -411,9 +464,10 @@ impl ModelShard {
         if let Some(mb) = self.local.on_step(&v, self.now) {
             self.instances[idx].max_batch = mb.clamp(1, MAX_BATCH_CLAMP);
         }
-        // Pull more work, continue stepping, or retire.
+        // Pull more work, continue stepping, or retire. This is the
+        // handler's tail: a fused kick may advance the shard clock here.
         self.pull_for(idx);
-        self.kick(idx);
+        self.kick_fused(idx);
         self.mark_view_dirty(idx);
         self.retire_drained();
     }
@@ -775,28 +829,48 @@ impl ModelShard {
 
     // ---- work movement ---------------------------------------------------
 
+    /// Straggler stretch factor for instance `idx` at time `t`: inside an
+    /// active window the lowest-id live instance's steps stretch by the
+    /// window factor (a deterministic stand-in for one slow/contended GPU);
+    /// everyone else — and every instant outside a window — gets 1.0. Pure
+    /// in `(faults, instances, t)`, so the fused loop can re-evaluate it
+    /// per step and land on the exact stepwise sequence.
+    fn straggle_factor_for(&self, idx: usize, t: Time) -> f64 {
+        let f = self.faults.straggler_factor(t);
+        if f > 1.0 && self.is_lowest_live(idx) {
+            f
+        } else {
+            1.0
+        }
+    }
+
     /// Try to start a step on an idle instance. Draining instances keep
     /// stepping (they must finish their running/queued work to retire).
-    fn kick(&mut self, idx: usize) {
-        // Straggler injection: inside an active window the lowest-id live
-        // instance's steps stretch by the window factor (a deterministic
-        // stand-in for one slow/contended GPU). The recorded step duration
-        // stretches too — observed ITL is the degraded one.
-        let straggle = if self.faults.stragglers.is_empty() {
-            1.0
-        } else {
-            let f = self.faults.straggler_factor(self.now);
-            if f > 1.0 && self.is_lowest_live(idx) {
-                f
-            } else {
-                1.0
+    ///
+    /// `fuse` opts into the macro-stepping fast path. Only the *tail* call
+    /// sites (`on_ready`, `on_step_done`) pass true: a mid-handler kick —
+    /// crash-eviction re-routes, arrival dispatches, the barrier pull —
+    /// must not advance the shard clock under the enclosing handler's
+    /// feet, so those sites always take the plain one-event path.
+    fn kick_inner(&mut self, idx: usize, fuse: bool) {
+        {
+            let inst = &self.instances[idx];
+            if inst.step_in_flight || matches!(inst.state, InstanceState::Loading { .. }) {
+                return;
             }
+        }
+        // Straggler injection: the common (fault-free) case pays exactly
+        // one branch here; the window scan runs only when a straggler plan
+        // exists. The recorded step duration stretches too — observed ITL
+        // is the degraded one.
+        let has_stragglers = !self.faults.stragglers.is_empty();
+        let straggle = if has_stragglers {
+            self.straggle_factor_for(idx, self.now)
+        } else {
+            1.0
         };
         let trace = self.sink.enabled();
         let inst = &mut self.instances[idx];
-        if inst.step_in_flight || matches!(inst.state, InstanceState::Loading { .. }) {
-            return;
-        }
         let before = if trace { inst.running_len() as u32 } else { 0 };
         if let Some(d) = inst.begin_step(self.now) {
             let base = d;
@@ -819,8 +893,115 @@ impl ModelShard {
                     );
                 }
             }
-            self.push_event(self.now + d, Ev::StepDone { inst: id, duration: d });
+            // Fused runs auto-drop to stepwise while the event sink
+            // records: per-step `Step` trace events must stay
+            // byte-identical to a stepwise run.
+            if fuse && self.fuse_steps && !trace {
+                self.fused_steps(idx, id, d, has_stragglers);
+            } else {
+                self.push_event(self.now + d, Ev::StepDone { inst: id, duration: d });
+            }
         }
+    }
+
+    #[inline]
+    fn kick(&mut self, idx: usize) {
+        self.kick_inner(idx, false);
+    }
+
+    #[inline]
+    fn kick_fused(&mut self, idx: usize) {
+        self.kick_inner(idx, true);
+    }
+
+    /// Macro-stepping. The step just begun on `idx` (duration `d`, starting
+    /// at `self.now`) and its successors run as a closed loop while the
+    /// batch is quiescent, and one `StepDone` is pushed for the first step
+    /// that needs the event queue again — k engine steps, one event.
+    ///
+    /// Every inline step performs the exact stepwise operation sequence:
+    /// the same `finish_step` on the same f64 inputs, the same per-step
+    /// `LocalPolicy::on_step` call, the same `begin_step` on the grown
+    /// context, the same straggler stretch. Digests are therefore
+    /// bit-identical (`tests/macro_step.rs` pins this across the catalog);
+    /// only the number of event-queue round-trips changes.
+    ///
+    /// Fusion horizon — a step `[t, t+d]` fuses only while all of:
+    ///   * `t + d < ` next queued event time. Strict: a same-time queued
+    ///     event outranks a freshly pushed `StepDone` (its seq is larger),
+    ///     so equality hands back to the event loop.
+    ///   * `t + d <=` next arrival. Arrivals lose time ties to queue
+    ///     events, so an equal-time step still precedes the arrival; the
+    ///     iteration after the tie breaks out.
+    ///   * `t + d <=` the epoch's barrier (`epoch_until`) — a barrier can
+    ///     land mid-fusion only if the horizon already excluded it, which
+    ///     keeps checkpoints (always cut at barriers) byte-stable.
+    ///   * no batch member would complete and KV would not overflow
+    ///     (`fused_step_blocked` — the earliest-completion horizon input).
+    ///   * the straggler window state is re-evaluated every step, which
+    ///     applies the nearest-window-boundary horizon input exactly.
+    /// The event queue and arrival FIFO are untouched inside the loop, so
+    /// the bounds captured once stay valid until the final push.
+    fn fused_steps(&mut self, idx: usize, id: InstanceId, first_d: Time, has_stragglers: bool) {
+        let mut d = first_d;
+        let until = self.epoch_until;
+        // Quiescence: mid-epoch only (a barrier-time kick observes `now ==
+        // epoch_until` and must leave the clock alone), nothing the batch
+        // could admit now or after a policy `max_batch` raise (global
+        // queues and the local queue all empty), every member past its
+        // prompt phase (a pending prefill/restore would price the next
+        // step differently than a straight decode continuation), and no
+        // retirable instance whose `pending_retires` stamp a stepwise pass
+        // would have taken at an earlier event time.
+        let quiescent = self.now < until
+            && self.q_batch.is_empty()
+            && self.q_inter.is_empty()
+            && self.instances[idx].queued_len() == 0
+            && self.instances[idx].decode_only()
+            && !self
+                .instances
+                .iter()
+                .any(|i| i.state == InstanceState::Draining && i.is_idle() && !i.step_in_flight);
+        if quiescent {
+            let t_ev = self.events.peek_key().map(|(t, _)| t);
+            let t_arr = self.arrivals.front().map(|r| r.arrival);
+            loop {
+                let t_end = self.now + d;
+                if t_ev.is_some_and(|t| t_end >= t)
+                    || t_arr.is_some_and(|t| t_end > t)
+                    || t_end > until
+                    || self.instances[idx].fused_step_blocked()
+                {
+                    break;
+                }
+                // Inline `on_step_done`, minus everything quiescence made a
+                // no-op: no completions or evictions (`fused_step_blocked`
+                // held), nothing to pull (queues empty), no telemetry (sink
+                // off), nothing to retire (precondition above).
+                let result = self.instances[idx].finish_step(t_end, d);
+                debug_assert!(result.completed.is_empty() && result.evicted.is_empty());
+                self.total_tokens += result.tokens_emitted;
+                self.now = t_end;
+                self.last_event = t_end;
+                self.steps_fused += 1;
+                let v = self.instances[idx].view();
+                if let Some(mb) = self.local.on_step(&v, t_end) {
+                    self.instances[idx].max_batch = mb.clamp(1, MAX_BATCH_CLAMP);
+                }
+                let base = self.instances[idx]
+                    .begin_step(t_end)
+                    .expect("fused batch cannot empty mid-fusion");
+                d = base;
+                if has_stragglers {
+                    let f = self.straggle_factor_for(idx, t_end);
+                    if f > 1.0 {
+                        d = base * f;
+                        self.instances[idx].charge_slow_excess(d - base);
+                    }
+                }
+            }
+        }
+        self.push_event(self.now + d, Ev::StepDone { inst: id, duration: d });
     }
 
     /// Instance pulls work from this model's global queues per the local
@@ -829,16 +1010,19 @@ impl ModelShard {
     fn pull_for(&mut self, idx: usize) {
         let view = self.instances[idx].view();
         let order = self.local.pull_order(&view);
+        // One slab borrow for the whole pull: `instances` and the work
+        // queues are disjoint fields, so the split `&mut`s coexist and the
+        // per-item re-borrow of the old inner loop is gone.
+        let inst = &mut self.instances[idx];
         for &class in order {
+            let q = match class {
+                RequestClass::Batch => &mut self.q_batch,
+                RequestClass::Interactive => &mut self.q_inter,
+            };
             loop {
-                let inst = &mut self.instances[idx];
                 if inst.admission_headroom() == 0 {
                     return;
                 }
-                let q = match class {
-                    RequestClass::Batch => &mut self.q_batch,
-                    RequestClass::Interactive => &mut self.q_inter,
-                };
                 let Some(input) = q.front_input_tokens() else { break };
                 if !inst.kv_admittable(input) {
                     break;
@@ -849,8 +1033,16 @@ impl ModelShard {
         }
     }
 
-    fn route_item(&mut self, mut item: WorkItem) {
+    fn route_item(&mut self, item: WorkItem) {
         self.refresh_instance_views();
+        self.route_refreshed(item);
+    }
+
+    /// [`route_item`](Self::route_item) minus the view refresh: the caller
+    /// guarantees `views_cache` is current (the arrival burst refreshes
+    /// once up front; every dispatch below point-patches the one instance
+    /// it touched, so freshness survives across a whole burst).
+    fn route_refreshed(&mut self, mut item: WorkItem) {
         let qr = QueuedReq::from_request(&item.req);
         let view = ModelView {
             now: self.now,
@@ -985,6 +1177,10 @@ impl ModelShard {
         put_usize(out, self.failed);
         put_usize(out, self.shed);
         put_u64(out, self.retries_total);
+        // v3: macro-stepping counters. Restored so a resumed run's
+        // `steps_fused`/`events_processed` equal the uninterrupted run's.
+        put_u64(out, self.steps_fused);
+        put_u64(out, self.events_processed);
     }
 
     /// Rebuild a shard from `encode_state` bytes. `faults` is the plan
@@ -1058,6 +1254,8 @@ impl ModelShard {
         shard.failed = d.usize()?;
         shard.shed = d.usize()?;
         shard.retries_total = d.u64()?;
+        shard.steps_fused = d.u64()?;
+        shard.events_processed = d.u64()?;
         shard.views_all_dirty = true;
         Ok(shard)
     }

@@ -1,0 +1,239 @@
+//! Macro-stepping (fused decode) acceptance tests.
+//!
+//! The fusion tentpole collapses quiescent event-loop iterations: when an
+//! instance's batch is pure decode with nothing to admit, the shard runs
+//! its next k steps as a closed loop and emits one `StepDone` instead of
+//! k. These tests pin the contracts that make that safe:
+//!
+//!  1. **Digest invariance** — for every catalog scenario (including the
+//!     three fault scenarios), fused and stepwise runs are FNV-digest
+//!     equal at shard worker counts 1 and 4, and the event-count identity
+//!     `events_processed(fused) + steps_fused == events_processed(stepwise)`
+//!     holds exactly (every fused step saved exactly one queue round-trip,
+//!     and nothing else changed).
+//!  2. **Telemetry auto-drop** — with the event sink enabled a fused run
+//!     silently falls back to stepwise (`steps_fused == 0`) so per-step
+//!     trace events stay byte-identical, and the simulation digest is
+//!     still unchanged.
+//!  3. **Phase decomposition stays bit-exact** — fused decode accrual
+//!     feeds the same `PhaseBreakdown` ops, so every outcome's partition
+//!     still sums to `completion − arrival` with zero error.
+//!  4. **Checkpoint/resume** — a fused run killed mid-flight and resumed
+//!     digests identically to an uninterrupted fused run, including the
+//!     restored `steps_fused`/`events_processed` counters.
+//!  5. **The week-scale hot path actually fuses** — `week-diurnal-100m`
+//!     at test scale reports `steps_fused > 0`.
+
+mod common;
+
+use chiron::experiments::common::{make_policy, PolicyKind};
+use chiron::sim::checkpoint::{CheckpointConfig, CheckpointMeta};
+use chiron::sim::{resume_sim_source, run_sim_source, SimConfig, SimReport};
+use chiron::workload::scenario::{by_name, catalog, ScenarioSpec};
+
+use crate::common::{digest_report, test_scale};
+
+fn run_spec(
+    spec: &ScenarioSpec,
+    seed: u64,
+    shard_workers: usize,
+    fuse: bool,
+    telemetry: bool,
+) -> SimReport {
+    let models = spec.model_specs().unwrap();
+    let mut cfg = SimConfig::new(spec.gpus, models.clone());
+    cfg.max_sim_time = spec.max_time;
+    cfg.shard_workers = shard_workers;
+    cfg.faults = spec.faults.clone();
+    cfg.fuse_steps = fuse;
+    if telemetry {
+        cfg.telemetry = chiron::telemetry::TelemetryConfig::full();
+    }
+    let mut p = make_policy(&PolicyKind::Chiron, &models);
+    run_sim_source(cfg, Box::new(spec.source(seed)), p.as_mut())
+}
+
+#[test]
+fn whole_catalog_digest_identical_fused_vs_stepwise() {
+    let mut fused_total = 0u64;
+    for spec in catalog() {
+        let spec = test_scale(spec, 0.005);
+        let stepwise = run_spec(&spec, 11, 1, false, false);
+        assert!(
+            !stepwise.outcomes.is_empty(),
+            "{}: scenario must complete work",
+            spec.name
+        );
+        assert_eq!(
+            stepwise.steps_fused, 0,
+            "{}: fusion off must fuse nothing",
+            spec.name
+        );
+        let want = digest_report(&stepwise);
+        for workers in [1usize, 4] {
+            let fused = run_spec(&spec, 11, workers, true, false);
+            assert_eq!(
+                want,
+                digest_report(&fused),
+                "{}: fused/shards={workers} must be byte-identical to stepwise",
+                spec.name
+            );
+            // Every fused step saved exactly one StepDone push+pop and
+            // changed nothing else, so the event accounting closes exactly.
+            assert_eq!(
+                fused.events_processed + fused.steps_fused,
+                stepwise.events_processed,
+                "{}: shards={workers}: fused event savings must equal steps_fused",
+                spec.name
+            );
+            fused_total += fused.steps_fused;
+        }
+    }
+    assert!(
+        fused_total > 0,
+        "at least one catalog scenario must exercise the fused path"
+    );
+}
+
+#[test]
+fn telemetry_sink_auto_drops_to_stepwise() {
+    let spec = by_name("flash-crowd").unwrap().scaled(0.05);
+    let stepwise = run_spec(&spec, 7, 1, false, false);
+    let traced = run_spec(&spec, 7, 1, true, true);
+    assert_eq!(
+        traced.steps_fused, 0,
+        "an enabled event sink must force per-step events"
+    );
+    assert_eq!(
+        digest_report(&stepwise),
+        digest_report(&traced),
+        "telemetry fallback must not perturb the simulation"
+    );
+    // Without the sink the same scenario does fuse — the fallback is the
+    // sink's doing, not an accident of the workload.
+    let fused = run_spec(&spec, 7, 1, true, false);
+    assert!(
+        fused.steps_fused > 0,
+        "flash-crowd must fuse once telemetry is off"
+    );
+    assert_eq!(digest_report(&stepwise), digest_report(&fused));
+}
+
+#[test]
+fn phase_breakdown_sums_bit_exactly_under_fusion() {
+    // Fused decode accrues through the identical `finish_step` sequence,
+    // so the ulp-corrected partition (queue + load + preempt + retry +
+    // prefill + decode) still equals completion − arrival bit-for-bit.
+    for name in ["paper-wa", "crash-midrush", "week-diurnal-100m"] {
+        let spec = test_scale(by_name(name).unwrap(), 0.02);
+        let fused = run_spec(&spec, 5, 1, true, false);
+        assert!(!fused.outcomes.is_empty(), "{name}: must complete work");
+        for o in &fused.outcomes {
+            let latency = o.completion - o.arrival;
+            assert_eq!(
+                o.phases.sum().to_bits(),
+                latency.to_bits(),
+                "{name}: request {} phases must sum to its latency exactly",
+                o.id.0
+            );
+        }
+    }
+}
+
+fn meta_for(spec: &ScenarioSpec, seed: u64, scale: f64) -> CheckpointMeta {
+    CheckpointMeta {
+        scenario: spec.name.clone(),
+        seed,
+        scale,
+        policy: "chiron".into(),
+        gpus: spec.gpus,
+    }
+}
+
+fn ckpt_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("chiron-test-{}-{tag}.ckpt", std::process::id()))
+}
+
+#[test]
+fn checkpoint_resume_bit_identical_with_fusion_on() {
+    // crash-midrush is the hardest state to round-trip (fault RNG
+    // mid-stream, retries, pending retirements); with fusion on the
+    // barrier can only land where the horizon already handed back, so the
+    // checkpoint cut is byte-stable.
+    let spec = by_name("crash-midrush").unwrap().scaled(0.05);
+    let models = spec.model_specs().unwrap();
+    let seed = 11u64;
+    let path = ckpt_path("fused-resume");
+    let ck = CheckpointConfig {
+        path: path.clone(),
+        every: 60.0,
+        meta: meta_for(&spec, seed, 0.05),
+    };
+    let mk_cfg = |max_time: f64, ck: Option<CheckpointConfig>| {
+        let mut cfg = SimConfig::new(spec.gpus, models.clone());
+        cfg.max_sim_time = max_time;
+        cfg.shard_workers = 4;
+        cfg.faults = spec.faults.clone();
+        cfg.checkpoint = ck;
+        cfg.fuse_steps = true;
+        cfg
+    };
+
+    let mut p = make_policy(&PolicyKind::Chiron, &models);
+    let full = run_sim_source(
+        mk_cfg(spec.max_time, None),
+        Box::new(spec.source(seed)),
+        p.as_mut(),
+    );
+    assert!(!full.outcomes.is_empty(), "reference run must complete work");
+
+    let mut p = make_policy(&PolicyKind::Chiron, &models);
+    let _killed = run_sim_source(
+        mk_cfg(400.0, Some(ck.clone())),
+        Box::new(spec.source(seed)),
+        p.as_mut(),
+    );
+    let bytes = std::fs::read(&path).expect("killed run must leave a checkpoint");
+
+    let mut p = make_policy(&PolicyKind::Chiron, &models);
+    let resumed = resume_sim_source(
+        mk_cfg(spec.max_time, Some(ck)),
+        Box::new(spec.source(seed)),
+        p.as_mut(),
+        &bytes,
+    )
+    .expect("resume must succeed");
+    assert_eq!(
+        digest_report(&full),
+        digest_report(&resumed),
+        "fused interrupted+resumed must be bit-identical to uninterrupted"
+    );
+    // The counters are part of shard state (checkpoint v3): the resumed
+    // run's totals must equal the uninterrupted run's, not restart at 0.
+    assert_eq!(full.steps_fused, resumed.steps_fused);
+    assert_eq!(full.events_processed, resumed.events_processed);
+
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn week_scenario_fuses_at_test_scale() {
+    // The point of the tentpole: the week-scale hot path's quiescent
+    // decode stretches collapse. At test scale (~2k requests, 4h cap)
+    // arrivals are minutes apart and steps are ~tens of ms, so the bulk
+    // of all engine steps must fuse.
+    let spec = test_scale(by_name("week-diurnal-100m").unwrap(), 1.0);
+    let fused = run_spec(&spec, 1, 1, true, false);
+    assert!(
+        fused.steps_fused > 0,
+        "week-diurnal-100m at test scale must exercise the fused path"
+    );
+    let stepwise = run_spec(&spec, 1, 1, false, false);
+    assert_eq!(digest_report(&fused), digest_report(&stepwise));
+    assert!(
+        fused.events_processed < stepwise.events_processed,
+        "fusion must reduce event-queue traffic (fused {} vs stepwise {})",
+        fused.events_processed,
+        stepwise.events_processed
+    );
+}
